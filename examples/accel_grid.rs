@@ -1,0 +1,65 @@
+//! Accelerated region discharge through the three-layer stack: the
+//! Pallas lock-step push-relabel kernel (L1), lowered through the JAX
+//! wave loop (L2) into `artifacts/grid_pr_*.hlo.txt`, executed from
+//! rust via the PJRT CPU client (L3) — the paper's Conclusion item
+//! "4) sequential, using GPU for solving region discharge", re-thought
+//! for a TPU-shaped kernel (DESIGN.md §Hardware-Adaptation).
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example accel_grid
+//! ```
+
+use armincut::runtime::grid_accel::{GridAccel, GridProblem, TiledAccelCoordinator};
+use armincut::runtime::pjrt::PjrtRuntime;
+use armincut::solvers::{bk::Bk, MaxFlowSolver};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ARMINCUT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // ---- whole-grid solve through the 64x64 artifact -------------------
+    let p0 = GridProblem::random(64, 64, 30, 60, 1);
+    let expect = Bk::new().solve(&mut p0.to_graph());
+    println!("\n64x64 grid, strength 30, ±60 excess; BK flow = {expect}");
+
+    let mut acc = GridAccel::load(&rt, &dir, 64, 64, 32)?;
+    let mut p = p0.clone();
+    let t = Instant::now();
+    let converged = acc.solve(&mut p, 100_000)?;
+    println!(
+        "kernel (whole grid): flow = {} in {} artifact calls ({} waves), {:.3}s — {}",
+        p.flow,
+        acc.calls,
+        acc.calls as usize * acc.waves_per_call,
+        t.elapsed().as_secs_f64(),
+        if converged { "converged" } else { "CAPPED" }
+    );
+    assert_eq!(p.flow, expect);
+
+    let mut p = p0.clone();
+    let t = Instant::now();
+    p.solve_reference(5_000_000);
+    println!("pure-rust waves:     flow = {} in {:.3}s", p.flow, t.elapsed().as_secs_f64());
+
+    // ---- tiled coordinator: 2x2 regions of 32x32 + frozen halo ---------
+    let acc34 = GridAccel::load(&rt, &dir, 34, 34, 32)?;
+    let mut tc = TiledAccelCoordinator::new(acc34);
+    let mut p = p0.clone();
+    let t = Instant::now();
+    let converged = tc.solve(&mut p, 100_000)?;
+    println!(
+        "tiled kernel (4 region discharges/sweep): flow = {} in {} sweeps, {} discharges, {:.3}s — {}",
+        p.flow,
+        tc.sweeps,
+        tc.discharges,
+        t.elapsed().as_secs_f64(),
+        if converged { "converged" } else { "CAPPED" }
+    );
+    assert_eq!(p.flow, expect);
+    println!("\nall three paths agree with BK ✓");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Count BK work inside ARD stages (restart overhead estimate).
+use armincut::core::partition::Partition;
+use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+use armincut::region::ard::{Ard, ArdCore};
+use armincut::region::decompose::{Decomposition, DistanceMode};
+
+fn main() {
+    let side = 400;
+    let p = Synthetic2dParams { width: side, height: side, strength: 150, seed: 1, ..Default::default() };
+    let g = synthetic_2d(&p);
+    let part = Partition::grid2d(side, side, 4, 4);
+    let mut dec = Decomposition::new(&g, &part, DistanceMode::Ard);
+    let d_inf = dec.shared.d_inf;
+    let mut ard = Ard::new(ArdCore::bk());
+    let t = std::time::Instant::now();
+    let mut stages = 0u64;
+    for sweep in 0..10 {
+        for r in 0..dec.parts.len() {
+            dec.sync_in(r);
+            let st = ard.discharge(&mut dec.parts[r], d_inf, sweep);
+            stages += st.stages as u64;
+            dec.sync_out(r);
+        }
+    }
+    println!("10 sweeps bk-core: {:.3}s, {stages} stages", t.elapsed().as_secs_f64());
+    if let ArdCore::Bk(bk) = &ard.core {
+        println!("augmentations {} grown {} adoptions {}", bk.augmentations, bk.adoptions, bk.grown);
+    }
+}

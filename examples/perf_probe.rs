@@ -1,0 +1,41 @@
+//! §Perf probe: S-ARD hot-path timing on a paper-style instance.
+use armincut::coordinator::sequential::{solve_sequential, CoreKind, SeqOptions};
+use armincut::core::partition::Partition;
+use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+use armincut::solvers::{bk::Bk, MaxFlowSolver};
+
+fn main() {
+    let side: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(500);
+    let p = Synthetic2dParams { width: side, height: side, strength: 150, seed: 1, ..Default::default() };
+    let g = synthetic_2d(&p);
+    let part = Partition::grid2d(side, side, 4, 4);
+    println!("n={} m={} |B|={}", g.n(), g.num_arcs() / 2, part.stats(&g).boundary_nodes);
+
+    let t = std::time::Instant::now();
+    let f = Bk::new().solve(&mut g.clone());
+    println!("BK whole-graph: {:.3}s flow {f}", t.elapsed().as_secs_f64());
+
+    for (name, core) in [("bk-core", CoreKind::Bk), ("dinic-core", CoreKind::Dinic)] {
+        let mut o = SeqOptions::ard();
+        o.core = core;
+        let res = solve_sequential(&g, &part, &o);
+        assert_eq!(res.metrics.flow, f);
+        println!(
+            "S-ARD {name}: total {:.3}s discharge {:.3}s relabel {:.3}s gap {:.3}s msg {:.3}s sweeps {}",
+            res.metrics.t_total.as_secs_f64(),
+            res.metrics.t_discharge.as_secs_f64(),
+            res.metrics.t_relabel.as_secs_f64(),
+            res.metrics.t_gap.as_secs_f64(),
+            res.metrics.t_msg.as_secs_f64(),
+            res.metrics.sweeps
+        );
+    }
+    let res = solve_sequential(&g, &part, &SeqOptions::prd());
+    assert_eq!(res.metrics.flow, f);
+    println!(
+        "S-PRD: total {:.3}s discharge {:.3}s sweeps {}",
+        res.metrics.t_total.as_secs_f64(),
+        res.metrics.t_discharge.as_secs_f64(),
+        res.metrics.sweeps
+    );
+}

@@ -1,0 +1,77 @@
+"""AOT lowering: jax → HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (``make artifacts``):
+
+* ``grid_pr_<H>x<W>.hlo.txt`` — ``iters`` waves of the L1 kernel over an
+  ``H × W`` plane-stack, for each configured shape;
+* ``model.hlo.txt`` — alias of the default 64×64 artifact (the Makefile
+  staleness anchor).
+
+Usage: ``python -m compile.aot --out ../artifacts/model.hlo.txt``
+"""
+
+import argparse
+import os
+import shutil
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (H, W, waves-per-call) artifacts built by default: a 64×64 whole-grid
+# solver and a 34×34 tile (32×32 region + 1-cell frozen halo) for the
+# tiled accelerated coordinator.
+SHAPES = [(64, 64, 32), (34, 34, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grid_pr(h: int, w: int, iters: int) -> str:
+    args = model.example_args(h, w)
+    lowered = jax.jit(
+        lambda *a: model.grid_pr_sweeps(*a, iters=iters, interpret=True)
+    ).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument(
+        "--shapes",
+        default=",".join(f"{h}x{w}x{i}" for h, w, i in SHAPES),
+        help="comma-separated HxWxITERS triples",
+    )
+    ns = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(ns.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    default_path = None
+    for spec in ns.shapes.split(","):
+        h, w, iters = (int(x) for x in spec.split("x"))
+        text = lower_grid_pr(h, w, iters)
+        path = os.path.join(out_dir, f"grid_pr_{h}x{w}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path} ({iters} waves/call)")
+        if default_path is None:
+            default_path = path
+
+    shutil.copyfile(default_path, ns.out)
+    print(f"wrote {ns.out} (alias of {os.path.basename(default_path)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""L1: Pallas kernel — one lock-step (Jacobi) push-relabel *wave* on a
+4-connected 2-D grid region.
+
+This is the accelerated region discharge the paper's Conclusion proposes
+("4) sequential, using GPU for solving region discharge"), re-thought for
+a TPU-shaped accelerator (see DESIGN.md §Hardware-Adaptation): the whole
+region plane-stack lives in VMEM as dense ``int32[H, W]`` planes, pushes
+are whole-plane vectorized shifted adds on the VPU (no atomics — the
+lock-step wave computes out-flows per direction, then in-flows as shifted
+copies), and the HBM↔VMEM schedule is a single BlockSpec over the stack.
+
+State planes (all ``int32[H, W]``):
+
+* ``e``      — excess (source supply still parked at the node);
+* ``d``      — distance label (``0 .. d_inf``);
+* ``cn/cs/ce/cw`` — residual capacity toward the north/south/east/west
+  neighbor (border-pointing capacities MUST be zero);
+* ``sc``     — residual capacity of the ``(v, t)`` sink arc;
+* ``frozen`` — 1 for halo/boundary cells: they never push or relabel,
+  but absorb pushes (their excess is the region's exported flow).
+
+Scalars: ``dinf`` — the label ceiling, as an ``int32[1, 1]`` plane so one
+compiled artifact serves any global ceiling; ``flow`` — flow routed to
+the sink by this wave (accumulated by the L2 loop).
+
+One wave =
+  1. push-to-sink for nodes with ``d == 1``;
+  2. four directional push passes (N, S, E, W sequentially, so excess is
+     never overdrawn; lock-step is deadlock-free because
+     ``d(u) = d(v)+1`` cannot hold in both directions);
+  3. Jacobi relabel: active nodes rise to
+     ``min(d_inf, min{d(v)+1 : residual arc})`` — a no-op whenever an
+     admissible arc remains, so the unconditional ``max`` is exact.
+
+Pallas runs with ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); the lowered HLO is what the rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wave_math(e, d, cn, cs, ce, cw, sc, frozen, dinf):
+    """The wave, expressed on plain jnp values (shared by the pallas
+    kernel body; the *independent* oracle lives in ref.py)."""
+    thawed = frozen == 0
+
+    # ---- 1. push to sink -------------------------------------------------
+    delta = jnp.where((e > 0) & (d == 1) & (sc > 0) & thawed, jnp.minimum(e, sc), 0)
+    e = e - delta
+    sc = sc - delta
+    flow = jnp.sum(delta)
+
+    # ---- 2. directional pushes -------------------------------------------
+    # direction tables: (cap plane, axis, shift toward neighbor)
+    # pushing north: neighbor (y-1, x) → neighbor value seen via roll(+1)
+    def push(e, cap_out, cap_in_of_nbr, axis, shift):
+        # label of the neighbor each node would push to
+        d_nbr = jnp.roll(d, shift, axis=axis)
+        ok = (e > 0) & (d < dinf) & (cap_out > 0) & (d == d_nbr + 1) & thawed
+        dd = jnp.where(ok, jnp.minimum(e, cap_out), 0)
+        e = e - dd
+        cap_out = cap_out - dd
+        arrived = jnp.roll(dd, -shift, axis=axis)  # lands at the neighbor
+        e = e + arrived
+        cap_in_of_nbr = cap_in_of_nbr + arrived
+        return e, cap_out, cap_in_of_nbr
+
+    # north: neighbor at y-1 ⇒ its value is roll(d, +1, axis=0); the
+    # reverse arc of a north push is the receiver's *south* capacity.
+    e, cn, cs = push(e, cn, cs, axis=0, shift=1)
+    e, cs, cn = push(e, cs, cn, axis=0, shift=-1)
+    e, cw, ce = push(e, cw, ce, axis=1, shift=1)
+    e, ce, cw = push(e, ce, cw, axis=1, shift=-1)
+
+    # ---- 3. Jacobi relabel -------------------------------------------------
+    big = dinf
+    cand = jnp.where(sc > 0, 1, big)
+    cand = jnp.minimum(cand, jnp.where(cn > 0, jnp.roll(d, 1, axis=0) + 1, big))
+    cand = jnp.minimum(cand, jnp.where(cs > 0, jnp.roll(d, -1, axis=0) + 1, big))
+    cand = jnp.minimum(cand, jnp.where(cw > 0, jnp.roll(d, 1, axis=1) + 1, big))
+    cand = jnp.minimum(cand, jnp.where(ce > 0, jnp.roll(d, -1, axis=1) + 1, big))
+    active = (e > 0) & (d < dinf) & thawed
+    d = jnp.where(active, jnp.maximum(d, jnp.minimum(cand, dinf)), d)
+
+    return e, d, cn, cs, ce, cw, sc, flow
+
+
+def _wave_kernel(
+    e_ref, d_ref, cn_ref, cs_ref, ce_ref, cw_ref, sc_ref, frozen_ref, dinf_ref,
+    e_o, d_o, cn_o, cs_o, ce_o, cw_o, sc_o, flow_o,
+):
+    dinf = dinf_ref[0, 0]
+    out = _wave_math(
+        e_ref[...], d_ref[...], cn_ref[...], cs_ref[...], ce_ref[...],
+        cw_ref[...], sc_ref[...], frozen_ref[...], dinf,
+    )
+    e, d, cn, cs, ce, cw, sc, flow = out
+    e_o[...] = e
+    d_o[...] = d
+    cn_o[...] = cn
+    cs_o[...] = cs
+    ce_o[...] = ce
+    cw_o[...] = cw
+    sc_o[...] = sc
+    flow_o[...] = flow.reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wave(e, d, cn, cs, ce, cw, sc, frozen, dinf, interpret=True):
+    """Run one lock-step wave via the Pallas kernel.
+
+    All planes are ``int32[H, W]``; ``dinf`` is ``int32[1, 1]``. Returns
+    the updated ``(e, d, cn, cs, ce, cw, sc)`` and the ``int32[1, 1]``
+    flow pushed to the sink.
+    """
+    h, w = e.shape
+    plane = jax.ShapeDtypeStruct((h, w), jnp.int32)
+    out_shape = [plane] * 7 + [jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+    return pl.pallas_call(
+        _wave_kernel,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(e, d, cn, cs, ce, cw, sc, frozen, dinf)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracle for the lock-step push-relabel wave.
+
+Written *independently* of the kernel (explicit zero-padded slicing
+instead of rolls, gather-style formulation of the relabel) so the
+pytest comparison against :mod:`grid_pr` is meaningful. Also hosts a
+slow, pure-python maxflow (BFS Ford–Fulkerson on the grid) used by the
+convergence tests.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _shift(a, dy, dx, fill):
+    """a shifted so that out[y, x] = a[y+dy, x+dx] (fill outside)."""
+    out = np.full_like(np.asarray(a), fill)
+    h, w = a.shape
+    ys = slice(max(0, -dy), min(h, h - dy))
+    xs = slice(max(0, -dx), min(w, w - dx))
+    ysrc = slice(max(0, dy), min(h, h + dy))
+    xsrc = slice(max(0, dx), min(w, w + dx))
+    out[ys, xs] = np.asarray(a)[ysrc, xsrc]
+    return jnp.asarray(out)
+
+
+def wave_ref(e, d, cn, cs, ce, cw, sc, frozen, dinf):
+    """One lock-step wave; same contract as grid_pr.wave (minus jit)."""
+    dinf = int(np.asarray(dinf).reshape(()))
+    thawed = frozen == 0
+
+    # push to sink
+    delta = jnp.where((e > 0) & (d == 1) & (sc > 0) & thawed, jnp.minimum(e, sc), 0)
+    e = e - delta
+    sc = sc - delta
+    flow = int(jnp.sum(delta))
+
+    # pushes; order must match the kernel: N, S, W, E
+    # direction: (cap, reverse cap, dy, dx) where (dy,dx) is the neighbor
+    for cap_name, rev_name, dy, dx in (
+        ("cn", "cs", -1, 0),
+        ("cs", "cn", 1, 0),
+        ("cw", "ce", 0, -1),
+        ("ce", "cw", 0, 1),
+    ):
+        caps = {"cn": cn, "cs": cs, "ce": ce, "cw": cw}
+        cap = caps[cap_name]
+        d_nbr = _shift(d, dy, dx, fill=2 * dinf + 5)  # border: inadmissible
+        ok = (e > 0) & (d < dinf) & (cap > 0) & (d == d_nbr + 1) & thawed
+        dd = jnp.where(ok, jnp.minimum(e, cap), 0)
+        e = e - dd
+        cap = cap - dd
+        arrived = _shift(dd, -dy, -dx, fill=0)
+        e = e + arrived
+        rev = caps[rev_name] + arrived
+        caps[cap_name] = cap
+        caps[rev_name] = rev
+        cn, cs, ce, cw = caps["cn"], caps["cs"], caps["ce"], caps["cw"]
+
+    # relabel
+    big = dinf
+    cand = jnp.where(sc > 0, 1, big)
+    for cap, dy, dx in ((cn, -1, 0), (cs, 1, 0), (cw, 0, -1), (ce, 0, 1)):
+        d_nbr = _shift(d, dy, dx, fill=big)
+        cand = jnp.minimum(cand, jnp.where(cap > 0, d_nbr + 1, big))
+    active = (e > 0) & (d < dinf) & thawed
+    d = jnp.where(active, jnp.maximum(d, jnp.minimum(cand, big)), d)
+
+    return e, d, cn, cs, ce, cw, sc, jnp.asarray([[flow]], dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# pure-python maxflow oracle on the grid (BFS augmentation)
+# ---------------------------------------------------------------------------
+
+
+def maxflow_grid(e, cn, cs, ce, cw, sc):
+    """Max preflow value of the grid network: excess `e` routed to the
+    implicit sink through n-links and `sc` sink arcs."""
+    e = np.asarray(e).astype(np.int64).copy()
+    sc = np.asarray(sc).astype(np.int64).copy()
+    caps = {
+        (-1, 0): np.asarray(cn).astype(np.int64).copy(),
+        (1, 0): np.asarray(cs).astype(np.int64).copy(),
+        (0, -1): np.asarray(cw).astype(np.int64).copy(),
+        (0, 1): np.asarray(ce).astype(np.int64).copy(),
+    }
+    h, w = e.shape
+    total = 0
+    while True:
+        # BFS from all excess nodes toward any node with sink capacity
+        parent = {}
+        frontier = [(y, x) for y in range(h) for x in range(w) if e[y, x] > 0]
+        for f in frontier:
+            parent[f] = None
+        goal = None
+        qi = 0
+        while qi < len(frontier):
+            v = frontier[qi]
+            qi += 1
+            if sc[v] > 0:
+                goal = v
+                break
+            for (dy, dx), cap in caps.items():
+                u = (v[0] + dy, v[1] + dx)
+                if 0 <= u[0] < h and 0 <= u[1] < w and u not in parent and cap[v] > 0:
+                    parent[u] = (v, (dy, dx))
+                    frontier.append(u)
+        if goal is None:
+            return total
+        # walk back, find bottleneck
+        path = []
+        v = goal
+        while parent[v] is not None:
+            prev, d = parent[v]
+            path.append((prev, d))
+            v = prev
+        root = v
+        bottleneck = min([e[root], sc[goal]] + [caps[d][v] for v, d in path])
+        e[root] -= bottleneck
+        sc[goal] -= bottleneck
+        for v, d in path:
+            caps[d][v] -= bottleneck
+            rd = (-d[0], -d[1])
+            u = (v[0] + d[0], v[1] + d[1])
+            caps[rd][u] += bottleneck
+        total += bottleneck

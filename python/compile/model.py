@@ -1,0 +1,40 @@
+"""L2: the JAX compute graph around the L1 wave kernel.
+
+``grid_pr_sweeps`` runs ``iters`` lock-step push-relabel waves over the
+region plane-stack with a single fused ``lax.fori_loop`` (one XLA while
+loop; all planes are loop carries, so nothing is re-materialized between
+waves) and accumulates the flow routed to the sink. It is lowered once
+by :mod:`compile.aot` to HLO text and executed from the rust runtime —
+Python never runs on the solve path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import grid_pr
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def grid_pr_sweeps(e, d, cn, cs, ce, cw, sc, frozen, dinf, iters=32, interpret=True):
+    """Run ``iters`` waves; returns the updated planes plus the total
+    flow pushed to the sink (``int32[1, 1]``)."""
+
+    def body(_, state):
+        e, d, cn, cs, ce, cw, sc, flow = state
+        e, d, cn, cs, ce, cw, sc, df = grid_pr.wave(
+            e, d, cn, cs, ce, cw, sc, frozen, dinf, interpret=interpret
+        )
+        return (e, d, cn, cs, ce, cw, sc, flow + df)
+
+    flow0 = jnp.zeros((1, 1), dtype=jnp.int32)
+    state = jax.lax.fori_loop(0, iters, body, (e, d, cn, cs, ce, cw, sc, flow0))
+    return state
+
+
+def example_args(h, w):
+    """ShapeDtypeStructs for AOT lowering of an ``h × w`` region."""
+    plane = jax.ShapeDtypeStruct((h, w), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+    return (plane,) * 7 + (plane, scalar)

@@ -1,0 +1,127 @@
+"""L1 correctness: the Pallas wave kernel vs the independent pure-jnp
+oracle in ref.py, across seeded sweeps of shapes and capacity regimes
+(hypothesis is unavailable offline; explicit seeds play its role)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import grid_pr, ref
+
+
+def random_state(h, w, seed, strength=20, excess=30, frozen_halo=False):
+    rng = np.random.RandomState(seed)
+    e = rng.randint(0, excess + 1, size=(h, w)).astype(np.int32)
+    sc = rng.randint(0, excess + 1, size=(h, w)).astype(np.int32)
+    # a node holds excess or sink capacity, not both (excess form)
+    keep_e = rng.rand(h, w) < 0.5
+    e = np.where(keep_e, e, 0).astype(np.int32)
+    sc = np.where(~keep_e, sc, 0).astype(np.int32)
+    d = np.zeros((h, w), dtype=np.int32)
+    caps = {}
+    for name in ("cn", "cs", "ce", "cw"):
+        caps[name] = rng.randint(0, strength + 1, size=(h, w)).astype(np.int32)
+    # border-pointing capacities must be zero
+    caps["cn"][0, :] = 0
+    caps["cs"][-1, :] = 0
+    caps["cw"][:, 0] = 0
+    caps["ce"][:, -1] = 0
+    frozen = np.zeros((h, w), dtype=np.int32)
+    if frozen_halo:
+        frozen[0, :] = frozen[-1, :] = 1
+        frozen[:, 0] = frozen[:, -1] = 1
+        e[frozen == 1] = 0
+        sc[frozen == 1] = 0
+    dinf = np.asarray([[h * w + 2]], dtype=np.int32)
+    return (
+        jnp.asarray(e),
+        jnp.asarray(d),
+        jnp.asarray(caps["cn"]),
+        jnp.asarray(caps["cs"]),
+        jnp.asarray(caps["ce"]),
+        jnp.asarray(caps["cw"]),
+        jnp.asarray(sc),
+        jnp.asarray(frozen),
+        jnp.asarray(dinf),
+    )
+
+
+def run_waves(fn, state, waves):
+    e, d, cn, cs, ce, cw, sc, frozen, dinf = state
+    total = 0
+    for _ in range(waves):
+        e, d, cn, cs, ce, cw, sc, flow = fn(e, d, cn, cs, ce, cw, sc, frozen, dinf)
+        total += int(np.asarray(flow).reshape(()))
+    return (e, d, cn, cs, ce, cw, sc), total
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("shape", [(4, 5), (8, 8), (13, 7)])
+def test_wave_matches_ref(seed, shape):
+    state = random_state(*shape, seed=seed)
+    got, flow_k = run_waves(grid_pr.wave, state, waves=5)
+    want, flow_r = run_waves(ref.wave_ref, state, waves=5)
+    for g, w, name in zip(got, want, "e d cn cs ce cw sc".split()):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    assert flow_k == flow_r
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_wave_matches_ref_with_frozen_halo(seed):
+    state = random_state(9, 9, seed=seed, frozen_halo=True)
+    got, flow_k = run_waves(grid_pr.wave, state, waves=8)
+    want, flow_r = run_waves(ref.wave_ref, state, waves=8)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert flow_k == flow_r
+
+
+def test_wave_invariants():
+    """Capacities and excess stay non-negative; labels are monotone;
+    total mass (excess + flow) is conserved."""
+    state = random_state(10, 10, seed=42)
+    e, d, cn, cs, ce, cw, sc, frozen, dinf = state
+    mass0 = int(np.sum(np.asarray(e)))
+    total = 0
+    prev_d = np.asarray(d)
+    for _ in range(20):
+        e, d, cn, cs, ce, cw, sc, flow = grid_pr.wave(
+            e, d, cn, cs, ce, cw, sc, frozen, dinf
+        )
+        total += int(np.asarray(flow).reshape(()))
+        for plane in (e, cn, cs, ce, cw, sc):
+            assert int(np.min(np.asarray(plane))) >= 0
+        nd = np.asarray(d)
+        assert (nd >= prev_d).all(), "labels are monotone"
+        prev_d = nd
+    assert int(np.sum(np.asarray(e))) + total == mass0, "mass conserved"
+
+
+def test_frozen_cells_absorb_but_never_push():
+    """Flow pushed into a frozen cell stays there as excess."""
+    h = w = 5
+    e = np.zeros((h, w), np.int32)
+    e[2, 2] = 9
+    sc = np.zeros((h, w), np.int32)
+    caps = {n: np.full((h, w), 10, np.int32) for n in ("cn", "cs", "ce", "cw")}
+    caps["cn"][0, :] = 0
+    caps["cs"][-1, :] = 0
+    caps["cw"][:, 0] = 0
+    caps["ce"][:, -1] = 0
+    frozen = np.zeros((h, w), np.int32)
+    frozen[0, :] = frozen[-1, :] = 1
+    frozen[:, 0] = frozen[:, -1] = 1
+    d = np.zeros((h, w), np.int32)
+    dinf = np.asarray([[h * w + 2]], np.int32)
+    args = [jnp.asarray(x) for x in (e, d, caps["cn"], caps["cs"], caps["ce"], caps["cw"], sc, frozen, dinf)]
+    state = tuple(args)
+    e, d, cn, cs, ce, cw, sc2, frozen_, dinf_ = state
+    for _ in range(30):
+        e, d, cn, cs, ce, cw, sc2, flow = grid_pr.wave(
+            e, d, cn, cs, ce, cw, sc2, frozen_, dinf_
+        )
+        assert int(np.asarray(flow).reshape(())) == 0, "no sink anywhere"
+    e = np.asarray(e)
+    halo = np.asarray(frozen_) == 1
+    assert e[halo].sum() == 9, "all excess exported to the frozen halo"
+    assert e[~halo].sum() == 0

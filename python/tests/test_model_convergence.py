@@ -1,0 +1,69 @@
+"""L2 correctness: iterating the wave converges to a maximum preflow —
+the flow routed to the sink equals the pure-python Ford–Fulkerson value,
+and trapped excess ends at the label ceiling."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernel_vs_ref import random_state
+
+
+def solve_to_convergence(state, max_calls=200, iters=16):
+    e, d, cn, cs, ce, cw, sc, frozen, dinf = state
+    total = 0
+    for _ in range(max_calls):
+        e, d, cn, cs, ce, cw, sc, flow = model.grid_pr_sweeps(
+            e, d, cn, cs, ce, cw, sc, frozen, dinf, iters=iters
+        )
+        total += int(np.asarray(flow).reshape(()))
+        active = np.asarray(
+            (e > 0) & (d < int(np.asarray(dinf).reshape(()))) & (frozen == 0)
+        )
+        if not active.any():
+            return (e, d, cn, cs, ce, cw, sc), total
+    raise AssertionError("did not converge")
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("shape", [(5, 5), (7, 9)])
+def test_converges_to_maxflow(seed, shape):
+    state = random_state(*shape, seed=seed, strength=8, excess=12)
+    e0, _, cn0, cs0, ce0, cw0, sc0, _, _ = state
+    expect = ref.maxflow_grid(e0, cn0, cs0, ce0, cw0, sc0)
+    (_, d, *_rest), total = solve_to_convergence(state)
+    assert total == expect
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_trapped_excess_reaches_ceiling(seed):
+    state = random_state(6, 6, seed=seed, strength=5, excess=10)
+    # remove all sink capacity: everything is trapped
+    e, d, cn, cs, ce, cw, sc, frozen, dinf = state
+    sc = jnp.zeros_like(sc)
+    (e, d, *_), total = solve_to_convergence(
+        (e, d, cn, cs, ce, cw, sc, frozen, dinf)
+    )
+    assert total == 0
+    e = np.asarray(e)
+    d = np.asarray(d)
+    ceiling = int(np.asarray(dinf).reshape(()))
+    assert (d[e > 0] == ceiling).all()
+
+
+def test_fori_loop_equals_manual_waves():
+    from compile.kernels import grid_pr
+
+    state = random_state(8, 8, seed=3)
+    e, d, cn, cs, ce, cw, sc, frozen, dinf = state
+    out = model.grid_pr_sweeps(e, d, cn, cs, ce, cw, sc, frozen, dinf, iters=7)
+    e2, d2, cn2, cs2, ce2, cw2, sc2, flow2 = out
+    total = 0
+    for _ in range(7):
+        e, d, cn, cs, ce, cw, sc, f = grid_pr.wave(e, d, cn, cs, ce, cw, sc, frozen, dinf)
+        total += int(np.asarray(f).reshape(()))
+    np.testing.assert_array_equal(np.asarray(e2), np.asarray(e))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d))
+    assert int(np.asarray(flow2).reshape(())) == total

@@ -1,0 +1,7 @@
+//! `cargo bench --bench appendix_a_tightness` — regenerates the paper's appendix_a
+//! series (see DESIGN.md §3 and EXPERIMENTS.md). Quick scale by
+//! default; set ARMINCUT_FULL=1 for paper-scale instances.
+fn main() {
+    let quick = armincut::experiments::is_quick();
+    armincut::experiments::run("appendix_a", quick).expect("experiment");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig7_regions` — regenerates the paper's fig7
+//! series (see DESIGN.md §3 and EXPERIMENTS.md). Quick scale by
+//! default; set ARMINCUT_FULL=1 for paper-scale instances.
+fn main() {
+    let quick = armincut::experiments::is_quick();
+    armincut::experiments::run("fig7", quick).expect("experiment");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table3_reduction` — regenerates the paper's table3
+//! series (see DESIGN.md §3 and EXPERIMENTS.md). Quick scale by
+//! default; set ARMINCUT_FULL=1 for paper-scale instances.
+fn main() {
+    let quick = armincut::experiments::is_quick();
+    armincut::experiments::run("table3", quick).expect("experiment");
+}

@@ -1,0 +1,382 @@
+//! Dual-decomposition baseline (Strandmark & Kahl, CVPR 2010 — the
+//! paper's §7.3 competitor, related to flows in Appendix B).
+//!
+//! The graph is split into overlapping subproblems: each region `R_r`
+//! plus copies of the adjacent boundary (separator) vertices. The
+//! capacity of every inter-region edge is divided between the two
+//! subproblems that see it; the coupling constraint — all copies of a
+//! separator vertex fall on the same side of the cut — is relaxed with
+//! Lagrangian multipliers `λ`, optimized by integer subgradient ascent.
+//!
+//! As the paper observes, the integer variant is a *heuristic with no
+//! termination guarantee*: on disagreement the step halves down to 1
+//! and then an optional randomized ±1 perturbation tries to "guess the
+//! last bit". We faithfully reproduce that behaviour, including the
+//! iteration cap after which the run is reported NOT CONVERGED.
+//!
+//! A multiplier term `μ·x_v` (cost `μ` when `v` is on the sink side)
+//! maps to terminal capacities: `μ > 0` becomes excess (a source arc cut
+//! when `x_v = 1`), `μ < 0` becomes sink capacity (cut when `x_v = 0`,
+//! up to a constant). Appendix B interprets the optimal `λ` as the flow
+//! on the infinite-capacity copy-coupling edges.
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::sequential::SolveResult;
+use crate::core::graph::{Cap, Graph, GraphBuilder, GraphSnapshot, NodeId};
+use crate::core::partition::Partition;
+use crate::core::prng::Rng;
+use crate::solvers::dinic::Dinic;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Options of the DD solve.
+#[derive(Debug, Clone)]
+pub struct DdOptions {
+    /// Iteration cap (the reference implementation's internal bound is
+    /// 1000; §7.3).
+    pub max_iters: u32,
+    /// Worker threads for the per-region subproblems.
+    pub threads: usize,
+    /// Initial subgradient step; `0` = auto (max terminal / 4 + 1).
+    pub step0: Cap,
+    /// Halve the step after this many iterations without improving the
+    /// number of disagreeing separator copies.
+    pub patience: u32,
+    /// Randomized ±1 perturbation when stalled at step 1 (the reference
+    /// implementation's randomization; without it DD "did not terminate
+    /// in 1000 iterations on a simple example of 4 nodes").
+    pub randomize: bool,
+    pub seed: u64,
+}
+
+impl Default for DdOptions {
+    fn default() -> Self {
+        DdOptions {
+            max_iters: 1000,
+            threads: 4,
+            step0: 0,
+            patience: 10,
+            randomize: true,
+            seed: 1,
+        }
+    }
+}
+
+/// One subproblem: the region network with separator copies.
+struct Sub {
+    graph: Graph,
+    /// pristine capacities/terminals (λ = 0)
+    base: GraphSnapshot,
+    /// global id of every local vertex (kept for debugging dumps)
+    #[allow(dead_code)]
+    global_ids: Vec<NodeId>,
+    /// local ids of separator copies, parallel to `sep_mu`
+    sep_local: Vec<u32>,
+    /// cut side (`true` = sink) per local vertex after the last solve
+    sides: Vec<bool>,
+}
+
+/// A coupling constraint: copy `(sub_b, local_b)` must match the owner
+/// copy `(sub_a, local_a)`; multiplier `lambda` transfers cost between
+/// them.
+struct Coupling {
+    sub_a: usize,
+    local_a: u32,
+    sub_b: usize,
+    local_b: u32,
+    lambda: Cap,
+}
+
+/// Solve `g` by dual decomposition over `partition`.
+pub fn solve_dd(g: &Graph, partition: &Partition, opts: &DdOptions) -> SolveResult {
+    let t_total = std::time::Instant::now();
+    let n = g.n();
+    let k = partition.k;
+    let members = partition.members();
+    let bmask = partition.boundary_mask(g);
+
+    // ---- vertex sets of each subproblem --------------------------------
+    // owner region first; then every region adjacent through an edge
+    let mut local_of: Vec<Vec<u32>> = vec![vec![u32::MAX; n]; k];
+    let mut subs_globals: Vec<Vec<NodeId>> = vec![Vec::new(); k];
+    for r in 0..k {
+        for &v in &members[r] {
+            local_of[r][v as usize] = subs_globals[r].len() as u32;
+            subs_globals[r].push(v);
+        }
+    }
+    for v in 0..n {
+        if !bmask[v] {
+            continue;
+        }
+        for a in g.arc_range(v as NodeId) {
+            let u = g.head(a as u32) as usize;
+            let ru = partition.region(u as NodeId) as usize;
+            if ru != partition.region(v as NodeId) as usize && local_of[ru][v] == u32::MAX {
+                local_of[ru][v] = subs_globals[ru].len() as u32;
+                subs_globals[ru].push(v as NodeId);
+            }
+        }
+    }
+
+    // ---- builders --------------------------------------------------------
+    let mut builders: Vec<GraphBuilder> =
+        subs_globals.iter().map(|gl| GraphBuilder::new(gl.len())).collect();
+    for v in 0..n {
+        let rv = partition.region(v as NodeId) as usize;
+        for a in g.arc_range(v as NodeId) {
+            let u = g.head(a as u32) as usize;
+            let sa = g.sister(a as u32) as usize;
+            if (a as usize) > sa {
+                continue; // handle each undirected pair once
+            }
+            let (cuv, cvu) = (g.cap[a], g.cap[sa]);
+            let ru = partition.region(u as NodeId) as usize;
+            if ru == rv {
+                builders[rv].add_edge(local_of[rv][v], local_of[rv][u], cuv, cvu);
+            } else {
+                // split capacities between the two subproblems
+                let (cuv_a, cvu_a) = (cuv - cuv / 2, cvu - cvu / 2);
+                let (cuv_b, cvu_b) = (cuv / 2, cvu / 2);
+                builders[rv].add_edge(local_of[rv][v], local_of[rv][u], cuv_a, cvu_a);
+                builders[ru].add_edge(local_of[ru][v], local_of[ru][u], cuv_b, cvu_b);
+            }
+        }
+        // terminals go to the owner subproblem
+        builders[rv].add_terminal(local_of[rv][v], g.excess[v], g.sink_cap[v]);
+    }
+
+    let mut subs: Vec<Sub> = builders
+        .into_iter()
+        .zip(subs_globals.iter())
+        .map(|(b, gl)| {
+            let graph = b.build();
+            let base = graph.snapshot();
+            let nn = graph.n();
+            Sub {
+                graph,
+                base,
+                global_ids: gl.clone(),
+                sep_local: Vec::new(),
+                sides: vec![false; nn],
+            }
+        })
+        .collect();
+
+    // ---- couplings -------------------------------------------------------
+    let mut couplings: Vec<Coupling> = Vec::new();
+    for v in 0..n {
+        if !bmask[v] {
+            continue;
+        }
+        let owner = partition.region(v as NodeId) as usize;
+        for r in 0..k {
+            if r != owner && local_of[r][v] != u32::MAX {
+                couplings.push(Coupling {
+                    sub_a: owner,
+                    local_a: local_of[owner][v],
+                    sub_b: r,
+                    local_b: local_of[r][v],
+                    lambda: 0,
+                });
+            }
+        }
+    }
+    for c in &couplings {
+        subs[c.sub_a].sep_local.push(c.local_a);
+        subs[c.sub_b].sep_local.push(c.local_b);
+    }
+
+    let max_term = (0..n)
+        .map(|v| g.excess[v].max(g.sink_cap[v]))
+        .max()
+        .unwrap_or(1);
+    let mut step: Cap = if opts.step0 > 0 { opts.step0 } else { max_term / 4 + 1 };
+    let mut rng = Rng::new(opts.seed);
+
+    let mut metrics = RunMetrics::default();
+    metrics.shared_mem_bytes = couplings.len() * std::mem::size_of::<Coupling>();
+    metrics.max_region_mem_bytes = subs.iter().map(|s| s.graph.memory_bytes()).max().unwrap_or(0);
+
+    // accumulated multiplier per (sub, local) — rebuilt each iteration
+    let mut best_disagree = usize::MAX;
+    let mut since_best = 0u32;
+    let mut converged = false;
+
+    for _iter in 0..opts.max_iters {
+        metrics.sweeps += 1;
+        // ---- apply multipliers to terminals -----------------------------
+        for sub in subs.iter_mut() {
+            sub.graph.restore(&sub.base);
+        }
+        for c in &couplings {
+            // dual: min over x of (C_a - λ x_a) + min over y of (C_b + λ x_b)
+            apply_mu(&mut subs[c.sub_a].graph, c.local_a, -c.lambda);
+            apply_mu(&mut subs[c.sub_b].graph, c.local_b, c.lambda);
+        }
+
+        // ---- solve subproblems in parallel --------------------------------
+        {
+            let next = AtomicUsize::new(0);
+            let queue: Vec<Mutex<&mut Sub>> = subs.iter_mut().map(Mutex::new).collect();
+            std::thread::scope(|scope| {
+                for _ in 0..opts.threads.max(1) {
+                    scope.spawn(|| {
+                        let mut dinic = Dinic::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= queue.len() {
+                                break;
+                            }
+                            let mut sub = queue[i].lock().unwrap();
+                            dinic.run(&mut sub.graph, None, true, None);
+                            sub.sides = sub.graph.sink_reachable();
+                        }
+                    });
+                }
+            });
+        }
+        metrics.discharges += subs.len() as u64;
+
+        // ---- subgradient step ----------------------------------------------
+        let mut disagree = 0usize;
+        for c in couplings.iter_mut() {
+            let xa = subs[c.sub_a].sides[c.local_a as usize]; // owner copy
+            let xb = subs[c.sub_b].sides[c.local_b as usize];
+            if xa != xb {
+                disagree += 1;
+                // dual gradient of term λ(x_b - x_a)
+                let grad: Cap = (xb as Cap) - (xa as Cap);
+                c.lambda += step * grad;
+                if opts.randomize && step == 1 {
+                    c.lambda += rng.range_i64(-1, 1);
+                }
+            }
+            metrics.msg_bytes += 16;
+        }
+        if disagree == 0 {
+            converged = true;
+            break;
+        }
+        if disagree < best_disagree {
+            best_disagree = disagree;
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best >= opts.patience {
+                step = (step / 2).max(1);
+                since_best = 0;
+            }
+        }
+    }
+
+    // ---- assemble the global assignment from owner copies ---------------
+    let mut cut = vec![false; n];
+    for (r, sub) in subs.iter().enumerate() {
+        for &v in &members[r] {
+            cut[v as usize] = sub.sides[local_of[r][v as usize] as usize];
+        }
+    }
+    let snap = g.snapshot();
+    metrics.flow = g.cut_cost(&snap, &cut);
+    metrics.converged = converged;
+    metrics.t_total = t_total.elapsed();
+    metrics.t_discharge = metrics.t_total;
+    SolveResult { metrics, cut }
+}
+
+/// Add the multiplier term `μ·x_v` to `gr`'s terminals at vertex `lv`.
+fn apply_mu(gr: &mut Graph, lv: u32, mu: Cap) {
+    if mu >= 0 {
+        gr.excess[lv as usize] += mu;
+    } else {
+        gr.sink_cap[lv as usize] += -mu;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::prng::Rng;
+    use crate::solvers::oracle::reference_value;
+
+    fn random_graph(seed: u64, n: usize, extra: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n {
+            b.add_signed_terminal(v as u32, rng.range_i64(-30, 30));
+        }
+        for v in 1..n {
+            let u = rng.index(v) as u32;
+            b.add_edge(u, v as u32, rng.range_i64(0, 20), rng.range_i64(0, 20));
+        }
+        for _ in 0..extra {
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            b.add_edge(u, v, rng.range_i64(0, 20), rng.range_i64(0, 20));
+        }
+        b.build()
+    }
+
+    #[test]
+    fn dd_exact_when_converged() {
+        let mut solved = 0;
+        for seed in 0..8 {
+            let g = random_graph(seed, 24, 40);
+            let p = Partition::by_node_ranges(g.n(), 2);
+            let res = solve_dd(&g, &p, &DdOptions::default());
+            if res.metrics.converged {
+                assert_eq!(res.metrics.flow, reference_value(&g), "agreement implies optimality");
+                solved += 1;
+            }
+        }
+        assert!(solved >= 4, "DD should converge on most small instances (got {solved})");
+    }
+
+    #[test]
+    fn dd_trivial_partition_single_iteration() {
+        // with a single region there are no couplings: one exact solve
+        let g = random_graph(3, 20, 30);
+        let p = Partition::single(g.n());
+        let res = solve_dd(&g, &p, &DdOptions::default());
+        assert!(res.metrics.converged);
+        assert_eq!(res.metrics.sweeps, 1);
+        assert_eq!(res.metrics.flow, reference_value(&g));
+    }
+
+    #[test]
+    fn dd_may_fail_to_terminate() {
+        // the paper: without randomization DD may loop forever; we only
+        // require the iteration cap to fire and be reported.
+        let mut any_failed = false;
+        for seed in 0..6 {
+            let g = random_graph(40 + seed, 30, 60);
+            let p = Partition::by_node_ranges(g.n(), 4);
+            let mut o = DdOptions::default();
+            o.randomize = false;
+            o.max_iters = 60;
+            let res = solve_dd(&g, &p, &o);
+            if !res.metrics.converged {
+                any_failed = true;
+            } else {
+                assert_eq!(res.metrics.flow, reference_value(&g));
+            }
+        }
+        // not asserting any_failed (instance-dependent), but exercising the path
+        let _ = any_failed;
+    }
+
+    #[test]
+    fn dd_cut_cost_reported_even_unconverged() {
+        let g = random_graph(99, 26, 40);
+        let p = Partition::by_node_ranges(g.n(), 2);
+        let mut o = DdOptions::default();
+        o.max_iters = 1;
+        let res = solve_dd(&g, &p, &o);
+        // cut cost of any assignment is an upper bound on the mincut
+        assert!(res.metrics.flow >= reference_value(&g));
+    }
+}

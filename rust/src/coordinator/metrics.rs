@@ -1,0 +1,112 @@
+//! Run metrics: sweeps, communication, disk I/O, and the CPU-time
+//! breakdown by work kind (the paper's Fig. 10 workload split).
+
+use crate::core::graph::Cap;
+use std::time::Duration;
+
+/// Aggregated metrics of one distributed solve.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Maximum-flow value found.
+    pub flow: Cap,
+    /// Sweeps over all regions until no vertex is active.
+    pub sweeps: u32,
+    /// Extra label-only sweeps needed to extract the cut (§5.3).
+    pub extra_sweeps: u32,
+    /// Individual region discharges executed (inactive regions skipped).
+    pub discharges: u64,
+    /// Bytes moved between regions and shared state ("messages").
+    pub msg_bytes: u64,
+    /// Streaming mode: bytes read/written to region page files.
+    pub disk_read_bytes: u64,
+    pub disk_write_bytes: u64,
+    /// CPU breakdown (Fig. 10): core discharge work, region-relabel,
+    /// gap heuristics (global + boundary-relabel), message passing
+    /// (sync_in/out), disk paging.
+    pub t_discharge: Duration,
+    pub t_relabel: Duration,
+    pub t_gap: Duration,
+    pub t_msg: Duration,
+    pub t_disk: Duration,
+    /// Wall-clock of the whole solve.
+    pub t_total: Duration,
+    /// Shared + maximum region-resident memory estimate, bytes.
+    pub shared_mem_bytes: usize,
+    pub max_region_mem_bytes: usize,
+    /// Whether the algorithm terminated (DD may not).
+    pub converged: bool,
+}
+
+impl RunMetrics {
+    /// CPU time excluding disk (the paper's "CPU" column).
+    pub fn cpu(&self) -> Duration {
+        self.t_discharge + self.t_relabel + self.t_gap + self.t_msg
+    }
+
+    /// One-line summary used by the CLI and benches.
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: flow={} sweeps={}(+{}) discharges={} cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) io r/w {}/{} MB mem {}+{} MB{}",
+            self.flow,
+            self.sweeps,
+            self.extra_sweeps,
+            self.discharges,
+            self.cpu().as_secs_f64(),
+            self.t_discharge.as_secs_f64(),
+            self.t_relabel.as_secs_f64(),
+            self.t_gap.as_secs_f64(),
+            self.t_msg.as_secs_f64(),
+            self.disk_read_bytes / (1 << 20),
+            self.disk_write_bytes / (1 << 20),
+            self.shared_mem_bytes / (1 << 20),
+            self.max_region_mem_bytes / (1 << 20),
+            if self.converged { "" } else { " [NOT CONVERGED]" },
+        )
+    }
+}
+
+/// Simple scope timer accumulating into a `Duration`.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    #[inline]
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    #[inline]
+    pub fn stop(self, acc: &mut Duration) {
+        *acc += self.0.elapsed();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_sums_phases() {
+        let m = RunMetrics {
+            t_discharge: Duration::from_millis(10),
+            t_relabel: Duration::from_millis(5),
+            t_gap: Duration::from_millis(3),
+            t_msg: Duration::from_millis(2),
+            ..Default::default()
+        };
+        assert_eq!(m.cpu(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn timer_accumulates() {
+        let mut acc = Duration::ZERO;
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(1));
+        t.stop(&mut acc);
+        assert!(acc >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn summary_flags_divergence() {
+        let m = RunMetrics { converged: false, ..Default::default() };
+        assert!(m.summary("dd").contains("NOT CONVERGED"));
+    }
+}

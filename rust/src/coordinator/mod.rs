@@ -1,0 +1,12 @@
+//! Coordinators: the generic sequential (Alg. 1) and parallel (Alg. 2)
+//! region-discharge drivers, the streaming pager, the dual-decomposition
+//! baseline, and run metrics.
+
+pub mod metrics;
+pub mod sequential;
+pub mod parallel;
+pub mod dd;
+
+pub use metrics::RunMetrics;
+pub use sequential::{solve_sequential, Algorithm, CoreKind, SeqOptions};
+pub use parallel::{solve_parallel, ParOptions};

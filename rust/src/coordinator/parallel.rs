@@ -1,0 +1,413 @@
+//! Parallel region-discharge coordinator (Algorithm 2 of the paper).
+//!
+//! All active regions are discharged *concurrently* against the same
+//! shared-state snapshot; conflicts on inter-region edges are then
+//! resolved by the paper's fusion step: labels are fused first
+//! (`d'|R_k := d'_k|R_k`), then for every boundary edge `(u, v)` the
+//! flow pushed over it survives only if the labeling stays valid on the
+//! reverse residual arc it creates — `α(u,v) = [d'(u) ≤ d'(v) + 1]`
+//! (line 5 of Alg. 2). A cancelled push stays at its tail vertex as
+//! excess (the tail of an inter-region arc is always a boundary vertex,
+//! so the returned excess parks in shared state).
+//!
+//! Implemented for the shared-memory model with `std::thread` workers
+//! (the paper uses OpenMP); the fusion, gap and boundary-relabel steps
+//! run synchronously on the master thread, as in §5.3.
+
+use crate::coordinator::metrics::{RunMetrics, Timer};
+use crate::coordinator::sequential::{Algorithm, CoreKind, GapState, SolveResult};
+use crate::core::graph::{Cap, Graph};
+use crate::core::partition::Partition;
+use crate::region::ard::{Ard, ArdCore};
+use crate::region::boundary_relabel::boundary_relabel;
+use crate::region::decompose::{Decomposition, DistanceMode, RegionPart};
+use crate::region::prd::Prd;
+use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
+use std::sync::Mutex;
+
+/// Options of the parallel solve.
+#[derive(Debug, Clone)]
+pub struct ParOptions {
+    pub algorithm: Algorithm,
+    pub core: CoreKind,
+    /// Worker threads (the paper's experiments use 4).
+    pub threads: usize,
+    pub partial_discharge: bool,
+    pub boundary_relabel: bool,
+    pub global_gap: bool,
+    /// Sweep limit; `0` = theoretical bound plus slack.
+    pub max_sweeps: u32,
+}
+
+impl Default for ParOptions {
+    fn default() -> Self {
+        ParOptions {
+            algorithm: Algorithm::Ard,
+            core: CoreKind::Dinic, // see SeqOptions: ~2x over BK-core here
+            threads: 4,
+            partial_discharge: true,
+            boundary_relabel: true,
+            global_gap: true,
+            max_sweeps: 0,
+        }
+    }
+}
+
+impl ParOptions {
+    pub fn ard(threads: usize) -> Self {
+        ParOptions { threads, ..Self::default() }
+    }
+    pub fn prd(threads: usize) -> Self {
+        ParOptions { algorithm: Algorithm::Prd, threads, ..Self::default() }
+    }
+}
+
+/// One per-sweep discharge job: the region and its pre-discharge owned
+/// boundary labels (for gap accounting on the master thread).
+struct Job<'a> {
+    r: usize,
+    part: &'a mut RegionPart,
+}
+
+/// Run the discharge jobs on `threads` workers; each worker owns its own
+/// solver workspace (allocations amortized across sweeps would need
+/// thread-local reuse; a fresh workspace per sweep keeps this simple and
+/// measurably cheap relative to discharge work).
+fn run_discharges(
+    jobs: Vec<Job<'_>>,
+    algorithm: Algorithm,
+    core: CoreKind,
+    d_inf: u32,
+    max_stage: u32,
+    threads: usize,
+) {
+    let queue = Mutex::new(jobs);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| {
+                let mut ard = Ard::new(match core {
+                    CoreKind::Dinic => ArdCore::dinic(),
+                    CoreKind::Bk => ArdCore::bk(),
+                });
+                let mut prd = Prd::new();
+                loop {
+                    let job = { queue.lock().unwrap().pop() };
+                    let Some(job) = job else { break };
+                    match algorithm {
+                        Algorithm::Ard => {
+                            ard.discharge(job.part, d_inf, max_stage);
+                        }
+                        Algorithm::Prd => {
+                            prd.discharge(job.part, d_inf);
+                        }
+                    }
+                    let _ = job.r;
+                }
+            });
+        }
+    });
+}
+
+/// The fusion step (lines 4–6 of Alg. 2). Returns message bytes.
+fn fuse(dec: &mut Decomposition, discharged: &[usize]) -> u64 {
+    let mut bytes = 0u64;
+    let d_inf = dec.shared.d_inf;
+
+    // ---- fuse labels: owners publish their new boundary labels ---------
+    for &r in discharged {
+        let part = &dec.parts[r];
+        for &(lv, b) in &part.owned_boundary {
+            dec.shared.d[b as usize] = part.label[lv as usize];
+            bytes += 4;
+        }
+    }
+
+    // ---- collect per-arc deltas from both sides -------------------------
+    // deltas[s] = (flow pushed in fw direction, flow pushed in bw direction)
+    let mut deltas: Vec<(Cap, Cap)> = vec![(0, 0); dec.shared.arcs.len()];
+    for &r in discharged {
+        let part = &dec.parts[r];
+        for (i, ba) in part.boundary_arcs.iter().enumerate() {
+            let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
+            debug_assert!(delta >= 0, "net boundary flow cannot be negative");
+            if ba.forward {
+                deltas[ba.shared as usize].0 += delta;
+            } else {
+                deltas[ba.shared as usize].1 += delta;
+            }
+        }
+    }
+
+    // ---- α-filter and apply ---------------------------------------------
+    for (s, &(dfw, dbw)) in deltas.iter().enumerate() {
+        if dfw == 0 && dbw == 0 {
+            continue;
+        }
+        let arc = dec.shared.arcs[s];
+        let (bu, bv) = (arc.bu as usize, arc.bv as usize);
+        let du = dec.shared.d[bu].min(d_inf);
+        let dv = dec.shared.d[bv].min(d_inf);
+        // a push u→v creates residual (v,u); keep it iff d'(v) ≤ d'(u)+1
+        let keep_fw = dv <= du + 1;
+        let keep_bw = du <= dv + 1;
+        debug_assert!(keep_fw || keep_bw, "both directions cannot be invalid");
+        let sa = &mut dec.shared.arcs[s];
+        if dfw > 0 {
+            if keep_fw {
+                sa.cap_fw -= dfw;
+                sa.cap_bw += dfw;
+                dec.shared.excess[bv] += dfw;
+            } else {
+                dec.shared.excess[bu] += dfw; // cancelled: stays at tail
+            }
+            bytes += 16;
+        }
+        if dbw > 0 {
+            if keep_bw {
+                sa.cap_bw -= dbw;
+                sa.cap_fw += dbw;
+                dec.shared.excess[bu] += dbw;
+            } else {
+                dec.shared.excess[bv] += dbw;
+            }
+            bytes += 16;
+        }
+    }
+
+    // ---- per-part cleanup: excess bookkeeping & activity ----------------
+    let d_inf = dec.shared.d_inf;
+    for &r in discharged {
+        let part = &mut dec.parts[r];
+        #[cfg(debug_assertions)]
+        {
+            // exported foreign excess must match the per-arc deltas
+            let mut per_vertex: std::collections::HashMap<u32, Cap> = Default::default();
+            for (i, ba) in part.boundary_arcs.iter().enumerate() {
+                let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
+                let head = part.graph.head(ba.local_arc);
+                *per_vertex.entry(head).or_default() += delta;
+            }
+            for &(lv, _) in &part.foreign_boundary {
+                let e = part.graph.excess[lv as usize];
+                assert_eq!(
+                    e,
+                    per_vertex.get(&lv).copied().unwrap_or(0),
+                    "foreign excess must equal net arc inflow"
+                );
+            }
+        }
+        for &(lv, _) in &part.foreign_boundary {
+            // already distributed arc-wise above
+            part.graph.excess[lv as usize] = 0;
+        }
+        for &(lv, b) in &part.owned_boundary {
+            let e = part.graph.excess[lv as usize];
+            if e > 0 {
+                dec.shared.excess[b as usize] += e;
+                part.graph.excess[lv as usize] = 0;
+                bytes += 8;
+            }
+        }
+        part.active = part.has_active_inner(d_inf);
+    }
+    bytes
+}
+
+/// Solve `g` under `partition` with Algorithm 2 on `opts.threads`
+/// workers.
+pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> SolveResult {
+    let t_total = std::time::Instant::now();
+    let mode = match opts.algorithm {
+        Algorithm::Ard => DistanceMode::Ard,
+        Algorithm::Prd => DistanceMode::Prd,
+    };
+    let mut dec = Decomposition::new(g, partition, mode);
+    let d_inf = dec.shared.d_inf;
+    let mut metrics = RunMetrics::default();
+    metrics.shared_mem_bytes = dec.shared.memory_bytes();
+    metrics.max_region_mem_bytes =
+        dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0);
+
+    let limit = if opts.max_sweeps > 0 {
+        opts.max_sweeps as u64
+    } else {
+        let b = dec.shared.num_boundary() as u64;
+        let n = dec.n_global as u64;
+        match opts.algorithm {
+            Algorithm::Ard => 2 * b * b + b + 16,
+            Algorithm::Prd => 2 * n * n + n + 16,
+        }
+    };
+
+    let mut converged = true;
+    while dec.any_active() {
+        if metrics.sweeps as u64 >= limit {
+            converged = false;
+            break;
+        }
+        let sweep = metrics.sweeps;
+        metrics.sweeps += 1;
+        let max_stage = if opts.partial_discharge && opts.algorithm == Algorithm::Ard {
+            sweep
+        } else {
+            u32::MAX
+        };
+
+        let active = dec.active_regions();
+        let tm = Timer::start();
+        for &r in &active {
+            metrics.msg_bytes += dec.sync_in(r);
+        }
+        tm.stop(&mut metrics.t_msg);
+
+        // ---- concurrent discharges (line 3 of Alg. 2) -------------------
+        let td = Timer::start();
+        {
+            let mut jobs: Vec<Job<'_>> = Vec::with_capacity(active.len());
+            let mut rest: &mut [RegionPart] = &mut dec.parts;
+            let mut offset = 0usize;
+            for &r in &active {
+                let (_skip, tail) = rest.split_at_mut(r - offset);
+                let (part, tail) = tail.split_first_mut().unwrap();
+                jobs.push(Job { r, part });
+                rest = tail;
+                offset = r + 1;
+            }
+            run_discharges(jobs, opts.algorithm, opts.core, d_inf, max_stage, opts.threads);
+        }
+        td.stop(&mut metrics.t_discharge);
+        metrics.discharges += active.len() as u64;
+
+        // ---- fusion (lines 4–6) ------------------------------------------
+        let tm = Timer::start();
+        metrics.msg_bytes += fuse(&mut dec, &active);
+        tm.stop(&mut metrics.t_msg);
+
+        // ---- master-thread heuristics -------------------------------------
+        let tg = Timer::start();
+        if opts.global_gap {
+            let mut gs = GapState::new(&dec, opts.algorithm == Algorithm::Prd);
+            gs.run(&mut dec);
+        }
+        if opts.boundary_relabel && opts.algorithm == Algorithm::Ard {
+            if boundary_relabel(&mut dec.shared) > 0 && opts.global_gap {
+                let mut gs = GapState::new(&dec, opts.algorithm == Algorithm::Prd);
+                gs.run(&mut dec);
+            }
+        }
+        tg.stop(&mut metrics.t_gap);
+    }
+
+    // ---- extra label-only sweeps (§5.3) --------------------------------
+    if converged {
+        loop {
+            let mut increase = 0u64;
+            let tr = Timer::start();
+            for r in 0..dec.parts.len() {
+                metrics.msg_bytes += dec.sync_in(r);
+                increase += match opts.algorithm {
+                    Algorithm::Ard => region_relabel_ard(&mut dec.parts[r], d_inf),
+                    Algorithm::Prd => region_relabel_prd(&mut dec.parts[r], d_inf),
+                };
+                metrics.msg_bytes += dec.sync_out(r);
+            }
+            tr.stop(&mut metrics.t_relabel);
+            metrics.extra_sweeps += 1;
+            if increase == 0 {
+                break;
+            }
+            if metrics.extra_sweeps as u64 > limit + dec.n_global as u64 + 4 {
+                converged = false;
+                break;
+            }
+        }
+    }
+
+    metrics.flow = dec.flow_value();
+    metrics.converged = converged;
+    let cut = dec.cut_sides_by_label();
+    metrics.t_total = t_total.elapsed();
+    SolveResult { metrics, cut }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::prng::Rng;
+    use crate::solvers::oracle::reference_value;
+
+    fn random_graph(seed: u64, n: usize, extra_edges: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n {
+            b.add_signed_terminal(v as u32, rng.range_i64(-30, 30));
+        }
+        for v in 1..n {
+            let u = rng.index(v) as u32;
+            b.add_edge(u, v as u32, rng.range_i64(0, 20), rng.range_i64(0, 20));
+        }
+        for _ in 0..extra_edges {
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            b.add_edge(u, v, rng.range_i64(0, 20), rng.range_i64(0, 20));
+        }
+        b.build()
+    }
+
+    fn check(g: &Graph, opts: &ParOptions, k: usize) {
+        let expect = reference_value(g);
+        let p = Partition::by_node_ranges(g.n(), k);
+        let res = solve_parallel(g, &p, opts);
+        assert!(res.metrics.converged);
+        assert_eq!(res.metrics.flow, expect);
+        let snap = g.snapshot();
+        assert_eq!(g.cut_cost(&snap, &res.cut), expect, "cut certificate");
+    }
+
+    #[test]
+    fn p_ard_matches_oracle() {
+        for seed in 0..8 {
+            let g = random_graph(seed, 40, 80);
+            check(&g, &ParOptions::ard(4), 4);
+        }
+    }
+
+    #[test]
+    fn p_prd_matches_oracle() {
+        for seed in 0..8 {
+            let g = random_graph(900 + seed, 40, 80);
+            check(&g, &ParOptions::prd(4), 4);
+        }
+    }
+
+    #[test]
+    fn p_ard_many_regions() {
+        for seed in 0..4 {
+            let g = random_graph(50 + seed, 60, 120);
+            check(&g, &ParOptions::ard(3), 8);
+        }
+    }
+
+    #[test]
+    fn single_thread_degenerates_to_sequentialish() {
+        let g = random_graph(77, 30, 60);
+        check(&g, &ParOptions::ard(1), 4);
+        check(&g, &ParOptions::prd(1), 4);
+    }
+
+    #[test]
+    fn parallel_agrees_with_sequential_flow() {
+        use crate::coordinator::sequential::{solve_sequential, SeqOptions};
+        for seed in 0..5 {
+            let g = random_graph(1234 + seed, 50, 100);
+            let p = Partition::by_node_ranges(g.n(), 4);
+            let s = solve_sequential(&g, &p, &SeqOptions::ard());
+            let r = solve_parallel(&g, &p, &ParOptions::ard(4));
+            assert_eq!(s.metrics.flow, r.metrics.flow);
+        }
+    }
+}

@@ -1,0 +1,749 @@
+//! Sequential region-discharge coordinator (Algorithm 1 of the paper).
+//!
+//! Takes regions one-by-one from the fixed partition and applies the
+//! plugged Discharge operation (ARD or PRD) until no vertex is active.
+//! Optionally runs in *streaming* mode (§5.3): only one region resident
+//! in memory at a time, the others paged to disk, with byte-accurate
+//! I/O accounting.
+//!
+//! After the preflow converges, the labeling is only a lower bound on
+//! the distance; extra label-only sweeps (region-relabel + gap) run
+//! until labels stop changing so the cut can be read off `d = d_inf`
+//! (§5.3 — "in practice it takes from 0 to 2 extra sweeps").
+
+use crate::coordinator::metrics::{RunMetrics, Timer};
+use crate::core::graph::{Cap, Graph};
+use crate::core::partition::Partition;
+use crate::region::ard::{Ard, ArdCore};
+use crate::region::boundary_relabel::boundary_relabel;
+use crate::region::decompose::{Decomposition, DistanceMode, RegionPart};
+use crate::region::prd::Prd;
+use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
+use std::path::PathBuf;
+
+/// Which region-discharge operation drives the sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Augmented path Region Discharge (§4) — the paper's contribution.
+    Ard,
+    /// Push-relabel Region Discharge (§3) — the Delong–Boykov baseline.
+    Prd,
+}
+
+/// Augmenting-path engine used inside ARD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreKind {
+    /// Dinic blocking flow (default reference core).
+    Dinic,
+    /// Boykov–Kolmogorov forests (the paper's §5.3 choice).
+    Bk,
+}
+
+/// Options of the sequential solve.
+#[derive(Debug, Clone)]
+pub struct SeqOptions {
+    pub algorithm: Algorithm,
+    pub core: CoreKind,
+    /// §6.2 partial discharges: in sweep `s` run ARD stages `0..=s`.
+    pub partial_discharge: bool,
+    /// §6.1 boundary-relabel heuristic after every sweep (ARD only).
+    pub boundary_relabel: bool,
+    /// Global gap heuristic (§5.1) after every region discharge.
+    pub global_gap: bool,
+    /// Sweep limit; `0` means the theoretical bound (`2|B|² + 1` for
+    /// ARD, `2n² + 1` for PRD) plus slack.
+    pub max_sweeps: u32,
+    /// Streaming mode: page regions to files under this directory.
+    pub streaming_dir: Option<PathBuf>,
+    /// Region overlaps (paper Conclusion): keep *two* consecutive
+    /// regions resident and alternate their discharges until both are
+    /// quiet before moving to the next pair — "load pairs of regions
+    /// (1,2), (2,3), (3,4), …, and alternate between the regions in a
+    /// pair until both are discharged". Resolves local ping-pong without
+    /// paying disk I/O for it.
+    pub overlap_pairs: bool,
+    /// Check labeling/preflow invariants after every sweep (tests).
+    pub check_invariants: bool,
+}
+
+impl Default for SeqOptions {
+    fn default() -> Self {
+        SeqOptions {
+            algorithm: Algorithm::Ard,
+            // Dinic measured ~2x faster than the BK forests as the ARD
+            // core in this implementation (EXPERIMENTS.md §Perf); the
+            // paper's choice (BK, §5.3) remains available via `core`.
+            core: CoreKind::Dinic,
+            partial_discharge: true,
+            boundary_relabel: true,
+            global_gap: true,
+            max_sweeps: 0,
+            streaming_dir: None,
+            overlap_pairs: false,
+            check_invariants: false,
+        }
+    }
+}
+
+impl SeqOptions {
+    pub fn ard() -> Self {
+        Self::default()
+    }
+    pub fn prd() -> Self {
+        SeqOptions { algorithm: Algorithm::Prd, ..Self::default() }
+    }
+    /// Basic (§5.3) ARD without the §6 heuristics.
+    pub fn ard_basic() -> Self {
+        SeqOptions { partial_discharge: false, boundary_relabel: false, ..Self::default() }
+    }
+}
+
+/// Result of a distributed solve.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub metrics: RunMetrics,
+    /// Minimum-cut side per vertex (`true` = sink side `T`).
+    pub cut: Vec<bool>,
+}
+
+impl SolveResult {
+    pub fn flow(&self) -> Cap {
+        self.metrics.flow
+    }
+}
+
+/// Global gap heuristic state (§5.1/§5.3): a histogram over the labels
+/// that participate in gap detection. For ARD only boundary labels are
+/// binned (`|B|` bins suffice, §5.3); for PRD all labels are binned as
+/// in the paper's S-PRD implementation (§5.4), capped at `MAX_BINS`
+/// ("consider a weaker gap heuristic with a smaller number of bins").
+pub(crate) struct GapState {
+    hist: Vec<u64>,
+    d_inf: u32,
+    /// bins `>= cap_bin` are aggregated and never produce a gap
+    cap_bin: u32,
+    full: bool,
+}
+
+const MAX_BINS: usize = 1 << 16;
+
+impl GapState {
+    /// `full = true` bins every vertex label (PRD); otherwise only
+    /// boundary labels (ARD).
+    pub(crate) fn new(dec: &Decomposition, full: bool) -> GapState {
+        let d_inf = dec.shared.d_inf;
+        let cap_bin = (d_inf as usize).min(MAX_BINS) as u32;
+        let mut st = GapState { hist: vec![0; cap_bin as usize + 1], d_inf, cap_bin, full };
+        for &d in &dec.shared.d {
+            let b = st.bin(d);
+            st.hist[b] += 1;
+        }
+        if full {
+            for part in &dec.parts {
+                st.add_inner(part, 1);
+            }
+        }
+        st
+    }
+
+    #[inline]
+    fn bin(&self, d: u32) -> usize {
+        d.min(self.cap_bin) as usize
+    }
+
+    /// Add (`sign = 1`) or remove (`-1`) the labels of `part`'s inner
+    /// non-boundary vertices (owned-boundary labels are tracked through
+    /// the shared histogram to avoid double counting).
+    fn add_inner(&mut self, part: &RegionPart, sign: i64) {
+        let mut owned = vec![false; part.n_inner];
+        for &(lv, _) in &part.owned_boundary {
+            owned[lv as usize] = true;
+        }
+        for v in 0..part.n_inner {
+            if !owned[v] {
+                let b = self.bin(part.label[v]);
+                self.hist[b] = (self.hist[b] as i64 + sign) as u64;
+            }
+        }
+    }
+
+    fn move_label(&mut self, from: u32, to: u32) {
+        let (f, t) = (self.bin(from), self.bin(to));
+        if f != t {
+            self.hist[f] -= 1;
+            self.hist[t] += 1;
+        }
+    }
+
+    /// Find the smallest empty bin `g ∈ [1, cap_bin)`; labels in
+    /// `(g, d_inf)` may be raised to `d_inf`.
+    fn find_gap(&self) -> Option<u32> {
+        // a gap is useful only if some label above it is below d_inf
+        let mut g = None;
+        for b in 1..self.cap_bin as usize {
+            if self.hist[b] == 0 {
+                g = Some(b as u32);
+                break;
+            }
+        }
+        let g = g?;
+        let any_above =
+            (g as usize + 1..self.cap_bin as usize).any(|b| self.hist[b] > 0);
+        if any_above {
+            Some(g)
+        } else {
+            None
+        }
+    }
+
+    /// Apply a discovered gap: raise shared boundary labels above `g` to
+    /// `d_inf` and schedule the lazy raise inside every region
+    /// (`pending_gap`, applied at the region's next `sync_in`). Returns
+    /// the number of raised boundary labels.
+    fn apply_gap(&mut self, dec: &mut Decomposition, g: u32) -> u64 {
+        let mut raised = 0;
+        let d_inf = self.d_inf;
+        for d in dec.shared.d.iter_mut() {
+            if *d > g && *d < d_inf {
+                self.move_label(*d, d_inf);
+                *d = d_inf;
+                raised += 1;
+            }
+        }
+        if self.full {
+            // inner labels above the gap move to the d_inf bin; the lazy
+            // pending_gap raise at sync_in realizes exactly this move.
+            for b in g as usize + 1..self.cap_bin as usize {
+                self.hist[self.cap_bin as usize] += self.hist[b];
+                self.hist[b] = 0;
+            }
+        }
+        for part in dec.parts.iter_mut() {
+            part.pending_gap = part.pending_gap.min(g);
+        }
+        raised
+    }
+
+    /// Gap detection + application after a region discharge.
+    pub(crate) fn run(&mut self, dec: &mut Decomposition) -> u64 {
+        match self.find_gap() {
+            Some(g) => self.apply_gap(dec, g),
+            None => 0,
+        }
+    }
+
+    /// Refresh histogram contributions after region `r` changed labels:
+    /// `before` holds the region's labels prior to the discharge
+    /// (inner, non-owned-boundary only), and the shared deltas are
+    /// applied by the caller through `move_label`.
+    fn refresh_region(&mut self, part: &RegionPart, before: &[u32]) {
+        if !self.full {
+            return;
+        }
+        let mut owned = vec![false; part.n_inner];
+        for &(lv, _) in &part.owned_boundary {
+            owned[lv as usize] = true;
+        }
+        for v in 0..part.n_inner {
+            if !owned[v] {
+                self.move_label(before[v], part.label[v]);
+            }
+        }
+    }
+}
+
+/// Streaming pager: regions live in page files; the coordinator swaps
+/// them in and out one at a time (§5.3).
+struct Pager {
+    dir: PathBuf,
+    resident: Option<usize>,
+}
+
+impl Pager {
+    fn new(dir: PathBuf) -> std::io::Result<Pager> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(Pager { dir, resident: None })
+    }
+
+    fn path(&self, r: usize) -> PathBuf {
+        self.dir.join(format!("region_{r}.page"))
+    }
+
+    /// Unload region `r` to its page file. Returns bytes written.
+    fn unload(&mut self, dec: &mut Decomposition, r: usize) -> std::io::Result<u64> {
+        let part = &dec.parts[r];
+        let bytes = part.to_bytes();
+        std::fs::write(self.path(r), &bytes)?;
+        let shell = RegionPart::shell(part.region_id, part.active, part.pending_gap);
+        dec.parts[r] = shell;
+        self.resident = None;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Load region `r` from its page file. Returns bytes read.
+    fn load(&mut self, dec: &mut Decomposition, r: usize) -> std::io::Result<u64> {
+        let bytes = std::fs::read(self.path(r))?;
+        let mut part = RegionPart::from_bytes(&bytes).ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "corrupt region page")
+        })?;
+        // the shell carries fresher coordinator-side fields
+        part.active = dec.parts[r].active;
+        part.pending_gap = dec.parts[r].pending_gap;
+        dec.parts[r] = part;
+        self.resident = Some(r);
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// The theoretical sweep bound plus slack, used when `max_sweeps == 0`.
+fn sweep_limit(opts: &SeqOptions, dec: &Decomposition) -> u64 {
+    if opts.max_sweeps > 0 {
+        return opts.max_sweeps as u64;
+    }
+    let b = dec.shared.num_boundary() as u64;
+    let n = dec.n_global as u64;
+    match opts.algorithm {
+        Algorithm::Ard => 2 * b * b + b + 16,
+        Algorithm::Prd => 2 * n * n + n + 16,
+    }
+}
+
+/// One region discharge: sync_in → discharge → sync_out → gap.
+#[allow(clippy::too_many_arguments)]
+fn discharge_region(
+    dec: &mut Decomposition,
+    metrics: &mut RunMetrics,
+    ard: &mut Ard,
+    prd: &mut Prd,
+    gap: &mut Option<GapState>,
+    label_scratch: &mut Vec<u32>,
+    opts: &SeqOptions,
+    r: usize,
+    d_inf: u32,
+    max_stage: u32,
+) {
+    let tm = Timer::start();
+    metrics.msg_bytes += dec.sync_in(r);
+    tm.stop(&mut metrics.t_msg);
+
+    // record labels for the gap histogram refresh
+    if gap.as_ref().map_or(false, |g| g.full) {
+        label_scratch.clear();
+        label_scratch.extend_from_slice(&dec.parts[r].label[..dec.parts[r].n_inner]);
+    }
+    // boundary label moves are tracked against shared.d at sync_out
+    let owned_before: Vec<u32> = dec.parts[r]
+        .owned_boundary
+        .iter()
+        .map(|&(lv, _)| dec.parts[r].label[lv as usize])
+        .collect();
+
+    let td = Timer::start();
+    match opts.algorithm {
+        Algorithm::Ard => {
+            ard.discharge(&mut dec.parts[r], d_inf, max_stage);
+        }
+        Algorithm::Prd => {
+            prd.discharge(&mut dec.parts[r], d_inf);
+        }
+    }
+    td.stop(&mut metrics.t_discharge);
+    metrics.discharges += 1;
+
+    let tm = Timer::start();
+    metrics.msg_bytes += dec.sync_out(r);
+    tm.stop(&mut metrics.t_msg);
+
+    if let Some(gs) = gap.as_mut() {
+        let tg = Timer::start();
+        gs.refresh_region(&dec.parts[r], label_scratch);
+        for (i, &(lv, _)) in dec.parts[r].owned_boundary.iter().enumerate() {
+            gs.move_label(owned_before[i], dec.parts[r].label[lv as usize]);
+        }
+        gs.run(dec);
+        tg.stop(&mut metrics.t_gap);
+    }
+    metrics.max_region_mem_bytes =
+        metrics.max_region_mem_bytes.max(dec.parts[r].memory_bytes());
+}
+
+/// Solve `g` under `partition` with Algorithm 1. The input graph is not
+/// modified; the result carries the flow value, the minimum cut and the
+/// run metrics.
+pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> SolveResult {
+    let t_total = std::time::Instant::now();
+    let mode = match opts.algorithm {
+        Algorithm::Ard => DistanceMode::Ard,
+        Algorithm::Prd => DistanceMode::Prd,
+    };
+    let mut dec = Decomposition::new(g, partition, mode);
+    let d_inf = dec.shared.d_inf;
+    let mut metrics = RunMetrics::default();
+    metrics.shared_mem_bytes = dec.shared.memory_bytes();
+    metrics.max_region_mem_bytes =
+        dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0);
+
+    let mut ard = Ard::new(match opts.core {
+        CoreKind::Dinic => ArdCore::dinic(),
+        CoreKind::Bk => ArdCore::bk(),
+    });
+    let mut prd = Prd::new();
+    let mut gap = opts
+        .global_gap
+        .then(|| GapState::new(&dec, opts.algorithm == Algorithm::Prd));
+
+    let mut pager = opts
+        .streaming_dir
+        .clone()
+        .map(|dir| Pager::new(dir).expect("create streaming dir"));
+    if let Some(p) = pager.as_mut() {
+        let td = Timer::start();
+        for r in 0..dec.parts.len() {
+            metrics.disk_write_bytes += p.unload(&mut dec, r).expect("page write");
+        }
+        td.stop(&mut metrics.t_disk);
+    }
+
+    let limit = sweep_limit(opts, &dec);
+    let mut label_scratch: Vec<u32> = Vec::new();
+    let mut converged = true;
+
+    while dec.any_active() {
+        if metrics.sweeps as u64 >= limit {
+            converged = false;
+            break;
+        }
+        let sweep = metrics.sweeps;
+        metrics.sweeps += 1;
+        let max_stage = if opts.partial_discharge && opts.algorithm == Algorithm::Ard {
+            sweep
+        } else {
+            u32::MAX
+        };
+        if opts.overlap_pairs && dec.parts.len() >= 2 {
+            // region overlaps: pairs (0,1), (1,2), … alternate in memory
+            let k = dec.parts.len();
+            for a in 0..k - 1 {
+                let b = a + 1;
+                if !dec.region_needs(a) && !dec.region_needs(b) {
+                    continue;
+                }
+                if let Some(p) = pager.as_mut() {
+                    let td = Timer::start();
+                    metrics.disk_read_bytes += p.load(&mut dec, a).expect("page read");
+                    metrics.disk_read_bytes += p.load(&mut dec, b).expect("page read");
+                    td.stop(&mut metrics.t_disk);
+                }
+                // alternate until the pair is mutually quiet (bounded by
+                // the pair's own 2|B_pair|² dynamics; cap generously)
+                let mut rounds = 0u32;
+                loop {
+                    let mut any = false;
+                    for &r in &[a, b] {
+                        if dec.region_needs(r) {
+                            discharge_region(
+                                &mut dec, &mut metrics, &mut ard, &mut prd, &mut gap,
+                                &mut label_scratch, opts, r, d_inf, max_stage,
+                            );
+                            any = true;
+                        }
+                    }
+                    rounds += 1;
+                    if !any || rounds as u64 > limit {
+                        break;
+                    }
+                }
+                if let Some(p) = pager.as_mut() {
+                    let td = Timer::start();
+                    metrics.disk_write_bytes += p.unload(&mut dec, a).expect("page write");
+                    metrics.disk_write_bytes += p.unload(&mut dec, b).expect("page write");
+                    td.stop(&mut metrics.t_disk);
+                }
+            }
+        } else {
+            for r in dec.active_regions() {
+                if let Some(p) = pager.as_mut() {
+                    let td = Timer::start();
+                    metrics.disk_read_bytes += p.load(&mut dec, r).expect("page read");
+                    td.stop(&mut metrics.t_disk);
+                }
+                discharge_region(
+                    &mut dec, &mut metrics, &mut ard, &mut prd, &mut gap,
+                    &mut label_scratch, opts, r, d_inf, max_stage,
+                );
+                if let Some(p) = pager.as_mut() {
+                    let td = Timer::start();
+                    metrics.disk_write_bytes += p.unload(&mut dec, r).expect("page write");
+                    td.stop(&mut metrics.t_disk);
+                }
+            }
+        }
+        if opts.boundary_relabel && opts.algorithm == Algorithm::Ard {
+            let tg = Timer::start();
+            // boundary-relabel changes shared.d only; keep histogram
+            // consistent by rebuilding the (boundary-only) part.
+            let increased = boundary_relabel(&mut dec.shared);
+            if increased > 0 {
+                if let Some(gs) = gap.as_mut() {
+                    if !gs.full {
+                        *gs = GapState::new(&dec, false);
+                    } else {
+                        // full histograms rebuild boundary contribution only
+                        *gs = GapState::new(&dec, true);
+                    }
+                    gs.run(&mut dec);
+                }
+            }
+            tg.stop(&mut metrics.t_gap);
+        }
+        if opts.check_invariants {
+            let r = dec.reassemble();
+            r.check_invariants();
+        }
+    }
+
+    // ---- extra label-only sweeps to extract the cut (§5.3) -------------
+    if converged {
+        loop {
+            let mut increase = 0u64;
+            for r in 0..dec.parts.len() {
+                if let Some(p) = pager.as_mut() {
+                    let td = Timer::start();
+                    metrics.disk_read_bytes += p.load(&mut dec, r).expect("page read");
+                    td.stop(&mut metrics.t_disk);
+                }
+                let tm = Timer::start();
+                metrics.msg_bytes += dec.sync_in(r);
+                tm.stop(&mut metrics.t_msg);
+                let tr = Timer::start();
+                increase += match opts.algorithm {
+                    Algorithm::Ard => region_relabel_ard(&mut dec.parts[r], d_inf),
+                    Algorithm::Prd => region_relabel_prd(&mut dec.parts[r], d_inf),
+                };
+                tr.stop(&mut metrics.t_relabel);
+                let tm = Timer::start();
+                metrics.msg_bytes += dec.sync_out(r);
+                tm.stop(&mut metrics.t_msg);
+                if let Some(p) = pager.as_mut() {
+                    let td = Timer::start();
+                    metrics.disk_write_bytes += p.unload(&mut dec, r).expect("page write");
+                    td.stop(&mut metrics.t_disk);
+                }
+            }
+            metrics.extra_sweeps += 1;
+            if increase == 0 {
+                break;
+            }
+            if metrics.extra_sweeps as u64 > limit + dec.n_global as u64 + 4 {
+                converged = false;
+                break;
+            }
+        }
+    }
+
+    // reload everything for cut extraction in streaming mode
+    if let Some(p) = pager.as_mut() {
+        let td = Timer::start();
+        for r in 0..dec.parts.len() {
+            metrics.disk_read_bytes += p.load(&mut dec, r).expect("page read");
+        }
+        td.stop(&mut metrics.t_disk);
+    }
+
+    metrics.flow = dec.flow_value();
+    metrics.converged = converged;
+    let cut = dec.cut_sides_by_label();
+    metrics.t_total = t_total.elapsed();
+    SolveResult { metrics, cut }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::prng::Rng;
+    use crate::solvers::oracle::reference_value;
+
+    fn random_graph(seed: u64, n: usize, extra_edges: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n {
+            b.add_signed_terminal(v as u32, rng.range_i64(-30, 30));
+        }
+        // random spanning-ish chain + extra random edges
+        for v in 1..n {
+            let u = rng.index(v) as u32;
+            b.add_edge(u, v as u32, rng.range_i64(0, 20), rng.range_i64(0, 20));
+        }
+        for _ in 0..extra_edges {
+            let u = rng.index(n) as u32;
+            let mut v = rng.index(n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            b.add_edge(u, v, rng.range_i64(0, 20), rng.range_i64(0, 20));
+        }
+        b.build()
+    }
+
+    fn check_solve(g: &Graph, opts: &SeqOptions, k: usize) {
+        let expect = reference_value(g);
+        let p = Partition::by_node_ranges(g.n(), k);
+        let res = solve_sequential(g, &p, opts);
+        assert!(res.metrics.converged, "did not converge");
+        assert_eq!(res.metrics.flow, expect, "flow mismatch");
+        // the cut is a certificate: its cost equals the flow value
+        let snap = g.snapshot();
+        assert_eq!(g.cut_cost(&snap, &res.cut), expect, "cut cost mismatch");
+    }
+
+    #[test]
+    fn ard_random_graphs_match_oracle() {
+        for seed in 0..8 {
+            let g = random_graph(seed, 40, 80);
+            check_solve(&g, &SeqOptions::ard(), 4);
+        }
+    }
+
+    #[test]
+    fn ard_basic_matches_oracle() {
+        for seed in 0..6 {
+            let g = random_graph(100 + seed, 30, 60);
+            check_solve(&g, &SeqOptions::ard_basic(), 3);
+        }
+    }
+
+    #[test]
+    fn ard_dinic_core_matches_oracle() {
+        let mut o = SeqOptions::ard();
+        o.core = CoreKind::Dinic;
+        for seed in 0..6 {
+            let g = random_graph(200 + seed, 35, 70);
+            check_solve(&g, &o, 5);
+        }
+    }
+
+    #[test]
+    fn prd_random_graphs_match_oracle() {
+        for seed in 0..8 {
+            let g = random_graph(300 + seed, 40, 80);
+            check_solve(&g, &SeqOptions::prd(), 4);
+        }
+    }
+
+    #[test]
+    fn single_region_degenerate() {
+        let g = random_graph(7, 25, 50);
+        check_solve(&g, &SeqOptions::ard(), 1);
+        check_solve(&g, &SeqOptions::prd(), 1);
+    }
+
+    #[test]
+    fn streaming_matches_in_memory() {
+        let g = random_graph(42, 60, 120);
+        let p = Partition::by_node_ranges(g.n(), 4);
+        let dir = std::env::temp_dir().join(format!("armincut_stream_test_{}", std::process::id()));
+        let mut o = SeqOptions::ard();
+        o.streaming_dir = Some(dir.clone());
+        let res = solve_sequential(&g, &p, &o);
+        let mem = solve_sequential(&g, &p, &SeqOptions::ard());
+        assert_eq!(res.metrics.flow, mem.metrics.flow);
+        assert!(res.metrics.disk_read_bytes > 0);
+        assert!(res.metrics.disk_write_bytes > 0);
+        let snap = g.snapshot();
+        assert_eq!(g.cut_cost(&snap, &res.cut), res.metrics.flow);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overlap_pairs_matches_oracle() {
+        for seed in 0..6 {
+            let g = random_graph(800 + seed, 50, 100);
+            let p = Partition::by_node_ranges(g.n(), 5);
+            let mut o = SeqOptions::ard();
+            o.overlap_pairs = true;
+            let res = solve_sequential(&g, &p, &o);
+            assert!(res.metrics.converged);
+            assert_eq!(res.metrics.flow, reference_value(&g), "seed {seed}");
+            let snap = g.snapshot();
+            assert_eq!(g.cut_cost(&snap, &res.cut), res.metrics.flow);
+        }
+    }
+
+    #[test]
+    fn overlap_pairs_streaming_reduces_sweeps() {
+        // the Conclusion's claim: alternating a resident pair resolves
+        // local ping-pong without extra sweeps/disk I/O
+        let g = random_graph(4242, 60, 110);
+        let p = Partition::by_node_ranges(g.n(), 4);
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_ovl_{}", std::process::id()));
+        let mut plain = SeqOptions::ard();
+        plain.streaming_dir = Some(dir.join("a"));
+        let mut ovl = plain.clone();
+        ovl.streaming_dir = Some(dir.join("b"));
+        ovl.overlap_pairs = true;
+        let r1 = solve_sequential(&g, &p, &plain);
+        let r2 = solve_sequential(&g, &p, &ovl);
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(r1.metrics.flow, r2.metrics.flow);
+        assert!(
+            r2.metrics.sweeps <= r1.metrics.sweeps,
+            "overlap sweeps {} > plain {}",
+            r2.metrics.sweeps,
+            r1.metrics.sweeps
+        );
+    }
+
+    #[test]
+    fn sweep_count_respects_ard_bound() {
+        // paper Theorem 3: at most 2|B|^2 + 1 sweeps (full discharges)
+        for seed in 0..5 {
+            let g = random_graph(500 + seed, 30, 45);
+            let p = Partition::by_node_ranges(g.n(), 3);
+            let mut o = SeqOptions::ard();
+            o.partial_discharge = false; // the theorem covers full ARD
+            let res = solve_sequential(&g, &p, &o);
+            let d = Decomposition::new(&g, &p, DistanceMode::Ard);
+            let b = d.shared.num_boundary() as u64;
+            assert!(res.metrics.converged);
+            assert!(
+                (res.metrics.sweeps as u64) <= 2 * b * b + 1,
+                "sweeps {} exceed bound for |B|={}",
+                res.metrics.sweeps,
+                b
+            );
+        }
+    }
+
+    #[test]
+    fn gap_heuristic_soundness() {
+        // with and without the gap heuristic the flow must agree
+        for seed in 0..5 {
+            let g = random_graph(700 + seed, 35, 35);
+            let p = Partition::by_node_ranges(g.n(), 4);
+            let mut no_gap = SeqOptions::ard();
+            no_gap.global_gap = false;
+            let a = solve_sequential(&g, &p, &SeqOptions::ard());
+            let b = solve_sequential(&g, &p, &no_gap);
+            assert_eq!(a.metrics.flow, b.metrics.flow);
+        }
+    }
+
+    #[test]
+    fn disconnected_excess_is_trapped() {
+        // a component with excess but no path to any sink
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 10, 0);
+        b.add_edge(0, 1, 5, 5);
+        b.add_terminal(2, 0, 7);
+        b.add_edge(2, 3, 5, 5);
+        let g = b.build();
+        let p = Partition::by_node_ranges(4, 2);
+        let res = solve_sequential(&g, &p, &SeqOptions::ard());
+        assert_eq!(res.metrics.flow, 0);
+        // nodes 0,1 are trapped on the source side
+        assert!(!res.cut[0] && !res.cut[1]);
+        assert!(res.cut[2] && res.cut[3]);
+    }
+}

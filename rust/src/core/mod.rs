@@ -1,0 +1,6 @@
+//! Core substrates: residual networks, DIMACS I/O, partitioning, PRNG.
+
+pub mod graph;
+pub mod dimacs;
+pub mod partition;
+pub mod prng;

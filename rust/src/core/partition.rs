@@ -1,0 +1,271 @@
+//! Graph partitioning into regions (the paper's fixed partition
+//! `(R_k)_{k=1..K}` of `V \ {s, t}`).
+//!
+//! The boundary `B = ∪_k B^{R_k}` is the set of vertices incident to
+//! inter-region edges; its size `|B|` governs the paper's headline
+//! `2|B|² + 1` sweep bound, and the set of inter-region edges `(B, B)`
+//! bounds the message traffic per sweep.
+
+use crate::core::graph::{Graph, NodeId};
+
+/// A fixed assignment of every vertex to one of `k` regions.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub k: usize,
+    pub region_of: Vec<u32>,
+}
+
+impl Partition {
+    /// Trivial single-region partition (turns the distributed algorithms
+    /// into their whole-graph counterparts, e.g. HPR ≡ HIPR0 per §5.4).
+    pub fn single(n: usize) -> Self {
+        Partition { k: 1, region_of: vec![0; n] }
+    }
+
+    /// Partition by contiguous node-number ranges — the fallback the
+    /// paper uses for instances without a grid hint (KZ2, LB06).
+    pub fn by_node_ranges(n: usize, k: usize) -> Self {
+        assert!(k >= 1);
+        let mut region_of = vec![0u32; n];
+        let chunk = n.div_ceil(k);
+        for (v, r) in region_of.iter_mut().enumerate() {
+            *r = ((v / chunk.max(1)) as u32).min(k as u32 - 1);
+        }
+        Partition { k, region_of }
+    }
+
+    /// Slice a 2-D grid (`width × height`, node id `y * width + x`) into
+    /// `sx × sy` equal tiles — the paper's §7.1 synthetic setup.
+    pub fn grid2d(width: usize, height: usize, sx: usize, sy: usize) -> Self {
+        assert!(sx >= 1 && sy >= 1 && sx <= width && sy <= height);
+        let mut region_of = vec![0u32; width * height];
+        for y in 0..height {
+            let ry = (y * sy / height).min(sy - 1);
+            for x in 0..width {
+                let rx = (x * sx / width).min(sx - 1);
+                region_of[y * width + x] = (ry * sx + rx) as u32;
+            }
+        }
+        Partition { k: sx * sy, region_of }
+    }
+
+    /// Slice a 3-D grid (node id `(z * height + y) * width + x`) into
+    /// `sx × sy × sz` tiles — the setup for the paper's 3-D
+    /// segmentation/surface instances (4×4×4 = 64 regions in Table 1).
+    pub fn grid3d(
+        width: usize,
+        height: usize,
+        depth: usize,
+        sx: usize,
+        sy: usize,
+        sz: usize,
+    ) -> Self {
+        assert!(sx >= 1 && sy >= 1 && sz >= 1);
+        let mut region_of = vec![0u32; width * height * depth];
+        for z in 0..depth {
+            let rz = (z * sz / depth).min(sz - 1);
+            for y in 0..height {
+                let ry = (y * sy / height).min(sy - 1);
+                for x in 0..width {
+                    let rx = (x * sx / width).min(sx - 1);
+                    region_of[(z * height + y) * width + x] =
+                        ((rz * sy + ry) * sx + rx) as u32;
+                }
+            }
+        }
+        Partition { k: sx * sy * sz, region_of }
+    }
+
+    #[inline]
+    pub fn region(&self, v: NodeId) -> u32 {
+        self.region_of[v as usize]
+    }
+
+    /// Vertices of each region, in ascending order.
+    pub fn members(&self) -> Vec<Vec<NodeId>> {
+        let mut m = vec![Vec::new(); self.k];
+        for (v, &r) in self.region_of.iter().enumerate() {
+            m[r as usize].push(v as NodeId);
+        }
+        m
+    }
+
+    /// Boundary mask: `true` for vertices incident to an inter-region
+    /// edge (the set `B`).
+    pub fn boundary_mask(&self, g: &Graph) -> Vec<bool> {
+        let mut b = vec![false; g.n()];
+        for v in 0..g.n() {
+            let rv = self.region_of[v];
+            for a in g.arc_range(v as NodeId) {
+                let u = g.head(a as u32) as usize;
+                if self.region_of[u] != rv {
+                    b[v] = true;
+                    break;
+                }
+            }
+        }
+        b
+    }
+
+    /// Summary statistics used in experiment reports.
+    pub fn stats(&self, g: &Graph) -> PartitionStats {
+        let bmask = self.boundary_mask(g);
+        let boundary_nodes = bmask.iter().filter(|&&x| x).count();
+        let mut inter_arcs = 0usize;
+        for v in 0..g.n() {
+            let rv = self.region_of[v];
+            for a in g.arc_range(v as NodeId) {
+                if self.region_of[g.head(a as u32) as usize] != rv {
+                    inter_arcs += 1;
+                }
+            }
+        }
+        PartitionStats {
+            k: self.k,
+            boundary_nodes,
+            inter_region_arcs: inter_arcs, // both directions counted
+        }
+    }
+
+    /// Region interaction graph adjacency (regions sharing an edge).
+    /// Used by phased parallel scheduling (coloring of interacting
+    /// regions, §3) and by the DD baseline's separator construction.
+    pub fn interactions(&self, g: &Graph) -> Vec<Vec<u32>> {
+        let mut adj = vec![Vec::new(); self.k];
+        for v in 0..g.n() {
+            let rv = self.region_of[v];
+            for a in g.arc_range(v as NodeId) {
+                let ru = self.region_of[g.head(a as u32) as usize];
+                if ru != rv && !adj[rv as usize].contains(&ru) {
+                    adj[rv as usize].push(ru);
+                }
+            }
+        }
+        for l in &mut adj {
+            l.sort();
+        }
+        adj
+    }
+
+    /// Greedy coloring of the region interaction graph; returns
+    /// `(color_of_region, num_colors)`. Non-interacting regions (same
+    /// color) may be discharged concurrently within a sequential sweep.
+    pub fn color_interactions(&self, g: &Graph) -> (Vec<u32>, usize) {
+        let adj = self.interactions(g);
+        let mut color = vec![u32::MAX; self.k];
+        let mut max_color = 0u32;
+        for r in 0..self.k {
+            let mut used = vec![false; (max_color + 2) as usize];
+            for &nb in &adj[r] {
+                let c = color[nb as usize];
+                if c != u32::MAX && (c as usize) < used.len() {
+                    used[c as usize] = true;
+                }
+            }
+            let c = used.iter().position(|&u| !u).unwrap() as u32;
+            color[r] = c;
+            max_color = max_color.max(c);
+        }
+        (color, max_color as usize + 1)
+    }
+}
+
+/// Partition summary statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionStats {
+    pub k: usize,
+    pub boundary_nodes: usize,
+    pub inter_region_arcs: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+
+    fn path_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n - 1 {
+            b.add_edge(v as NodeId, (v + 1) as NodeId, 1, 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn node_ranges_cover_all() {
+        let p = Partition::by_node_ranges(10, 3);
+        assert_eq!(p.k, 3);
+        assert_eq!(p.region_of.len(), 10);
+        let m = p.members();
+        assert_eq!(m.iter().map(|r| r.len()).sum::<usize>(), 10);
+        assert!(m.iter().all(|r| !r.is_empty()));
+    }
+
+    #[test]
+    fn grid2d_tiles() {
+        let p = Partition::grid2d(4, 4, 2, 2);
+        assert_eq!(p.k, 4);
+        assert_eq!(p.region(0), 0); // (0,0)
+        assert_eq!(p.region(3), 1); // (3,0)
+        assert_eq!(p.region(12), 2); // (0,3)
+        assert_eq!(p.region(15), 3); // (3,3)
+    }
+
+    #[test]
+    fn grid3d_tiles() {
+        let p = Partition::grid3d(4, 4, 4, 2, 2, 2);
+        assert_eq!(p.k, 8);
+        assert_eq!(p.region(0), 0);
+        assert_eq!(p.region(63), 7);
+        let m = p.members();
+        assert!(m.iter().all(|r| r.len() == 8));
+    }
+
+    #[test]
+    fn boundary_of_path() {
+        let g = path_graph(10);
+        let p = Partition::by_node_ranges(10, 2);
+        let b = p.boundary_mask(&g);
+        // split at 5: nodes 4 and 5 are boundary
+        assert_eq!(
+            b.iter().enumerate().filter(|(_, &x)| x).map(|(v, _)| v).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+        let st = p.stats(&g);
+        assert_eq!(st.boundary_nodes, 2);
+        assert_eq!(st.inter_region_arcs, 2);
+    }
+
+    #[test]
+    fn single_region_has_no_boundary() {
+        let g = path_graph(6);
+        let p = Partition::single(6);
+        assert!(p.boundary_mask(&g).iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn interactions_and_coloring() {
+        let g = path_graph(12);
+        let p = Partition::by_node_ranges(12, 4);
+        let adj = p.interactions(&g);
+        assert_eq!(adj[0], vec![1]);
+        assert_eq!(adj[1], vec![0, 2]);
+        let (colors, nc) = p.color_interactions(&g);
+        assert!(nc <= 2);
+        for r in 0..4usize {
+            for &nb in &adj[r] {
+                assert_ne!(colors[r], colors[nb as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn grid2d_uneven_sizes() {
+        let p = Partition::grid2d(5, 3, 2, 2);
+        assert_eq!(p.k, 4);
+        assert_eq!(p.region_of.len(), 15);
+        // every region non-empty
+        let m = p.members();
+        assert!(m.iter().all(|r| !r.is_empty()));
+    }
+}

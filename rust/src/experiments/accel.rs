@@ -1,0 +1,119 @@
+//! Accelerated-discharge experiment: the PJRT kernel path vs the
+//! pure-rust wave vs the BK solver on grid instances (the paper's
+//! Conclusion item 4, DESIGN.md §Hardware-Adaptation).
+
+use super::harness::{print_header, print_row};
+use crate::runtime::grid_accel::{GridAccel, GridProblem, TiledAccelCoordinator};
+use crate::runtime::pjrt::PjrtRuntime;
+use crate::solvers::bk::Bk;
+use crate::solvers::MaxFlowSolver;
+use std::time::Instant;
+
+/// Default artifact directory (relative to the workspace root).
+pub fn artifacts_dir() -> String {
+    std::env::var("ARMINCUT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Run the comparison. Skips the PJRT rows (with a notice) when the
+/// artifacts have not been built.
+pub fn accel_experiment(quick: bool) {
+    let seeds: u64 = if quick { 2 } else { 5 };
+    print_header(
+        "Accel — kernel region discharge vs CPU baselines (64×64 grid)",
+        &["solver", "time s", "flow", "waves/calls"],
+    );
+    let dir = artifacts_dir();
+    let rt = PjrtRuntime::cpu().ok();
+    let accel64 = rt
+        .as_ref()
+        .and_then(|rt| GridAccel::load(rt, &dir, 64, 64, 32).ok());
+    let mut have_pjrt = accel64.is_some();
+    let mut accel64 = accel64;
+
+    for seed in 0..seeds {
+        let p0 = GridProblem::random(64, 64, 30, 60, seed);
+
+        // BK on the converted graph
+        let mut g = p0.to_graph();
+        let t = Instant::now();
+        let flow_bk = Bk::new().solve(&mut g);
+        print_row(&[
+            format!("BK(seed {seed})"),
+            format!("{:.4}", t.elapsed().as_secs_f64()),
+            flow_bk.to_string(),
+            "-".into(),
+        ]);
+
+        // pure-rust lock-step waves
+        let mut p = p0.clone();
+        let t = Instant::now();
+        let ok = p.solve_reference(5_000_000);
+        print_row(&[
+            "rust-waves".into(),
+            format!("{:.4}", t.elapsed().as_secs_f64()),
+            p.flow.to_string(),
+            if ok { "conv".into() } else { "CAP".into() },
+        ]);
+        assert_eq!(p.flow, flow_bk, "wave flow must match BK");
+
+        // PJRT kernel
+        if let Some(acc) = accel64.as_mut() {
+            let mut p = p0.clone();
+            let t = Instant::now();
+            match acc.solve(&mut p, 100_000) {
+                Ok(true) => {
+                    print_row(&[
+                        "pjrt-kernel".into(),
+                        format!("{:.4}", t.elapsed().as_secs_f64()),
+                        p.flow.to_string(),
+                        format!("{}", acc.calls),
+                    ]);
+                    assert_eq!(p.flow, flow_bk, "kernel flow must match BK");
+                }
+                _ => {
+                    println!("  pjrt-kernel: failed/capped — skipping");
+                    have_pjrt = false;
+                }
+            }
+        }
+    }
+
+    // tiled coordinator (region discharge on the accelerator)
+    let p0 = GridProblem::random(64, 64, 30, 60, 42);
+    let mut g = p0.to_graph();
+    let flow_bk = Bk::new().solve(&mut g);
+    let mut p = p0.clone();
+    let t = Instant::now();
+    let ok = TiledAccelCoordinator::solve_reference(&mut p, 32, 100_000).unwrap();
+    print_row(&[
+        "tiled-rust".into(),
+        format!("{:.4}", t.elapsed().as_secs_f64()),
+        p.flow.to_string(),
+        if ok { "conv".into() } else { "CAP".into() },
+    ]);
+    assert_eq!(p.flow, flow_bk);
+    if have_pjrt {
+        if let Some(rt) = rt.as_ref() {
+            if let Ok(acc) = GridAccel::load(rt, &dir, 34, 34, 32) {
+                let mut tc = TiledAccelCoordinator::new(acc);
+                let mut p = p0.clone();
+                let t = Instant::now();
+                match tc.solve(&mut p, 100_000) {
+                    Ok(true) => {
+                        print_row(&[
+                            "tiled-pjrt".into(),
+                            format!("{:.4}", t.elapsed().as_secs_f64()),
+                            p.flow.to_string(),
+                            format!("{} calls", tc.accel.calls),
+                        ]);
+                        assert_eq!(p.flow, flow_bk);
+                    }
+                    _ => println!("  tiled-pjrt failed/capped — skipping"),
+                }
+            }
+        }
+    }
+    if !have_pjrt {
+        println!("  (PJRT artifacts not found under '{dir}' — run `make artifacts`)");
+    }
+}

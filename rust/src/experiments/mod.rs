@@ -1,0 +1,49 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§7, §8, Appendix A) on the synthetic stand-in
+//! workloads (DESIGN.md §2 documents the substitutions).
+//!
+//! Each experiment is a function callable both from the CLI
+//! (`armincut experiment <id>`) and from the `cargo bench` wrappers in
+//! `rust/benches/`. All experiments print the same rows/series the
+//! paper reports; absolute numbers differ from the 2011 testbed, the
+//! *shape* (who wins, by what factor, where crossovers fall) is the
+//! reproduction target — see EXPERIMENTS.md.
+//!
+//! Scale: by default experiments run at a reduced "quick" scale so the
+//! full suite finishes in minutes; set `ARMINCUT_FULL=1` (or
+//! `quick = false`) for paper-scale instances (1000×1000 grids etc.).
+
+pub mod accel;
+pub mod figures;
+pub mod harness;
+pub mod tables;
+
+pub use harness::{is_quick, run_competitor, CompetitorResult};
+
+/// Run one experiment by id. Returns an error string for unknown ids.
+pub fn run(id: &str, quick: bool) -> Result<(), String> {
+    match id {
+        "fig6" => figures::fig6_strength(quick),
+        "fig7" => figures::fig7_regions(quick),
+        "fig8" => figures::fig8_size(quick),
+        "fig9" => figures::fig9_connectivity(quick),
+        "fig10" => figures::fig10_workload(quick),
+        "fig11" => figures::fig11_regions_real(quick),
+        "table1" => tables::table1_sequential(quick),
+        "table2" => tables::table2_parallel(quick),
+        "table3" => tables::table3_reduction(quick),
+        "appendix_a" => figures::appendix_a_tightness(quick),
+        "ablation" => tables::ablation_heuristics(quick),
+        "accel" => accel::accel_experiment(quick),
+        "all" => {
+            for id in [
+                "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table1", "table2",
+                "table3", "appendix_a", "ablation", "accel",
+            ] {
+                run(id, quick)?;
+            }
+        }
+        other => return Err(format!("unknown experiment id: {other}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Table experiments: the §7.2 sequential competition (Table 1), the
+//! §7.3 parallel competition (Table 2), the §8 region-reduction
+//! percentages (Table 3) and the §6 heuristics ablation.
+
+use super::harness::*;
+use crate::coordinator::sequential::{solve_sequential, SeqOptions};
+use crate::core::graph::Graph;
+use crate::core::partition::Partition;
+use crate::gen::grid3d::{grid3d_segmentation, Grid3dParams};
+use crate::gen::stereo::{stereo_bvz, stereo_kz2, StereoParams};
+use crate::region::reduction::reduce_all;
+
+/// The §7.2 instance families (synthetic stand-ins; DESIGN.md §2).
+pub fn families(quick: bool) -> Vec<(String, Graph, Partition)> {
+    let s2 = if quick { (100, 75) } else { (434, 380) };
+    let s3 = if quick { 20 } else { 64 };
+    let mut out = Vec::new();
+
+    let bvz = stereo_bvz(&StereoParams { width: s2.0, height: s2.1, ..Default::default() });
+    let p = Partition::grid2d(s2.0, s2.1, 4, 4);
+    out.push(("BVZ-like".to_string(), bvz, p));
+
+    let kz2 = stereo_kz2(&StereoParams { width: s2.0, height: s2.1, ..Default::default() });
+    let n = kz2.n();
+    out.push(("KZ2-like".to_string(), kz2, Partition::by_node_ranges(n, 16)));
+
+    let seg6 = grid3d_segmentation(&Grid3dParams::segmentation(s3, 10, 5));
+    let p = Partition::grid3d(s3, s3, s3, 4, 4, 4);
+    out.push(("seg3d-n6c10".to_string(), seg6, p));
+
+    let mut pr26 = Grid3dParams::segmentation(s3, 100, 7);
+    pr26.connectivity = 26;
+    let seg26 = grid3d_segmentation(&pr26);
+    let p = Partition::grid3d(s3, s3, s3, 4, 4, 4);
+    out.push(("seg3d-n26c100".to_string(), seg26, p));
+
+    let surf = grid3d_segmentation(&Grid3dParams::surface(s3, 10, 9));
+    let p = Partition::grid3d(s3, s3, s3, 4, 4, 4);
+    out.push(("surface-like".to_string(), surf, p));
+
+    out
+}
+
+/// Table 1: sequential competition — CPU, sweeps, memory, disk I/O.
+pub fn table1_sequential(quick: bool) {
+    print_header(
+        "Table 1 — sequential competition",
+        &[
+            "instance", "solver", "CPU s", "sweeps", "mem MB", "I/O MB", "flow",
+        ],
+    );
+    for (name, g, part) in families(quick) {
+        let solvers = [Bk, Hipr0, Hipr05, Hpr, SArdStream, SPrdStream];
+        let mut results = Vec::new();
+        for c in solvers {
+            let r = run_competitor(c, &g, &part);
+            print_row(&[
+                name.clone(),
+                r.name.clone(),
+                format!("{:.3}", r.seconds),
+                r.sweeps.to_string(),
+                format!("{:.1}", r.mem_bytes as f64 / (1 << 20) as f64),
+                format!("{:.1}", r.disk_bytes as f64 / (1 << 20) as f64),
+                r.flow.to_string(),
+            ]);
+            results.push(r);
+        }
+        assert_flows_agree(&results);
+    }
+}
+
+/// Table 2: parallel competition — BK vs DDx2/DDx4 vs P-ARD vs P-PRD.
+pub fn table2_parallel(quick: bool) {
+    print_header(
+        "Table 2 — parallel competition (4 threads)",
+        &["instance", "solver", "time s", "sweeps", "flow", "status"],
+    );
+    for (name, g, part) in families(quick) {
+        let solvers = [Bk, Dd(2), Dd(4), PArd(4), PPrd(4)];
+        let mut results = Vec::new();
+        for c in solvers {
+            let r = run_competitor(c, &g, &part);
+            print_row(&[
+                name.clone(),
+                r.name.clone(),
+                format!("{:.3}", r.seconds),
+                r.sweeps.to_string(),
+                r.flow.to_string(),
+                if r.converged { "ok".into() } else { "NOT CONVERGED".into() },
+            ]);
+            results.push(r);
+        }
+        assert_flows_agree(&results);
+    }
+}
+
+/// Table 3: percentage of nodes decided by the region reduction
+/// (Alg. 5) under the same partitions as Table 1.
+pub fn table3_reduction(quick: bool) {
+    print_header(
+        "Table 3 — % nodes decided by region reduction (Alg. 5)",
+        &["instance", "decided %", "n"],
+    );
+    for (name, g, part) in families(quick) {
+        let (_mask, frac) = reduce_all(&g, &part);
+        print_row(&[
+            name,
+            format!("{:.1}%", frac * 100.0),
+            g.n().to_string(),
+        ]);
+    }
+}
+
+/// §6 ablation: basic ARD vs the efficient implementation's heuristics
+/// (boundary-relabel §6.1, partial discharges §6.2) on the sparse-seed
+/// surface instance where the paper saw a 128× gap (32 min → 15 s).
+pub fn ablation_heuristics(quick: bool) {
+    let s3 = if quick { 24 } else { 48 };
+    let g = grid3d_segmentation(&Grid3dParams::surface(s3, 10, 9));
+    let part = Partition::grid3d(s3, s3, s3, 4, 4, 4);
+    print_header(
+        "§6 ablation — ARD heuristics on the sparse-seed surface instance",
+        &["variant", "CPU s", "sweeps", "msg MB", "flow"],
+    );
+    let variants: [(&str, bool, bool); 4] = [
+        ("basic", false, false),
+        ("+partial", true, false),
+        ("+brelabel", false, true),
+        ("+both", true, true),
+    ];
+    let mut flows = Vec::new();
+    for (name, partial, brel) in variants {
+        let mut o = SeqOptions::ard();
+        o.partial_discharge = partial;
+        o.boundary_relabel = brel;
+        let res = solve_sequential(&g, &part, &o);
+        assert!(res.metrics.converged);
+        flows.push(res.metrics.flow);
+        print_row(&[
+            name.to_string(),
+            format!("{:.3}", res.metrics.cpu().as_secs_f64()),
+            res.metrics.sweeps.to_string(),
+            format!("{:.1}", res.metrics.msg_bytes as f64 / (1 << 20) as f64),
+            res.metrics.flow.to_string(),
+        ]);
+    }
+    assert!(flows.windows(2).all(|w| w[0] == w[1]), "ablation flows must agree");
+}

@@ -1,0 +1,107 @@
+//! The Appendix-A adversarial family: a network, a 2-region partition
+//! and a workload on which *push-relabel* region discharge needs `Θ(n²)`
+//! sweeps while ARD terminates in a constant number of sweeps
+//! (the boundary has only 3 vertices regardless of `k`).
+//!
+//! Structure (Fig. 14): common vertices `1`, `5`, `6`; `k` parallel
+//! chains `1 → 2_i → 3_i → 4_i → 5`, an edge `5 → 6` and a reverse edge
+//! `6 → 1`, all of effectively infinite capacity; flow excess starts at
+//! vertex `1` and has *no sink to reach* — the algorithms terminate only
+//! once the labels certify unreachability, which costs PRD `O(n²)`
+//! region discharges of label-raising around the `6 → 1` cycle.
+//!
+//! Vertex ids: `0 = 1`, `1 = 5`, `2 = 6`, then `3 + 3i .. 3 + 3i + 2`
+//! are `2_i, 3_i, 4_i`.
+
+use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
+use crate::core::partition::Partition;
+
+/// "Infinite" capacity of the chain arcs.
+pub const INF_CAP: Cap = 1 << 40;
+
+/// Build the `k`-chain instance and its 2-region partition
+/// (`R_1 = {1, 5, chains}`, `R_2 = {6}`).
+pub fn adversarial_chains(k: usize, excess: Cap) -> (Graph, Partition) {
+    assert!(k >= 1);
+    let n = 3 + 3 * k;
+    let mut b = GraphBuilder::new(n);
+    b.add_terminal(0, excess, 0); // excess at node "1"
+    for i in 0..k {
+        let (n2, n3, n4) = ((3 + 3 * i) as NodeId, (4 + 3 * i) as NodeId, (5 + 3 * i) as NodeId);
+        b.add_edge(0, n2, INF_CAP, 0);
+        b.add_edge(n2, n3, INF_CAP, 0);
+        b.add_edge(n3, n4, INF_CAP, 0);
+        b.add_edge(n4, 1, INF_CAP, 0);
+    }
+    b.add_edge(1, 2, INF_CAP, 0); // 5 → 6
+    b.add_edge(2, 0, INF_CAP, 0); // 6 → 1 (the reverse arc)
+    let g = b.build();
+
+    let mut region_of = vec![0u32; n];
+    region_of[2] = 1; // node "6" alone in region 2
+    let p = Partition { k: 2, region_of };
+    (g, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequential::{solve_sequential, SeqOptions};
+    use crate::region::decompose::{Decomposition, DistanceMode};
+
+    #[test]
+    fn boundary_is_constant_in_k() {
+        for k in [1usize, 4, 16] {
+            let (g, p) = adversarial_chains(k, 100);
+            let d = Decomposition::new(&g, &p, DistanceMode::Ard);
+            assert_eq!(d.shared.num_boundary(), 3, "nodes 1, 5, 6 for k={k}");
+        }
+    }
+
+    #[test]
+    fn flow_is_zero_and_all_trapped() {
+        let (g, p) = adversarial_chains(3, 50);
+        let res = solve_sequential(&g, &p, &SeqOptions::ard());
+        assert!(res.metrics.converged);
+        assert_eq!(res.metrics.flow, 0);
+        assert!(res.cut.iter().all(|&sink_side| !sink_side), "no vertex reaches t");
+    }
+
+    #[test]
+    fn ard_sweeps_constant_in_k() {
+        let mut sweeps = Vec::new();
+        for k in [2usize, 8, 32] {
+            let (g, p) = adversarial_chains(k, 100);
+            let mut o = SeqOptions::ard();
+            o.global_gap = false; // isolate the labeling dynamics
+            o.boundary_relabel = false;
+            let res = solve_sequential(&g, &p, &o);
+            assert!(res.metrics.converged);
+            sweeps.push(res.metrics.sweeps);
+        }
+        // Theorem 3 bound with |B| = 3: at most 2·9 + 1 = 19, independent of k
+        assert!(sweeps.iter().all(|&s| s <= 19), "sweeps {sweeps:?}");
+        assert!(sweeps.windows(2).all(|w| w[1] <= w[0] + 1), "no growth with k: {sweeps:?}");
+    }
+
+    #[test]
+    fn prd_without_heuristics_needs_more_sweeps_as_k_grows() {
+        // our HPR is not the paper's adversarial schedule, but label
+        // propagation around the 6→1 cycle still forces sweep counts that
+        // grow with the label ceiling (i.e. with n = 3k + 3)
+        let mut o = SeqOptions::prd();
+        o.global_gap = false;
+        let mut prev = 0;
+        let mut grew = false;
+        for k in [2usize, 8, 32] {
+            let (g, p) = adversarial_chains(k, 100);
+            let res = solve_sequential(&g, &p, &o);
+            assert!(res.metrics.converged);
+            if res.metrics.sweeps > prev {
+                grew = true;
+            }
+            prev = res.metrics.sweeps;
+        }
+        assert!(grew, "PRD sweeps should grow with k");
+    }
+}

@@ -1,0 +1,206 @@
+//! 3-D grid instances: stand-ins for the paper's §7.2 volumetric
+//! segmentation (BJ01/BF06/BK03, 6/26-connected) and surface-fitting
+//! (LB07, 6-connected with sparse data seeds) families.
+//!
+//! The segmentation stand-in plants a smooth random "object": a blobby
+//! indicator over the volume; voxels inside get source excess, outside
+//! sink capacity, and n-link strength follows a boundary-sensitive
+//! profile (weak across the object boundary) — the same structure
+//! interactive-segmentation graphs have. The surface stand-in instead
+//! uses *sparse* seeds (a small fraction of voxels carry terminals), the
+//! regime in which the paper's basic ARD wasted work and the §6
+//! heuristics matter (LB07-bunny).
+
+use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
+use crate::core::partition::Partition;
+use crate::core::prng::Rng;
+
+/// Parameters of the 3-D families.
+#[derive(Debug, Clone, Copy)]
+pub struct Grid3dParams {
+    pub width: usize,
+    pub height: usize,
+    pub depth: usize,
+    /// 6 or 26 neighborhood.
+    pub connectivity: usize,
+    /// n-link base capacity (the paper's instances use 10 or 100).
+    pub strength: Cap,
+    /// terminal magnitude bound.
+    pub terminal: Cap,
+    /// Fraction of voxels carrying terminals (1.0 = dense segmentation,
+    /// ~0.05 = sparse surface-fitting seeds).
+    pub seed_density: f64,
+    pub seed: u64,
+}
+
+impl Default for Grid3dParams {
+    fn default() -> Self {
+        Grid3dParams {
+            width: 32,
+            height: 32,
+            depth: 32,
+            connectivity: 6,
+            strength: 10,
+            terminal: 100,
+            seed_density: 1.0,
+            seed: 1,
+        }
+    }
+}
+
+impl Grid3dParams {
+    /// Segmentation-like: dense terminals, 6-connected.
+    pub fn segmentation(side: usize, strength: Cap, seed: u64) -> Self {
+        Grid3dParams { width: side, height: side, depth: side, strength, seed, ..Self::default() }
+    }
+    /// Surface-like (LB07 analogue): sparse seeds.
+    pub fn surface(side: usize, strength: Cap, seed: u64) -> Self {
+        Grid3dParams {
+            width: side,
+            height: side,
+            depth: side,
+            strength,
+            seed_density: 0.05,
+            seed,
+            ..Self::default()
+        }
+    }
+}
+
+const NB6: [(i64, i64, i64); 3] = [(1, 0, 0), (0, 1, 0), (0, 0, 1)];
+
+/// A smooth pseudo-random scalar field in [-1, 1] — sum of a few cosine
+/// waves with random phase; its sign carves the "object".
+fn field(rng_waves: &[(f64, f64, f64, f64)], x: f64, y: f64, z: f64) -> f64 {
+    let mut s = 0.0;
+    for &(fx, fy, fz, ph) in rng_waves {
+        s += (fx * x + fy * y + fz * z + ph).cos();
+    }
+    s / rng_waves.len() as f64
+}
+
+/// Generate a 3-D instance. Node id is `(z * height + y) * width + x`.
+pub fn grid3d_segmentation(p: &Grid3dParams) -> Graph {
+    assert!(p.connectivity == 6 || p.connectivity == 26);
+    let (w, h, d) = (p.width, p.height, p.depth);
+    let mut rng = Rng::new(p.seed);
+    let waves: Vec<(f64, f64, f64, f64)> = (0..4)
+        .map(|_| {
+            (
+                rng.f64() * 0.35 + 0.05,
+                rng.f64() * 0.35 + 0.05,
+                rng.f64() * 0.35 + 0.05,
+                rng.f64() * std::f64::consts::TAU,
+            )
+        })
+        .collect();
+    let id = |x: usize, y: usize, z: usize| ((z * h + y) * w + x) as NodeId;
+    let mut b = GraphBuilder::new(w * h * d);
+
+    // displacement set
+    let mut disp: Vec<(i64, i64, i64)> = NB6.to_vec();
+    if p.connectivity == 26 {
+        disp.clear();
+        for dz in -1i64..=1 {
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    if (dx, dy, dz) > (0, 0, 0) {
+                        disp.push((dx, dy, dz));
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(disp.len(), 13);
+    }
+
+    for z in 0..d {
+        for y in 0..h {
+            for x in 0..w {
+                let v = id(x, y, z);
+                let f = field(&waves, x as f64, y as f64, z as f64);
+                // terminals: inside the object → source, outside → sink,
+                // magnitude grows with |f| (confidence), thinned by density
+                if rng.chance(p.seed_density) {
+                    let mag = ((f.abs() * p.terminal as f64) as Cap).max(1);
+                    if f >= 0.0 {
+                        b.add_terminal(v, mag, 0);
+                    } else {
+                        b.add_terminal(v, 0, mag);
+                    }
+                }
+                for &(dx, dy, dz) in &disp {
+                    let (nx, ny, nz) =
+                        (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                    if nx < 0 || ny < 0 || nz < 0 {
+                        continue;
+                    }
+                    let (nx, ny, nz) = (nx as usize, ny as usize, nz as usize);
+                    if nx >= w || ny >= h || nz >= d {
+                        continue;
+                    }
+                    let fu = field(&waves, nx as f64, ny as f64, nz as f64);
+                    // boundary-sensitive n-link: weak where the field
+                    // changes sign (object boundary), strong inside
+                    let wgt = if (f >= 0.0) == (fu >= 0.0) {
+                        p.strength
+                    } else {
+                        (p.strength / 4).max(1)
+                    };
+                    b.add_edge(v, id(nx, ny, nz), wgt, wgt);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// The matching partition: `s × s × s` tiles (the paper's Table 1 uses
+/// 4×4×4 = 64 regions for 3-D instances).
+pub fn partition_3d(p: &Grid3dParams, s: usize) -> Partition {
+    Partition::grid3d(p.width, p.height, p.depth, s, s, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::oracle::reference_value;
+
+    #[test]
+    fn interior_degree_6_and_26() {
+        for conn in [6usize, 26] {
+            let mut p = Grid3dParams::segmentation(6, 5, 1);
+            p.connectivity = conn;
+            let g = grid3d_segmentation(&p);
+            let v = ((3 * 6 + 3) * 6 + 3) as NodeId; // interior voxel
+            assert_eq!(g.arc_range(v).len(), conn);
+        }
+    }
+
+    #[test]
+    fn sparse_seeds_have_fewer_terminals() {
+        let dense = grid3d_segmentation(&Grid3dParams::segmentation(8, 5, 3));
+        let sparse = grid3d_segmentation(&Grid3dParams::surface(8, 5, 3));
+        let count = |g: &Graph| {
+            (0..g.n()).filter(|&v| g.excess[v] > 0 || g.sink_cap[v] > 0).count()
+        };
+        assert!(count(&sparse) * 4 < count(&dense));
+    }
+
+    #[test]
+    fn deterministic_and_solvable() {
+        let p = Grid3dParams::segmentation(6, 8, 11);
+        let a = grid3d_segmentation(&p);
+        let b = grid3d_segmentation(&p);
+        assert_eq!(a.cap, b.cap);
+        let f = reference_value(&a);
+        assert!(f > 0, "nontrivial flow expected");
+    }
+
+    #[test]
+    fn partition_3d_shape() {
+        let p = Grid3dParams::segmentation(8, 5, 1);
+        let part = partition_3d(&p, 2);
+        assert_eq!(part.k, 8);
+        assert_eq!(part.region_of.len(), 512);
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic workload generators reproducing the structure of the
+//! paper's benchmark instances.
+//!
+//! * [`synthetic2d`] — the §7.1 random 2-D grids (connectivity 4–16 via
+//!   the displacement list, uniform strength, ±500 excess).
+//! * [`grid3d`] — 6/26-connected 3-D grids with dense or sparse seeds
+//!   (stand-ins for the segmentation BJ01/BF06/BK03 and surface LB07
+//!   families of §7.2).
+//! * [`stereo`] — BVZ-like 4-connected grids with data-term excess and
+//!   KZ2-like variants with long-range arcs (§7.2 stereo family).
+//! * [`adversarial`] — the Appendix-A chain family on which PRD needs
+//!   `Θ(n²)` sweeps while ARD needs `O(1)`.
+
+pub mod adversarial;
+pub mod grid3d;
+pub mod stereo;
+pub mod synthetic2d;
+
+pub use adversarial::adversarial_chains;
+pub use grid3d::{grid3d_segmentation, Grid3dParams};
+pub use stereo::{stereo_bvz, stereo_kz2, StereoParams};
+pub use synthetic2d::{synthetic_2d, Synthetic2dParams, DISPLACEMENTS};

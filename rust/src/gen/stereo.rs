@@ -1,0 +1,160 @@
+//! Stereo-like instances: BVZ (4-connected 2-D grid with data-term
+//! terminals, the expansion-move subproblem structure of §7.2) and KZ2
+//! (the same plus long-range links, matching KZ2's higher average degree
+//! of ≈5.8).
+//!
+//! The data term mimics an expansion move on a piecewise-constant
+//! disparity map: the image is split into random smooth "surfaces"; the
+//! current labeling is wrong on a band of pixels, which therefore carry
+//! strong source terminals, while the rest weakly prefer the sink. The
+//! smoothness term is a contrast-modulated Potts weight, exactly the
+//! capacity profile of BVZ graphs.
+
+use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
+use crate::core::prng::Rng;
+
+/// Parameters of the stereo families.
+#[derive(Debug, Clone, Copy)]
+pub struct StereoParams {
+    pub width: usize,
+    pub height: usize,
+    /// smoothness weight (BVZ uses small constants, e.g. 20·K).
+    pub lambda: Cap,
+    /// data-term magnitude bound.
+    pub data: Cap,
+    /// fraction of pixels on the "wrong label" band.
+    pub band: f64,
+    pub seed: u64,
+}
+
+impl Default for StereoParams {
+    fn default() -> Self {
+        StereoParams { width: 200, height: 150, lambda: 12, data: 90, band: 0.25, seed: 1 }
+    }
+}
+
+fn data_terms(p: &StereoParams, rng: &mut Rng) -> (Vec<Cap>, Vec<f64>) {
+    let (w, h) = (p.width, p.height);
+    // a smooth "disparity" field: mixture of tilted planes
+    let planes: Vec<(f64, f64, f64)> = (0..3)
+        .map(|_| (rng.f64() * 0.1 - 0.05, rng.f64() * 0.1 - 0.05, rng.f64() * 8.0))
+        .collect();
+    let mut disparity = vec![0f64; w * h];
+    let mut terms = vec![0 as Cap; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let dsp = planes
+                .iter()
+                .map(|&(a, bq, c)| a * x as f64 + bq * y as f64 + c)
+                .fold(f64::MIN, f64::max);
+            disparity[y * w + x] = dsp;
+            // pixels on the improving band strongly prefer the source
+            // (their data cost drops under the candidate label)
+            // stereo data terms are mostly decisive relative to the
+            // smoothness weight — that is what makes the paper's Table 3
+            // reduction percentages high on the stereo family
+            let on_band = rng.chance(p.band);
+            let mag = 1 + (rng.f64() * p.data as f64) as Cap;
+            terms[y * w + x] = if on_band { mag } else { -mag };
+        }
+    }
+    (terms, disparity)
+}
+
+/// Contrast-modulated Potts weight between neighbors.
+fn nlink(p: &StereoParams, d1: f64, d2: f64) -> Cap {
+    if (d1 - d2).abs() < 1.0 {
+        p.lambda * 2
+    } else {
+        p.lambda
+    }
+}
+
+/// BVZ-like: 4-connected grid.
+pub fn stereo_bvz(p: &StereoParams) -> Graph {
+    let (w, h) = (p.width, p.height);
+    let mut rng = Rng::new(p.seed);
+    let (terms, disp) = data_terms(p, &mut rng);
+    let mut b = GraphBuilder::new(w * h);
+    for y in 0..h {
+        for x in 0..w {
+            let v = (y * w + x) as NodeId;
+            b.add_signed_terminal(v, terms[v as usize]);
+            if x + 1 < w {
+                let c = nlink(p, disp[v as usize], disp[v as usize + 1]);
+                b.add_edge(v, v + 1, c, c);
+            }
+            if y + 1 < h {
+                let u = v + w as NodeId;
+                let c = nlink(p, disp[v as usize], disp[u as usize]);
+                b.add_edge(v, u, c, c);
+            }
+        }
+    }
+    b.build()
+}
+
+/// KZ2-like: BVZ plus long-range occlusion links along scan lines
+/// (average degree ≈ 5.8 as in Table 1).
+pub fn stereo_kz2(p: &StereoParams) -> Graph {
+    let (w, h) = (p.width, p.height);
+    let mut rng = Rng::new(p.seed ^ 0x9e37_79b9);
+    let (terms, disp) = data_terms(p, &mut rng);
+    let mut b = GraphBuilder::new(w * h);
+    for y in 0..h {
+        for x in 0..w {
+            let v = (y * w + x) as NodeId;
+            b.add_signed_terminal(v, terms[v as usize]);
+            if x + 1 < w {
+                let c = nlink(p, disp[v as usize], disp[v as usize + 1]);
+                b.add_edge(v, v + 1, c, c);
+            }
+            if y + 1 < h {
+                let u = v + w as NodeId;
+                let c = nlink(p, disp[v as usize], disp[u as usize]);
+                b.add_edge(v, u, c, c);
+            }
+            // long-range link along the epipolar (scan) line at the
+            // local disparity offset — one direction, asymmetric caps
+            let off = 2 + (disp[v as usize].abs() as usize % 6);
+            if x + off < w && rng.chance(0.9) {
+                let u = v + off as NodeId;
+                b.add_edge(v, u, p.lambda, p.lambda / 2);
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::oracle::reference_value;
+
+    #[test]
+    fn bvz_is_4_connected() {
+        let p = StereoParams { width: 10, height: 10, ..Default::default() };
+        let g = stereo_bvz(&p);
+        let v = (5 * 10 + 5) as NodeId;
+        assert_eq!(g.arc_range(v).len(), 4);
+    }
+
+    #[test]
+    fn kz2_has_higher_degree() {
+        let p = StereoParams { width: 30, height: 30, ..Default::default() };
+        let bvz = stereo_bvz(&p);
+        let kz2 = stereo_kz2(&p);
+        let avg = |g: &Graph| g.num_arcs() as f64 / g.n() as f64;
+        assert!(avg(&kz2) > avg(&bvz) + 1.0, "long-range links raise degree");
+    }
+
+    #[test]
+    fn nontrivial_flow_and_deterministic() {
+        let p = StereoParams { width: 16, height: 12, ..Default::default() };
+        let a = stereo_bvz(&p);
+        let b2 = stereo_bvz(&p);
+        assert_eq!(a.cap, b2.cap);
+        assert!(reference_value(&a) > 0);
+        assert!(reference_value(&stereo_kz2(&p)) > 0);
+    }
+}

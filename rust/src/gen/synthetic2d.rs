@@ -1,0 +1,155 @@
+//! §7.1 synthetic problems: a 2-D grid with a regular connectivity
+//! structure, constant edge capacity (*strength*), and uniform random
+//! integer excess/deficit in `[-500, 500]` per node.
+//!
+//! Edges are added at the paper's relative displacements
+//! `(0,1), (1,0), (1,2), (2,1), (1,3), (3,1), (2,3), (3,2), (0,2),
+//! (2,0), (2,2), (3,3), (3,4), (4,2)`; taking the first `c/2` of them
+//! yields connectivity `c` (each displacement contributes two incident
+//! edges to an interior node).
+
+use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
+use crate::core::partition::Partition;
+use crate::core::prng::Rng;
+
+/// The paper's displacement list (§7.1).
+pub const DISPLACEMENTS: [(usize, usize); 14] = [
+    (0, 1),
+    (1, 0),
+    (1, 2),
+    (2, 1),
+    (1, 3),
+    (3, 1),
+    (2, 3),
+    (3, 2),
+    (0, 2),
+    (2, 0),
+    (2, 2),
+    (3, 3),
+    (3, 4),
+    (4, 2),
+];
+
+/// Parameters of the §7.1 family.
+#[derive(Debug, Clone, Copy)]
+pub struct Synthetic2dParams {
+    pub width: usize,
+    pub height: usize,
+    /// Node connectivity: 4, 8, 12, … (= 2 × number of displacements).
+    pub connectivity: usize,
+    /// Constant capacity of every grid edge.
+    pub strength: Cap,
+    /// Excess/deficit magnitude bound (paper: 500).
+    pub excess_range: Cap,
+    pub seed: u64,
+}
+
+impl Default for Synthetic2dParams {
+    fn default() -> Self {
+        Synthetic2dParams {
+            width: 1000,
+            height: 1000,
+            connectivity: 8,
+            strength: 150,
+            excess_range: 500,
+            seed: 1,
+        }
+    }
+}
+
+impl Synthetic2dParams {
+    pub fn small(width: usize, height: usize, strength: Cap, seed: u64) -> Self {
+        Synthetic2dParams { width, height, strength, seed, ..Self::default() }
+    }
+}
+
+/// Generate the instance. Node id is `y * width + x`.
+pub fn synthetic_2d(p: &Synthetic2dParams) -> Graph {
+    assert!(p.connectivity >= 2 && p.connectivity % 2 == 0);
+    let ndisp = p.connectivity / 2;
+    assert!(ndisp <= DISPLACEMENTS.len(), "connectivity at most {}", 2 * DISPLACEMENTS.len());
+    let (w, h) = (p.width, p.height);
+    let mut rng = Rng::new(p.seed);
+    let mut b = GraphBuilder::new(w * h);
+    for y in 0..h {
+        for x in 0..w {
+            let v = (y * w + x) as NodeId;
+            b.add_signed_terminal(v, rng.range_i64(-p.excess_range, p.excess_range));
+            for &(dx, dy) in &DISPLACEMENTS[..ndisp] {
+                let (nx, ny) = (x + dx, y + dy);
+                if nx < w && ny < h {
+                    let u = (ny * w + nx) as NodeId;
+                    b.add_edge(v, u, p.strength, p.strength);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// The matching partition: slice into `s × s` tiles (§7.1).
+pub fn partition_2d(p: &Synthetic2dParams, s: usize) -> Partition {
+    Partition::grid2d(p.width, p.height, s, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::oracle::reference_value;
+
+    #[test]
+    fn connectivity_matches_interior_degree() {
+        for conn in [4usize, 8, 16] {
+            let p = Synthetic2dParams {
+                width: 12,
+                height: 12,
+                connectivity: conn,
+                strength: 10,
+                excess_range: 20,
+                seed: 3,
+            };
+            let g = synthetic_2d(&p);
+            // interior node far from all borders
+            let v = (6 * 12 + 6) as NodeId;
+            assert_eq!(g.arc_range(v).len(), conn, "connectivity {conn}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let p = Synthetic2dParams::small(8, 8, 5, 7);
+        let a = synthetic_2d(&p);
+        let b = synthetic_2d(&p);
+        assert_eq!(a.excess, b.excess);
+        assert_eq!(a.cap, b.cap);
+        let mut p2 = p;
+        p2.seed = 8;
+        let c = synthetic_2d(&p2);
+        assert_ne!(a.excess, c.excess);
+    }
+
+    #[test]
+    fn zero_strength_solves_trivially() {
+        let p = Synthetic2dParams::small(6, 6, 0, 1);
+        let g = synthetic_2d(&p);
+        assert_eq!(reference_value(&g), 0);
+    }
+
+    #[test]
+    fn excess_within_range() {
+        let p = Synthetic2dParams::small(10, 10, 5, 2);
+        let g = synthetic_2d(&p);
+        for v in 0..g.n() {
+            assert!(g.excess[v] <= 500 && g.sink_cap[v] <= 500);
+            assert!(g.excess[v] == 0 || g.sink_cap[v] == 0);
+        }
+    }
+
+    #[test]
+    fn partition_covers_grid() {
+        let p = Synthetic2dParams::small(10, 10, 5, 2);
+        let part = partition_2d(&p, 2);
+        assert_eq!(part.k, 4);
+        assert_eq!(part.region_of.len(), 100);
+    }
+}

@@ -1,0 +1,35 @@
+//! `armincut` — a distributed mincut/maxflow library combining path
+//! augmentation and push-relabel, reproducing Shekhovtsov & Hlaváč,
+//! *"A Distributed Mincut/Maxflow Algorithm Combining Path Augmentation
+//! and Push-Relabel"* (CTU-CMP-2011-03 / EMMCVPR 2011).
+//!
+//! # Architecture
+//!
+//! The graph is partitioned into regions. Each *sweep* discharges every
+//! region: [`region::ard`] (Augmented path Region Discharge — the paper's
+//! contribution, terminating in at most `2|B|^2 + 1` sweeps) or
+//! [`region::prd`] (push-relabel region discharge, the Delong–Boykov
+//! baseline with a tight `O(n^2)` sweep bound). Coordinators in
+//! [`coordinator`] run the sweeps sequentially (optionally *streaming*,
+//! one region in memory at a time) or in parallel with the paper's
+//! flow-fusion conflict resolution.
+//!
+//! Substrates built from scratch: the residual-network core
+//! ([`core::graph`]), DIMACS I/O, graph partitioning, the
+//! Boykov–Kolmogorov augmenting-path solver ([`solvers::bk`]), a
+//! highest-label push-relabel solver with boundary seeds
+//! ([`solvers::hpr`]), reference oracles, the dual-decomposition baseline
+//! ([`coordinator::dd`]), synthetic workload generators ([`gen`]), and a
+//! PJRT runtime ([`runtime`]) that offloads grid region discharges to an
+//! AOT-compiled JAX/Pallas kernel.
+
+pub mod core;
+pub mod solvers;
+pub mod region;
+pub mod coordinator;
+pub mod gen;
+pub mod runtime;
+pub mod experiments;
+
+pub use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
+pub use crate::core::partition::Partition;

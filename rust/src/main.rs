@@ -1,0 +1,378 @@
+//! `armincut` CLI — solve, generate, split, reduce, benchmark.
+//!
+//! Subcommands (hand-rolled parsing; no argv crates offline):
+//!
+//! * `solve`       — run any solver on a DIMACS `max` file or generator
+//! * `gen`         — write a synthetic instance as DIMACS
+//! * `split`       — the paper's *splitter* tool: region part files
+//! * `reduce`      — Alg. 5 region reduction statistics (Table 3 style)
+//! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3)
+//! * `accel`       — the PJRT kernel demo on a grid instance
+//!
+//! Run `armincut help` for the option list.
+
+use armincut::coordinator::dd::{solve_dd, DdOptions};
+use armincut::coordinator::parallel::{solve_parallel, ParOptions};
+use armincut::coordinator::sequential::{solve_sequential, CoreKind, SeqOptions};
+use armincut::core::dimacs::{read_dimacs, write_dimacs};
+use armincut::core::graph::Graph;
+use armincut::core::partition::Partition;
+use armincut::gen::grid3d::{grid3d_segmentation, Grid3dParams};
+use armincut::gen::stereo::{stereo_bvz, stereo_kz2, StereoParams};
+use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+use armincut::region::reduction::reduce_all;
+use armincut::solvers::{bk::Bk, hpr::Hpr, MaxFlowSolver};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+
+const HELP: &str = r#"armincut — distributed mincut/maxflow (S/P-ARD + S/P-PRD)
+
+USAGE:
+  armincut solve   --input FILE|--gen SPEC --algo ALGO [opts]
+  armincut gen     --gen SPEC --out FILE
+  armincut split   --input FILE|--gen SPEC --regions K --out DIR
+  armincut reduce  --input FILE|--gen SPEC --regions K
+  armincut experiment ID [--full]
+  armincut accel   [--artifacts DIR]
+  armincut help
+
+SOLVE OPTIONS:
+  --algo {s-ard|s-prd|p-ard|p-prd|bk|hipr0|hipr0.5|dd}
+  --regions K          partition into K regions by node ranges (default 4)
+  --threads N          worker threads for p-ard/p-prd/dd (default 4)
+  --streaming DIR      sequential streaming mode, one region in memory
+  --core {bk|dinic}    ARD augmenting core (default bk)
+  --no-gap / --no-brelabel / --no-partial   disable heuristics
+  --pair-arcs          pair reverse arcs when reading DIMACS
+  --cut FILE           write the minimum cut (one side bit per line)
+
+GEN SPECS:
+  synth2d:W,H,CONN,STRENGTH,SEED     (§7.1 random grid)
+  seg3d:SIDE,CONN,STRENGTH,SEED      (segmentation-like volume)
+  surf3d:SIDE,STRENGTH,SEED          (sparse-seed surface volume)
+  bvz:W,H,SEED / kz2:W,H,SEED        (stereo-like)
+
+EXPERIMENT IDS:
+  fig6 fig7 fig8 fig9 fig10 fig11 table1 table2 table3
+  appendix_a ablation accel all
+"#;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{HELP}");
+        std::process::exit(2);
+    };
+    let opts = parse_flags(&args[1..]);
+    let code = match cmd.as_str() {
+        "solve" => cmd_solve(&opts),
+        "gen" => cmd_gen(&opts),
+        "split" => cmd_split(&opts),
+        "reduce" => cmd_reduce(&opts),
+        "experiment" => cmd_experiment(&args[1..], &opts),
+        "accel" => cmd_accel(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            0
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut m = Flags::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn load_graph(opts: &Flags) -> Result<Graph, String> {
+    if let Some(spec) = opts.get("gen") {
+        return gen_graph(spec);
+    }
+    let path = opts.get("input").ok_or("need --input FILE or --gen SPEC")?;
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+    let pair = opts.contains_key("pair-arcs");
+    let prob = read_dimacs(BufReader::new(f), pair).map_err(|e| e.to_string())?;
+    Ok(prob.builder.build())
+}
+
+fn gen_graph(spec: &str) -> Result<Graph, String> {
+    let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let nums: Vec<i64> = rest
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().map_err(|e| format!("bad number {s}: {e}")))
+        .collect::<Result<_, _>>()?;
+    let get = |i: usize, d: i64| nums.get(i).copied().unwrap_or(d);
+    match kind {
+        "synth2d" => Ok(synthetic_2d(&Synthetic2dParams {
+            width: get(0, 256) as usize,
+            height: get(1, 256) as usize,
+            connectivity: get(2, 8) as usize,
+            strength: get(3, 150),
+            excess_range: 500,
+            seed: get(4, 1) as u64,
+        })),
+        "seg3d" => {
+            let mut p =
+                Grid3dParams::segmentation(get(0, 32) as usize, get(2, 10), get(3, 1) as u64);
+            p.connectivity = get(1, 6) as usize;
+            Ok(grid3d_segmentation(&p))
+        }
+        "surf3d" => Ok(grid3d_segmentation(&Grid3dParams::surface(
+            get(0, 32) as usize,
+            get(1, 10),
+            get(2, 1) as u64,
+        ))),
+        "bvz" => Ok(stereo_bvz(&StereoParams {
+            width: get(0, 200) as usize,
+            height: get(1, 150) as usize,
+            seed: get(2, 1) as u64,
+            ..Default::default()
+        })),
+        "kz2" => Ok(stereo_kz2(&StereoParams {
+            width: get(0, 200) as usize,
+            height: get(1, 150) as usize,
+            seed: get(2, 1) as u64,
+            ..Default::default()
+        })),
+        other => Err(format!("unknown generator: {other}")),
+    }
+}
+
+fn make_partition(opts: &Flags, g: &Graph) -> Partition {
+    let k: usize = opts.get("regions").and_then(|s| s.parse().ok()).unwrap_or(4);
+    Partition::by_node_ranges(g.n(), k.max(1))
+}
+
+fn cmd_solve(opts: &Flags) -> i32 {
+    let g = match load_graph(opts) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let part = make_partition(opts, &g);
+    let algo = opts.get("algo").map(String::as_str).unwrap_or("s-ard");
+    let threads: usize = opts.get("threads").and_then(|s| s.parse().ok()).unwrap_or(4);
+    println!(
+        "instance: n={} m={} | partition: {} regions, |B|={}",
+        g.n(),
+        g.num_arcs() / 2,
+        part.k,
+        part.stats(&g).boundary_nodes
+    );
+
+    let (summary, cut) = match algo {
+        "bk" | "hipr0" | "hipr0.5" => {
+            let mut gc = g.clone();
+            let t = std::time::Instant::now();
+            let flow = match algo {
+                "bk" => Bk::new().solve(&mut gc),
+                "hipr0" => Hpr::new().solve(&mut gc),
+                _ => Hpr::with_freq(0.5).solve(&mut gc),
+            };
+            let dt = t.elapsed();
+            (format!("{algo}: flow={flow} cpu={:.3}s", dt.as_secs_f64()), gc.min_cut_sides())
+        }
+        "s-ard" | "s-prd" => {
+            let mut o = if algo == "s-ard" { SeqOptions::ard() } else { SeqOptions::prd() };
+            apply_heuristic_flags(opts, &mut o);
+            if let Some(dir) = opts.get("streaming") {
+                o.streaming_dir = Some(dir.into());
+            }
+            let res = solve_sequential(&g, &part, &o);
+            (res.metrics.summary(algo), res.cut)
+        }
+        "p-ard" | "p-prd" => {
+            let mut o = if algo == "p-ard" {
+                ParOptions::ard(threads)
+            } else {
+                ParOptions::prd(threads)
+            };
+            if opts.contains_key("no-gap") {
+                o.global_gap = false;
+            }
+            if opts.contains_key("no-brelabel") {
+                o.boundary_relabel = false;
+            }
+            if opts.contains_key("no-partial") {
+                o.partial_discharge = false;
+            }
+            let res = solve_parallel(&g, &part, &o);
+            (res.metrics.summary(algo), res.cut)
+        }
+        "dd" => {
+            let mut o = DdOptions::default();
+            o.threads = threads;
+            let res = solve_dd(&g, &part, &o);
+            (res.metrics.summary("dd"), res.cut)
+        }
+        other => {
+            eprintln!("unknown --algo {other}");
+            return 2;
+        }
+    };
+    println!("{summary}");
+    // verify the cut certificate against the pristine capacities
+    let snap = g.snapshot();
+    let cost = g.cut_cost(&snap, &cut);
+    println!("cut cost = {cost} (certificate check)");
+    if let Some(path) = opts.get("cut") {
+        let bits: String = cut.iter().map(|&s| if s { "1\n" } else { "0\n" }).collect();
+        if let Err(e) = std::fs::write(path, bits) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        println!("cut written to {path}");
+    }
+    0
+}
+
+fn apply_heuristic_flags(opts: &Flags, o: &mut SeqOptions) {
+    if opts.contains_key("no-gap") {
+        o.global_gap = false;
+    }
+    if opts.contains_key("no-brelabel") {
+        o.boundary_relabel = false;
+    }
+    if opts.contains_key("no-partial") {
+        o.partial_discharge = false;
+    }
+    if opts.get("core").map(String::as_str) == Some("dinic") {
+        o.core = CoreKind::Dinic;
+    }
+}
+
+fn cmd_gen(opts: &Flags) -> i32 {
+    let g = match load_graph(opts) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let Some(out) = opts.get("out") else {
+        eprintln!("need --out FILE");
+        return 2;
+    };
+    let f = match std::fs::File::create(out) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("create {out}: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = write_dimacs(&g, BufWriter::new(f)) {
+        eprintln!("write: {e}");
+        return 1;
+    }
+    println!("wrote n={} m={} to {out}", g.n(), g.num_arcs() / 2);
+    0
+}
+
+/// The paper's *splitter* tool (§5.3): write each region's data to a
+/// separate part file; only the shared boundary stays in memory.
+fn cmd_split(opts: &Flags) -> i32 {
+    let g = match load_graph(opts) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let part = make_partition(opts, &g);
+    let Some(dir) = opts.get("out") else {
+        eprintln!("need --out DIR");
+        return 2;
+    };
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("mkdir {dir}: {e}");
+        return 1;
+    }
+    use armincut::region::decompose::{Decomposition, DistanceMode};
+    let dec = Decomposition::new(&g, &part, DistanceMode::Ard);
+    let mut total = 0usize;
+    for (r, p) in dec.parts.iter().enumerate() {
+        let bytes = p.to_bytes();
+        total += bytes.len();
+        if let Err(e) = std::fs::write(format!("{dir}/region_{r}.part"), &bytes) {
+            eprintln!("write part {r}: {e}");
+            return 1;
+        }
+    }
+    println!(
+        "split into {} parts ({} MB) + shared boundary: |B|={} arcs={}",
+        part.k,
+        total >> 20,
+        dec.shared.num_boundary(),
+        dec.shared.arcs.len()
+    );
+    0
+}
+
+fn cmd_reduce(opts: &Flags) -> i32 {
+    let g = match load_graph(opts) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let part = make_partition(opts, &g);
+    let t = std::time::Instant::now();
+    let (mask, frac) = reduce_all(&g, &part);
+    println!(
+        "region reduction (Alg. 5): {}/{} nodes decided ({:.1}%) in {:.3}s",
+        mask.iter().filter(|&&d| d).count(),
+        g.n(),
+        frac * 100.0,
+        t.elapsed().as_secs_f64()
+    );
+    0
+}
+
+fn cmd_experiment(args: &[String], opts: &Flags) -> i32 {
+    let Some(id) = args.iter().find(|a| !a.starts_with("--")) else {
+        eprintln!(
+            "need an experiment id (fig6..fig11, table1..3, appendix_a, ablation, accel, all)"
+        );
+        return 2;
+    };
+    let quick = !opts.contains_key("full") && armincut::experiments::is_quick();
+    match armincut::experiments::run(id, quick) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn cmd_accel(opts: &Flags) -> i32 {
+    if let Some(dir) = opts.get("artifacts") {
+        std::env::set_var("ARMINCUT_ARTIFACTS", dir);
+    }
+    armincut::experiments::accel::accel_experiment(true);
+    0
+}

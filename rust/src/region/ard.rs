@@ -1,0 +1,273 @@
+//! ARD — Augmented path Region Discharge (§4.2 of the paper).
+//!
+//! Within a region network, first augment all paths from excess vertices
+//! to the sink (stage 0), then to boundary vertices in the order of
+//! their increasing labels: stage `k` augments to
+//! `T_k = {t} ∪ {w ∈ B^R | d(w) < k}`. Flow absorbed at a boundary
+//! vertex accumulates as its local excess and is exported by
+//! `sync_out`. Finally the inner labels are recomputed by the
+//! region-relabel heuristic (Alg. 3).
+//!
+//! The *partial discharge* heuristic (§6.2) caps the highest stage run
+//! in sweep `s` at `s`, postponing expensive pushes toward
+//! high-labelled boundaries until the labeling has stabilized.
+//!
+//! The augmenting core is pluggable (Statement 9's properties do not
+//! depend on how paths are found): Dinic blocking flow (default) or the
+//! Boykov–Kolmogorov forest solver (the paper's choice, reusing search
+//! trees across stages as in §6.3).
+
+use crate::core::graph::Cap;
+use crate::region::decompose::RegionPart;
+use crate::region::relabel::region_relabel_ard;
+use crate::solvers::bk::Bk;
+use crate::solvers::dinic::Dinic;
+
+/// Pluggable augmenting-path engine for ARD stages.
+#[derive(Debug)]
+pub enum ArdCore {
+    Dinic(Dinic),
+    Bk(Bk),
+}
+
+impl ArdCore {
+    pub fn dinic() -> Self {
+        ArdCore::Dinic(Dinic::new())
+    }
+    pub fn bk() -> Self {
+        ArdCore::Bk(Bk::new())
+    }
+
+    fn run(
+        &mut self,
+        g: &mut crate::core::graph::Graph,
+        absorb: Option<&[bool]>,
+        source_ok: &[bool],
+    ) -> Cap {
+        match self {
+            ArdCore::Dinic(d) => d.run(g, absorb, true, Some(source_ok)),
+            ArdCore::Bk(b) => b.run(g, absorb, Some(source_ok)),
+        }
+    }
+}
+
+/// Per-discharge statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArdStats {
+    /// Flow routed to the sink during this discharge.
+    pub to_sink: Cap,
+    /// Flow exported to boundary vertices.
+    pub to_boundary: Cap,
+    /// Number of stages actually executed (skipping empty ones).
+    pub stages: u32,
+    /// Total label increase produced by the final region-relabel.
+    pub label_increase: u64,
+}
+
+/// Reusable ARD workspace.
+#[derive(Debug)]
+pub struct Ard {
+    pub core: ArdCore,
+    source_mask: Vec<bool>,
+    absorb_mask: Vec<bool>,
+}
+
+impl Ard {
+    pub fn new(core: ArdCore) -> Self {
+        Ard { core, source_mask: Vec::new(), absorb_mask: Vec::new() }
+    }
+
+    /// Discharge `part`. `d_inf` is the label ceiling (`|B|`);
+    /// `max_stage` implements partial discharges (§6.2) — pass `u32::MAX`
+    /// for a full discharge. Assumes `sync_in` has run.
+    pub fn discharge(&mut self, part: &mut RegionPart, d_inf: u32, max_stage: u32) -> ArdStats {
+        let n_local = part.graph.n();
+        let n_inner = part.n_inner;
+        let mut stats = ArdStats::default();
+
+        self.source_mask.clear();
+        self.source_mask.resize(n_local, false);
+        for m in self.source_mask[..n_inner].iter_mut() {
+            *m = true;
+        }
+        self.absorb_mask.clear();
+        self.absorb_mask.resize(n_local, false);
+
+        // ---- stage 0: augment to the sink --------------------------------
+        let sink_before = part.graph.flow_to_sink;
+        self.core.run(&mut part.graph, None, &self.source_mask);
+        stats.to_sink = part.graph.flow_to_sink - sink_before;
+        stats.stages = 1;
+
+        // ---- stages k = 1..: augment to T_k in label order ----------------
+        // distinct labels of foreign boundary vertices, ascending
+        let mut labels: Vec<u32> = part
+            .foreign_boundary
+            .iter()
+            .map(|&(lv, _)| part.label[lv as usize])
+            .filter(|&d| d < d_inf)
+            .collect();
+        labels.sort_unstable();
+        labels.dedup();
+
+        for &l in &labels {
+            let stage = l + 1;
+            if stage > max_stage {
+                break;
+            }
+            // remaining movable excess?
+            if part.graph.excess[..n_inner].iter().all(|&e| e == 0) {
+                break;
+            }
+            // cumulative absorb set: every boundary vertex with d(w) <= l
+            for &(lv, _) in &part.foreign_boundary {
+                if part.label[lv as usize] <= l {
+                    self.absorb_mask[lv as usize] = true;
+                }
+            }
+            let moved = self
+                .core
+                .run(&mut part.graph, Some(&self.absorb_mask), &self.source_mask);
+            stats.to_boundary += moved;
+            stats.stages += 1;
+        }
+        // flow absorbed at boundary vertices minus what later moved on
+        // (within one discharge nothing moves on; `moved` sums per stage,
+        // but the sink may also absorb in later stages — subtract)
+        let sink_total = part.graph.flow_to_sink - sink_before;
+        stats.to_boundary -= sink_total - stats.to_sink;
+        stats.to_sink = sink_total;
+
+        // ---- relabel -------------------------------------------------------
+        stats.label_increase = region_relabel_ard(part, d_inf);
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+    use crate::region::decompose::{Decomposition, DistanceMode};
+    use crate::region::relabel::labeling_is_valid;
+
+    fn chain_decomp() -> Decomposition {
+        let mut b = GraphBuilder::new(6);
+        b.add_terminal(0, 9, 0);
+        b.add_terminal(5, 0, 9);
+        for v in 0..5 {
+            b.add_edge(v, v + 1, 4, 4);
+        }
+        let g = b.build();
+        let p = Partition::by_node_ranges(6, 2);
+        Decomposition::new(&g, &p, DistanceMode::Ard)
+    }
+
+    #[test]
+    fn discharge_pushes_to_boundary_in_label_order() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::dinic());
+
+        // region 0 holds excess 9 at node 0; no sink inside; boundary
+        // node 3 at label 0 → stage 1 pushes min(9, caps) = 4 outward
+        d.sync_in(0);
+        let st = ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        assert_eq!(st.to_sink, 0);
+        assert_eq!(st.to_boundary, 4, "chain capacity bounds the export");
+        assert!(labeling_is_valid(&d.parts[0], d_inf, true));
+        d.sync_out(0);
+        assert_eq!(d.shared.excess[1], 4);
+
+        // region 1 now has 4 excess at node 3, sink at node 5
+        d.sync_in(1);
+        let st = ard.discharge(&mut d.parts[1], d_inf, u32::MAX);
+        assert_eq!(st.to_sink, 4);
+        d.sync_out(1);
+        assert_eq!(d.flow_value(), 4);
+    }
+
+    #[test]
+    fn no_active_inner_after_discharge() {
+        // Statement 9.1: no active vertices in R w.r.t. (f', d')
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::dinic());
+        d.sync_in(0);
+        ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        let p0 = &d.parts[0];
+        for v in 0..p0.n_inner {
+            assert!(
+                p0.graph.excess[v] == 0 || p0.label[v] >= d_inf,
+                "vertex {v} still active"
+            );
+        }
+    }
+
+    #[test]
+    fn labels_monotone_over_discharges() {
+        // Statement 9.2: d' >= d
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::bk());
+        d.sync_in(0);
+        let before = d.parts[0].label.clone();
+        ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        for v in 0..d.parts[0].n_inner {
+            assert!(d.parts[0].label[v] >= before[v]);
+        }
+    }
+
+    #[test]
+    fn partial_discharge_postpones_boundary() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::dinic());
+        d.sync_in(0);
+        // max_stage = 0: only the sink stage runs; nothing exported
+        let st = ard.discharge(&mut d.parts[0], d_inf, 0);
+        assert_eq!(st.to_boundary, 0);
+        assert_eq!(st.stages, 1);
+        d.sync_out(0);
+        assert_eq!(d.shared.excess[1], 0);
+    }
+
+    #[test]
+    fn bk_and_dinic_cores_agree() {
+        let mut d1 = chain_decomp();
+        let mut d2 = chain_decomp();
+        let d_inf = d1.shared.d_inf;
+        let mut a1 = Ard::new(ArdCore::dinic());
+        let mut a2 = Ard::new(ArdCore::bk());
+        d1.sync_in(0);
+        d2.sync_in(0);
+        let s1 = a1.discharge(&mut d1.parts[0], d_inf, u32::MAX);
+        let s2 = a2.discharge(&mut d2.parts[0], d_inf, u32::MAX);
+        assert_eq!(s1.to_sink, s2.to_sink);
+        assert_eq!(s1.to_boundary, s2.to_boundary);
+        assert_eq!(d1.parts[0].label, d2.parts[0].label);
+    }
+
+    #[test]
+    fn flow_direction_property() {
+        // Statement 9.4: exports go from higher new label to lower old
+        // label: after discharge, d'(u) > d(w) for flow u → w. We check
+        // the aggregate consequence: every boundary vertex that received
+        // flow has label < the new label of some inner vertex.
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::dinic());
+        d.sync_in(0);
+        let st = ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        if st.to_boundary > 0 {
+            let p0 = &d.parts[0];
+            let max_inner = (0..p0.n_inner).map(|v| p0.label[v]).max().unwrap();
+            for &(lv, _) in &p0.foreign_boundary {
+                if p0.graph.excess[lv as usize] > 0 {
+                    assert!(p0.label[lv as usize] < max_inner.max(1));
+                }
+            }
+        }
+    }
+}

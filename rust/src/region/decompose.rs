@@ -1,0 +1,936 @@
+//! Decomposition of a global network into region networks (`G^R`, §3)
+//! plus the shared boundary state.
+//!
+//! Every vertex belongs to exactly one region of the fixed partition.
+//! A region network `G^R` contains the region's own vertices (*inner*,
+//! local indices `0..n_inner`) followed by its *foreign boundary*
+//! vertices `B^R` (vertices of neighboring regions incident to an
+//! inter-region edge). Per the paper's Fig. 1(b), the capacities of
+//! incoming boundary arcs `(B^R, R)` are zero — those arcs belong to the
+//! neighboring region network; their residual capacity inside a
+//! discharge grows only from the region's own pushes.
+//!
+//! Everything a discharge needs to exchange with the rest of the graph
+//! lives in [`SharedState`]: boundary labels `d|_B`, boundary excess,
+//! and the residual capacities of inter-region edges. Synchronizing a
+//! region against the shared state ([`Decomposition::sync_in`] /
+//! [`Decomposition::sync_out`]) is the *message passing* of the
+//! distributed algorithm, and its byte volume is what the experiments
+//! account as communication.
+
+use crate::core::graph::{ArcId, Cap, Graph, GraphBuilder, NodeId};
+use crate::core::partition::Partition;
+
+/// Sentinel for "not a boundary vertex".
+pub const NOT_BOUNDARY: u32 = u32::MAX;
+
+/// Shared ("leader") state: everything visible across regions.
+#[derive(Debug, Clone)]
+pub struct SharedState {
+    /// Global vertex id of each boundary vertex.
+    pub global_of_b: Vec<NodeId>,
+    /// Boundary index of each global vertex (`NOT_BOUNDARY` otherwise).
+    pub b_of_global: Vec<u32>,
+    /// Owner region of each boundary vertex.
+    pub owner: Vec<u32>,
+    /// Distance label of each boundary vertex (`d|_B`).
+    pub d: Vec<u32>,
+    /// Excess parked at each boundary vertex between discharges
+    /// (both the owner's own excess and neighbors' exports).
+    pub excess: Vec<Cap>,
+    /// Inter-region edges: `(bu, bv)` boundary ids with residual
+    /// capacities in both directions.
+    pub arcs: Vec<SharedArc>,
+    /// Label ceiling: `|B|` for ARD, `n` for PRD (§4.1 / §2).
+    pub d_inf: u32,
+}
+
+/// One inter-region edge with its two residual capacities.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedArc {
+    pub bu: u32,
+    pub bv: u32,
+    /// residual capacity `c_f(u, v)`
+    pub cap_fw: Cap,
+    /// residual capacity `c_f(v, u)`
+    pub cap_bw: Cap,
+}
+
+impl SharedState {
+    pub fn num_boundary(&self) -> usize {
+        self.global_of_b.len()
+    }
+
+    /// Histogram of boundary labels in `0..d_inf` (the `|B|`-bin
+    /// histogram §5.3 uses for the global gap heuristic).
+    pub fn label_histogram(&self) -> Vec<u32> {
+        let mut h = vec![0u32; self.d_inf as usize + 1];
+        for &d in &self.d {
+            h[(d.min(self.d_inf)) as usize] += 1;
+        }
+        h
+    }
+
+    /// Shared-memory footprint in bytes (`O(|B| + |(B,B)|)`, §5.3).
+    pub fn memory_bytes(&self) -> usize {
+        self.global_of_b.len() * (4 + 4 + 4 + 8) + self.arcs.len() * std::mem::size_of::<SharedArc>()
+    }
+}
+
+/// Mapping of one local boundary arc to its shared counterpart.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundaryArcRef {
+    /// Local arc id (tail = inner vertex, head = foreign boundary).
+    pub local_arc: ArcId,
+    /// Index into `SharedState::arcs`.
+    pub shared: u32,
+    /// `true` if the local arc corresponds to the `cap_fw` direction.
+    pub forward: bool,
+}
+
+/// One region's private network and bookkeeping.
+#[derive(Debug, Clone)]
+pub struct RegionPart {
+    pub region_id: u32,
+    /// Local residual network over `R ∪ B^R` (no `s`/`t`; excess form).
+    pub graph: Graph,
+    /// Number of inner (owned) vertices; locals `>= n_inner` are `B^R`.
+    pub n_inner: usize,
+    /// Local index → global vertex id.
+    pub global_ids: Vec<NodeId>,
+    /// Distance labels for all local vertices (boundary entries are
+    /// synced from shared state; inner entries are private).
+    pub label: Vec<u32>,
+    /// Inner vertices that are themselves boundary vertices (owned
+    /// boundary): `(local_index, boundary_id)`.
+    pub owned_boundary: Vec<(u32, u32)>,
+    /// Foreign boundary vertices: `(local_index, boundary_id)`,
+    /// local indices are exactly `n_inner..n_local`.
+    pub foreign_boundary: Vec<(u32, u32)>,
+    /// Local boundary arcs ↔ shared arcs.
+    pub boundary_arcs: Vec<BoundaryArcRef>,
+    /// Capacity of each boundary arc as of the last `sync_in` (needed to
+    /// compute the pushed delta at `sync_out`).
+    pub synced_cap: Vec<Cap>,
+    /// Whether the region may still hold active inner vertices.
+    pub active: bool,
+    /// Smallest global-gap label discovered while the region was not
+    /// loaded; applied lazily at the next `sync_in` (§5.4).
+    pub pending_gap: u32,
+}
+
+impl RegionPart {
+    /// Active means: some inner vertex has excess and a label below the
+    /// ceiling. (Cheap scan; used after sync-in.)
+    pub fn has_active_inner(&self, d_inf: u32) -> bool {
+        (0..self.n_inner)
+            .any(|v| self.graph.excess[v] > 0 && self.label[v] < d_inf)
+    }
+
+    /// Private ("region") memory footprint in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.graph.memory_bytes()
+            + self.global_ids.len() * 4
+            + self.label.len() * 4
+            + self.boundary_arcs.len() * (std::mem::size_of::<BoundaryArcRef>() + 8)
+    }
+}
+
+/// The decomposed problem: all regions plus shared state.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub parts: Vec<RegionPart>,
+    pub shared: SharedState,
+    /// Flow constant inherited from the global network.
+    pub base_flow: Cap,
+    /// Global vertex count (PRD's `d_inf`).
+    pub n_global: usize,
+}
+
+/// Which distance function the decomposition is labeled with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistanceMode {
+    /// Region distance `d*B` (§4.1): `d_inf = |B|`.
+    Ard,
+    /// Ordinary distance (§2): `d_inf = n`.
+    Prd,
+}
+
+impl Decomposition {
+    /// Build the decomposition of `g` under `partition`.
+    pub fn new(g: &Graph, partition: &Partition, mode: DistanceMode) -> Self {
+        let n = g.n();
+        assert_eq!(partition.region_of.len(), n);
+        let k = partition.k;
+
+        // --- boundary enumeration -----------------------------------------
+        let bmask = partition.boundary_mask(g);
+        let mut b_of_global = vec![NOT_BOUNDARY; n];
+        let mut global_of_b = Vec::new();
+        for v in 0..n {
+            if bmask[v] {
+                b_of_global[v] = global_of_b.len() as u32;
+                global_of_b.push(v as NodeId);
+            }
+        }
+        let nb = global_of_b.len();
+        let owner: Vec<u32> = global_of_b.iter().map(|&v| partition.region(v)).collect();
+
+        // Label ceilings: the paper counts `s` and `t` in `n = |V|`, so the
+        // ordinary-distance ceiling for our terminal-free vertex count is
+        // `n + 2`; the region distance is bounded by `|B|` (Statement 4).
+        let d_inf = match mode {
+            DistanceMode::Ard => (nb as u32).max(1),
+            DistanceMode::Prd => n as u32 + 2,
+        };
+
+        // --- local vertex numbering ----------------------------------------
+        // inner vertices in global order, then foreign boundary vertices
+        let mut local_of_global_per_region: Vec<Vec<(NodeId, u32)>> = vec![Vec::new(); k];
+        let mut local_index = vec![u32::MAX; n]; // scratch, per-region pass
+
+        let members = partition.members();
+        let mut parts = Vec::with_capacity(k);
+        let mut shared_arcs: Vec<SharedArc> = Vec::new();
+        // (region, local arc endpoints) collected per region
+        // First pass: enumerate shared arcs once (from the lower global id).
+        let mut shared_of_arc: Vec<u32> = vec![u32::MAX; g.num_arcs()];
+        for v in 0..n {
+            let rv = partition.region(v as NodeId);
+            for a in g.arc_range(v as NodeId) {
+                let u = g.head(a as ArcId) as usize;
+                let ru = partition.region(u as NodeId);
+                if ru != rv && shared_of_arc[a] == u32::MAX {
+                    let sid = shared_arcs.len() as u32;
+                    let sis = g.sister(a as ArcId) as usize;
+                    shared_of_arc[a] = sid;
+                    shared_of_arc[sis] = sid;
+                    shared_arcs.push(SharedArc {
+                        bu: b_of_global[v],
+                        bv: b_of_global[u],
+                        cap_fw: g.cap[a],
+                        cap_bw: g.cap[sis],
+                    });
+                }
+            }
+        }
+
+        for r in 0..k {
+            let inner = &members[r];
+            let n_inner = inner.len();
+            // assign local ids
+            for (i, &v) in inner.iter().enumerate() {
+                local_index[v as usize] = i as u32;
+            }
+            // collect foreign boundary
+            let mut foreign: Vec<NodeId> = Vec::new();
+            for &v in inner {
+                for a in g.arc_range(v) {
+                    let u = g.head(a as ArcId);
+                    if partition.region(u) != r as u32 && local_index[u as usize] == u32::MAX {
+                        local_index[u as usize] = (n_inner + foreign.len()) as u32;
+                        foreign.push(u);
+                    }
+                }
+            }
+            let n_local = n_inner + foreign.len();
+            let mut global_ids = Vec::with_capacity(n_local);
+            global_ids.extend_from_slice(inner);
+            global_ids.extend_from_slice(&foreign);
+
+            // build local graph
+            let mut b = GraphBuilder::new(n_local);
+            let mut pending_barcs: Vec<(NodeId, NodeId, u32, bool)> = Vec::new();
+            for &v in inner {
+                let lv = local_index[v as usize];
+                for a in g.arc_range(v) {
+                    let u = g.head(a as ArcId);
+                    let lu = local_index[u as usize];
+                    let ru = partition.region(u);
+                    if ru == r as u32 {
+                        // intra-region: add once (from the arc with the
+                        // smaller index to avoid duplication)
+                        if (a as u32) < g.sister(a as ArcId) {
+                            b.add_edge(lv, lu, g.cap[a], g.cap[g.sister(a as ArcId) as usize]);
+                        }
+                    } else {
+                        // boundary arc: forward cap from shared, reverse 0
+                        let sid = shared_of_arc[a];
+                        let sa = shared_arcs[sid as usize];
+                        let fw = sa.bu == b_of_global[v as usize] && sa.bv == b_of_global[u as usize];
+                        // NB: parallel edges between the same pair map to
+                        // distinct shared arcs, so (bu,bv) comparison alone
+                        // is ambiguous; determine direction from the arc id
+                        // recorded first.
+                        let forward = if sa.bu == sa.bv {
+                            unreachable!("boundary arc within one vertex")
+                        } else {
+                            fw
+                        };
+                        pending_barcs.push((lv, lu, sid, forward));
+                    }
+                }
+            }
+            // Add boundary edges after intra edges so that local arc ids of
+            // boundary arcs can be recovered: we must record which local
+            // arc each pending boundary edge received. GraphBuilder appends
+            // arcs per edge in order, so track edge index → local arcs
+            // after build via a parallel list.
+            let intra_edges = b.num_edges();
+            for &(lv, lu, _sid, _f) in &pending_barcs {
+                b.add_edge(lv, lu, 0, 0); // caps synced in later
+            }
+            let mut lg = b.build();
+            // terminals: inner vertices only
+            for (i, &v) in inner.iter().enumerate() {
+                lg.excess[i] = g.excess[v as usize];
+                lg.sink_cap[i] = g.sink_cap[v as usize];
+            }
+
+            // recover local arc ids of boundary edges: edges were added in
+            // order; replay CSR fill order to map edge -> arc pair.
+            let arc_of_edge = replay_edge_arcs(&lg, inner.len(), &global_ids, g, partition, r as u32);
+            // arc_of_edge[j] = local arc id (tail = inner) for boundary edge j
+            let boundary_arcs: Vec<BoundaryArcRef> = pending_barcs
+                .iter()
+                .enumerate()
+                .map(|(j, &(_lv, _lu, sid, forward))| BoundaryArcRef {
+                    local_arc: arc_of_edge[intra_edges + j],
+                    shared: sid,
+                    forward,
+                })
+                .collect();
+
+            let owned_boundary: Vec<(u32, u32)> = inner
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| b_of_global[v as usize] != NOT_BOUNDARY)
+                .map(|(i, &v)| (i as u32, b_of_global[v as usize]))
+                .collect();
+            let foreign_boundary: Vec<(u32, u32)> = foreign
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| ((n_inner + j) as u32, b_of_global[v as usize]))
+                .collect();
+
+            let synced_cap = vec![0; boundary_arcs.len()];
+            parts.push(RegionPart {
+                region_id: r as u32,
+                graph: lg,
+                n_inner,
+                global_ids,
+                label: vec![0; n_local],
+                owned_boundary,
+                foreign_boundary,
+                boundary_arcs,
+                synced_cap,
+                active: true,
+                pending_gap: u32::MAX,
+            });
+
+            // clear scratch
+            for &v in inner {
+                local_index[v as usize] = u32::MAX;
+            }
+            for &v in &foreign {
+                local_index[v as usize] = u32::MAX;
+            }
+            local_of_global_per_region[r].clear(); // (kept for clarity)
+        }
+
+        // boundary excess: owners' current excess
+        let mut b_excess = vec![0 as Cap; nb];
+        for (bi, &v) in global_of_b.iter().enumerate() {
+            b_excess[bi] = g.excess[v as usize];
+        }
+        // note: owners' local graphs already carry that excess too; the
+        // convention is that *shared* is authoritative between discharges,
+        // so zero the owned-boundary excess in the local graphs (sync_in
+        // re-injects it).
+        for part in &mut parts {
+            for &(lv, _b) in &part.owned_boundary {
+                part.graph.excess[lv as usize] = 0;
+            }
+        }
+
+        Decomposition {
+            parts,
+            shared: SharedState {
+                global_of_b,
+                b_of_global,
+                owner,
+                d: vec![0; nb],
+                excess: b_excess,
+                arcs: shared_arcs,
+                d_inf,
+            },
+            base_flow: g.base_flow,
+            n_global: n,
+        }
+    }
+
+    /// Total flow routed to the sink across all regions.
+    pub fn flow_value(&self) -> Cap {
+        self.base_flow + self.parts.iter().map(|p| p.graph.flow_to_sink).sum::<Cap>()
+    }
+
+    /// Copy shared state into region `r`'s private network: boundary arc
+    /// capacities, boundary labels, owned excess, pending gap. Returns
+    /// the number of bytes "received" (message accounting).
+    pub fn sync_in(&mut self, r: usize) -> u64 {
+        let part = &mut self.parts[r];
+        let shared = &mut self.shared;
+        let mut bytes = 0u64;
+        for (i, ba) in part.boundary_arcs.iter().enumerate() {
+            let sa = &shared.arcs[ba.shared as usize];
+            let cap = if ba.forward { sa.cap_fw } else { sa.cap_bw };
+            part.graph.cap[ba.local_arc as usize] = cap;
+            let sis = part.graph.sister(ba.local_arc) as usize;
+            part.graph.cap[sis] = 0;
+            part.synced_cap[i] = cap;
+            bytes += 8;
+        }
+        for &(lv, b) in &part.foreign_boundary {
+            part.label[lv as usize] = shared.d[b as usize];
+            part.graph.excess[lv as usize] = 0;
+            bytes += 4;
+        }
+        for &(lv, b) in &part.owned_boundary {
+            part.label[lv as usize] = shared.d[b as usize];
+            part.graph.excess[lv as usize] = shared.excess[b as usize];
+            shared.excess[b as usize] = 0;
+            bytes += 12;
+        }
+        // lazily apply the best global gap discovered while unloaded
+        if part.pending_gap != u32::MAX {
+            let gap = part.pending_gap;
+            for v in 0..part.n_inner {
+                if part.label[v] > gap {
+                    part.label[v] = shared.d_inf;
+                }
+            }
+            part.pending_gap = u32::MAX;
+        }
+        bytes
+    }
+
+    /// Publish region `r`'s discharge results back to the shared state:
+    /// net boundary-arc flows, exported excess, new owned-boundary
+    /// labels. Returns bytes "sent".
+    pub fn sync_out(&mut self, r: usize) -> u64 {
+        let part = &mut self.parts[r];
+        let shared = &mut self.shared;
+        let mut bytes = 0u64;
+        for (i, ba) in part.boundary_arcs.iter().enumerate() {
+            let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
+            debug_assert!(delta >= 0, "net boundary flow cannot be negative");
+            if delta != 0 {
+                let sa = &mut shared.arcs[ba.shared as usize];
+                if ba.forward {
+                    sa.cap_fw -= delta;
+                    sa.cap_bw += delta;
+                } else {
+                    sa.cap_bw -= delta;
+                    sa.cap_fw += delta;
+                }
+                bytes += 8;
+            }
+        }
+        for &(lv, b) in &part.foreign_boundary {
+            let e = part.graph.excess[lv as usize];
+            if e > 0 {
+                shared.excess[b as usize] += e;
+                part.graph.excess[lv as usize] = 0;
+                bytes += 8;
+            }
+        }
+        for &(lv, b) in &part.owned_boundary {
+            shared.d[b as usize] = part.label[lv as usize];
+            shared.excess[b as usize] += part.graph.excess[lv as usize];
+            part.graph.excess[lv as usize] = 0;
+            bytes += 12;
+        }
+        part.active = part.has_active_inner(shared.d_inf);
+        bytes
+    }
+
+    /// Does any region still hold (or is owed) active excess?
+    pub fn any_active(&self) -> bool {
+        if self.parts.iter().any(|p| p.active) {
+            return true;
+        }
+        // boundary excess pending delivery to its owner
+        self.shared
+            .excess
+            .iter()
+            .zip(&self.shared.d)
+            .any(|(&e, &d)| e > 0 && d < self.shared.d_inf)
+    }
+
+    /// Does region `r` need a discharge (active inner vertices or
+    /// boundary excess owed to it)?
+    pub fn region_needs(&self, r: usize) -> bool {
+        if self.parts[r].active {
+            return true;
+        }
+        self.shared
+            .excess
+            .iter()
+            .zip(&self.shared.d)
+            .zip(&self.shared.owner)
+            .any(|((&e, &d), &o)| o as usize == r && e > 0 && d < self.shared.d_inf)
+    }
+
+    /// Regions that need a discharge this sweep.
+    pub fn active_regions(&self) -> Vec<usize> {
+        let mut need = vec![false; self.parts.len()];
+        for (r, p) in self.parts.iter().enumerate() {
+            if p.active {
+                need[r] = true;
+            }
+        }
+        for (b, (&e, &d)) in self.shared.excess.iter().zip(&self.shared.d).enumerate() {
+            if e > 0 && d < self.shared.d_inf {
+                need[self.shared.owner[b] as usize] = true;
+            }
+        }
+        need.iter()
+            .enumerate()
+            .filter(|(_, &x)| x)
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Reassemble a *global* side assignment (minimum cut) from the
+    /// distance labels: vertices with `d == d_inf` are on the source
+    /// side. Requires the final extra relabel sweeps (§5.3) to have
+    /// converged so that `d(v) = d_inf ⇔ v ↛ t`.
+    pub fn cut_sides_by_label(&self) -> Vec<bool> {
+        let mut sides = vec![true; self.n_global]; // true = sink side
+        let d_inf = self.shared.d_inf;
+        for part in &self.parts {
+            for v in 0..part.n_inner {
+                if part.label[v] >= d_inf {
+                    sides[part.global_ids[v] as usize] = false;
+                }
+            }
+        }
+        sides
+    }
+
+    /// Reassemble a global residual network from the region networks and
+    /// the shared state. Used by verification (maximality of the final
+    /// preflow, cut extraction checks); arc order may differ from the
+    /// original graph's.
+    pub fn reassemble(&self) -> Graph {
+        let mut b = GraphBuilder::new(self.n_global);
+        for part in &self.parts {
+            let lg = &part.graph;
+            // terminals of inner vertices
+            for v in 0..part.n_inner {
+                let gv = part.global_ids[v];
+                if lg.excess[v] > 0 {
+                    b.add_terminal(gv, lg.excess[v], 0);
+                }
+                if lg.sink_cap[v] > 0 {
+                    b.add_terminal(gv, 0, lg.sink_cap[v]);
+                }
+            }
+            // intra-region edges: arcs between two inner vertices; add
+            // each once (from the arc whose id is below its sister's)
+            for v in 0..part.n_inner {
+                for a in lg.arc_range(v as NodeId) {
+                    let u = lg.head(a as ArcId) as usize;
+                    if u < part.n_inner && (a as u32) < lg.sister(a as ArcId) {
+                        b.add_edge(
+                            part.global_ids[v],
+                            part.global_ids[u],
+                            lg.cap[a],
+                            lg.cap[lg.sister(a as ArcId) as usize],
+                        );
+                    }
+                }
+            }
+        }
+        // boundary excess parked in shared state
+        for (bi, &e) in self.shared.excess.iter().enumerate() {
+            if e > 0 {
+                b.add_terminal(self.shared.global_of_b[bi], e, 0);
+            }
+        }
+        // inter-region edges from shared caps
+        for arc in &self.shared.arcs {
+            b.add_edge(
+                self.shared.global_of_b[arc.bu as usize],
+                self.shared.global_of_b[arc.bv as usize],
+                arc.cap_fw,
+                arc.cap_bw,
+            );
+        }
+        let mut g = b.build();
+        g.base_flow = self.base_flow;
+        g.flow_to_sink = self.parts.iter().map(|p| p.graph.flow_to_sink).sum();
+        g
+    }
+
+    /// Total excess still parked at vertices (shared + private).
+    pub fn total_excess(&self) -> Cap {
+        let mut e: Cap = self.shared.excess.iter().sum();
+        for part in &self.parts {
+            for v in 0..part.n_inner {
+                e += part.graph.excess[v];
+            }
+        }
+        e
+    }
+}
+
+impl RegionPart {
+    /// Serialize the full region (structure + mutable state) to bytes —
+    /// the streaming coordinator (§5.3 "allocating all the region's data
+    /// into a fixed page") writes this to the region's page file.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.memory_bytes() + 128);
+        out.extend_from_slice(&self.region_id.to_le_bytes());
+        out.extend_from_slice(&(self.n_inner as u64).to_le_bytes());
+        let g = self.graph.to_bytes();
+        out.extend_from_slice(&(g.len() as u64).to_le_bytes());
+        out.extend_from_slice(&g);
+        let push_u32s = |out: &mut Vec<u8>, xs: &[u32]| {
+            out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+            for &x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        };
+        push_u32s(&mut out, &self.global_ids);
+        push_u32s(&mut out, &self.label);
+        let pairs = |out: &mut Vec<u8>, xs: &[(u32, u32)]| {
+            out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+            for &(a, b) in xs {
+                out.extend_from_slice(&a.to_le_bytes());
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        };
+        pairs(&mut out, &self.owned_boundary);
+        pairs(&mut out, &self.foreign_boundary);
+        out.extend_from_slice(&(self.boundary_arcs.len() as u64).to_le_bytes());
+        for ba in &self.boundary_arcs {
+            out.extend_from_slice(&ba.local_arc.to_le_bytes());
+            out.extend_from_slice(&ba.shared.to_le_bytes());
+            out.push(ba.forward as u8);
+        }
+        for &c in &self.synced_cap {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out.push(self.active as u8);
+        out.extend_from_slice(&self.pending_gap.to_le_bytes());
+        out
+    }
+
+    /// Deserialize a region written by [`RegionPart::to_bytes`].
+    pub fn from_bytes(data: &[u8]) -> Option<RegionPart> {
+        let mut pos = 0usize;
+        fn u32_at(data: &[u8], pos: &mut usize) -> Option<u32> {
+            let b = data.get(*pos..*pos + 4)?;
+            *pos += 4;
+            Some(u32::from_le_bytes(b.try_into().ok()?))
+        }
+        fn u64_at(data: &[u8], pos: &mut usize) -> Option<u64> {
+            let b = data.get(*pos..*pos + 8)?;
+            *pos += 8;
+            Some(u64::from_le_bytes(b.try_into().ok()?))
+        }
+        fn u32s(data: &[u8], pos: &mut usize) -> Option<Vec<u32>> {
+            let n = u64_at(data, pos)? as usize;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(u32_at(data, pos)?);
+            }
+            Some(v)
+        }
+        fn pairs(data: &[u8], pos: &mut usize) -> Option<Vec<(u32, u32)>> {
+            let n = u64_at(data, pos)? as usize;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let a = u32_at(data, pos)?;
+                let b = u32_at(data, pos)?;
+                v.push((a, b));
+            }
+            Some(v)
+        }
+        let region_id = u32_at(data, &mut pos)?;
+        let n_inner = u64_at(data, &mut pos)? as usize;
+        let glen = u64_at(data, &mut pos)? as usize;
+        let graph = Graph::from_bytes(data.get(pos..pos + glen)?)?;
+        pos += glen;
+        let global_ids = u32s(data, &mut pos)?;
+        let label = u32s(data, &mut pos)?;
+        let owned_boundary = pairs(data, &mut pos)?;
+        let foreign_boundary = pairs(data, &mut pos)?;
+        let nba = u64_at(data, &mut pos)? as usize;
+        let mut boundary_arcs = Vec::with_capacity(nba);
+        for _ in 0..nba {
+            let local_arc = u32_at(data, &mut pos)?;
+            let shared = u32_at(data, &mut pos)?;
+            let forward = *data.get(pos)? != 0;
+            pos += 1;
+            boundary_arcs.push(BoundaryArcRef { local_arc, shared, forward });
+        }
+        let mut synced_cap = Vec::with_capacity(nba);
+        for _ in 0..nba {
+            let b = data.get(pos..pos + 8)?;
+            pos += 8;
+            synced_cap.push(Cap::from_le_bytes(b.try_into().ok()?));
+        }
+        let active = *data.get(pos)? != 0;
+        pos += 1;
+        let pending_gap = u32_at(data, &mut pos)?;
+        Some(RegionPart {
+            region_id,
+            graph,
+            n_inner,
+            global_ids,
+            label,
+            owned_boundary,
+            foreign_boundary,
+            boundary_arcs,
+            synced_cap,
+            active,
+            pending_gap,
+        })
+    }
+
+    /// A zero-footprint placeholder left in memory while the real region
+    /// page is on disk. Keeps the fields the coordinator consults while
+    /// the region is unloaded (`active`, `pending_gap`, id).
+    pub fn shell(region_id: u32, active: bool, pending_gap: u32) -> RegionPart {
+        RegionPart {
+            region_id,
+            graph: GraphBuilder::new(0).build(),
+            n_inner: 0,
+            global_ids: Vec::new(),
+            label: Vec::new(),
+            owned_boundary: Vec::new(),
+            foreign_boundary: Vec::new(),
+            boundary_arcs: Vec::new(),
+            synced_cap: Vec::new(),
+            active,
+            pending_gap,
+        }
+    }
+}
+
+/// Recover, for each edge added to the local builder, the local arc id
+/// of its first (tail-side) arc, by replaying the CSR fill order of
+/// [`GraphBuilder::build`].
+fn replay_edge_arcs(
+    lg: &Graph,
+    _n_inner: usize,
+    global_ids: &[NodeId],
+    g: &Graph,
+    partition: &Partition,
+    r: u32,
+) -> Vec<ArcId> {
+    // Rebuild the same edge sequence GraphBuilder saw and simulate the
+    // fill pass: edges were (intra in scan order) then (boundary in scan
+    // order); both passes scan inner vertices in local order and their
+    // global arc ranges. We simulate the same fill counters.
+    let n_local = lg.n();
+    let mut fill: Vec<u32> = (0..n_local)
+        .map(|v| lg.arc_range(v as NodeId).start as u32)
+        .collect();
+    // local index lookup
+    let mut local_of_global = std::collections::HashMap::new();
+    for (i, &gv) in global_ids.iter().enumerate() {
+        local_of_global.insert(gv, i as u32);
+    }
+    let inner = &global_ids[.._n_inner];
+    let mut intra: Vec<(u32, u32)> = Vec::new();
+    let mut boundary: Vec<(u32, u32)> = Vec::new();
+    for &v in inner {
+        let lv = local_of_global[&v];
+        for a in g.arc_range(v) {
+            let u = g.head(a as ArcId);
+            let lu = local_of_global[&u];
+            if partition.region(u) == r {
+                if (a as u32) < g.sister(a as ArcId) {
+                    intra.push((lv, lu));
+                }
+            } else {
+                boundary.push((lv, lu));
+            }
+        }
+    }
+    let mut arc_of_edge = Vec::with_capacity(intra.len() + boundary.len());
+    for &(lv, lu) in intra.iter().chain(boundary.iter()) {
+        let a = fill[lv as usize];
+        fill[lv as usize] += 1;
+        let _b = fill[lu as usize];
+        fill[lu as usize] += 1;
+        arc_of_edge.push(a);
+    }
+    arc_of_edge
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+
+    /// 6-node path with terminals at the ends, split into 2 regions.
+    fn path6() -> (Graph, Partition) {
+        let mut b = GraphBuilder::new(6);
+        b.add_terminal(0, 9, 0);
+        b.add_terminal(5, 0, 9);
+        for v in 0..5 {
+            b.add_edge(v, v + 1, 4, 4);
+        }
+        (b.build(), Partition::by_node_ranges(6, 2))
+    }
+
+    #[test]
+    fn boundary_enumeration() {
+        let (g, p) = path6();
+        let d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        assert_eq!(d.shared.num_boundary(), 2); // nodes 2 and 3
+        assert_eq!(d.shared.global_of_b, vec![2, 3]);
+        assert_eq!(d.shared.owner, vec![0, 1]);
+        assert_eq!(d.shared.d_inf, 2);
+        assert_eq!(d.shared.arcs.len(), 1);
+    }
+
+    #[test]
+    fn region_networks_shape() {
+        let (g, p) = path6();
+        let d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let p0 = &d.parts[0];
+        assert_eq!(p0.n_inner, 3);
+        assert_eq!(p0.graph.n(), 4); // 3 inner + 1 foreign boundary (node 3)
+        assert_eq!(p0.foreign_boundary.len(), 1);
+        assert_eq!(p0.owned_boundary.len(), 1); // node 2
+        assert_eq!(p0.boundary_arcs.len(), 1);
+        // inner terminals preserved
+        assert_eq!(p0.graph.excess[0], 9);
+        let p1 = &d.parts[1];
+        assert_eq!(p1.graph.sink_cap[2], 9); // node 5 is third inner of region 1
+    }
+
+    #[test]
+    fn incoming_boundary_caps_zero() {
+        let (g, p) = path6();
+        let mut d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        d.sync_in(0);
+        let p0 = &d.parts[0];
+        let ba = p0.boundary_arcs[0];
+        assert_eq!(p0.graph.cap[ba.local_arc as usize], 4, "outgoing boundary cap");
+        assert_eq!(
+            p0.graph.cap[p0.graph.sister(ba.local_arc) as usize],
+            0,
+            "incoming boundary cap zeroed (Fig. 1b)"
+        );
+    }
+
+    #[test]
+    fn sync_roundtrip_flow() {
+        let (g, p) = path6();
+        let mut d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        d.sync_in(0);
+        // manually push 3 units over the boundary arc of region 0
+        let ba = d.parts[0].boundary_arcs[0];
+        let (lv_foreign, _b) = d.parts[0].foreign_boundary[0];
+        d.parts[0].graph.push(ba.local_arc, 3);
+        d.parts[0].graph.excess[lv_foreign as usize] += 3;
+        d.sync_out(0);
+        assert_eq!(d.shared.arcs[0].cap_fw, 1);
+        assert_eq!(d.shared.arcs[0].cap_bw, 7);
+        assert_eq!(d.shared.excess[1], 3, "excess exported to node 3");
+        // region 1 receives it
+        d.sync_in(1);
+        let p1 = &d.parts[1];
+        let owned = p1.owned_boundary[0];
+        assert_eq!(p1.graph.excess[owned.0 as usize], 3);
+        // and its incoming view of the shared arc
+        let ba1 = p1.boundary_arcs[0];
+        assert_eq!(p1.graph.cap[ba1.local_arc as usize], 7);
+    }
+
+    #[test]
+    fn total_excess_conserved_by_sync() {
+        let (g, p) = path6();
+        let mut d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let before = d.total_excess();
+        d.sync_in(0);
+        d.sync_out(0);
+        d.sync_in(1);
+        d.sync_out(1);
+        assert_eq!(d.total_excess(), before);
+    }
+
+    #[test]
+    fn grid_decomposition_consistency() {
+        // 2D grid 6x6, 4 regions; every inter-region edge appears exactly
+        // once in shared arcs and exactly once per side as a local ref.
+        let (w, h) = (6, 6);
+        let mut b = GraphBuilder::new(w * h);
+        for y in 0..h {
+            for x in 0..w {
+                let v = (y * w + x) as NodeId;
+                if x + 1 < w {
+                    b.add_edge(v, v + 1, 2, 2);
+                }
+                if y + 1 < h {
+                    b.add_edge(v, v + w as NodeId, 2, 2);
+                }
+            }
+        }
+        let g = b.build();
+        let p = Partition::grid2d(w, h, 2, 2);
+        let d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        // count inter-region edges in the global graph
+        let mut inter = 0;
+        for v in 0..g.n() {
+            for a in g.arc_range(v as NodeId) {
+                let u = g.head(a as u32) as usize;
+                if p.region(v as NodeId) != p.region(u as NodeId) && v < u {
+                    inter += 1;
+                }
+            }
+        }
+        assert_eq!(d.shared.arcs.len(), inter);
+        let refs: usize = d.parts.iter().map(|p| p.boundary_arcs.len()).sum();
+        assert_eq!(refs, 2 * inter, "each shared arc referenced from both sides");
+        // local arc heads must be foreign boundary vertices
+        for part in &d.parts {
+            for ba in &part.boundary_arcs {
+                let head = part.graph.head(ba.local_arc) as usize;
+                assert!(head >= part.n_inner, "boundary arc must point outward");
+            }
+        }
+    }
+
+    #[test]
+    fn region_part_bytes_roundtrip() {
+        let (g, p) = path6();
+        let mut d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        d.sync_in(0);
+        d.parts[0].label[0] = 3;
+        d.parts[0].pending_gap = 7;
+        let bytes = d.parts[0].to_bytes();
+        let back = RegionPart::from_bytes(&bytes).unwrap();
+        assert_eq!(back.n_inner, d.parts[0].n_inner);
+        assert_eq!(back.label, d.parts[0].label);
+        assert_eq!(back.graph.cap, d.parts[0].graph.cap);
+        assert_eq!(back.synced_cap, d.parts[0].synced_cap);
+        assert_eq!(back.pending_gap, 7);
+        assert_eq!(back.boundary_arcs.len(), d.parts[0].boundary_arcs.len());
+        assert!(RegionPart::from_bytes(&bytes[..bytes.len() - 2]).is_none());
+    }
+
+    #[test]
+    fn prd_mode_uses_global_n() {
+        let (g, p) = path6();
+        let d = Decomposition::new(&g, &p, DistanceMode::Prd);
+        assert_eq!(d.shared.d_inf, 8);
+    }
+}

@@ -1,0 +1,23 @@
+//! Region decomposition and the two region-discharge operations.
+//!
+//! * [`decompose`] — split a global network into per-region subnetworks
+//!   (`G^R` of §3, Fig. 1) plus the shared boundary state (labels,
+//!   pending excess, inter-region residual capacities).
+//! * [`ard`] — Augmented path Region Discharge (§4, the paper's
+//!   contribution): augment to the sink, then to boundary vertices in
+//!   the order of their labels.
+//! * [`prd`] — Push-relabel Region Discharge (§3, the Delong–Boykov
+//!   baseline reformulated for a fixed partition).
+//! * [`relabel`] — the region-relabel heuristic (Alg. 3), both variants.
+//! * [`boundary_relabel`] — the §6.1 boundary-relabel heuristic (0-1 BFS
+//!   over label groups of the boundary graph).
+//! * [`reduction`] — Alg. 5, the improved Kovtun-style region reduction.
+
+pub mod decompose;
+pub mod relabel;
+pub mod ard;
+pub mod prd;
+pub mod boundary_relabel;
+pub mod reduction;
+
+pub use decompose::{Decomposition, RegionPart, SharedState};

@@ -1,0 +1,175 @@
+//! PRD — Push-relabel Region Discharge (§3 of the paper; Delong &
+//! Boykov's operation reformulated for a fixed partition).
+//!
+//! Push and Relabel are applied to the region's inner vertices until
+//! none is active. Boundary labels are fixed seeds; a push into a
+//! boundary vertex exports flow (its local excess is collected by
+//! `sync_out`). The core is the HPR solver (§5.4): highest-label
+//! selection, current arcs, the region-gap heuristic, and labels
+//! bounded by the ordinary-distance ceiling.
+
+use crate::core::graph::Cap;
+use crate::region::decompose::RegionPart;
+use crate::region::relabel::region_relabel_prd;
+use crate::solvers::hpr::Hpr;
+
+/// Per-discharge statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrdStats {
+    pub to_sink: Cap,
+    pub to_boundary: Cap,
+    pub pushes: u64,
+    pub relabels: u64,
+    pub gap_events: u64,
+    pub label_increase: u64,
+}
+
+/// Reusable PRD workspace.
+#[derive(Debug)]
+pub struct Prd {
+    pub hpr: Hpr,
+    frozen: Vec<bool>,
+    /// Run region-relabel before the discharge (the paper runs it once
+    /// at the beginning and after global gaps, §5.4).
+    pub relabel_on_next: bool,
+}
+
+impl Prd {
+    pub fn new() -> Self {
+        Prd { hpr: Hpr::new(), frozen: Vec::new(), relabel_on_next: true }
+    }
+
+    /// Discharge `part` (assumes `sync_in` has run). `d_inf` is the
+    /// ordinary-distance ceiling (`n + 2`).
+    pub fn discharge(&mut self, part: &mut RegionPart, d_inf: u32) -> PrdStats {
+        let n_local = part.graph.n();
+        let n_inner = part.n_inner;
+        let mut stats = PrdStats::default();
+
+        self.frozen.clear();
+        self.frozen.resize(n_local, false);
+        for m in self.frozen[n_inner..].iter_mut() {
+            *m = true;
+        }
+
+        if self.relabel_on_next {
+            stats.label_increase += region_relabel_prd(part, d_inf);
+            self.relabel_on_next = false;
+        }
+
+        let boundary_excess_before: Cap = part.graph.excess[n_inner..].iter().sum();
+        let labels_before: u64 = part.label[..n_inner].iter().map(|&l| l as u64).sum();
+
+        stats.to_sink = self.hpr.run(&mut part.graph, &mut part.label, Some(&self.frozen), d_inf);
+
+        stats.to_boundary = part.graph.excess[n_inner..].iter().sum::<Cap>() - boundary_excess_before;
+        stats.pushes = self.hpr.pushes;
+        stats.relabels = self.hpr.relabels;
+        stats.gap_events = self.hpr.gap_events;
+        stats.label_increase +=
+            part.label[..n_inner].iter().map(|&l| l as u64).sum::<u64>() - labels_before;
+        stats
+    }
+}
+
+impl Default for Prd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+    use crate::region::decompose::{Decomposition, DistanceMode};
+    use crate::region::relabel::labeling_is_valid;
+
+    fn chain_decomp() -> Decomposition {
+        let mut b = GraphBuilder::new(6);
+        b.add_terminal(0, 9, 0);
+        b.add_terminal(5, 0, 9);
+        for v in 0..5 {
+            b.add_edge(v, v + 1, 4, 4);
+        }
+        let g = b.build();
+        let p = Partition::by_node_ranges(6, 2);
+        Decomposition::new(&g, &p, DistanceMode::Prd)
+    }
+
+    #[test]
+    fn discharge_exports_via_lowest_boundary() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut prd = Prd::new();
+        d.sync_in(0);
+        let st = prd.discharge(&mut d.parts[0], d_inf);
+        assert_eq!(st.to_sink, 0);
+        assert_eq!(st.to_boundary, 4, "exports limited by chain capacity");
+        // no active inner vertices remain (Statement 1.1)
+        let p0 = &d.parts[0];
+        for v in 0..p0.n_inner {
+            assert!(p0.graph.excess[v] == 0 || p0.label[v] >= d_inf);
+        }
+        assert!(labeling_is_valid(p0, d_inf, false));
+        d.sync_out(0);
+
+        // Region 1 received 4 units at node 3. With node 2's published
+        // label (1) lower than the intra distance to the sink (3), PRD
+        // correctly pushes *back* toward the boundary first — the
+        // ping-pong the paper's Appendix A exploits. Raise the seed to
+        // the ceiling so the flow must go to the sink.
+        d.shared.d[0] = d_inf;
+        d.sync_in(1);
+        let mut prd2 = Prd::new();
+        let st2 = prd2.discharge(&mut d.parts[1], d_inf);
+        assert_eq!(st2.to_sink, 4);
+        assert_eq!(d.flow_value(), 4);
+    }
+
+    #[test]
+    fn labels_monotone() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut prd = Prd::new();
+        d.sync_in(0);
+        let before = d.parts[0].label.clone();
+        prd.discharge(&mut d.parts[0], d_inf);
+        for v in 0..d.parts[0].n_inner {
+            assert!(d.parts[0].label[v] >= before[v], "labeling monotony (Stmt 1.2)");
+        }
+    }
+
+    #[test]
+    fn boundary_labels_untouched() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        d.shared.d[1] = 5; // foreign boundary of region 0 (node 3)
+        d.sync_in(0);
+        let mut prd = Prd::new();
+        prd.discharge(&mut d.parts[0], d_inf);
+        let p0 = &d.parts[0];
+        let (flv, _) = p0.foreign_boundary[0];
+        assert_eq!(p0.label[flv as usize], 5, "d'|B^R = d|B^R (Stmt 1.2)");
+    }
+
+    #[test]
+    fn trapped_excess_reaches_d_inf() {
+        // region with no sink and boundary at d_inf: excess is trapped,
+        // all its holders end at label >= d_inf
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        d.shared.d[1] = d_inf;
+        d.sync_in(0);
+        let mut prd = Prd::new();
+        let st = prd.discharge(&mut d.parts[0], d_inf);
+        assert_eq!(st.to_sink + st.to_boundary, 0);
+        let p0 = &d.parts[0];
+        for v in 0..p0.n_inner {
+            if p0.graph.excess[v] > 0 {
+                assert!(p0.label[v] >= d_inf);
+            }
+        }
+    }
+}

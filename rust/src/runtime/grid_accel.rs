@@ -1,0 +1,727 @@
+//! Accelerated grid region discharge: the coordinator-side half of the
+//! L1/L2 lock-step push-relabel kernel.
+//!
+//! [`GridProblem`] is the plane-stack representation of a 4-connected
+//! grid network (`int32` planes: excess, label, four directional
+//! residual capacities, sink capacity, frozen mask). [`GridAccel`] runs
+//! the AOT-compiled `grid_pr_<H>x<W>.hlo.txt` artifact over it until no
+//! active node remains. [`TiledAccelCoordinator`] partitions a larger
+//! grid into fixed tiles with a one-cell frozen halo and sweeps them —
+//! region discharge offloaded to the accelerator, coordination in rust:
+//! the paper's Conclusion item "4) sequential, using GPU for solving
+//! region discharge", re-thought for a TPU-shaped kernel
+//! (DESIGN.md §Hardware-Adaptation).
+//!
+//! A pure-rust wave ([`GridProblem::wave_reference`]) mirrors the kernel
+//! bit-for-bit; tests compare the two and the benches use it as the
+//! no-PJRT baseline.
+
+use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
+use crate::runtime::pjrt::{literal_i32_plane, literal_to_vec_i32, Executable, PjrtRuntime};
+use anyhow::{Context, Result};
+
+/// Direction indices into [`GridProblem::caps`].
+pub const N: usize = 0;
+pub const S: usize = 1;
+pub const E: usize = 2;
+pub const W: usize = 3;
+/// (dy, dx) neighbor offset per direction.
+pub const DIR_OFF: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, 1), (0, -1)];
+/// Opposite direction (reverse arc plane).
+pub const DIR_REV: [usize; 4] = [S, N, W, E];
+/// The L1 kernel's push order: N, S, W, E.
+const PUSH_ORDER: [usize; 4] = [N, S, W, E];
+
+/// Plane-stack state of a 4-connected grid network.
+#[derive(Debug, Clone)]
+pub struct GridProblem {
+    pub h: usize,
+    pub w: usize,
+    pub excess: Vec<i32>,
+    pub label: Vec<i32>,
+    /// residual capacities, indexed by [`N`]/[`S`]/[`E`]/[`W`]:
+    /// `caps[N][i]` is the arc toward `(y-1, x)` etc.
+    pub caps: [Vec<i32>; 4],
+    pub sink_cap: Vec<i32>,
+    /// 1 = frozen (halo) cell: absorbs pushes, never pushes or relabels.
+    pub frozen: Vec<i32>,
+    /// label ceiling
+    pub d_inf: i32,
+    /// flow routed to the sink so far
+    pub flow: i64,
+}
+
+impl GridProblem {
+    /// All-zero problem of the given shape.
+    pub fn zeros(h: usize, w: usize) -> GridProblem {
+        let z = vec![0i32; h * w];
+        GridProblem {
+            h,
+            w,
+            excess: z.clone(),
+            label: z.clone(),
+            caps: [z.clone(), z.clone(), z.clone(), z.clone()],
+            sink_cap: z.clone(),
+            frozen: z,
+            d_inf: (h * w + 2) as i32,
+            flow: 0,
+        }
+    }
+
+    /// Random instance in the §7.1 style (constant strength, ±excess).
+    pub fn random(h: usize, w: usize, strength: i32, excess: i32, seed: u64) -> GridProblem {
+        let mut rng = crate::core::prng::Rng::new(seed);
+        let mut p = GridProblem::zeros(h, w);
+        for y in 0..h {
+            for x in 0..w {
+                let i = y * w + x;
+                let t = rng.range_i64(-(excess as i64), excess as i64) as i32;
+                if t >= 0 {
+                    p.excess[i] = t;
+                } else {
+                    p.sink_cap[i] = -t;
+                }
+                if y > 0 {
+                    p.caps[N][i] = strength;
+                }
+                if y + 1 < h {
+                    p.caps[S][i] = strength;
+                }
+                if x + 1 < w {
+                    p.caps[E][i] = strength;
+                }
+                if x > 0 {
+                    p.caps[W][i] = strength;
+                }
+            }
+        }
+        p
+    }
+
+    #[inline]
+    fn at(&self, y: usize, x: usize) -> usize {
+        y * self.w + x
+    }
+
+    #[inline]
+    fn neighbor(&self, y: usize, x: usize, dir: usize) -> Option<usize> {
+        let (dy, dx) = DIR_OFF[dir];
+        let (ny, nx) = (y as i64 + dy, x as i64 + dx);
+        if ny < 0 || nx < 0 || ny >= self.h as i64 || nx >= self.w as i64 {
+            None
+        } else {
+            Some(ny as usize * self.w + nx as usize)
+        }
+    }
+
+    /// Convert into a generic [`Graph`] (for verification against the
+    /// CPU solvers). Frozen cells are excluded.
+    pub fn to_graph(&self) -> Graph {
+        let (h, w) = (self.h, self.w);
+        let mut b = GraphBuilder::new(h * w);
+        for y in 0..h {
+            for x in 0..w {
+                let i = self.at(y, x);
+                if self.frozen[i] != 0 {
+                    continue;
+                }
+                b.add_terminal(i as NodeId, self.excess[i] as Cap, self.sink_cap[i] as Cap);
+                for dir in [S, E] {
+                    if let Some(j) = self.neighbor(y, x, dir) {
+                        if self.frozen[j] == 0 {
+                            b.add_edge(
+                                i as NodeId,
+                                j as NodeId,
+                                self.caps[dir][i] as Cap,
+                                self.caps[DIR_REV[dir]][j] as Cap,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Any active (pushable/relabelable) node left?
+    pub fn any_active(&self) -> bool {
+        (0..self.h * self.w)
+            .any(|i| self.excess[i] > 0 && self.label[i] < self.d_inf && self.frozen[i] == 0)
+    }
+
+    /// Total excess still parked at non-frozen nodes.
+    pub fn inner_excess(&self) -> i64 {
+        (0..self.h * self.w)
+            .filter(|&i| self.frozen[i] == 0)
+            .map(|i| self.excess[i] as i64)
+            .sum()
+    }
+
+    /// One lock-step wave in pure rust — the bit-exact mirror of the L1
+    /// kernel (`python/compile/kernels/grid_pr.py`). Returns the flow
+    /// routed to the sink by this wave.
+    pub fn wave_reference(&mut self) -> i64 {
+        let (h, w) = (self.h, self.w);
+        let mut wave_flow = 0i64;
+        // ---- 1. push to sink ------------------------------------------
+        for i in 0..h * w {
+            if self.frozen[i] == 0
+                && self.excess[i] > 0
+                && self.label[i] == 1
+                && self.sink_cap[i] > 0
+            {
+                let d = self.excess[i].min(self.sink_cap[i]);
+                self.excess[i] -= d;
+                self.sink_cap[i] -= d;
+                wave_flow += d as i64;
+            }
+        }
+        // ---- 2. directional pushes in the kernel's order ----------------
+        let mut deltas = vec![0i32; h * w];
+        for &dir in &PUSH_ORDER {
+            deltas.iter_mut().for_each(|d| *d = 0);
+            for y in 0..h {
+                for x in 0..w {
+                    let i = y * w + x;
+                    if self.frozen[i] != 0 || self.excess[i] <= 0 || self.label[i] >= self.d_inf {
+                        continue;
+                    }
+                    let Some(j) = self.neighbor(y, x, dir) else { continue };
+                    if self.caps[dir][i] > 0 && self.label[i] == self.label[j] + 1 {
+                        deltas[i] = self.excess[i].min(self.caps[dir][i]);
+                    }
+                }
+            }
+            for y in 0..h {
+                for x in 0..w {
+                    let i = y * w + x;
+                    let d = deltas[i];
+                    if d == 0 {
+                        continue;
+                    }
+                    let j = self.neighbor(y, x, dir).unwrap();
+                    self.excess[i] -= d;
+                    self.caps[dir][i] -= d;
+                    self.excess[j] += d;
+                    self.caps[DIR_REV[dir]][j] += d;
+                }
+            }
+        }
+        // ---- 3. Jacobi relabel --------------------------------------------
+        let mut newd = self.label.clone();
+        for y in 0..h {
+            for x in 0..w {
+                let i = y * w + x;
+                if self.frozen[i] != 0 || self.excess[i] <= 0 || self.label[i] >= self.d_inf {
+                    continue;
+                }
+                let mut cand = self.d_inf;
+                if self.sink_cap[i] > 0 {
+                    cand = 1;
+                }
+                for dir in 0..4 {
+                    if self.caps[dir][i] > 0 {
+                        if let Some(j) = self.neighbor(y, x, dir) {
+                            cand = cand.min(self.label[j] + 1);
+                        }
+                    }
+                }
+                newd[i] = self.label[i].max(cand.min(self.d_inf));
+            }
+        }
+        self.label = newd;
+        self.flow += wave_flow;
+        wave_flow
+    }
+
+    /// Global relabel: exact BFS distances to the sink over the residual
+    /// planes (the paper's global-relabel heuristic, §5.1). Monotone:
+    /// only raises labels. Dramatically cuts the label-climbing waves of
+    /// the lock-step kernel and the tile ping-pong of the tiled
+    /// coordinator.
+    pub fn global_relabel(&mut self) {
+        let (h, w) = (self.h, self.w);
+        let mut dist = vec![self.d_inf; h * w];
+        let mut queue: Vec<usize> = Vec::new();
+        for i in 0..h * w {
+            if self.frozen[i] == 0 && self.sink_cap[i] > 0 {
+                dist[i] = 1;
+                queue.push(i);
+            }
+        }
+        let mut qi = 0;
+        while qi < queue.len() {
+            let v = queue[qi];
+            qi += 1;
+            let (y, x) = (v / w, v % w);
+            // residual arc u → v exists iff u's cap toward v > 0
+            for dir in 0..4 {
+                if let Some(u) = self.neighbor(y, x, dir) {
+                    // u is v's neighbor in `dir`; the arc u → v uses u's
+                    // capacity in the opposite direction
+                    if self.frozen[u] == 0
+                        && dist[u] == self.d_inf
+                        && self.caps[DIR_REV[dir]][u] > 0
+                    {
+                        dist[u] = dist[v] + 1;
+                        queue.push(u);
+                    }
+                }
+            }
+        }
+        for i in 0..h * w {
+            if self.frozen[i] == 0 && dist[i] > self.label[i] {
+                self.label[i] = dist[i].min(self.d_inf);
+            }
+        }
+    }
+
+    /// Global gap heuristic (§5.1) on the label plane: if no non-frozen
+    /// cell holds label `g` (1 ≤ g < d_inf), every cell above `g` cannot
+    /// reach the sink and jumps to `d_inf`. This is the coordinator-side
+    /// (L3) heuristic that kills the lock-step kernel's slow label climb
+    /// of trapped excess. Returns the number of raised cells.
+    pub fn gap_heuristic(&mut self) -> usize {
+        let n = self.h * self.w;
+        let d_inf = self.d_inf as usize;
+        let mut hist = vec![0u32; d_inf + 1];
+        // frozen (halo seed) labels participate in gap detection — a
+        // level held by a seed is not a gap (cf. the same soundness
+        // requirement in HPR's region-gap) — but only non-frozen cells
+        // are raised.
+        for i in 0..n {
+            hist[(self.label[i] as usize).min(d_inf)] += 1;
+        }
+        let mut gap = None;
+        for (g, &c) in hist.iter().enumerate().take(d_inf).skip(1) {
+            if c == 0 {
+                gap = Some(g as i32);
+                break;
+            }
+        }
+        let Some(g) = gap else { return 0 };
+        // Alg. 4: above the gap the sink is reachable only through a
+        // frozen seed; raise to (min seed label above the gap) + 1 — or
+        // to d_inf when no such seed exists (always the case for the
+        // whole-grid solve, where nothing is frozen).
+        let mut d_next = self.d_inf;
+        for i in 0..n {
+            if self.frozen[i] != 0 && self.label[i] > g && self.label[i] < d_next {
+                d_next = self.label[i];
+            }
+        }
+        let target = if d_next >= self.d_inf { self.d_inf } else { d_next + 1 };
+        let mut raised = 0;
+        for i in 0..n {
+            if self.frozen[i] == 0 && self.label[i] > g && self.label[i] < target {
+                self.label[i] = target;
+                raised += 1;
+            }
+        }
+        raised
+    }
+
+    /// Run reference waves until convergence (or `max_waves`). Returns
+    /// `true` if converged (no active node left).
+    pub fn solve_reference(&mut self, max_waves: usize) -> bool {
+        for wave in 0..max_waves {
+            if !self.any_active() {
+                return true;
+            }
+            self.wave_reference();
+            if wave % 32 == 31 {
+                self.gap_heuristic();
+            }
+        }
+        !self.any_active()
+    }
+}
+
+/// The PJRT-backed executor for one artifact shape.
+pub struct GridAccel {
+    exe: Executable,
+    pub h: usize,
+    pub w: usize,
+    /// waves per artifact call (baked at AOT time; 32 by default)
+    pub waves_per_call: usize,
+    /// number of artifact executions so far
+    pub calls: u64,
+}
+
+impl GridAccel {
+    /// Load `<dir>/grid_pr_<h>x<w>.hlo.txt` and compile it.
+    pub fn load(
+        rt: &PjrtRuntime,
+        dir: &str,
+        h: usize,
+        w: usize,
+        waves_per_call: usize,
+    ) -> Result<GridAccel> {
+        let path = format!("{dir}/grid_pr_{h}x{w}.hlo.txt");
+        let exe = rt.load_hlo_text(&path).with_context(|| format!("load {path}"))?;
+        Ok(GridAccel { exe, h, w, waves_per_call, calls: 0 })
+    }
+
+    /// One artifact call = `waves_per_call` lock-step waves on `p`.
+    pub fn step(&mut self, p: &mut GridProblem) -> Result<i64> {
+        anyhow::ensure!(p.h == self.h && p.w == self.w, "shape mismatch");
+        let (h, w) = (p.h, p.w);
+        let inputs = vec![
+            literal_i32_plane(&p.excess, h, w)?,
+            literal_i32_plane(&p.label, h, w)?,
+            literal_i32_plane(&p.caps[N], h, w)?,
+            literal_i32_plane(&p.caps[S], h, w)?,
+            literal_i32_plane(&p.caps[E], h, w)?,
+            literal_i32_plane(&p.caps[W], h, w)?,
+            literal_i32_plane(&p.sink_cap, h, w)?,
+            literal_i32_plane(&p.frozen, h, w)?,
+            literal_i32_plane(&[p.d_inf], 1, 1)?,
+        ];
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 8, "expected 8 outputs, got {}", out.len());
+        p.excess = literal_to_vec_i32(&out[0])?;
+        p.label = literal_to_vec_i32(&out[1])?;
+        p.caps[N] = literal_to_vec_i32(&out[2])?;
+        p.caps[S] = literal_to_vec_i32(&out[3])?;
+        p.caps[E] = literal_to_vec_i32(&out[4])?;
+        p.caps[W] = literal_to_vec_i32(&out[5])?;
+        p.sink_cap = literal_to_vec_i32(&out[6])?;
+        let df = literal_to_vec_i32(&out[7])?[0] as i64;
+        p.flow += df;
+        self.calls += 1;
+        Ok(df)
+    }
+
+    /// Run artifact calls until no active node remains, with the L3-side
+    /// global gap heuristic between calls. Returns `true` on convergence
+    /// within `max_calls`.
+    pub fn solve(&mut self, p: &mut GridProblem, max_calls: usize) -> Result<bool> {
+        for _ in 0..max_calls {
+            if !p.any_active() {
+                return Ok(true);
+            }
+            self.step(p)?;
+            p.gap_heuristic();
+        }
+        Ok(!p.any_active())
+    }
+}
+
+/// Tiled coordinator: a grid larger than the artifact shape is cut into
+/// `tile × tile` regions; each region discharge loads the tile plus a
+/// one-cell *frozen halo* into the artifact-shaped plane-stack, runs
+/// kernel calls until the tile has no active node, and writes back.
+/// Halo excess is the region's exported flow, delivered to neighbor
+/// tiles through the global planes; labels use the global ordinary-
+/// distance ceiling, so each tile discharge is a PRD with an
+/// accelerated core.
+pub struct TiledAccelCoordinator {
+    pub accel: GridAccel,
+    /// inner tile side (= artifact side − 2)
+    pub tile: usize,
+    pub sweeps: u32,
+    pub discharges: u64,
+}
+
+impl TiledAccelCoordinator {
+    pub fn new(accel: GridAccel) -> TiledAccelCoordinator {
+        assert_eq!(accel.h, accel.w, "square artifacts only");
+        let tile = accel.h - 2;
+        TiledAccelCoordinator { accel, tile, sweeps: 0, discharges: 0 }
+    }
+
+    /// Solve the global plane-stack `g` (frozen must be all-zero;
+    /// dimensions must be multiples of the tile side). Returns `true`
+    /// on convergence within `max_sweeps`.
+    pub fn solve(&mut self, g: &mut GridProblem, max_sweeps: u32) -> Result<bool> {
+        let t = self.tile;
+        anyhow::ensure!(g.h % t == 0 && g.w % t == 0, "grid must tile evenly");
+        anyhow::ensure!(g.frozen.iter().all(|&f| f == 0), "global frozen mask must be zero");
+        let (ty_n, tx_n) = (g.h / t, g.w / t);
+        g.d_inf = (g.h * g.w + 2) as i32;
+        g.global_relabel(); // §5.1: one exact labeling up front
+        while g.any_active() {
+            if self.sweeps >= max_sweeps {
+                return Ok(false);
+            }
+            self.sweeps += 1;
+            for ty in 0..ty_n {
+                for tx in 0..tx_n {
+                    if !tile_active(g, ty, tx, t) {
+                        continue;
+                    }
+                    let mut p = extract_tile(g, ty, tx, t, self.accel.h);
+                    let pre = p.clone();
+                    let mut guard = 0usize;
+                    while p.any_active() {
+                        self.accel.step(&mut p)?;
+                        p.gap_heuristic();
+                        guard += 1;
+                        anyhow::ensure!(guard < 100_000, "tile discharge did not converge");
+                    }
+                    self.discharges += 1;
+                    write_back_tile(g, &p, &pre, ty, tx, t);
+                }
+            }
+            g.gap_heuristic();
+        }
+        Ok(true)
+    }
+
+    /// Same sweep schedule but with the pure-rust wave (no PJRT) — used
+    /// by tests and as the bench baseline.
+    pub fn solve_reference(g: &mut GridProblem, tile: usize, max_sweeps: u32) -> Result<bool> {
+        anyhow::ensure!(g.h % tile == 0 && g.w % tile == 0, "grid must tile evenly");
+        let side = tile + 2;
+        let (ty_n, tx_n) = (g.h / tile, g.w / tile);
+        g.d_inf = (g.h * g.w + 2) as i32;
+        g.global_relabel();
+        let mut sweeps = 0;
+        while g.any_active() {
+            if sweeps >= max_sweeps {
+                return Ok(false);
+            }
+            sweeps += 1;
+            for ty in 0..ty_n {
+                for tx in 0..tx_n {
+                    if !tile_active(g, ty, tx, tile) {
+                        continue;
+                    }
+                    let mut p = extract_tile(g, ty, tx, tile, side);
+                    let pre = p.clone();
+                    let mut guard = 0usize;
+                    while p.any_active() {
+                        p.wave_reference();
+                        if guard % 32 == 31 {
+                            p.gap_heuristic();
+                        }
+                        guard += 1;
+                        anyhow::ensure!(guard < 3_000_000, "tile discharge did not converge");
+                    }
+                    write_back_tile(g, &p, &pre, ty, tx, tile);
+                }
+            }
+            g.gap_heuristic();
+        }
+        Ok(true)
+    }
+}
+
+fn tile_active(g: &GridProblem, ty: usize, tx: usize, t: usize) -> bool {
+    for y in ty * t..(ty + 1) * t {
+        for x in tx * t..(tx + 1) * t {
+            let i = y * g.w + x;
+            if g.excess[i] > 0 && g.label[i] < g.d_inf {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Copy tile `(ty, tx)` plus a one-cell halo into an artifact-shaped
+/// problem. Halo cells carry the *global* labels (fixed seeds) and are
+/// frozen; capacities from halo into the tile are zeroed — they belong
+/// to the neighboring region (Fig. 1b of the paper).
+fn extract_tile(g: &GridProblem, ty: usize, tx: usize, t: usize, side: usize) -> GridProblem {
+    let mut p = GridProblem::zeros(side, side);
+    p.d_inf = g.d_inf;
+    let (y0, x0) = (ty * t, tx * t);
+    for ly in 0..side {
+        for lx in 0..side {
+            let gy = y0 as i64 + ly as i64 - 1;
+            let gx = x0 as i64 + lx as i64 - 1;
+            let li = ly * side + lx;
+            let inner = (1..=t).contains(&ly) && (1..=t).contains(&lx);
+            if gy < 0 || gx < 0 || gy >= g.h as i64 || gx >= g.w as i64 {
+                p.frozen[li] = 1;
+                p.label[li] = g.d_inf;
+                continue;
+            }
+            let gi = gy as usize * g.w + gx as usize;
+            p.label[li] = g.label[gi];
+            if inner {
+                p.excess[li] = g.excess[gi];
+                p.sink_cap[li] = g.sink_cap[gi];
+                for dir in 0..4 {
+                    p.caps[dir][li] = g.caps[dir][gi];
+                }
+            } else {
+                p.frozen[li] = 1; // halo: absorbs only; caps stay zero
+            }
+        }
+    }
+    p
+}
+
+/// Write the discharged tile back. `pre` is the tile as extracted
+/// (used to recover per-arc flow over the tile border).
+fn write_back_tile(
+    g: &mut GridProblem,
+    p: &GridProblem,
+    pre: &GridProblem,
+    ty: usize,
+    tx: usize,
+    t: usize,
+) {
+    let side = p.h;
+    let (y0, x0) = (ty * t, tx * t);
+    // inner planes verbatim
+    for ly in 1..=t {
+        for lx in 1..=t {
+            let li = ly * side + lx;
+            let gi = (y0 + ly - 1) * g.w + (x0 + lx - 1);
+            g.excess[gi] = p.excess[li];
+            g.sink_cap[gi] = p.sink_cap[li];
+            g.label[gi] = p.label[li];
+            for dir in 0..4 {
+                g.caps[dir][gi] = p.caps[dir][li];
+            }
+        }
+    }
+    g.flow += p.flow;
+    // halo excess → the neighboring global cells
+    for ly in 0..side {
+        for lx in 0..side {
+            let li = ly * side + lx;
+            if p.frozen[li] == 0 || p.excess[li] == 0 {
+                continue;
+            }
+            let gy = y0 as i64 + ly as i64 - 1;
+            let gx = x0 as i64 + lx as i64 - 1;
+            if gy < 0 || gx < 0 || gy >= g.h as i64 || gx >= g.w as i64 {
+                continue;
+            }
+            let gi = gy as usize * g.w + gx as usize;
+            g.excess[gi] += p.excess[li];
+        }
+    }
+    // crossing arcs: a push from inner cell u outward over direction
+    // `dir` decreased `caps[dir][u]` by Δ; globally the reverse residual
+    // lives on the *neighbor's* plane: `caps[rev][neighbor] += Δ`.
+    let mut mirror = |ly: usize, lx: usize, dir: usize| {
+        let li = ly * side + lx;
+        let delta = pre.caps[dir][li] - p.caps[dir][li];
+        debug_assert!(delta >= 0, "outward flow cannot be negative");
+        if delta == 0 {
+            return;
+        }
+        let gy = y0 as i64 + ly as i64 - 1 + DIR_OFF[dir].0;
+        let gx = x0 as i64 + lx as i64 - 1 + DIR_OFF[dir].1;
+        debug_assert!(gy >= 0 && gx >= 0 && gy < g.h as i64 && gx < g.w as i64);
+        let ni = gy as usize * g.w + gx as usize;
+        g.caps[DIR_REV[dir]][ni] += delta;
+    };
+    for lx in 1..=t {
+        mirror(1, lx, N);
+        mirror(t, lx, S);
+    }
+    for ly in 1..=t {
+        mirror(ly, 1, W);
+        mirror(ly, t, E);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::oracle::reference_value;
+
+    #[test]
+    fn random_problem_borders_are_zero() {
+        let p = GridProblem::random(6, 9, 5, 10, 3);
+        for x in 0..9 {
+            assert_eq!(p.caps[N][x], 0);
+            assert_eq!(p.caps[S][5 * 9 + x], 0);
+        }
+        for y in 0..6 {
+            assert_eq!(p.caps[W][y * 9], 0);
+            assert_eq!(p.caps[E][y * 9 + 8], 0);
+        }
+    }
+
+    #[test]
+    fn wave_reference_converges_to_maxflow() {
+        for seed in 0..6 {
+            let mut p = GridProblem::random(8, 8, 6, 12, seed);
+            let expect = reference_value(&p.to_graph());
+            assert!(p.solve_reference(100_000), "did not converge");
+            assert_eq!(p.flow, expect, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn wave_reference_mass_conserved() {
+        let mut p = GridProblem::random(10, 10, 4, 9, 7);
+        let mass0 = p.inner_excess();
+        for _ in 0..50 {
+            p.wave_reference();
+        }
+        assert_eq!(p.inner_excess() + p.flow, mass0);
+    }
+
+    #[test]
+    fn wave_reference_labels_monotone_and_valid() {
+        let mut p = GridProblem::random(7, 7, 5, 10, 11);
+        let mut prev = p.label.clone();
+        for _ in 0..60 {
+            p.wave_reference();
+            for i in 0..p.label.len() {
+                assert!(p.label[i] >= prev[i], "monotone");
+            }
+            // validity: d(u) <= d(v) + 1 on residual arcs
+            for y in 0..7 {
+                for x in 0..7 {
+                    let i = y * 7 + x;
+                    if p.label[i] >= p.d_inf {
+                        continue;
+                    }
+                    for dir in 0..4 {
+                        if p.caps[dir][i] > 0 {
+                            if let Some(j) = p.neighbor(y, x, dir) {
+                                assert!(p.label[i] <= p.label[j] + 1, "validity");
+                            }
+                        }
+                    }
+                    if p.sink_cap[i] > 0 {
+                        assert!(p.label[i] <= 1);
+                    }
+                }
+            }
+            prev = p.label.clone();
+        }
+    }
+
+    #[test]
+    fn tiled_reference_coordinator_matches_oracle() {
+        for seed in 0..4 {
+            let mut g = GridProblem::random(12, 12, 5, 10, 100 + seed);
+            let expect = reference_value(&g.to_graph());
+            assert!(
+                TiledAccelCoordinator::solve_reference(&mut g, 6, 10_000).unwrap(),
+                "tiled solve did not converge"
+            );
+            assert_eq!(g.flow, expect, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn tiled_equals_untiled() {
+        let g0 = GridProblem::random(8, 8, 4, 8, 5);
+        let mut a = g0.clone();
+        let mut b = g0.clone();
+        assert!(a.solve_reference(1_000_000));
+        assert!(TiledAccelCoordinator::solve_reference(&mut b, 4, 10_000).unwrap());
+        assert_eq!(a.flow, b.flow);
+    }
+
+    #[test]
+    fn to_graph_roundtrip_flow() {
+        let p = GridProblem::random(6, 6, 5, 10, 9);
+        let g = p.to_graph();
+        assert_eq!(g.n(), 36);
+        let mut q = p.clone();
+        assert!(q.solve_reference(100_000));
+        assert_eq!(q.flow, reference_value(&g));
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load and execute the AOT-compiled L1/L2 artifacts from
+//! the rust coordinator. Python never runs at solve time — the
+//! artifacts under `artifacts/*.hlo.txt` are produced once by
+//! `make artifacts` (`python/compile/aot.py`).
+
+pub mod grid_accel;
+pub mod pjrt;
+
+pub use grid_accel::{GridAccel, GridProblem, TiledAccelCoordinator};
+pub use pjrt::{Executable, PjrtRuntime};

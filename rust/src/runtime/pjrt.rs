@@ -1,0 +1,83 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file`
+//! reassigns instruction ids, avoiding the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus the executables compiled on it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given literals; the artifact is lowered with
+    /// `return_tuple=True`, so the single output is decomposed into the
+    /// tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = result[0][0].to_literal_sync().context("device → host")?;
+        lit.to_tuple().context("decompose output tuple")
+    }
+}
+
+/// Build an `int32[h, w]` literal from a row-major slice.
+pub fn literal_i32_plane(data: &[i32], h: usize, w: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == h * w, "plane size mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[h as i64, w as i64])?)
+}
+
+/// Read back an `int32` literal into a Vec.
+pub fn literal_to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT smoke tests live in `rust/tests/pjrt_integration.rs` (they
+    // need the artifacts built by `make artifacts`); here we only check
+    // the error path so the unit suite runs without artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = PjrtRuntime::cpu().expect("CPU PJRT client");
+        assert!(rt.load_hlo_text("/nonexistent/file.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,514 @@
+//! HPR — highest-label push-relabel with *seeded* (frozen) labels,
+//! re-implemented per §5.4 of the paper.
+//!
+//! This solver plays two roles:
+//! * with no seeds and the whole graph as one region it is the paper's
+//!   HIPR0 stand-in (global relabel once at init; §5.4: "When the whole
+//!   problem is taken as a single region then HPR should be equivalent
+//!   to HIPR0"); an optional periodic global relabel reproduces the
+//!   HIPR0.5 variant;
+//! * with frozen boundary vertices carrying fixed distance labels it is
+//!   the core of PRD ([`crate::region::prd`]): pushes into a frozen
+//!   vertex export flow as excess, frozen vertices are never relabeled
+//!   nor discharged, and the region-gap heuristic (Alg. 4) raises
+//!   labels across empty buckets up to the next boundary seed.
+//!
+//! Active vertices are selected highest-label-first from lazy buckets;
+//! a `label_count` histogram detects gaps after each relabel.
+
+use crate::core::graph::{Cap, Graph, NodeId};
+
+/// Reusable HPR workspace and configuration.
+#[derive(Debug, Default)]
+pub struct Hpr {
+    /// Current-arc pointers.
+    cur: Vec<u32>,
+    /// Active buckets by label (lazy deletion).
+    buckets: Vec<Vec<NodeId>>,
+    /// Number of vertices (frozen excluded) holding each label.
+    label_count: Vec<u32>,
+    highest: usize,
+    /// Frequency of the global-relabel heuristic in units of
+    /// work-per-arc, as in HIPR: `0.0` = only the initial exact
+    /// labeling, `0.5` = the HIPR default.
+    pub global_relabel_freq: f64,
+    /// Statistics of the last run.
+    pub pushes: u64,
+    pub relabels: u64,
+    pub gap_events: u64,
+    pub global_relabels: u64,
+}
+
+impl Hpr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_freq(freq: f64) -> Self {
+        Hpr { global_relabel_freq: freq, ..Self::default() }
+    }
+
+    fn bucket_put(&mut self, v: NodeId, d: u32) {
+        let d = d as usize;
+        if self.buckets.len() <= d {
+            self.buckets.resize_with(d + 1, Vec::new);
+        }
+        self.buckets[d].push(v);
+        if d > self.highest {
+            self.highest = d;
+        }
+    }
+
+    fn count_inc(&mut self, d: u32) {
+        let d = d as usize;
+        if self.label_count.len() <= d {
+            self.label_count.resize(d + 1, 0);
+        }
+        self.label_count[d] += 1;
+    }
+
+    fn count_dec(&mut self, d: u32) -> bool {
+        self.label_count[d as usize] -= 1;
+        self.label_count[d as usize] == 0
+    }
+
+    /// Exact backward-BFS distances to the sink, respecting frozen
+    /// vertices as *impassable* (their labels are authoritative seeds and
+    /// paths may not be traced through them — matching the region
+    /// network, where incoming boundary capacities are zero).
+    /// Unreachable vertices get `d_inf`.
+    pub fn exact_labels(g: &Graph, d_inf: u32, frozen: Option<&[bool]>, label: &mut [u32]) {
+        let n = g.n();
+        let is_frozen = |v: usize| frozen.map_or(false, |m| m[v]);
+        let mut queue: Vec<NodeId> = Vec::new();
+        for v in 0..n {
+            if is_frozen(v) {
+                continue; // keep seed label
+            }
+            if g.sink_cap[v] > 0 {
+                label[v] = 1;
+                queue.push(v as NodeId);
+            } else {
+                label[v] = d_inf;
+            }
+        }
+        let mut qi = 0;
+        while qi < queue.len() {
+            let v = queue[qi];
+            qi += 1;
+            let dv = label[v as usize];
+            for a in g.arc_range(v) {
+                let u = g.head(a as u32) as usize;
+                if !is_frozen(u) && label[u] == d_inf && g.cap[g.sister(a as u32) as usize] > 0 {
+                    label[u] = dv + 1;
+                    queue.push(u as NodeId);
+                }
+            }
+        }
+    }
+
+    /// Run push-relabel until no active vertex remains.
+    ///
+    /// * `label` — in/out labels; entries for frozen vertices are fixed
+    ///   seeds, others are initialized by the caller (or via
+    ///   [`Hpr::exact_labels`]).
+    /// * `frozen` — vertices excluded from discharge/relabel (the
+    ///   region boundary `B^R`); pushes into them accumulate as excess.
+    /// * `d_inf` — the label ceiling (`n` for PRD, per the paper).
+    ///
+    /// Returns the flow routed to the sink during this run.
+    pub fn run(
+        &mut self,
+        g: &mut Graph,
+        label: &mut [u32],
+        frozen: Option<&[bool]>,
+        d_inf: u32,
+    ) -> Cap {
+        let n = g.n();
+        let is_frozen = |v: usize| frozen.map_or(false, |m| m[v]);
+        self.cur.clear();
+        self.cur.resize(n, 0);
+        for (v, c) in self.cur.iter_mut().enumerate() {
+            *c = g.arc_range(v as NodeId).start as u32;
+        }
+        self.buckets.iter_mut().for_each(|b| b.clear());
+        self.label_count.fill(0);
+        self.highest = 0;
+        self.pushes = 0;
+        self.relabels = 0;
+        self.gap_events = 0;
+        self.global_relabels = 0;
+        let sink_flow_before = g.flow_to_sink;
+
+        for v in 0..n {
+            if is_frozen(v) {
+                // Seeds participate in the gap histogram (a level is a
+                // gap only if NO vertex of the region network holds it —
+                // otherwise a raise could invalidate labels against a
+                // seed sitting at that level) but are never bucketed.
+                if label[v] < d_inf {
+                    self.count_inc(label[v]);
+                }
+                continue;
+            }
+            self.count_inc(label[v]);
+            if g.excess[v] > 0 && label[v] < d_inf {
+                self.bucket_put(v as NodeId, label[v]);
+            }
+        }
+
+        let relabel_work_limit = if self.global_relabel_freq > 0.0 {
+            ((g.num_arcs() as f64 + n as f64) / self.global_relabel_freq) as u64
+        } else {
+            u64::MAX
+        };
+        let mut work: u64 = 0;
+
+        'outer: loop {
+            // pick the highest active vertex
+            let v = loop {
+                while self.highest > 0 && self.buckets[self.highest].is_empty() {
+                    self.highest -= 1;
+                }
+                if self.highest == 0 && self.buckets.first().map_or(true, |b| b.is_empty()) {
+                    break 'outer;
+                }
+                match self.buckets[self.highest].pop() {
+                    Some(v) => {
+                        // lazy deletion: validate
+                        if g.excess[v as usize] > 0
+                            && label[v as usize] as usize == self.highest
+                            && label[v as usize] < d_inf
+                        {
+                            break v;
+                        }
+                    }
+                    None => {
+                        if self.highest == 0 {
+                            break 'outer;
+                        }
+                        self.highest -= 1;
+                    }
+                }
+            };
+
+            // discharge v
+            let vu = v as usize;
+            'discharge: while g.excess[vu] > 0 {
+                let dv = label[vu];
+                // sink arc behaves as an arc to a label-0 vertex
+                if dv == 1 && g.sink_cap[vu] > 0 {
+                    let delta = g.excess[vu].min(g.sink_cap[vu]);
+                    g.push_to_sink(v, delta);
+                    self.pushes += 1;
+                    continue;
+                }
+                // admissible out-arc from the current-arc pointer
+                let range_end = g.arc_range(v).end as u32;
+                let mut pushed = false;
+                while self.cur[vu] < range_end {
+                    let a = self.cur[vu] as usize;
+                    work += 1;
+                    let u = g.head(a as u32) as usize;
+                    if g.cap[a] > 0 && label[u] + 1 == dv {
+                        let delta = g.excess[vu].min(g.cap[a]);
+                        g.push(a as u32, delta);
+                        g.excess[vu] -= delta;
+                        let was_zero = g.excess[u] == 0;
+                        g.excess[u] += delta;
+                        self.pushes += 1;
+                        if was_zero && !is_frozen(u) && label[u] < d_inf {
+                            self.bucket_put(u as NodeId, label[u]);
+                        }
+                        pushed = true;
+                        if g.excess[vu] == 0 {
+                            break 'discharge;
+                        }
+                    } else {
+                        self.cur[vu] += 1;
+                    }
+                    if pushed {
+                        break;
+                    }
+                }
+                if pushed {
+                    continue;
+                }
+                // relabel v
+                let old = dv;
+                let mut newd = d_inf;
+                if g.sink_cap[vu] > 0 {
+                    newd = 1;
+                }
+                for a in g.arc_range(v) {
+                    work += 1;
+                    if g.cap[a] > 0 {
+                        let cand = label[g.head(a as u32) as usize].saturating_add(1);
+                        if cand < newd {
+                            newd = cand;
+                        }
+                    }
+                }
+                debug_assert!(newd > old, "relabel must increase the label");
+                label[vu] = newd;
+                self.relabels += 1;
+                self.cur[vu] = g.arc_range(v).start as u32;
+                let emptied = self.count_dec(old);
+                if newd < d_inf {
+                    self.count_inc(newd);
+                }
+                if emptied && old > 0 {
+                    // gap: no vertex left at label `old`
+                    self.apply_gap(g, label, frozen, d_inf, old);
+                    if label[vu] >= d_inf {
+                        continue 'outer;
+                    }
+                }
+                if label[vu] >= d_inf {
+                    continue 'outer;
+                }
+                self.bucket_put(v, label[vu]);
+                // highest-label rule: re-select (v may no longer be highest)
+                if work >= relabel_work_limit {
+                    work = 0;
+                    self.global_relabel(g, label, frozen, d_inf);
+                }
+                continue 'outer;
+            }
+        }
+        g.flow_to_sink - sink_flow_before
+    }
+
+    /// Region-gap heuristic (Alg. 4): no vertex holds label `gap`; every
+    /// vertex above the gap can reach the sink only through a boundary
+    /// seed, so raise it to `d_next + 1` where `d_next` is the smallest
+    /// frozen label above the gap (or to `d_inf` when none exists).
+    fn apply_gap(
+        &mut self,
+        g: &Graph,
+        label: &mut [u32],
+        frozen: Option<&[bool]>,
+        d_inf: u32,
+        gap: u32,
+    ) {
+        let n = g.n();
+        let is_frozen = |v: usize| frozen.map_or(false, |m| m[v]);
+        let mut d_next = d_inf;
+        if let Some(fmask) = frozen {
+            for v in 0..n {
+                if fmask[v] && label[v] > gap && label[v] < d_next {
+                    d_next = label[v];
+                }
+            }
+        }
+        let target = if d_next >= d_inf { d_inf } else { (d_next + 1).min(d_inf) };
+        self.gap_events += 1;
+        for v in 0..n {
+            if !is_frozen(v) && label[v] > gap && label[v] < target {
+                let old = label[v];
+                self.count_dec(old);
+                label[v] = target;
+                if target < d_inf {
+                    self.count_inc(target);
+                    if g.excess[v] > 0 {
+                        self.bucket_put(v as NodeId, target);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Global relabel: recompute exact distances and rebuild buckets.
+    fn global_relabel(
+        &mut self,
+        g: &Graph,
+        label: &mut [u32],
+        frozen: Option<&[bool]>,
+        d_inf: u32,
+    ) {
+        let n = g.n();
+        let is_frozen = |v: usize| frozen.map_or(false, |m| m[v]);
+        // labels may only grow (monotonicity): take max(old, exact)
+        let mut exact = vec![0u32; n];
+        exact.copy_from_slice(label);
+        Self::exact_labels(g, d_inf, frozen, &mut exact);
+        self.buckets.iter_mut().for_each(|b| b.clear());
+        self.label_count.fill(0);
+        self.highest = 0;
+        for v in 0..n {
+            if is_frozen(v) {
+                if label[v] < d_inf {
+                    self.count_inc(label[v]);
+                }
+                continue;
+            }
+            if exact[v] > label[v] {
+                label[v] = exact[v];
+            }
+            if label[v] < d_inf {
+                self.count_inc(label[v]);
+                if g.excess[v] > 0 {
+                    self.bucket_put(v as NodeId, label[v]);
+                }
+            }
+            self.cur[v] = g.arc_range(v as NodeId).start as u32;
+        }
+        self.global_relabels += 1;
+    }
+}
+
+impl crate::solvers::MaxFlowSolver for Hpr {
+    /// Whole-graph solve: exact initial labels (one global relabel, as
+    /// HIPR0), then highest-label discharge to completion.
+    fn solve(&mut self, g: &mut Graph) -> Cap {
+        let n = g.n();
+        // `n` excludes the implicit terminals; the sink-adjacent level is
+        // already 1, so valid finite distances reach `n + 1`.
+        let d_inf = n as u32 + 2;
+        let mut label = vec![0u32; n];
+        Self::exact_labels(g, d_inf, None, &mut label);
+        self.run(g, &mut label, None, d_inf);
+        g.flow_value()
+    }
+    fn name(&self) -> &'static str {
+        if self.global_relabel_freq > 0.0 {
+            "hipr0.5"
+        } else {
+            "hipr0"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::prng::Rng;
+    use crate::solvers::oracle::reference_value;
+    use crate::solvers::MaxFlowSolver;
+
+    fn random_graph(rng: &mut Rng, n: usize, m: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n {
+            b.add_signed_terminal(v as NodeId, rng.range_i64(-20, 20));
+        }
+        for _ in 0..m {
+            let u = rng.index(n);
+            let v = rng.index(n);
+            if u != v {
+                b.add_edge(u as NodeId, v as NodeId, rng.range_i64(0, 12), rng.range_i64(0, 12));
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn diamond() {
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 5, 0);
+        b.add_terminal(3, 0, 4);
+        b.add_edge(0, 1, 3, 0);
+        b.add_edge(0, 2, 2, 0);
+        b.add_edge(1, 3, 2, 0);
+        b.add_edge(2, 3, 2, 0);
+        let mut g = b.build();
+        assert_eq!(Hpr::new().solve(&mut g), 4);
+        assert!(g.is_max_preflow());
+    }
+
+    #[test]
+    fn matches_oracle_on_random_graphs() {
+        let mut rng = Rng::new(0x49D8);
+        for trial in 0..120 {
+            let n = 2 + rng.index(28);
+            let m = rng.index(4 * n);
+            let g0 = random_graph(&mut rng, n, m);
+            let want = reference_value(&g0);
+            let mut g = g0.clone();
+            assert_eq!(Hpr::new().solve(&mut g), want, "trial {trial}");
+            assert!(g.is_max_preflow(), "trial {trial}");
+            g.check_invariants();
+        }
+    }
+
+    #[test]
+    fn periodic_global_relabel_matches() {
+        let mut rng = Rng::new(0x1234);
+        for trial in 0..40 {
+            let n = 2 + rng.index(24);
+            let m = rng.index(4 * n);
+            let g0 = random_graph(&mut rng, n, m);
+            let want = reference_value(&g0);
+            let mut g = g0.clone();
+            assert_eq!(Hpr::with_freq(0.5).solve(&mut g), want, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn frozen_vertices_export_excess() {
+        // 0(e=7) -5- 1 -3- 2(frozen seed d=0): flow exported to 2
+        let mut b = GraphBuilder::new(3);
+        b.add_terminal(0, 7, 0);
+        b.add_edge(0, 1, 5, 0);
+        b.add_edge(1, 2, 3, 0);
+        let mut g = b.build();
+        let frozen = vec![false, false, true];
+        let d_inf = 10;
+        let mut label = vec![0u32; 3];
+        label[2] = 0; // seed
+        // inner labels: start at 0 is fine (relabel will lift them)
+        let mut h = Hpr::new();
+        let to_sink = h.run(&mut g, &mut label, Some(&frozen), d_inf);
+        assert_eq!(to_sink, 0);
+        assert_eq!(g.excess[2], 3, "3 units exported through the seed");
+        assert_eq!(g.excess[0] + g.excess[1], 4, "4 units trapped");
+        // trapped vertices end at d_inf
+        assert!(label[0] >= d_inf || g.excess[0] == 0);
+    }
+
+    #[test]
+    fn seeds_direct_flow_downhill() {
+        // two frozen exits: d=0 and d=5. flow must leave via d=0.
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 4, 0);
+        b.add_edge(0, 1, 10, 0);
+        b.add_edge(1, 2, 10, 0); // exit A
+        b.add_edge(1, 3, 10, 0); // exit B
+        let mut g = b.build();
+        let frozen = vec![false, false, true, true];
+        let mut label = vec![0, 0, 0, 5];
+        let mut h = Hpr::new();
+        h.run(&mut g, &mut label, Some(&frozen), 20);
+        assert_eq!(g.excess[2], 4, "all flow leaves via the lower seed");
+        assert_eq!(g.excess[3], 0);
+    }
+
+    #[test]
+    fn gap_heuristic_fires() {
+        // a chain that disconnects: gap must lift labels to d_inf
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 5, 0);
+        b.add_terminal(3, 0, 2);
+        b.add_edge(0, 1, 5, 0);
+        b.add_edge(1, 2, 2, 0);
+        b.add_edge(2, 3, 5, 0);
+        let mut g = b.build();
+        let mut h = Hpr::new();
+        let f = h.solve(&mut g);
+        assert_eq!(f, 2);
+        assert!(g.is_max_preflow());
+    }
+
+    #[test]
+    fn equivalence_hipr0_single_region() {
+        // §5.4: HPR on the whole graph == HIPR0 flow values
+        let mut rng = Rng::new(0x5454);
+        for _ in 0..20 {
+            let n = 5 + rng.index(20);
+            let g0 = random_graph(&mut rng, n, 3 * n);
+            let mut g1 = g0.clone();
+            let mut g2 = g0.clone();
+            assert_eq!(Hpr::new().solve(&mut g1), Hpr::with_freq(0.5).solve(&mut g2));
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Maxflow solvers: reference oracles, the target-parameterized Dinic
+//! used inside ARD, the Boykov–Kolmogorov augmenting-path solver, and
+//! the highest-label push-relabel solver (HPR) used inside PRD.
+
+pub mod oracle;
+pub mod dinic;
+pub mod bk;
+pub mod hpr;
+
+use crate::core::graph::{Cap, Graph};
+
+/// Uniform interface over whole-graph solvers, used by the CLI and the
+/// competition benchmarks.
+pub trait MaxFlowSolver {
+    /// Find a maximum preflow in `g`; returns the flow value
+    /// (`g.flow_value()` afterwards).
+    fn solve(&mut self, g: &mut Graph) -> Cap;
+    fn name(&self) -> &'static str;
+}

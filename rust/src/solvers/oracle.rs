@@ -1,0 +1,164 @@
+//! Reference oracle: plain BFS (Edmonds–Karp style) shortest augmenting
+//! path maxflow in the excess form. Deliberately simple — used as ground
+//! truth by the test suite against every other solver in the crate.
+
+use crate::core::graph::{Cap, Graph, NodeId, NO_ARC};
+
+/// Compute a maximum flow by repeatedly BFS-ing from the set of excess
+/// vertices to the sink and augmenting one shortest path at a time.
+/// `O(V * E^2)`-ish; use only for verification.
+pub fn max_flow_reference(g: &mut Graph) -> Cap {
+    let n = g.n();
+    let mut parent_arc: Vec<u32> = vec![NO_ARC; n];
+    let mut visited: Vec<bool> = vec![false; n];
+    let mut queue: Vec<NodeId> = Vec::with_capacity(n);
+
+    loop {
+        // BFS from all excess nodes simultaneously.
+        for v in 0..n {
+            visited[v] = false;
+            parent_arc[v] = NO_ARC;
+        }
+        queue.clear();
+        for v in 0..n {
+            if g.excess[v] > 0 {
+                visited[v] = true;
+                queue.push(v as NodeId);
+            }
+        }
+        let mut found: Option<NodeId> = None;
+        let mut qi = 0;
+        'bfs: while qi < queue.len() {
+            let v = queue[qi];
+            qi += 1;
+            if g.sink_cap[v as usize] > 0 {
+                found = Some(v);
+                break 'bfs;
+            }
+            for a in g.arc_range(v) {
+                let u = g.head(a as u32) as usize;
+                if !visited[u] && g.cap[a] > 0 {
+                    visited[u] = true;
+                    parent_arc[u] = a as u32;
+                    queue.push(u as NodeId);
+                }
+            }
+        }
+        let Some(end) = found else { break };
+        // Walk back to the originating excess node, collect bottleneck.
+        let mut delta = g.sink_cap[end as usize];
+        let mut v = end;
+        while parent_arc[v as usize] != NO_ARC {
+            let a = parent_arc[v as usize];
+            delta = delta.min(g.cap[a as usize]);
+            v = g.head(g.sister(a));
+        }
+        let root = v;
+        delta = delta.min(g.excess[root as usize]);
+        debug_assert!(delta > 0);
+        // Apply.
+        let mut v = end;
+        while parent_arc[v as usize] != NO_ARC {
+            let a = parent_arc[v as usize];
+            g.push(a, delta);
+            v = g.head(g.sister(a));
+        }
+        g.excess[root as usize] -= delta;
+        g.excess[end as usize] += delta;
+        g.push_to_sink(end, delta);
+    }
+    g.flow_value()
+}
+
+/// Full verification helper for tests: solve with the oracle on a clone
+/// and return (flow value, optimal-cut cost certificate check passed).
+pub fn reference_value(g: &Graph) -> Cap {
+    let mut clone = g.clone();
+    max_flow_reference(&mut clone)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::prng::Rng;
+
+    #[test]
+    fn diamond_flow() {
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 5, 0);
+        b.add_terminal(3, 0, 4);
+        b.add_edge(0, 1, 3, 0);
+        b.add_edge(0, 2, 2, 0);
+        b.add_edge(1, 3, 2, 0);
+        b.add_edge(2, 3, 2, 0);
+        let mut g = b.build();
+        assert_eq!(max_flow_reference(&mut g), 4);
+        assert!(g.is_max_preflow());
+    }
+
+    #[test]
+    fn disconnected_excess_is_trapped() {
+        let mut b = GraphBuilder::new(2);
+        b.add_terminal(0, 10, 0);
+        b.add_terminal(1, 0, 10);
+        // no edge between them
+        let mut g = b.build();
+        assert_eq!(max_flow_reference(&mut g), 0);
+        assert_eq!(g.excess[0], 10);
+    }
+
+    #[test]
+    fn bottleneck_respected() {
+        let mut b = GraphBuilder::new(3);
+        b.add_terminal(0, 100, 0);
+        b.add_terminal(2, 0, 100);
+        b.add_edge(0, 1, 7, 0);
+        b.add_edge(1, 2, 5, 0);
+        let mut g = b.build();
+        assert_eq!(max_flow_reference(&mut g), 5);
+    }
+
+    #[test]
+    fn reverse_capacity_used() {
+        // flow must route 0->1 then residual back and around
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 2, 0);
+        b.add_terminal(3, 0, 2);
+        b.add_edge(0, 1, 1, 0);
+        b.add_edge(0, 2, 1, 0);
+        b.add_edge(1, 3, 1, 0);
+        b.add_edge(2, 1, 0, 1); // reverse-capacity arc 1->2 hidden as cap_vu
+        b.add_edge(2, 3, 1, 0);
+        let mut g = b.build();
+        assert_eq!(max_flow_reference(&mut g), 2);
+    }
+
+    #[test]
+    fn cut_certificate_on_random_graphs() {
+        // flow value == cut cost of the extracted cut (weak duality makes
+        // equality a proof of optimality of both)
+        let mut rng = Rng::new(0xFEED);
+        for trial in 0..30 {
+            let n = 2 + rng.index(10);
+            let mut b = GraphBuilder::new(n);
+            for v in 0..n {
+                b.add_signed_terminal(v as NodeId, rng.range_i64(-20, 20));
+            }
+            let m = rng.index(3 * n);
+            for _ in 0..m {
+                let u = rng.index(n);
+                let vv = rng.index(n);
+                if u != vv {
+                    b.add_edge(u as NodeId, vv as NodeId, rng.range_i64(0, 10), rng.range_i64(0, 10));
+                }
+            }
+            let mut g = b.build();
+            let snap = g.snapshot();
+            let flow = max_flow_reference(&mut g);
+            assert!(g.is_max_preflow(), "trial {trial}");
+            let sides = g.min_cut_sides();
+            assert_eq!(g.cut_cost(&snap, &sides), flow, "trial {trial}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Cross-algorithm integration: every solver in the crate — BK, HIPR0,
+//! HIPR0.5, Dinic, S-ARD (both cores, with/without heuristics,
+//! streaming), S-PRD, P-ARD, P-PRD, DD — must return the same maximum
+//! flow on shared structured and random instances, and every returned
+//! cut must be a certificate (cost == flow).
+
+use armincut::coordinator::dd::{solve_dd, DdOptions};
+use armincut::coordinator::parallel::{solve_parallel, ParOptions};
+use armincut::coordinator::sequential::{solve_sequential, CoreKind, SeqOptions};
+use armincut::core::graph::Graph;
+use armincut::core::partition::Partition;
+use armincut::gen::grid3d::{grid3d_segmentation, Grid3dParams};
+use armincut::gen::stereo::{stereo_bvz, stereo_kz2, StereoParams};
+use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+use armincut::solvers::{bk::Bk, dinic::Dinic, hpr::Hpr, MaxFlowSolver};
+
+fn whole(g: &Graph, s: &mut dyn MaxFlowSolver) -> i64 {
+    let mut gc = g.clone();
+    s.solve(&mut gc)
+}
+
+fn check_all(g: &Graph, k: usize) {
+    let expect = whole(g, &mut Dinic::new());
+    assert_eq!(whole(g, &mut Bk::new()), expect, "BK");
+    assert_eq!(whole(g, &mut Hpr::new()), expect, "HIPR0");
+    assert_eq!(whole(g, &mut Hpr::with_freq(0.5)), expect, "HIPR0.5");
+
+    let p = Partition::by_node_ranges(g.n(), k);
+    let snap = g.snapshot();
+
+    for (name, opts) in [
+        ("s-ard", SeqOptions::ard()),
+        ("s-ard-basic", SeqOptions::ard_basic()),
+        ("s-prd", SeqOptions::prd()),
+        ("s-ard-dinic", {
+            let mut o = SeqOptions::ard();
+            o.core = CoreKind::Dinic;
+            o
+        }),
+    ] {
+        let res = solve_sequential(g, &p, &opts);
+        assert!(res.metrics.converged, "{name} converged");
+        assert_eq!(res.metrics.flow, expect, "{name} flow");
+        assert_eq!(g.cut_cost(&snap, &res.cut), expect, "{name} cut certificate");
+    }
+
+    for (name, opts) in [("p-ard", ParOptions::ard(4)), ("p-prd", ParOptions::prd(4))] {
+        let res = solve_parallel(g, &p, &opts);
+        assert!(res.metrics.converged, "{name} converged");
+        assert_eq!(res.metrics.flow, expect, "{name} flow");
+        assert_eq!(g.cut_cost(&snap, &res.cut), expect, "{name} cut certificate");
+    }
+
+    let dd = solve_dd(g, &p, &DdOptions::default());
+    if dd.metrics.converged {
+        assert_eq!(dd.metrics.flow, expect, "dd flow (converged ⇒ optimal)");
+    } else {
+        assert!(dd.metrics.flow >= expect, "dd cut is an upper bound");
+    }
+}
+
+#[test]
+fn stereo_bvz_like() {
+    let g = stereo_bvz(&StereoParams { width: 40, height: 30, ..Default::default() });
+    check_all(&g, 6);
+}
+
+#[test]
+fn stereo_kz2_like() {
+    let g = stereo_kz2(&StereoParams { width: 36, height: 24, ..Default::default() });
+    check_all(&g, 5);
+}
+
+#[test]
+fn segmentation_3d_6conn() {
+    let g = grid3d_segmentation(&Grid3dParams::segmentation(10, 8, 3));
+    check_all(&g, 8);
+}
+
+#[test]
+fn segmentation_3d_26conn() {
+    let mut p = Grid3dParams::segmentation(8, 12, 4);
+    p.connectivity = 26;
+    let g = grid3d_segmentation(&p);
+    check_all(&g, 4);
+}
+
+#[test]
+fn surface_sparse_seeds() {
+    let g = grid3d_segmentation(&Grid3dParams::surface(10, 8, 5));
+    check_all(&g, 8);
+}
+
+#[test]
+fn synthetic_2d_strength_sweep() {
+    for strength in [1, 20, 150] {
+        let g = synthetic_2d(&Synthetic2dParams::small(18, 18, strength, 9));
+        check_all(&g, 4);
+    }
+}
+
+#[test]
+fn streaming_agrees_on_structured_instance() {
+    let g = grid3d_segmentation(&Grid3dParams::segmentation(10, 8, 6));
+    let p = Partition::grid3d(10, 10, 10, 2, 2, 2);
+    let expect = whole(&g, &mut Bk::new());
+    let dir =
+        std::env::temp_dir().join(format!("armincut_it_stream_{}", std::process::id()));
+    let mut o = SeqOptions::ard();
+    o.streaming_dir = Some(dir.clone());
+    let res = solve_sequential(&g, &p, &o);
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(res.metrics.converged);
+    assert_eq!(res.metrics.flow, expect);
+    assert!(res.metrics.disk_read_bytes > 0 && res.metrics.disk_write_bytes > 0);
+}
+
+#[test]
+fn grid_aligned_partitions_agree() {
+    let pr = Synthetic2dParams::small(24, 24, 40, 3);
+    let g = synthetic_2d(&pr);
+    let expect = whole(&g, &mut Bk::new());
+    for s in [2usize, 3, 4] {
+        let p = Partition::grid2d(24, 24, s, s);
+        let res = solve_sequential(&g, &p, &SeqOptions::ard());
+        assert_eq!(res.metrics.flow, expect, "{s}x{s} tiles");
+    }
+}

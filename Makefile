@@ -1,0 +1,19 @@
+# Convenience targets. `make artifacts` needs JAX (python/compile/aot.py);
+# everything else is plain cargo/pytest.
+
+.PHONY: artifacts build test bench-quick pytest
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts/model.hlo.txt
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench-quick:
+	cd rust && cargo run --release -- bench all --quick --out bench_results
+
+pytest:
+	python3 -m pytest python/tests -q

@@ -11,12 +11,13 @@
 //! cargo run --release --example accel_grid
 //! ```
 
+use armincut::core::error::Result;
 use armincut::runtime::grid_accel::{GridAccel, GridProblem, TiledAccelCoordinator};
 use armincut::runtime::pjrt::PjrtRuntime;
 use armincut::solvers::{bk::Bk, MaxFlowSolver};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = std::env::var("ARMINCUT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let rt = PjrtRuntime::cpu()?;
     println!("PJRT platform: {}", rt.platform());

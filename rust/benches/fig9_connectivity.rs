@@ -1,7 +1,10 @@
 //! `cargo bench --bench fig9_connectivity` — regenerates the paper's fig9
-//! series (see DESIGN.md §3 and EXPERIMENTS.md). Quick scale by
-//! default; set ARMINCUT_FULL=1 for paper-scale instances.
+//! series through `experiments::bench_support` and writes
+//! `bench_results/BENCH_fig9.json` (maxflow, sweeps, discharges, wall
+//! time). Quick scale by default; pass `-- --full` (or set
+//! `ARMINCUT_FULL=1`) for paper-scale instances, `-- --probe-only` to
+//! skip the table/figure print path (CI smoke), `-- --out DIR` to
+//! choose the output directory.
 fn main() {
-    let quick = armincut::experiments::is_quick();
-    armincut::experiments::run("fig9", quick).expect("experiment");
+    armincut::experiments::bench_support::bench_main("fig9");
 }

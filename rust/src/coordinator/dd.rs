@@ -194,9 +194,11 @@ pub fn solve_dd(g: &Graph, partition: &Partition, opts: &DdOptions) -> SolveResu
     let mut step: Cap = if opts.step0 > 0 { opts.step0 } else { max_term / 4 + 1 };
     let mut rng = Rng::new(opts.seed);
 
-    let mut metrics = RunMetrics::default();
-    metrics.shared_mem_bytes = couplings.len() * std::mem::size_of::<Coupling>();
-    metrics.max_region_mem_bytes = subs.iter().map(|s| s.graph.memory_bytes()).max().unwrap_or(0);
+    let mut metrics = RunMetrics {
+        shared_mem_bytes: couplings.len() * std::mem::size_of::<Coupling>(),
+        max_region_mem_bytes: subs.iter().map(|s| s.graph.memory_bytes()).max().unwrap_or(0),
+        ..RunMetrics::default()
+    };
 
     // accumulated multiplier per (sub, local) — rebuilt each iteration
     let mut best_disagree = usize::MAX;

@@ -223,10 +223,11 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
     };
     let mut dec = Decomposition::new(g, partition, mode);
     let d_inf = dec.shared.d_inf;
-    let mut metrics = RunMetrics::default();
-    metrics.shared_mem_bytes = dec.shared.memory_bytes();
-    metrics.max_region_mem_bytes =
-        dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0);
+    let mut metrics = RunMetrics {
+        shared_mem_bytes: dec.shared.memory_bytes(),
+        max_region_mem_bytes: dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0),
+        ..RunMetrics::default()
+    };
 
     let limit = if opts.max_sweeps > 0 {
         opts.max_sweeps as u64
@@ -289,11 +290,13 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
             let mut gs = GapState::new(&dec, opts.algorithm == Algorithm::Prd);
             gs.run(&mut dec);
         }
-        if opts.boundary_relabel && opts.algorithm == Algorithm::Ard {
-            if boundary_relabel(&mut dec.shared) > 0 && opts.global_gap {
-                let mut gs = GapState::new(&dec, opts.algorithm == Algorithm::Prd);
-                gs.run(&mut dec);
-            }
+        if opts.boundary_relabel
+            && opts.algorithm == Algorithm::Ard
+            && boundary_relabel(&mut dec.shared) > 0
+            && opts.global_gap
+        {
+            let mut gs = GapState::new(&dec, opts.algorithm == Algorithm::Prd);
+            gs.run(&mut dec);
         }
         tg.stop(&mut metrics.t_gap);
     }

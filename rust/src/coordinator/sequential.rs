@@ -378,10 +378,11 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
     };
     let mut dec = Decomposition::new(g, partition, mode);
     let d_inf = dec.shared.d_inf;
-    let mut metrics = RunMetrics::default();
-    metrics.shared_mem_bytes = dec.shared.memory_bytes();
-    metrics.max_region_mem_bytes =
-        dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0);
+    let mut metrics = RunMetrics {
+        shared_mem_bytes: dec.shared.memory_bytes(),
+        max_region_mem_bytes: dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0),
+        ..RunMetrics::default()
+    };
 
     let mut ard = Ard::new(match opts.core {
         CoreKind::Dinic => ArdCore::dinic(),

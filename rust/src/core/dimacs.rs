@@ -15,8 +15,9 @@
 //!   segmentation"); with `pair_arcs = true` consecutive reverse arcs
 //!   are merged into a single symmetric edge.
 
+use crate::core::error::{Context, Result};
 use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{bail, err};
 use std::io::{BufRead, Write};
 
 /// Parsed DIMACS problem, pre-`build()` so callers can post-process.
@@ -45,20 +46,20 @@ pub fn read_dimacs<R: BufRead>(input: R, pair_arcs: bool) -> Result<DimacsProble
         match it.next() {
             None | Some("c") => continue,
             Some("p") => {
-                let kind = it.next().ok_or_else(|| anyhow!("line {}: bad p line", lineno + 1))?;
+                let kind = it.next().ok_or_else(|| err!("line {}: bad p line", lineno + 1))?;
                 if kind != "max" {
                     bail!("line {}: expected 'p max', got 'p {}'", lineno + 1, kind);
                 }
                 n_file = it
                     .next()
                     .and_then(|x| x.parse().ok())
-                    .ok_or_else(|| anyhow!("line {}: bad n", lineno + 1))?;
+                    .ok_or_else(|| err!("line {}: bad n", lineno + 1))?;
             }
             Some("n") => {
                 let id: usize = it
                     .next()
                     .and_then(|x| x.parse().ok())
-                    .ok_or_else(|| anyhow!("line {}: bad node id", lineno + 1))?;
+                    .ok_or_else(|| err!("line {}: bad node id", lineno + 1))?;
                 match it.next() {
                     Some("s") => s_id = Some(id),
                     Some("t") => t_id = Some(id),
@@ -69,17 +70,17 @@ pub fn read_dimacs<R: BufRead>(input: R, pair_arcs: bool) -> Result<DimacsProble
                 let u: usize = it
                     .next()
                     .and_then(|x| x.parse().ok())
-                    .ok_or_else(|| anyhow!("line {}: bad arc tail", lineno + 1))?;
+                    .ok_or_else(|| err!("line {}: bad arc tail", lineno + 1))?;
                 let v: usize = it
                     .next()
                     .and_then(|x| x.parse().ok())
-                    .ok_or_else(|| anyhow!("line {}: bad arc head", lineno + 1))?;
+                    .ok_or_else(|| err!("line {}: bad arc head", lineno + 1))?;
                 let c: Cap = it
                     .next()
                     .and_then(|x| x.parse().ok())
-                    .ok_or_else(|| anyhow!("line {}: bad arc cap", lineno + 1))?;
-                let s = s_id.ok_or_else(|| anyhow!("arc before 'n .. s' line"))?;
-                let t = t_id.ok_or_else(|| anyhow!("arc before 'n .. t' line"))?;
+                    .ok_or_else(|| err!("line {}: bad arc cap", lineno + 1))?;
+                let s = s_id.ok_or_else(|| err!("arc before 'n .. s' line"))?;
+                let t = t_id.ok_or_else(|| err!("arc before 'n .. t' line"))?;
                 if u == s {
                     terminals.push((v as u32, c, 0));
                 } else if v == t {
@@ -94,8 +95,8 @@ pub fn read_dimacs<R: BufRead>(input: R, pair_arcs: bool) -> Result<DimacsProble
         }
     }
 
-    let s = s_id.ok_or_else(|| anyhow!("missing source designator"))?;
-    let t = t_id.ok_or_else(|| anyhow!("missing sink designator"))?;
+    let s = s_id.ok_or_else(|| err!("missing source designator"))?;
+    let t = t_id.ok_or_else(|| err!("missing sink designator"))?;
     if n_file < 2 {
         bail!("problem line missing or too small");
     }

@@ -1,0 +1,137 @@
+//! Minimal std-only error plumbing.
+//!
+//! The crate builds offline with zero external dependencies; this module
+//! provides the small slice of the `anyhow` surface the code uses
+//! (a string-chained [`Error`], a [`Result`] alias, the [`Context`]
+//! extension trait and the [`err!`]/[`bail!`]/[`ensure!`] macros), so
+//! swapping a real error crate back in later is a one-line import change
+//! per file.
+
+use std::fmt;
+
+/// A flattened error message (context chain pre-joined with `": "`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension for results and options.
+pub trait Context<T> {
+    /// Replace/describe the error with a static message.
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Same, with the message built lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (the `anyhow!` analogue).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::core::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error (the `anyhow::bail!` analogue).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(err!("n = {}", 7).to_string(), "n = 7");
+    }
+}

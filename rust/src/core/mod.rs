@@ -1,6 +1,8 @@
-//! Core substrates: residual networks, DIMACS I/O, partitioning, PRNG.
+//! Core substrates: residual networks, DIMACS I/O, partitioning, PRNG,
+//! and the crate's std-only error plumbing.
 
 pub mod graph;
 pub mod dimacs;
+pub mod error;
 pub mod partition;
 pub mod prng;

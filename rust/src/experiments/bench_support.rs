@@ -1,0 +1,390 @@
+//! Shared scaffolding for the paper-figure bench binaries in
+//! `rust/benches/`.
+//!
+//! Every bench binary is `fn main() { bench_support::bench_main("<id>") }`:
+//! it re-runs the experiment's print path (the same `figures`/`tables`
+//! code the CLI drives) and then measures a small *probe* — canonical
+//! instances solved by the competitors relevant to that experiment —
+//! whose results are written as machine-readable `BENCH_<id>.json`
+//! (maxflow value, sweep count, discharges, wall time per record) so the
+//! perf trajectory accumulates in CI artifacts from this PR onward.
+//!
+//! Flags (after `cargo bench --bench <name> --`):
+//! * `--quick` / `--full` — force the scale tier (default: quick unless
+//!   `ARMINCUT_FULL=1`);
+//! * `--out DIR` — where to write `BENCH_<id>.json` (default
+//!   `bench_results`);
+//! * `--probe-only` — skip the experiment print path, emit only the
+//!   measured probe (used by the CI smoke job to keep runtimes tight).
+
+use super::harness::{assert_flows_agree, run_competitor, Competitor, CompetitorResult};
+use crate::coordinator::sequential::{solve_sequential, SeqOptions, SolveResult};
+use crate::core::graph::{Cap, Graph};
+use crate::core::partition::Partition;
+use crate::gen::adversarial::adversarial_chains;
+use crate::gen::grid3d::{grid3d_segmentation, Grid3dParams};
+use crate::gen::stereo::{stereo_bvz, StereoParams};
+use crate::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+use crate::region::reduction::reduce_all;
+use crate::runtime::grid_accel::GridProblem;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Parsed bench-binary options.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub probe_only: bool,
+}
+
+impl BenchOptions {
+    /// Parse `std::env::args()`-style flags (see module docs).
+    pub fn from_args<I: IntoIterator<Item = String>>(args: I) -> BenchOptions {
+        let mut quick = super::harness::is_quick();
+        let mut out_dir = PathBuf::from("bench_results");
+        let mut probe_only = false;
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--full" => quick = false,
+                "--probe-only" => probe_only = true,
+                "--out" => match it.next() {
+                    Some(dir) if !dir.starts_with("--") => out_dir = PathBuf::from(dir),
+                    other => panic!("--out needs a directory argument, got {other:?}"),
+                },
+                // `cargo bench` forwards its own flags (e.g. --bench);
+                // ignore anything we do not recognize
+                _ => {}
+            }
+        }
+        BenchOptions { quick, out_dir, probe_only }
+    }
+}
+
+/// One measured probe record of a bench run.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Instance label, e.g. `synth2d-48x48-s150-k4`.
+    pub case: String,
+    pub solver: String,
+    pub flow: Cap,
+    pub sweeps: u32,
+    pub discharges: u64,
+    pub wall_seconds: f64,
+    pub converged: bool,
+}
+
+impl BenchRecord {
+    fn from_competitor(case: &str, r: &CompetitorResult) -> BenchRecord {
+        BenchRecord {
+            case: case.to_string(),
+            solver: r.name.clone(),
+            flow: r.flow,
+            sweeps: r.sweeps,
+            discharges: r.discharges,
+            wall_seconds: r.seconds,
+            converged: r.converged,
+        }
+    }
+
+    fn from_solve(case: &str, solver: &str, res: &SolveResult) -> BenchRecord {
+        BenchRecord {
+            case: case.to_string(),
+            solver: solver.to_string(),
+            flow: res.metrics.flow,
+            sweeps: res.metrics.sweeps,
+            discharges: res.metrics.discharges,
+            wall_seconds: res.metrics.t_total.as_secs_f64(),
+            converged: res.metrics.converged,
+        }
+    }
+}
+
+fn probe_competitors(
+    case: &str,
+    g: &Graph,
+    part: &Partition,
+    comps: &[Competitor],
+    out: &mut Vec<BenchRecord>,
+) {
+    let mut results = Vec::new();
+    for &c in comps {
+        let r = run_competitor(c, g, part);
+        assert!(r.converged, "{} did not converge on {case}", r.name);
+        out.push(BenchRecord::from_competitor(case, &r));
+        results.push(r);
+    }
+    assert_flows_agree(&results);
+}
+
+/// The shared §7.1-style probe instance (one definition so every bench
+/// that samples it measures the same family).
+fn synth2d_instance(quick: bool) -> (usize, Graph) {
+    let side = if quick { 48 } else { 192 };
+    let p = Synthetic2dParams {
+        width: side,
+        height: side,
+        strength: 150,
+        seed: 1,
+        ..Default::default()
+    };
+    (side, synthetic_2d(&p))
+}
+
+fn synth2d_probe(quick: bool) -> (String, Graph, Partition) {
+    let (side, g) = synth2d_instance(quick);
+    let part = Partition::grid2d(side, side, 2, 2);
+    (format!("synth2d-{side}x{side}-s150-k4"), g, part)
+}
+
+fn grid3d_probe(quick: bool) -> (String, Graph, Partition) {
+    let side = if quick { 12 } else { 32 };
+    let s = if quick { 2 } else { 4 };
+    let g = grid3d_segmentation(&Grid3dParams::segmentation(side, 10, 5));
+    let part = Partition::grid3d(side, side, side, s, s, s);
+    (format!("seg3d-{side}^3-k{}", s * s * s), g, part)
+}
+
+fn stereo_probe(quick: bool) -> (String, Graph, Partition, usize) {
+    let (w, h) = if quick { (60, 45) } else { (200, 150) };
+    let g = stereo_bvz(&StereoParams { width: w, height: h, ..Default::default() });
+    let k = 8;
+    let part = Partition::by_node_ranges(g.n(), k);
+    (format!("bvz-{w}x{h}-k{k}"), g, part, k)
+}
+
+/// The measured probe of one experiment id. Panics (failing the bench)
+/// when converged solvers disagree on any probe instance.
+pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
+    use Competitor::*;
+    let mut out = Vec::new();
+    match id {
+        "fig6" | "fig8" | "fig9" => {
+            let (case, g, part) = synth2d_probe(quick);
+            probe_competitors(&case, &g, &part, &[Bk, SArd, SPrd], &mut out);
+        }
+        "fig7" => {
+            // sweep stability against the region count
+            let (side, g) = synth2d_instance(quick);
+            for s in [2usize, 3] {
+                let part = Partition::grid2d(side, side, s, s);
+                let case = format!("synth2d-{side}x{side}-s150-k{}", s * s);
+                probe_competitors(&case, &g, &part, &[SArd, SPrd], &mut out);
+            }
+        }
+        "fig10" => {
+            let (case, g, part) = synth2d_probe(quick);
+            probe_competitors(&case, &g, &part, &[SArd, SPrd], &mut out);
+        }
+        "fig11" => {
+            let (case, g, part, _) = stereo_probe(quick);
+            probe_competitors(&case, &g, &part, &[Bk, SArd], &mut out);
+        }
+        "table1" => {
+            let (case, g, part) = grid3d_probe(quick);
+            probe_competitors(&case, &g, &part, &[Bk, SArdStream, SPrdStream], &mut out);
+        }
+        "table2" => {
+            let (case, g, part) = grid3d_probe(quick);
+            probe_competitors(&case, &g, &part, &[Bk, PArd(4), PPrd(4)], &mut out);
+        }
+        "table3" => {
+            let (case, g, part) = grid3d_probe(quick);
+            probe_competitors(&case, &g, &part, &[Bk, SArd], &mut out);
+            let t = Instant::now();
+            let (mask, _frac) = reduce_all(&g, &part);
+            out.push(BenchRecord {
+                case,
+                solver: "reduction-alg5".to_string(),
+                // for the reduction the tracked scalar is decided nodes
+                flow: mask.iter().filter(|&&d| d).count() as Cap,
+                sweeps: 1,
+                discharges: part.k as u64,
+                wall_seconds: t.elapsed().as_secs_f64(),
+                converged: true,
+            });
+        }
+        "appendix_a" => {
+            let k = if quick { 32 } else { 512 };
+            let (g, part) = adversarial_chains(k, 1000);
+            let case = format!("adversarial-{k}chains");
+            probe_competitors(&case, &g, &part, &[SArd, SPrd], &mut out);
+        }
+        "ablation" => {
+            let (case, g, part) = synth2d_probe(quick);
+            for (name, opts) in [
+                ("s-ard-basic", SeqOptions::ard_basic()),
+                ("s-ard-heuristics", SeqOptions::ard()),
+            ] {
+                let res = solve_sequential(&g, &part, &opts);
+                assert!(res.metrics.converged, "{name} did not converge");
+                out.push(BenchRecord::from_solve(&case, name, &res));
+            }
+            assert_eq!(out[0].flow, out[1].flow, "ablation flows must agree");
+        }
+        "accel" => {
+            let side = if quick { 32 } else { 64 };
+            let case = format!("grid-{side}x{side}-waves");
+            let mut p = GridProblem::random(side, side, 20, 40, 1);
+            let t = Instant::now();
+            let mut waves = 0u32;
+            while p.any_active() {
+                p.wave_reference();
+                waves += 1;
+                if waves % 32 == 0 {
+                    p.gap_heuristic();
+                }
+                assert!(waves < 1_000_000, "wave probe did not converge");
+            }
+            out.push(BenchRecord {
+                case,
+                solver: "rust-waves".to_string(),
+                flow: p.flow,
+                sweeps: waves,
+                discharges: waves as u64,
+                wall_seconds: t.elapsed().as_secs_f64(),
+                converged: true,
+            });
+        }
+        other => panic!("no probe defined for experiment id: {other}"),
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize a bench run (hand-rolled; the crate has no serde).
+pub fn to_json(
+    id: &str,
+    quick: bool,
+    experiment_seconds: Option<f64>,
+    records: &[BenchRecord],
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
+    s.push_str("  \"schema\": 1,\n");
+    let _ = writeln!(s, "  \"quick\": {quick},");
+    match experiment_seconds {
+        Some(t) => {
+            let _ = writeln!(s, "  \"experiment_wall_seconds\": {t:.6},");
+        }
+        None => s.push_str("  \"experiment_wall_seconds\": null,\n"),
+    }
+    s.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"case\": \"{}\", \"solver\": \"{}\", \"flow\": {}, \"sweeps\": {}, \
+             \"discharges\": {}, \"wall_seconds\": {:.6}, \"converged\": {}}}{}",
+            json_escape(&r.case),
+            json_escape(&r.solver),
+            r.flow,
+            r.sweeps,
+            r.discharges,
+            r.wall_seconds,
+            r.converged,
+            if i + 1 < records.len() { "," } else { "" },
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run one bench end-to-end: experiment print path (unless
+/// `probe_only`), measured probe, `BENCH_<id>.json` emission. Returns
+/// the path written.
+pub fn run_bench(id: &str, opts: &BenchOptions) -> PathBuf {
+    let experiment_seconds = if opts.probe_only {
+        None
+    } else {
+        let t = Instant::now();
+        super::run(id, opts.quick).expect("experiment failed");
+        Some(t.elapsed().as_secs_f64())
+    };
+    let records = probe_records(id, opts.quick);
+    std::fs::create_dir_all(&opts.out_dir).expect("create bench output dir");
+    let path = opts.out_dir.join(format!("BENCH_{id}.json"));
+    let json = to_json(id, opts.quick, experiment_seconds, &records);
+    let mut f = std::fs::File::create(&path).expect("create bench json");
+    f.write_all(json.as_bytes()).expect("write bench json");
+    println!("\nbench {id}: wrote {} ({} records)", path.display(), records.len());
+    path
+}
+
+/// Entry point for the bench binaries in `rust/benches/`.
+pub fn bench_main(id: &str) {
+    let opts = BenchOptions::from_args(std::env::args().skip(1));
+    run_bench(id, &opts);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_parse_flags() {
+        let o = BenchOptions::from_args(
+            ["--quick", "--out", "x/y", "--probe-only", "--bench"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert!(o.quick);
+        assert!(o.probe_only);
+        assert_eq!(o.out_dir, PathBuf::from("x/y"));
+        let o = BenchOptions::from_args(["--full"].iter().map(|s| s.to_string()));
+        assert!(!o.quick);
+    }
+
+    #[test]
+    fn json_shape_is_parseable_ish() {
+        let recs = vec![BenchRecord {
+            case: "c\"1".into(),
+            solver: "S-ARD".into(),
+            flow: 42,
+            sweeps: 3,
+            discharges: 12,
+            wall_seconds: 0.25,
+            converged: true,
+        }];
+        let j = to_json("fig6", true, Some(1.5), &recs);
+        assert!(j.contains("\"bench\": \"fig6\""));
+        assert!(j.contains("\\\"1"));
+        assert!(j.contains("\"flow\": 42"));
+        assert!(j.contains("\"converged\": true"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn accel_probe_emits_flow_and_waves() {
+        let recs = probe_records("accel", true);
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].sweeps > 0);
+        assert!(recs[0].converged);
+    }
+
+    #[test]
+    #[should_panic(expected = "no probe defined")]
+    fn probe_rejects_unknown_id() {
+        probe_records("nope", true);
+    }
+}

@@ -63,6 +63,8 @@ pub struct CompetitorResult {
     pub flow: Cap,
     pub seconds: f64,
     pub sweeps: u32,
+    /// Individual region discharges executed (1 for whole-graph solvers).
+    pub discharges: u64,
     pub msg_bytes: u64,
     pub disk_bytes: u64,
     pub mem_bytes: usize,
@@ -99,6 +101,7 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 flow: m.flow,
                 seconds: m.cpu().as_secs_f64(),
                 sweeps: m.sweeps,
+                discharges: m.discharges,
                 msg_bytes: m.msg_bytes,
                 disk_bytes: m.disk_read_bytes + m.disk_write_bytes,
                 mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes,
@@ -124,6 +127,7 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 flow: m.flow,
                 seconds: m.t_total.as_secs_f64(),
                 sweeps: m.sweeps,
+                discharges: m.discharges,
                 msg_bytes: m.msg_bytes,
                 disk_bytes: 0,
                 mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes,
@@ -145,6 +149,7 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 flow: m.flow,
                 seconds: m.t_total.as_secs_f64(),
                 sweeps: m.sweeps,
+                discharges: m.discharges,
                 msg_bytes: m.msg_bytes,
                 disk_bytes: 0,
                 mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes,
@@ -165,6 +170,7 @@ fn whole_graph(c: Competitor, g: &Graph, solver: &mut dyn MaxFlowSolver) -> Comp
         flow,
         seconds,
         sweeps: 1,
+        discharges: 1,
         msg_bytes: 0,
         disk_bytes: 0,
         mem_bytes: gc.memory_bytes(),

@@ -14,11 +14,19 @@
 //! `quick = false`) for paper-scale instances (1000×1000 grids etc.).
 
 pub mod accel;
+pub mod bench_support;
 pub mod figures;
 pub mod harness;
 pub mod tables;
 
 pub use harness::{is_quick, run_competitor, CompetitorResult};
+
+/// Every experiment/bench id, in canonical order — the single source the
+/// `all` dispatchers (here and in the CLI's `bench` subcommand) iterate.
+pub const ALL_IDS: [&str; 12] = [
+    "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table1", "table2", "table3",
+    "appendix_a", "ablation", "accel",
+];
 
 /// Run one experiment by id. Returns an error string for unknown ids.
 pub fn run(id: &str, quick: bool) -> Result<(), String> {
@@ -36,10 +44,7 @@ pub fn run(id: &str, quick: bool) -> Result<(), String> {
         "ablation" => tables::ablation_heuristics(quick),
         "accel" => accel::accel_experiment(quick),
         "all" => {
-            for id in [
-                "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table1", "table2",
-                "table3", "appendix_a", "ablation", "accel",
-            ] {
+            for id in ALL_IDS {
                 run(id, quick)?;
             }
         }

@@ -7,6 +7,7 @@
 //! * `split`       — the paper's *splitter* tool: region part files
 //! * `reduce`      — Alg. 5 region reduction statistics (Table 3 style)
 //! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3)
+//! * `bench`       — run paper-figure benches, emit `BENCH_<id>.json`
 //! * `accel`       — the PJRT kernel demo on a grid instance
 //!
 //! Run `armincut help` for the option list.
@@ -33,6 +34,7 @@ USAGE:
   armincut split   --input FILE|--gen SPEC --regions K --out DIR
   armincut reduce  --input FILE|--gen SPEC --regions K
   armincut experiment ID [--full]
+  armincut bench   ID|all [--quick|--full] [--out DIR] [--probe-only]
   armincut accel   [--artifacts DIR]
   armincut help
 
@@ -52,9 +54,14 @@ GEN SPECS:
   surf3d:SIDE,STRENGTH,SEED          (sparse-seed surface volume)
   bvz:W,H,SEED / kz2:W,H,SEED        (stereo-like)
 
-EXPERIMENT IDS:
+EXPERIMENT / BENCH IDS:
   fig6 fig7 fig8 fig9 fig10 fig11 table1 table2 table3
   appendix_a ablation accel all
+
+BENCH OPTIONS:
+  --quick / --full     scale tier (default quick unless ARMINCUT_FULL=1)
+  --out DIR            BENCH_<id>.json output dir (default bench_results)
+  --probe-only         skip the table/figure print path, emit JSON only
 "#;
 
 fn main() {
@@ -70,6 +77,7 @@ fn main() {
         "split" => cmd_split(&opts),
         "reduce" => cmd_reduce(&opts),
         "experiment" => cmd_experiment(&args[1..], &opts),
+        "bench" => cmd_bench(&args[1..]),
         "accel" => cmd_accel(&opts),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -223,8 +231,7 @@ fn cmd_solve(opts: &Flags) -> i32 {
             (res.metrics.summary(algo), res.cut)
         }
         "dd" => {
-            let mut o = DdOptions::default();
-            o.threads = threads;
+            let o = DdOptions { threads, ..DdOptions::default() };
             let res = solve_dd(&g, &part, &o);
             (res.metrics.summary("dd"), res.cut)
         }
@@ -367,6 +374,55 @@ fn cmd_experiment(args: &[String], opts: &Flags) -> i32 {
             2
         }
     }
+}
+
+/// Run one (or all) paper-figure benches through
+/// `experiments::bench_support`, emitting `BENCH_<id>.json` each.
+fn cmd_bench(args: &[String]) -> i32 {
+    use armincut::experiments::bench_support::{run_bench, BenchOptions};
+    // the id is the first bare token, skipping `--out DIR` value pairs
+    let mut id: Option<&String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--out" {
+            i += 2;
+            continue;
+        }
+        if !args[i].starts_with("--") {
+            id = Some(&args[i]);
+            break;
+        }
+        i += 1;
+    }
+    let Some(id) = id else {
+        eprintln!("need a bench id (fig6..fig11, table1..3, appendix_a, ablation, accel, all)");
+        return 2;
+    };
+    if id.as_str() != "all" && !armincut::experiments::ALL_IDS.contains(&id.as_str()) {
+        eprintln!("error: unknown bench id '{id}' (expected one of: {} all)",
+            armincut::experiments::ALL_IDS.join(" "));
+        return 2;
+    }
+    // unlike the bench binaries (which must tolerate cargo-forwarded
+    // flags), the CLI rejects anything it does not understand
+    for (i, a) in args.iter().enumerate() {
+        let known = matches!(a.as_str(), "--quick" | "--full" | "--probe-only" | "--out");
+        let is_out_value = i > 0 && args[i - 1] == "--out";
+        if a.starts_with("--") && !known && !is_out_value {
+            eprintln!("error: unknown bench flag '{a}'");
+            return 2;
+        }
+    }
+    let opts = BenchOptions::from_args(args.iter().cloned());
+    let ids: Vec<&str> = if id.as_str() == "all" {
+        armincut::experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        run_bench(id, &opts);
+    }
+    0
 }
 
 fn cmd_accel(opts: &Flags) -> i32 {

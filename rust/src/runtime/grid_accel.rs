@@ -18,7 +18,7 @@
 
 use crate::core::graph::{Cap, Graph, GraphBuilder, NodeId};
 use crate::runtime::pjrt::{literal_i32_plane, literal_to_vec_i32, Executable, PjrtRuntime};
-use anyhow::{Context, Result};
+use crate::core::error::{Context, Result};
 
 /// Direction indices into [`GridProblem::caps`].
 pub const N: usize = 0;
@@ -364,7 +364,7 @@ impl GridAccel {
 
     /// One artifact call = `waves_per_call` lock-step waves on `p`.
     pub fn step(&mut self, p: &mut GridProblem) -> Result<i64> {
-        anyhow::ensure!(p.h == self.h && p.w == self.w, "shape mismatch");
+        crate::ensure!(p.h == self.h && p.w == self.w, "shape mismatch");
         let (h, w) = (p.h, p.w);
         let inputs = vec![
             literal_i32_plane(&p.excess, h, w)?,
@@ -378,7 +378,7 @@ impl GridAccel {
             literal_i32_plane(&[p.d_inf], 1, 1)?,
         ];
         let out = self.exe.run(&inputs)?;
-        anyhow::ensure!(out.len() == 8, "expected 8 outputs, got {}", out.len());
+        crate::ensure!(out.len() == 8, "expected 8 outputs, got {}", out.len());
         p.excess = literal_to_vec_i32(&out[0])?;
         p.label = literal_to_vec_i32(&out[1])?;
         p.caps[N] = literal_to_vec_i32(&out[2])?;
@@ -435,8 +435,8 @@ impl TiledAccelCoordinator {
     /// on convergence within `max_sweeps`.
     pub fn solve(&mut self, g: &mut GridProblem, max_sweeps: u32) -> Result<bool> {
         let t = self.tile;
-        anyhow::ensure!(g.h % t == 0 && g.w % t == 0, "grid must tile evenly");
-        anyhow::ensure!(g.frozen.iter().all(|&f| f == 0), "global frozen mask must be zero");
+        crate::ensure!(g.h % t == 0 && g.w % t == 0, "grid must tile evenly");
+        crate::ensure!(g.frozen.iter().all(|&f| f == 0), "global frozen mask must be zero");
         let (ty_n, tx_n) = (g.h / t, g.w / t);
         g.d_inf = (g.h * g.w + 2) as i32;
         g.global_relabel(); // §5.1: one exact labeling up front
@@ -457,7 +457,7 @@ impl TiledAccelCoordinator {
                         self.accel.step(&mut p)?;
                         p.gap_heuristic();
                         guard += 1;
-                        anyhow::ensure!(guard < 100_000, "tile discharge did not converge");
+                        crate::ensure!(guard < 100_000, "tile discharge did not converge");
                     }
                     self.discharges += 1;
                     write_back_tile(g, &p, &pre, ty, tx, t);
@@ -471,7 +471,7 @@ impl TiledAccelCoordinator {
     /// Same sweep schedule but with the pure-rust wave (no PJRT) — used
     /// by tests and as the bench baseline.
     pub fn solve_reference(g: &mut GridProblem, tile: usize, max_sweeps: u32) -> Result<bool> {
-        anyhow::ensure!(g.h % tile == 0 && g.w % tile == 0, "grid must tile evenly");
+        crate::ensure!(g.h % tile == 0 && g.w % tile == 0, "grid must tile evenly");
         let side = tile + 2;
         let (ty_n, tx_n) = (g.h / tile, g.w / tile);
         g.d_inf = (g.h * g.w + 2) as i32;
@@ -496,7 +496,7 @@ impl TiledAccelCoordinator {
                             p.gap_heuristic();
                         }
                         guard += 1;
-                        anyhow::ensure!(guard < 3_000_000, "tile discharge did not converge");
+                        crate::ensure!(guard < 3_000_000, "tile discharge did not converge");
                     }
                     write_back_tile(g, &p, &pre, ty, tx, tile);
                 }

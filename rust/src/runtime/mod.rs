@@ -2,6 +2,11 @@
 //! the rust coordinator. Python never runs at solve time — the
 //! artifacts under `artifacts/*.hlo.txt` are produced once by
 //! `make artifacts` (`python/compile/aot.py`).
+//!
+//! The PJRT client itself is gated behind the `pjrt` cargo feature;
+//! default builds compile a stub whose constructor errors, so
+//! [`grid_accel`]'s pure-rust wave mirror and tiled coordinator remain
+//! fully usable with zero external dependencies.
 
 pub mod grid_accel;
 pub mod pjrt;

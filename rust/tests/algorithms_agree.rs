@@ -7,12 +7,14 @@
 use armincut::coordinator::dd::{solve_dd, DdOptions};
 use armincut::coordinator::parallel::{solve_parallel, ParOptions};
 use armincut::coordinator::sequential::{solve_sequential, CoreKind, SeqOptions};
+use armincut::core::dimacs::{read_dimacs, write_dimacs};
 use armincut::core::graph::Graph;
 use armincut::core::partition::Partition;
 use armincut::gen::grid3d::{grid3d_segmentation, Grid3dParams};
 use armincut::gen::stereo::{stereo_bvz, stereo_kz2, StereoParams};
 use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
 use armincut::solvers::{bk::Bk, dinic::Dinic, hpr::Hpr, MaxFlowSolver};
+use std::io::BufReader;
 
 fn whole(g: &Graph, s: &mut dyn MaxFlowSolver) -> i64 {
     let mut gc = g.clone();
@@ -113,6 +115,67 @@ fn streaming_agrees_on_structured_instance() {
     assert!(res.metrics.converged);
     assert_eq!(res.metrics.flow, expect);
     assert!(res.metrics.disk_read_bytes > 0 && res.metrics.disk_write_bytes > 0);
+}
+
+/// BK, Dinic, HPR, S-ARD and S-PRD must return the same maxflow on
+/// small random grids from `gen::synthetic2d` at deterministic seeds —
+/// the explicit cross-solver fixture the CI gate runs on every push.
+#[test]
+fn five_solvers_agree_on_seeded_synthetic2d() {
+    for seed in [1u64, 7, 42, 1234] {
+        for strength in [5, 80] {
+            let g = synthetic_2d(&Synthetic2dParams {
+                width: 14,
+                height: 11,
+                connectivity: 8,
+                strength,
+                excess_range: 120,
+                seed,
+            });
+            let expect = whole(&g, &mut Bk::new());
+            assert_eq!(whole(&g, &mut Dinic::new()), expect, "dinic seed {seed} s{strength}");
+            assert_eq!(whole(&g, &mut Hpr::new()), expect, "hpr seed {seed} s{strength}");
+            let p = Partition::by_node_ranges(g.n(), 4);
+            let snap = g.snapshot();
+            let ard = solve_sequential(&g, &p, &SeqOptions::ard());
+            assert!(ard.metrics.converged, "s-ard seed {seed}");
+            assert_eq!(ard.metrics.flow, expect, "s-ard seed {seed} s{strength}");
+            assert_eq!(g.cut_cost(&snap, &ard.cut), expect, "s-ard cut seed {seed}");
+            let prd = solve_sequential(&g, &p, &SeqOptions::prd());
+            assert!(prd.metrics.converged, "s-prd seed {seed}");
+            assert_eq!(prd.metrics.flow, expect, "s-prd seed {seed} s{strength}");
+            assert_eq!(g.cut_cost(&snap, &prd.cut), expect, "s-prd cut seed {seed}");
+        }
+    }
+}
+
+/// DIMACS round-trip: write a generated instance, read it back, and
+/// check that the maxflow value (the semantic payload) is preserved —
+/// under both the unpaired (multigraph) and paired readers.
+#[test]
+fn dimacs_roundtrip_preserves_flow() {
+    for seed in [3u64, 9] {
+        let g = synthetic_2d(&Synthetic2dParams::small(12, 9, 17, seed));
+        let expect = whole(&g, &mut Bk::new());
+        let mut buf = Vec::new();
+        write_dimacs(&g, &mut buf).expect("write dimacs");
+        for pair_arcs in [false, true] {
+            let p = read_dimacs(BufReader::new(&buf[..]), pair_arcs).expect("read dimacs");
+            let g2 = p.builder.build();
+            assert_eq!(g2.n(), g.n(), "seed {seed} pair {pair_arcs}: node count");
+            assert_eq!(
+                whole(&g2, &mut Bk::new()),
+                expect,
+                "seed {seed} pair {pair_arcs}: flow after round-trip"
+            );
+        }
+        // second round-trip is a fixpoint on the flow value
+        let g2 = read_dimacs(BufReader::new(&buf[..]), false).unwrap().builder.build();
+        let mut buf2 = Vec::new();
+        write_dimacs(&g2, &mut buf2).expect("write dimacs again");
+        let g3 = read_dimacs(BufReader::new(&buf2[..]), false).unwrap().builder.build();
+        assert_eq!(whole(&g3, &mut Bk::new()), expect, "seed {seed}: second round-trip");
+    }
 }
 
 #[test]

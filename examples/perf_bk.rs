@@ -1,4 +1,7 @@
-//! Count BK work inside ARD stages (restart overhead estimate).
+//! Count BK work inside ARD stages. With warm starts (the default) the
+//! grow/adopt totals drop sharply against `ard.warm_start = false` —
+//! the §6.3 forest-reuse win in isolation. Counters are cumulative over
+//! the workspace lifetime, so the final print is the 10-sweep total.
 use armincut::core::partition::Partition;
 use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
 use armincut::region::ard::{Ard, ArdCore};
@@ -6,24 +9,40 @@ use armincut::region::decompose::{Decomposition, DistanceMode};
 
 fn main() {
     let side = 400;
-    let p = Synthetic2dParams { width: side, height: side, strength: 150, seed: 1, ..Default::default() };
+    let p = Synthetic2dParams {
+        width: side,
+        height: side,
+        strength: 150,
+        seed: 1,
+        ..Default::default()
+    };
     let g = synthetic_2d(&p);
     let part = Partition::grid2d(side, side, 4, 4);
-    let mut dec = Decomposition::new(&g, &part, DistanceMode::Ard);
-    let d_inf = dec.shared.d_inf;
-    let mut ard = Ard::new(ArdCore::bk());
-    let t = std::time::Instant::now();
-    let mut stages = 0u64;
-    for sweep in 0..10 {
-        for r in 0..dec.parts.len() {
-            dec.sync_in(r);
-            let st = ard.discharge(&mut dec.parts[r], d_inf, sweep);
-            stages += st.stages as u64;
-            dec.sync_out(r);
+    for warm in [true, false] {
+        let mut dec = Decomposition::new(&g, &part, DistanceMode::Ard);
+        let d_inf = dec.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::bk());
+        ard.warm_start = warm;
+        let t = std::time::Instant::now();
+        let mut stages = 0u64;
+        for sweep in 0..10 {
+            for r in 0..dec.parts.len() {
+                dec.sync_in(r);
+                let st = ard.discharge(&mut dec.parts[r], d_inf, sweep);
+                stages += st.stages as u64;
+                dec.sync_out(r);
+            }
         }
-    }
-    println!("10 sweeps bk-core: {:.3}s, {stages} stages", t.elapsed().as_secs_f64());
-    if let ArdCore::Bk(bk) = &ard.core {
-        println!("augmentations {} grown {} adoptions {}", bk.augmentations, bk.adoptions, bk.grown);
+        let label = if warm { "warm" } else { "cold" };
+        println!(
+            "10 sweeps bk-core ({label}): {:.3}s, {stages} routing stages",
+            t.elapsed().as_secs_f64()
+        );
+        if let ArdCore::Bk(bk) = &ard.core {
+            println!(
+                "  augmentations {} grown {} adoptions {}",
+                bk.augmentations, bk.grown, bk.adoptions
+            );
+        }
     }
 }

@@ -1,4 +1,14 @@
 //! §Perf probe: S-ARD hot-path timing on a paper-style instance.
+//!
+//! Runs the BK core twice — warm (§6.3 forest reuse across stages, the
+//! default) and cold (forests rebuilt every stage, the pre-warm-start
+//! baseline) — so the discharge-time delta and the grow/augment/adopt
+//! work counters are directly comparable in one invocation:
+//!
+//! ```sh
+//! cargo run --release --example perf_probe           # 500×500
+//! cargo run --release --example perf_probe -- 1000   # 1000×1000 (§7.1)
+//! ```
 use armincut::coordinator::sequential::{solve_sequential, CoreKind, SeqOptions};
 use armincut::core::partition::Partition;
 use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
@@ -6,7 +16,13 @@ use armincut::solvers::{bk::Bk, MaxFlowSolver};
 
 fn main() {
     let side: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(500);
-    let p = Synthetic2dParams { width: side, height: side, strength: 150, seed: 1, ..Default::default() };
+    let p = Synthetic2dParams {
+        width: side,
+        height: side,
+        strength: 150,
+        seed: 1,
+        ..Default::default()
+    };
     let g = synthetic_2d(&p);
     let part = Partition::grid2d(side, side, 4, 4);
     println!("n={} m={} |B|={}", g.n(), g.num_arcs() / 2, part.stats(&g).boundary_nodes);
@@ -15,19 +31,28 @@ fn main() {
     let f = Bk::new().solve(&mut g.clone());
     println!("BK whole-graph: {:.3}s flow {f}", t.elapsed().as_secs_f64());
 
-    for (name, core) in [("bk-core", CoreKind::Bk), ("dinic-core", CoreKind::Dinic)] {
+    for (name, core, warm) in [
+        ("bk-core", CoreKind::Bk, true),
+        ("bk-core-cold", CoreKind::Bk, false),
+        ("dinic-core", CoreKind::Dinic, true),
+    ] {
         let mut o = SeqOptions::ard();
         o.core = core;
+        o.warm_start = warm;
         let res = solve_sequential(&g, &part, &o);
         assert_eq!(res.metrics.flow, f);
         println!(
-            "S-ARD {name}: total {:.3}s discharge {:.3}s relabel {:.3}s gap {:.3}s msg {:.3}s sweeps {}",
+            "S-ARD {name}: total {:.3}s discharge {:.3}s relabel {:.3}s gap {:.3}s \
+             msg {:.3}s sweeps {} core g/a/a {}/{}/{}",
             res.metrics.t_total.as_secs_f64(),
             res.metrics.t_discharge.as_secs_f64(),
             res.metrics.t_relabel.as_secs_f64(),
             res.metrics.t_gap.as_secs_f64(),
             res.metrics.t_msg.as_secs_f64(),
-            res.metrics.sweeps
+            res.metrics.sweeps,
+            res.metrics.core_grow,
+            res.metrics.core_augment,
+            res.metrics.core_adopt
         );
     }
     let res = solve_sequential(&g, &part, &SeqOptions::prd());

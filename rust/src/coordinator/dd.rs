@@ -191,7 +191,11 @@ pub fn solve_dd(g: &Graph, partition: &Partition, opts: &DdOptions) -> SolveResu
         .map(|v| g.excess[v].max(g.sink_cap[v]))
         .max()
         .unwrap_or(1);
-    let mut step: Cap = if opts.step0 > 0 { opts.step0 } else { max_term / 4 + 1 };
+    let mut step: Cap = if opts.step0 > 0 {
+        opts.step0
+    } else {
+        max_term / 4 + 1
+    };
     let mut rng = Rng::new(opts.seed);
 
     let mut metrics = RunMetrics {

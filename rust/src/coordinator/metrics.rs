@@ -20,6 +20,12 @@ pub struct RunMetrics {
     /// Streaming mode: bytes read/written to region page files.
     pub disk_read_bytes: u64,
     pub disk_write_bytes: u64,
+    /// ARD-core work totals (§6.3 forest-reuse visibility): vertices
+    /// grown into the search structure (BK) / BFS phases (Dinic),
+    /// augmenting paths, and orphan adoptions (BK only). Zero for PRD.
+    pub core_grow: u64,
+    pub core_augment: u64,
+    pub core_adopt: u64,
     /// CPU breakdown (Fig. 10): core discharge work, region-relabel,
     /// gap heuristics (global + boundary-relabel), message passing
     /// (sync_in/out), disk paging.
@@ -33,6 +39,10 @@ pub struct RunMetrics {
     /// Shared + maximum region-resident memory estimate, bytes.
     pub shared_mem_bytes: usize,
     pub max_region_mem_bytes: usize,
+    /// Total resident solver-workspace memory (the per-region
+    /// persistent `Ard`/`Prd` workspaces live for the whole solve;
+    /// streaming mode shares a single workspace instead).
+    pub workspace_mem_bytes: usize,
     /// Whether the algorithm terminated (DD may not).
     pub converged: bool,
 }
@@ -46,11 +56,16 @@ impl RunMetrics {
     /// One-line summary used by the CLI and benches.
     pub fn summary(&self, name: &str) -> String {
         format!(
-            "{name}: flow={} sweeps={}(+{}) discharges={} cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) io r/w {}/{} MB mem {}+{} MB{}",
+            "{name}: flow={} sweeps={}(+{}) discharges={} core g/a/a {}/{}/{} \
+             cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) \
+             io r/w {}/{} MB mem {}+{}+{} MB{}",
             self.flow,
             self.sweeps,
             self.extra_sweeps,
             self.discharges,
+            self.core_grow,
+            self.core_augment,
+            self.core_adopt,
             self.cpu().as_secs_f64(),
             self.t_discharge.as_secs_f64(),
             self.t_relabel.as_secs_f64(),
@@ -60,6 +75,7 @@ impl RunMetrics {
             self.disk_write_bytes / (1 << 20),
             self.shared_mem_bytes / (1 << 20),
             self.max_region_mem_bytes / (1 << 20),
+            self.workspace_mem_bytes / (1 << 20),
             if self.converged { "" } else { " [NOT CONVERGED]" },
         )
     }

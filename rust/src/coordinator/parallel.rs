@@ -30,6 +30,9 @@ use std::sync::Mutex;
 pub struct ParOptions {
     pub algorithm: Algorithm,
     pub core: CoreKind,
+    /// §6.3 forest reuse across ARD stages within one discharge
+    /// (`CoreKind::Bk` only). Off = the cold-start baseline.
+    pub warm_start: bool,
     /// Worker threads (the paper's experiments use 4).
     pub threads: usize,
     pub partial_discharge: bool,
@@ -44,6 +47,7 @@ impl Default for ParOptions {
         ParOptions {
             algorithm: Algorithm::Ard,
             core: CoreKind::Dinic, // see SeqOptions: ~2x over BK-core here
+            warm_start: true,
             threads: 4,
             partial_discharge: true,
             boundary_relabel: true,
@@ -62,50 +66,66 @@ impl ParOptions {
     }
 }
 
-/// One per-sweep discharge job: the region and its pre-discharge owned
-/// boundary labels (for gap accounting on the master thread).
+/// One per-sweep discharge job: the region plus its *own* persistent
+/// solver workspaces. Workspaces are per-region (not per-worker), so
+/// allocations — and any state a core keeps between discharges — follow
+/// the region no matter which worker picks the job up.
 struct Job<'a> {
     r: usize,
     part: &'a mut RegionPart,
+    ard: &'a mut Ard,
+    prd: &'a mut Prd,
 }
 
-/// Run the discharge jobs on `threads` workers; each worker owns its own
-/// solver workspace (allocations amortized across sweeps would need
-/// thread-local reuse; a fresh workspace per sweep keeps this simple and
-/// measurably cheap relative to discharge work).
+/// Run the discharge jobs on `threads` workers. Returns the summed ARD
+/// core counters `(grow, augment, adopt)` of this round.
 fn run_discharges(
     jobs: Vec<Job<'_>>,
     algorithm: Algorithm,
-    core: CoreKind,
     d_inf: u32,
     max_stage: u32,
     threads: usize,
-) {
+) -> (u64, u64, u64) {
     let queue = Mutex::new(jobs);
+    let counters = Mutex::new((0u64, 0u64, 0u64));
     std::thread::scope(|scope| {
         for _ in 0..threads.max(1) {
-            scope.spawn(|| {
-                let mut ard = Ard::new(match core {
-                    CoreKind::Dinic => ArdCore::dinic(),
-                    CoreKind::Bk => ArdCore::bk(),
-                });
-                let mut prd = Prd::new();
-                loop {
-                    let job = { queue.lock().unwrap().pop() };
-                    let Some(job) = job else { break };
-                    match algorithm {
-                        Algorithm::Ard => {
-                            ard.discharge(job.part, d_inf, max_stage);
-                        }
-                        Algorithm::Prd => {
-                            prd.discharge(job.part, d_inf);
-                        }
+            scope.spawn(|| loop {
+                let job = { queue.lock().unwrap().pop() };
+                let Some(job) = job else { break };
+                match algorithm {
+                    Algorithm::Ard => {
+                        let st = job.ard.discharge(job.part, d_inf, max_stage);
+                        let mut c = counters.lock().unwrap();
+                        c.0 += st.grow;
+                        c.1 += st.augment;
+                        c.2 += st.adopt;
                     }
-                    let _ = job.r;
+                    Algorithm::Prd => {
+                        job.prd.discharge(job.part, d_inf);
+                    }
                 }
+                let _ = job.r;
             });
         }
     });
+    counters.into_inner().unwrap()
+}
+
+/// Disjoint `&mut` selections of `items` at strictly increasing
+/// indices (the region lists produced by `active_regions` are sorted).
+fn select_muts<'a, T>(items: &'a mut [T], idxs: &[usize]) -> Vec<&'a mut T> {
+    let mut out = Vec::with_capacity(idxs.len());
+    let mut rest = items;
+    let mut offset = 0usize;
+    for &i in idxs {
+        let (_skip, tail) = rest.split_at_mut(i - offset);
+        let (item, tail) = tail.split_first_mut().unwrap();
+        out.push(item);
+        rest = tail;
+        offset = i + 1;
+    }
+    out
 }
 
 /// The fusion step (lines 4–6 of Alg. 2). Returns message bytes.
@@ -240,6 +260,20 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         }
     };
 
+    // Per-region persistent workspaces (see `Job`): allocations survive
+    // across discharges and sweeps.
+    let mut ards: Vec<Ard> = (0..dec.parts.len())
+        .map(|_| {
+            let mut a = Ard::new(match opts.core {
+                CoreKind::Dinic => ArdCore::dinic(),
+                CoreKind::Bk => ArdCore::bk(),
+            });
+            a.warm_start = opts.warm_start;
+            a
+        })
+        .collect();
+    let mut prds: Vec<Prd> = (0..dec.parts.len()).map(|_| Prd::new()).collect();
+
     let mut converged = true;
     while dec.any_active() {
         if metrics.sweeps as u64 >= limit {
@@ -264,17 +298,20 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         // ---- concurrent discharges (line 3 of Alg. 2) -------------------
         let td = Timer::start();
         {
-            let mut jobs: Vec<Job<'_>> = Vec::with_capacity(active.len());
-            let mut rest: &mut [RegionPart] = &mut dec.parts;
-            let mut offset = 0usize;
-            for &r in &active {
-                let (_skip, tail) = rest.split_at_mut(r - offset);
-                let (part, tail) = tail.split_first_mut().unwrap();
-                jobs.push(Job { r, part });
-                rest = tail;
-                offset = r + 1;
-            }
-            run_discharges(jobs, opts.algorithm, opts.core, d_inf, max_stage, opts.threads);
+            let parts = select_muts(&mut dec.parts, &active);
+            let job_ards = select_muts(&mut ards, &active);
+            let job_prds = select_muts(&mut prds, &active);
+            let jobs: Vec<Job<'_>> = active
+                .iter()
+                .zip(parts)
+                .zip(job_ards.into_iter().zip(job_prds))
+                .map(|((&r, part), (ard, prd))| Job { r, part, ard, prd })
+                .collect();
+            let (cg, ca, cd) =
+                run_discharges(jobs, opts.algorithm, d_inf, max_stage, opts.threads);
+            metrics.core_grow += cg;
+            metrics.core_augment += ca;
+            metrics.core_adopt += cd;
         }
         td.stop(&mut metrics.t_discharge);
         metrics.discharges += active.len() as u64;
@@ -328,6 +365,8 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
 
     metrics.flow = dec.flow_value();
     metrics.converged = converged;
+    metrics.workspace_mem_bytes = ards.iter().map(|a| a.memory_bytes()).sum::<usize>()
+        + prds.iter().map(|p| p.memory_bytes()).sum::<usize>();
     let cut = dec.cut_sides_by_label();
     metrics.t_total = t_total.elapsed();
     SolveResult { metrics, cut }
@@ -393,6 +432,21 @@ mod tests {
             let g = random_graph(50 + seed, 60, 120);
             check(&g, &ParOptions::ard(3), 8);
         }
+    }
+
+    #[test]
+    fn p_ard_bk_core_matches_oracle() {
+        // warm-start BK forests inside concurrent discharges
+        let mut o = ParOptions::ard(3);
+        o.core = CoreKind::Bk;
+        for seed in 0..4 {
+            let g = random_graph(60 + seed, 40, 80);
+            check(&g, &o, 5);
+        }
+        // cold baseline stays equivalent
+        o.warm_start = false;
+        let g = random_graph(64, 40, 80);
+        check(&g, &o, 5);
     }
 
     #[test]

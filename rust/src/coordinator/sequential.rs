@@ -44,6 +44,10 @@ pub enum CoreKind {
 pub struct SeqOptions {
     pub algorithm: Algorithm,
     pub core: CoreKind,
+    /// §6.3 forest reuse across ARD stages within one discharge
+    /// (`CoreKind::Bk` only; the Dinic core rebuilds its level graph
+    /// every stage regardless). Off = the cold-start baseline.
+    pub warm_start: bool,
     /// §6.2 partial discharges: in sweep `s` run ARD stages `0..=s`.
     pub partial_discharge: bool,
     /// §6.1 boundary-relabel heuristic after every sweep (ARD only).
@@ -74,6 +78,7 @@ impl Default for SeqOptions {
             // core in this implementation (EXPERIMENTS.md §Perf); the
             // paper's choice (BK, §5.3) remains available via `core`.
             core: CoreKind::Dinic,
+            warm_start: true,
             partial_discharge: true,
             boundary_relabel: true,
             global_gap: true,
@@ -341,7 +346,10 @@ fn discharge_region(
     let td = Timer::start();
     match opts.algorithm {
         Algorithm::Ard => {
-            ard.discharge(&mut dec.parts[r], d_inf, max_stage);
+            let st = ard.discharge(&mut dec.parts[r], d_inf, max_stage);
+            metrics.core_grow += st.grow;
+            metrics.core_augment += st.augment;
+            metrics.core_adopt += st.adopt;
         }
         Algorithm::Prd => {
             prd.discharge(&mut dec.parts[r], d_inf);
@@ -384,11 +392,25 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
         ..RunMetrics::default()
     };
 
-    let mut ard = Ard::new(match opts.core {
-        CoreKind::Dinic => ArdCore::dinic(),
-        CoreKind::Bk => ArdCore::bk(),
-    });
-    let mut prd = Prd::new();
+    // Per-region persistent workspaces: solver allocations (masks, BK
+    // forest arrays, Dinic levels) survive across discharges and sweeps
+    // instead of being regrown from empty vectors on region switches.
+    // Streaming mode instead shares ONE workspace so the §5.3 bound
+    // (one region resident) is not defeated by per-region solver arrays
+    // — warm starts are intra-discharge only (stage 0 is always cold),
+    // so sharing loses nothing there.
+    let mk_ard = || {
+        let mut a = Ard::new(match opts.core {
+            CoreKind::Dinic => ArdCore::dinic(),
+            CoreKind::Bk => ArdCore::bk(),
+        });
+        a.warm_start = opts.warm_start;
+        a
+    };
+    let n_ws = if opts.streaming_dir.is_some() { 1 } else { dec.parts.len() };
+    let wi = move |r: usize| if n_ws == 1 { 0 } else { r };
+    let mut ards: Vec<Ard> = (0..n_ws).map(|_| mk_ard()).collect();
+    let mut prds: Vec<Prd> = (0..n_ws).map(|_| Prd::new()).collect();
     let mut gap = opts
         .global_gap
         .then(|| GapState::new(&dec, opts.algorithm == Algorithm::Prd));
@@ -443,8 +465,16 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
                     for &r in &[a, b] {
                         if dec.region_needs(r) {
                             discharge_region(
-                                &mut dec, &mut metrics, &mut ard, &mut prd, &mut gap,
-                                &mut label_scratch, opts, r, d_inf, max_stage,
+                                &mut dec,
+                                &mut metrics,
+                                &mut ards[wi(r)],
+                                &mut prds[wi(r)],
+                                &mut gap,
+                                &mut label_scratch,
+                                opts,
+                                r,
+                                d_inf,
+                                max_stage,
                             );
                             any = true;
                         }
@@ -469,8 +499,16 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
                     td.stop(&mut metrics.t_disk);
                 }
                 discharge_region(
-                    &mut dec, &mut metrics, &mut ard, &mut prd, &mut gap,
-                    &mut label_scratch, opts, r, d_inf, max_stage,
+                    &mut dec,
+                    &mut metrics,
+                    &mut ards[wi(r)],
+                    &mut prds[wi(r)],
+                    &mut gap,
+                    &mut label_scratch,
+                    opts,
+                    r,
+                    d_inf,
+                    max_stage,
                 );
                 if let Some(p) = pager.as_mut() {
                     let td = Timer::start();
@@ -553,6 +591,8 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
 
     metrics.flow = dec.flow_value();
     metrics.converged = converged;
+    metrics.workspace_mem_bytes = ards.iter().map(|a| a.memory_bytes()).sum::<usize>()
+        + prds.iter().map(|p| p.memory_bytes()).sum::<usize>();
     let cut = dec.cut_sides_by_label();
     metrics.t_total = t_total.elapsed();
     SolveResult { metrics, cut }
@@ -621,6 +661,57 @@ mod tests {
         for seed in 0..6 {
             let g = random_graph(200 + seed, 35, 70);
             check_solve(&g, &o, 5);
+        }
+    }
+
+    #[test]
+    fn ard_bk_core_matches_oracle() {
+        // warm-start (§6.3) is the default for the BK core
+        let mut o = SeqOptions::ard();
+        o.core = CoreKind::Bk;
+        for seed in 0..6 {
+            let g = random_graph(400 + seed, 35, 70);
+            check_solve(&g, &o, 5);
+        }
+    }
+
+    #[test]
+    fn ard_bk_cold_core_matches_oracle() {
+        let mut o = SeqOptions::ard();
+        o.core = CoreKind::Bk;
+        o.warm_start = false;
+        for seed in 0..4 {
+            let g = random_graph(450 + seed, 35, 70);
+            check_solve(&g, &o, 4);
+        }
+    }
+
+    #[test]
+    fn warm_and_cold_bk_agree_on_synthetic2d() {
+        // The final maxflow is unique, so warm- and cold-forest S-ARD
+        // must agree on it exactly and both cuts must certify it. (The
+        // per-discharge splits between individual boundary targets are
+        // not unique and may differ between the two schedules — see
+        // `solvers::bk::tests::absorb_mode_matches_dinic_absorb`; the
+        // exact split/label equivalence is pinned on directed instances
+        // in `region::ard::tests`.)
+        use crate::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+        for seed in [1u64, 9, 77] {
+            let g = synthetic_2d(&Synthetic2dParams::small(20, 16, 60, seed));
+            let p = Partition::grid2d(20, 16, 2, 2);
+            let mut warm = SeqOptions::ard();
+            warm.core = CoreKind::Bk;
+            let mut cold = warm.clone();
+            cold.warm_start = false;
+            let a = solve_sequential(&g, &p, &warm);
+            let b = solve_sequential(&g, &p, &cold);
+            assert!(a.metrics.converged && b.metrics.converged, "seed {seed}");
+            assert_eq!(a.metrics.flow, b.metrics.flow, "seed {seed}: flow");
+            assert_eq!(a.metrics.flow, reference_value(&g), "seed {seed}: oracle");
+            let snap = g.snapshot();
+            assert_eq!(g.cut_cost(&snap, &a.cut), a.metrics.flow, "seed {seed}: warm cut");
+            assert_eq!(g.cut_cost(&snap, &b.cut), b.metrics.flow, "seed {seed}: cold cut");
+            assert!(a.metrics.core_grow > 0, "seed {seed}: counters emitted");
         }
     }
 

@@ -75,6 +75,12 @@ pub struct BenchRecord {
     pub discharges: u64,
     pub wall_seconds: f64,
     pub converged: bool,
+    /// ARD-core work counters (§6.3 forest-reuse visibility): grown
+    /// vertices / BFS phases, augmenting paths, orphan adoptions. Zero
+    /// for whole-graph solvers, PRD and DD.
+    pub core_grow: u64,
+    pub core_augment: u64,
+    pub core_adopt: u64,
 }
 
 impl BenchRecord {
@@ -87,6 +93,9 @@ impl BenchRecord {
             discharges: r.discharges,
             wall_seconds: r.seconds,
             converged: r.converged,
+            core_grow: r.core_grow,
+            core_augment: r.core_augment,
+            core_adopt: r.core_adopt,
         }
     }
 
@@ -99,6 +108,9 @@ impl BenchRecord {
             discharges: res.metrics.discharges,
             wall_seconds: res.metrics.t_total.as_secs_f64(),
             converged: res.metrics.converged,
+            core_grow: res.metrics.core_grow,
+            core_augment: res.metrics.core_augment,
+            core_adopt: res.metrics.core_adopt,
         }
     }
 }
@@ -205,6 +217,9 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 discharges: part.k as u64,
                 wall_seconds: t.elapsed().as_secs_f64(),
                 converged: true,
+                core_grow: 0,
+                core_augment: 0,
+                core_adopt: 0,
             });
         }
         "appendix_a" => {
@@ -247,6 +262,9 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 discharges: waves as u64,
                 wall_seconds: t.elapsed().as_secs_f64(),
                 converged: true,
+                core_grow: 0,
+                core_augment: 0,
+                core_adopt: 0,
             });
         }
         other => panic!("no probe defined for experiment id: {other}"),
@@ -282,7 +300,8 @@ pub fn to_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
-    s.push_str("  \"schema\": 1,\n");
+    // schema 2: adds core_grow / core_augment / core_adopt per record
+    s.push_str("  \"schema\": 2,\n");
     let _ = writeln!(s, "  \"quick\": {quick},");
     match experiment_seconds {
         Some(t) => {
@@ -295,7 +314,8 @@ pub fn to_json(
         let _ = writeln!(
             s,
             "    {{\"case\": \"{}\", \"solver\": \"{}\", \"flow\": {}, \"sweeps\": {}, \
-             \"discharges\": {}, \"wall_seconds\": {:.6}, \"converged\": {}}}{}",
+             \"discharges\": {}, \"wall_seconds\": {:.6}, \"converged\": {}, \
+             \"core_grow\": {}, \"core_augment\": {}, \"core_adopt\": {}}}{}",
             json_escape(&r.case),
             json_escape(&r.solver),
             r.flow,
@@ -303,6 +323,9 @@ pub fn to_json(
             r.discharges,
             r.wall_seconds,
             r.converged,
+            r.core_grow,
+            r.core_augment,
+            r.core_adopt,
             if i + 1 < records.len() { "," } else { "" },
         );
     }
@@ -365,12 +388,19 @@ mod tests {
             discharges: 12,
             wall_seconds: 0.25,
             converged: true,
+            core_grow: 100,
+            core_augment: 20,
+            core_adopt: 7,
         }];
         let j = to_json("fig6", true, Some(1.5), &recs);
         assert!(j.contains("\"bench\": \"fig6\""));
+        assert!(j.contains("\"schema\": 2"));
         assert!(j.contains("\\\"1"));
         assert!(j.contains("\"flow\": 42"));
         assert!(j.contains("\"converged\": true"));
+        assert!(j.contains("\"core_grow\": 100"));
+        assert!(j.contains("\"core_augment\": 20"));
+        assert!(j.contains("\"core_adopt\": 7"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 

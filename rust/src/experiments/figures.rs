@@ -82,7 +82,11 @@ pub fn fig6_strength(quick: bool) {
 
 /// Fig. 7: dependence on the number of regions.
 pub fn fig7_regions(quick: bool) {
-    let slices: &[usize] = if quick { &[1, 2, 3, 4, 6] } else { &[1, 2, 3, 4, 6, 8] };
+    let slices: &[usize] = if quick {
+        &[1, 2, 3, 4, 6]
+    } else {
+        &[1, 2, 3, 4, 6, 8]
+    };
     print_header(
         "Fig. 7 — time & sweeps vs #regions (strength 150, conn 8)",
         &["regions", "S-ARD s", "S-PRD s", "ARD swp", "PRD swp", "|B|"],
@@ -126,8 +130,11 @@ pub fn fig7_regions(quick: bool) {
 /// Fig. 8: dependence on the problem size — S-ARD sweeps stay ~constant
 /// while S-PRD sweeps grow.
 pub fn fig8_size(quick: bool) {
-    let sides: &[usize] =
-        if quick { &[60, 100, 160, 240] } else { &[125, 250, 500, 750, 1000] };
+    let sides: &[usize] = if quick {
+        &[60, 100, 160, 240]
+    } else {
+        &[125, 250, 500, 750, 1000]
+    };
     print_header(
         "Fig. 8 — time & sweeps vs size (strength 150, conn 8, 4 regions)",
         &["side", "BK s", "S-ARD s", "S-PRD s", "ARD swp", "PRD swp"],
@@ -283,7 +290,11 @@ pub fn fig11_regions_real(quick: bool) {
 /// Appendix A: the `Θ(n²)` lower-bound family — PRD sweeps grow with
 /// the chain count, ARD stays constant (|B| = 3).
 pub fn appendix_a_tightness(quick: bool) {
-    let ks: &[usize] = if quick { &[2, 8, 32, 128] } else { &[2, 8, 32, 128, 512, 2048] };
+    let ks: &[usize] = if quick {
+        &[2, 8, 32, 128]
+    } else {
+        &[2, 8, 32, 128, 512, 2048]
+    };
     print_header(
         "Appendix A — sweeps on the adversarial chain family",
         &["chains k", "n", "ARD swp", "PRD swp", "PRD swp (no gap)"],

@@ -71,6 +71,11 @@ pub struct CompetitorResult {
     pub converged: bool,
     /// phase breakdown (discharge, relabel, gap, msg) for Fig. 10
     pub phases: [f64; 4],
+    /// ARD-core work counters (grow, augment, adopt) — §6.3 forest-
+    /// reuse visibility; zero for whole-graph solvers, PRD and DD.
+    pub core_grow: u64,
+    pub core_augment: u64,
+    pub core_adopt: u64,
 }
 
 /// Run one competitor on (a private copy of) `g`.
@@ -104,7 +109,7 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 discharges: m.discharges,
                 msg_bytes: m.msg_bytes,
                 disk_bytes: m.disk_read_bytes + m.disk_write_bytes,
-                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes,
+                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes,
                 converged: m.converged,
                 phases: [
                     m.t_discharge.as_secs_f64(),
@@ -112,6 +117,9 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                     m.t_gap.as_secs_f64(),
                     m.t_msg.as_secs_f64(),
                 ],
+                core_grow: m.core_grow,
+                core_augment: m.core_augment,
+                core_adopt: m.core_adopt,
             }
         }
         Competitor::PArd(t) | Competitor::PPrd(t) => {
@@ -130,7 +138,7 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 discharges: m.discharges,
                 msg_bytes: m.msg_bytes,
                 disk_bytes: 0,
-                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes,
+                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes,
                 converged: m.converged,
                 phases: [
                     m.t_discharge.as_secs_f64(),
@@ -138,6 +146,9 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                     m.t_gap.as_secs_f64(),
                     m.t_msg.as_secs_f64(),
                 ],
+                core_grow: m.core_grow,
+                core_augment: m.core_augment,
+                core_adopt: m.core_adopt,
             }
         }
         Competitor::Dd(k) => {
@@ -152,9 +163,12 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 discharges: m.discharges,
                 msg_bytes: m.msg_bytes,
                 disk_bytes: 0,
-                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes,
+                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes,
                 converged: m.converged,
                 phases: [m.t_discharge.as_secs_f64(), 0.0, 0.0, 0.0],
+                core_grow: 0,
+                core_augment: 0,
+                core_adopt: 0,
             }
         }
     }
@@ -176,6 +190,9 @@ fn whole_graph(c: Competitor, g: &Graph, solver: &mut dyn MaxFlowSolver) -> Comp
         mem_bytes: gc.memory_bytes(),
         converged: true,
         phases: [seconds, 0.0, 0.0, 0.0],
+        core_grow: 0,
+        core_augment: 0,
+        core_adopt: 0,
     }
 }
 

@@ -43,7 +43,8 @@ SOLVE OPTIONS:
   --regions K          partition into K regions by node ranges (default 4)
   --threads N          worker threads for p-ard/p-prd/dd (default 4)
   --streaming DIR      sequential streaming mode, one region in memory
-  --core {bk|dinic}    ARD augmenting core (default bk)
+  --core {bk|dinic}    ARD augmenting core (default dinic)
+  --cold-start         disable §6.3 BK forest reuse across ARD stages
   --no-gap / --no-brelabel / --no-partial   disable heuristics
   --pair-arcs          pair reverse arcs when reading DIMACS
   --cut FILE           write the minimum cut (one side bit per line)
@@ -204,7 +205,11 @@ fn cmd_solve(opts: &Flags) -> i32 {
             (format!("{algo}: flow={flow} cpu={:.3}s", dt.as_secs_f64()), gc.min_cut_sides())
         }
         "s-ard" | "s-prd" => {
-            let mut o = if algo == "s-ard" { SeqOptions::ard() } else { SeqOptions::prd() };
+            let mut o = if algo == "s-ard" {
+                SeqOptions::ard()
+            } else {
+                SeqOptions::prd()
+            };
             apply_heuristic_flags(opts, &mut o);
             if let Some(dir) = opts.get("streaming") {
                 o.streaming_dir = Some(dir.into());
@@ -226,6 +231,12 @@ fn cmd_solve(opts: &Flags) -> i32 {
             }
             if opts.contains_key("no-partial") {
                 o.partial_discharge = false;
+            }
+            if opts.get("core").map(String::as_str) == Some("bk") {
+                o.core = CoreKind::Bk;
+            }
+            if opts.contains_key("cold-start") {
+                o.warm_start = false;
             }
             let res = solve_parallel(&g, &part, &o);
             (res.metrics.summary(algo), res.cut)
@@ -268,6 +279,12 @@ fn apply_heuristic_flags(opts: &Flags, o: &mut SeqOptions) {
     }
     if opts.get("core").map(String::as_str) == Some("dinic") {
         o.core = CoreKind::Dinic;
+    }
+    if opts.get("core").map(String::as_str) == Some("bk") {
+        o.core = CoreKind::Bk;
+    }
+    if opts.contains_key("cold-start") {
+        o.warm_start = false;
     }
 }
 

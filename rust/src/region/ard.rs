@@ -13,9 +13,14 @@
 //! high-labelled boundaries until the labeling has stabilized.
 //!
 //! The augmenting core is pluggable (Statement 9's properties do not
-//! depend on how paths are found): Dinic blocking flow (default) or the
-//! Boykov–Kolmogorov forest solver (the paper's choice, reusing search
-//! trees across stages as in §6.3).
+//! depend on how paths are found): Dinic blocking flow (rebuilds its
+//! level graph every stage) or the Boykov–Kolmogorov forest solver (the
+//! paper's choice). With the BK core and `warm_start` enabled (the
+//! default), the search forests persist across the stages of one
+//! discharge (§6.3): stage 0 starts cold — labels and residual
+//! capacities changed since the previous discharge — and every later
+//! stage re-roots the T-forest at the vertices newly absorbed into
+//! `T_k` instead of rebuilding both forests from scratch.
 
 use crate::core::graph::Cap;
 use crate::region::decompose::RegionPart;
@@ -38,15 +43,44 @@ impl ArdCore {
         ArdCore::Bk(Bk::new())
     }
 
+    /// Run one stage. `warm` requests §6.3 forest reuse from the
+    /// previous stage (BK only; Dinic rebuilds its level graph anyway).
     fn run(
         &mut self,
         g: &mut crate::core::graph::Graph,
         absorb: Option<&[bool]>,
         source_ok: &[bool],
+        warm: bool,
     ) -> Cap {
         match self {
             ArdCore::Dinic(d) => d.run(g, absorb, true, Some(source_ok)),
-            ArdCore::Bk(b) => b.run(g, absorb, Some(source_ok)),
+            ArdCore::Bk(b) => {
+                if warm {
+                    b.run_warm(g, absorb, Some(source_ok))
+                } else {
+                    b.run(g, absorb, Some(source_ok))
+                }
+            }
+        }
+    }
+
+    /// Cumulative work counters of the underlying core, as
+    /// `(grow, augment, adopt)`. For BK these are grown vertices,
+    /// augmentations and orphan adoptions; for Dinic, BFS phases and
+    /// augmenting paths (it has no adoption concept, so 0). Callers
+    /// snapshot before and diff after a discharge.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        match self {
+            ArdCore::Dinic(d) => (d.phases, d.augmentations, 0),
+            ArdCore::Bk(b) => (b.grown, b.augmentations, b.adoptions),
+        }
+    }
+
+    /// Approximate resident workspace memory of the core, bytes.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            ArdCore::Dinic(d) => d.memory_bytes(),
+            ArdCore::Bk(b) => b.memory_bytes(),
         }
     }
 }
@@ -58,23 +92,55 @@ pub struct ArdStats {
     pub to_sink: Cap,
     /// Flow exported to boundary vertices.
     pub to_boundary: Cap,
-    /// Number of stages actually executed (skipping empty ones).
+    /// Number of stages that routed flow (stages whose core run moved
+    /// nothing — including an empty stage 0 — are not counted).
     pub stages: u32,
     /// Total label increase produced by the final region-relabel.
     pub label_increase: u64,
+    /// Core work during this discharge: vertices grown into the search
+    /// structure (BK) / BFS phases (Dinic).
+    pub grow: u64,
+    /// Augmenting paths pushed by the core during this discharge.
+    pub augment: u64,
+    /// Orphans re-adopted by the core during this discharge (BK only).
+    pub adopt: u64,
 }
 
 /// Reusable ARD workspace.
 #[derive(Debug)]
 pub struct Ard {
     pub core: ArdCore,
+    /// §6.3: reuse BK search forests across the stages of one discharge
+    /// (no effect on the Dinic core). On by default; turn off to get the
+    /// cold-start baseline the warm path is validated against.
+    pub warm_start: bool,
     source_mask: Vec<bool>,
     absorb_mask: Vec<bool>,
+    /// Foreign boundary vertices as `(label, local index)`, sorted by
+    /// label — rebuilt once per discharge; the absorb cursor advances
+    /// over it instead of rescanning the whole boundary every stage.
+    stage_order: Vec<(u32, u32)>,
 }
 
 impl Ard {
     pub fn new(core: ArdCore) -> Self {
-        Ard { core, source_mask: Vec::new(), absorb_mask: Vec::new() }
+        Ard {
+            core,
+            warm_start: true,
+            source_mask: Vec::new(),
+            absorb_mask: Vec::new(),
+            stage_order: Vec::new(),
+        }
+    }
+
+    /// Approximate resident workspace memory, bytes — per-region
+    /// persistence makes this a solve-lifetime cost, counted into
+    /// `RunMetrics::workspace_mem_bytes` by the coordinators.
+    pub fn memory_bytes(&self) -> usize {
+        self.core.memory_bytes()
+            + self.source_mask.len()
+            + self.absorb_mask.len()
+            + self.stage_order.len() * 8
     }
 
     /// Discharge `part`. `d_inf` is the label ceiling (`|B|`);
@@ -84,6 +150,7 @@ impl Ard {
         let n_local = part.graph.n();
         let n_inner = part.n_inner;
         let mut stats = ArdStats::default();
+        let (grow0, augment0, adopt0) = self.core.counters();
 
         self.source_mask.clear();
         self.source_mask.resize(n_local, false);
@@ -94,52 +161,73 @@ impl Ard {
         self.absorb_mask.resize(n_local, false);
 
         // ---- stage 0: augment to the sink --------------------------------
+        // Always cold: labels and residual capacities changed since the
+        // previous discharge, so stale forests must not be reused.
         let sink_before = part.graph.flow_to_sink;
-        self.core.run(&mut part.graph, None, &self.source_mask);
+        self.core.run(&mut part.graph, None, &self.source_mask, false);
         stats.to_sink = part.graph.flow_to_sink - sink_before;
-        stats.stages = 1;
+        if stats.to_sink > 0 {
+            stats.stages += 1;
+        }
 
         // ---- stages k = 1..: augment to T_k in label order ----------------
-        // distinct labels of foreign boundary vertices, ascending
-        let mut labels: Vec<u32> = part
-            .foreign_boundary
-            .iter()
-            .map(|&(lv, _)| part.label[lv as usize])
-            .filter(|&d| d < d_inf)
-            .collect();
-        labels.sort_unstable();
-        labels.dedup();
+        // Foreign boundary vertices sorted by label once per discharge;
+        // each stage extends the cumulative absorb mask by advancing a
+        // cursor over this order (one O(|B^R| log |B^R|) sort instead of
+        // one full boundary rescan per stage).
+        self.stage_order.clear();
+        self.stage_order.extend(
+            part.foreign_boundary
+                .iter()
+                .map(|&(lv, _)| (part.label[lv as usize], lv))
+                .filter(|&(d, _)| d < d_inf),
+        );
+        self.stage_order.sort_unstable();
 
-        for &l in &labels {
-            let stage = l + 1;
-            if stage > max_stage {
+        let mut cursor = 0;
+        while cursor < self.stage_order.len() {
+            let l = self.stage_order[cursor].0;
+            if l + 1 > max_stage {
                 break;
+            }
+            // cumulative absorb set: every boundary vertex with d(w) <= l
+            while cursor < self.stage_order.len() && self.stage_order[cursor].0 == l {
+                self.absorb_mask[self.stage_order[cursor].1 as usize] = true;
+                cursor += 1;
             }
             // remaining movable excess?
             if part.graph.excess[..n_inner].iter().all(|&e| e == 0) {
                 break;
             }
-            // cumulative absorb set: every boundary vertex with d(w) <= l
-            for &(lv, _) in &part.foreign_boundary {
-                if part.label[lv as usize] <= l {
-                    self.absorb_mask[lv as usize] = true;
-                }
-            }
-            let moved = self
-                .core
-                .run(&mut part.graph, Some(&self.absorb_mask), &self.source_mask);
+            let moved = self.core.run(
+                &mut part.graph,
+                Some(&self.absorb_mask),
+                &self.source_mask,
+                self.warm_start,
+            );
             stats.to_boundary += moved;
-            stats.stages += 1;
+            if moved > 0 {
+                stats.stages += 1;
+            }
         }
-        // flow absorbed at boundary vertices minus what later moved on
-        // (within one discharge nothing moves on; `moved` sums per stage,
-        // but the sink may also absorb in later stages — subtract)
+        // Each stage's `moved` counts *all* flow that run absorbed — at
+        // the T_k members and at the sink, which stays a target in every
+        // stage. The sink's share of the later stages is exactly the
+        // growth of `flow_to_sink` beyond stage 0, so subtract it once:
+        //   to_boundary = Σ_k moved_k − (sink_total − to_sink_stage0).
+        // Within one discharge absorbed boundary flow never moves on
+        // (absorbing vertices are never sources), so nothing else needs
+        // correcting; `to_sink` reports the discharge's full sink total.
         let sink_total = part.graph.flow_to_sink - sink_before;
         stats.to_boundary -= sink_total - stats.to_sink;
         stats.to_sink = sink_total;
 
         // ---- relabel -------------------------------------------------------
         stats.label_increase = region_relabel_ard(part, d_inf);
+        let (grow1, augment1, adopt1) = self.core.counters();
+        stats.grow = grow1 - grow0;
+        stats.augment = augment1 - augment0;
+        stats.adopt = adopt1 - adopt0;
         stats
     }
 }
@@ -225,10 +313,11 @@ mod tests {
         let d_inf = d.shared.d_inf;
         let mut ard = Ard::new(ArdCore::dinic());
         d.sync_in(0);
-        // max_stage = 0: only the sink stage runs; nothing exported
+        // max_stage = 0: only the sink stage runs; region 0 holds no
+        // sink, so nothing routes at all and no stage is counted
         let st = ard.discharge(&mut d.parts[0], d_inf, 0);
         assert_eq!(st.to_boundary, 0);
-        assert_eq!(st.stages, 1);
+        assert_eq!(st.stages, 0, "a stage that routes nothing is not counted");
         d.sync_out(0);
         assert_eq!(d.shared.excess[1], 0);
     }
@@ -247,6 +336,115 @@ mod tests {
         assert_eq!(s1.to_sink, s2.to_sink);
         assert_eq!(s1.to_boundary, s2.to_boundary);
         assert_eq!(d1.parts[0].label, d2.parts[0].label);
+    }
+
+    #[test]
+    fn stages_counts_only_routing_stages() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::dinic());
+        // region 0 has no inner sink: stage 0 routes nothing and must
+        // not be counted; the single boundary stage routes 4
+        d.sync_in(0);
+        let st = ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        assert_eq!(st.to_sink, 0);
+        assert_eq!(st.to_boundary, 4);
+        assert_eq!(st.stages, 1, "only the routing boundary stage counts");
+        d.sync_out(0);
+        // region 1: stage 0 drains everything to the sink, after which
+        // the movable-excess check skips every boundary stage
+        d.sync_in(1);
+        let st = ard.discharge(&mut d.parts[1], d_inf, u32::MAX);
+        assert_eq!(st.to_sink, 4);
+        assert_eq!(st.stages, 1, "only the sink stage routes");
+        d.sync_out(1);
+        // a fully drained region routes nothing at all: zero stages
+        d.sync_in(1);
+        let st = ard.discharge(&mut d.parts[1], d_inf, u32::MAX);
+        assert_eq!(st.to_sink + st.to_boundary, 0);
+        assert_eq!(st.stages, 0);
+    }
+
+    /// Two disjoint *directed* chains with a single excess source each:
+    /// every edge only carries flow toward the sink end and every lane
+    /// has one source, so each per-edge flow is fixed by conservation
+    /// and every core — warm or cold — must produce bit-identical
+    /// splits, labels and stage counts (the general multi-target split
+    /// is not unique, cf. `solvers::bk`; this family removes that
+    /// freedom).
+    fn directed_chains_decomp(k: usize) -> Decomposition {
+        let n = 24;
+        let mut b = GraphBuilder::new(n);
+        // lane A: vertices 0..11, excess at 1, sink at 11
+        b.add_terminal(1, 30, 0);
+        b.add_terminal(11, 0, 25);
+        for v in 0..11u32 {
+            let c = 3 + ((v * 7) % 5) as i64;
+            b.add_edge(v, v + 1, c, 0);
+        }
+        // lane B: vertices 12..23, excess at 13, sink at 23
+        b.add_terminal(13, 9, 0);
+        b.add_terminal(23, 0, 40);
+        for v in 12..23u32 {
+            let c = 2 + ((v * 5) % 7) as i64;
+            b.add_edge(v, v + 1, c, 0);
+        }
+        let g = b.build();
+        let p = Partition::by_node_ranges(n, k);
+        Decomposition::new(&g, &p, DistanceMode::Ard)
+    }
+
+    #[test]
+    fn warm_and_cold_bk_cores_agree_across_sweeps() {
+        // §6.3 equivalence over full multi-region, multi-sweep, multi-
+        // stage schedules: identical maxflow, per-discharge to_sink /
+        // to_boundary splits, stage counts and labels.
+        let mut d_w = directed_chains_decomp(4);
+        let mut d_c = directed_chains_decomp(4);
+        let d_inf = d_w.shared.d_inf;
+        let mut warm = Ard::new(ArdCore::bk());
+        let mut cold = Ard::new(ArdCore::bk());
+        cold.warm_start = false;
+        for sweep in 0..8 {
+            for r in 0..d_w.parts.len() {
+                d_w.sync_in(r);
+                d_c.sync_in(r);
+                let sw = warm.discharge(&mut d_w.parts[r], d_inf, sweep);
+                let sc = cold.discharge(&mut d_c.parts[r], d_inf, sweep);
+                assert_eq!(sw.to_sink, sc.to_sink, "sweep {sweep} region {r}: to_sink");
+                assert_eq!(
+                    sw.to_boundary, sc.to_boundary,
+                    "sweep {sweep} region {r}: to_boundary"
+                );
+                assert_eq!(sw.stages, sc.stages, "sweep {sweep} region {r}: stages");
+                assert_eq!(
+                    d_w.parts[r].label, d_c.parts[r].label,
+                    "sweep {sweep} region {r}: labels"
+                );
+                d_w.sync_out(r);
+                d_c.sync_out(r);
+            }
+        }
+        assert_eq!(d_w.flow_value(), d_c.flow_value());
+        // both lanes bottlenecked: lane A by min cap 3, lane B by min
+        // cap 2 (caps 2 + (v*5 mod 7) include a 2)
+        assert!(d_w.flow_value() > 0);
+    }
+
+    #[test]
+    fn discharge_reports_core_counters() {
+        let mut d = chain_decomp();
+        let d_inf = d.shared.d_inf;
+        let mut ard = Ard::new(ArdCore::bk());
+        d.sync_in(0);
+        let st = ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        assert!(st.augment > 0, "routing 4 units needs at least one augmentation");
+        assert!(st.grow > 0, "forests must grow to reach the boundary");
+        // a second, fully drained discharge does near-zero core work
+        d.sync_out(0);
+        d.sync_in(0);
+        let st2 = ard.discharge(&mut d.parts[0], d_inf, u32::MAX);
+        assert_eq!(st2.augment, 0, "nothing left to route");
     }
 
     #[test]

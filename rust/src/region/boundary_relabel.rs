@@ -117,7 +117,11 @@ pub fn boundary_relabel(shared: &mut SharedState) -> u64 {
     let mut increase = 0u64;
     for b in 0..nb {
         let gidx = group_of[b];
-        let dnew = if gidx == u32::MAX { d_inf } else { dist[gidx as usize] };
+        let dnew = if gidx == u32::MAX {
+            d_inf
+        } else {
+            dist[gidx as usize]
+        };
         if dnew > shared.d[b] {
             increase += (dnew - shared.d[b]) as u64;
             shared.d[b] = dnew.min(d_inf);
@@ -146,7 +150,12 @@ mod tests {
 
     #[test]
     fn zero_label_groups_stay() {
-        let mut s = shared(vec![0, 1], vec![0, 0], vec![SharedArc { bu: 0, bv: 1, cap_fw: 1, cap_bw: 1 }], 4);
+        let mut s = shared(
+            vec![0, 1],
+            vec![0, 0],
+            vec![SharedArc { bu: 0, bv: 1, cap_fw: 1, cap_bw: 1 }],
+            4,
+        );
         assert_eq!(boundary_relabel(&mut s), 0);
         assert_eq!(s.d, vec![0, 0]);
     }

@@ -73,7 +73,8 @@ impl SharedState {
 
     /// Shared-memory footprint in bytes (`O(|B| + |(B,B)|)`, §5.3).
     pub fn memory_bytes(&self) -> usize {
-        self.global_of_b.len() * (4 + 4 + 4 + 8) + self.arcs.len() * std::mem::size_of::<SharedArc>()
+        self.global_of_b.len() * (4 + 4 + 4 + 8)
+            + self.arcs.len() * std::mem::size_of::<SharedArc>()
     }
 }
 
@@ -257,7 +258,8 @@ impl Decomposition {
                         // boundary arc: forward cap from shared, reverse 0
                         let sid = shared_of_arc[a];
                         let sa = shared_arcs[sid as usize];
-                        let fw = sa.bu == b_of_global[v as usize] && sa.bv == b_of_global[u as usize];
+                        let fw = sa.bu == b_of_global[v as usize]
+                            && sa.bv == b_of_global[u as usize];
                         // NB: parallel edges between the same pair map to
                         // distinct shared arcs, so (bu,bv) comparison alone
                         // is ambiguous; determine direction from the arc id
@@ -289,7 +291,8 @@ impl Decomposition {
 
             // recover local arc ids of boundary edges: edges were added in
             // order; replay CSR fill order to map edge -> arc pair.
-            let arc_of_edge = replay_edge_arcs(&lg, inner.len(), &global_ids, g, partition, r as u32);
+            let arc_of_edge =
+                replay_edge_arcs(&lg, inner.len(), &global_ids, g, partition, r as u32);
             // arc_of_edge[j] = local arc id (tail = inner) for boundary edge j
             let boundary_arcs: Vec<BoundaryArcRef> = pending_barcs
                 .iter()

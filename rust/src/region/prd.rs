@@ -29,14 +29,26 @@ pub struct PrdStats {
 pub struct Prd {
     pub hpr: Hpr,
     frozen: Vec<bool>,
-    /// Run region-relabel before the discharge (the paper runs it once
-    /// at the beginning and after global gaps, §5.4).
+    /// Run region-relabel before the next discharge (the paper's §5.4
+    /// "once at the beginning" upfront relabel). One-shot: with the
+    /// coordinators' per-region persistent workspaces it fires exactly
+    /// once per region, on its first discharge of the solve (once
+    /// overall in streaming mode, which shares one workspace) — the
+    /// same deterministic schedule in S-PRD and P-PRD, unlike the
+    /// former per-worker workspaces whose relabel frequency depended on
+    /// thread scheduling. Re-arm externally to relabel again.
     pub relabel_on_next: bool,
 }
 
 impl Prd {
     pub fn new() -> Self {
         Prd { hpr: Hpr::new(), frozen: Vec::new(), relabel_on_next: true }
+    }
+
+    /// Approximate resident workspace memory, bytes (see
+    /// `Ard::memory_bytes`).
+    pub fn memory_bytes(&self) -> usize {
+        self.hpr.memory_bytes() + self.frozen.len()
     }
 
     /// Discharge `part` (assumes `sync_in` has run). `d_inf` is the
@@ -62,7 +74,8 @@ impl Prd {
 
         stats.to_sink = self.hpr.run(&mut part.graph, &mut part.label, Some(&self.frozen), d_inf);
 
-        stats.to_boundary = part.graph.excess[n_inner..].iter().sum::<Cap>() - boundary_excess_before;
+        stats.to_boundary =
+            part.graph.excess[n_inner..].iter().sum::<Cap>() - boundary_excess_before;
         stats.pushes = self.hpr.pushes;
         stats.relabels = self.hpr.relabels;
         stats.gap_events = self.hpr.gap_events;

@@ -310,7 +310,11 @@ impl GridProblem {
                 d_next = self.label[i];
             }
         }
-        let target = if d_next >= self.d_inf { self.d_inf } else { d_next + 1 };
+        let target = if d_next >= self.d_inf {
+            self.d_inf
+        } else {
+            d_next + 1
+        };
         let mut raised = 0;
         for i in 0..n {
             if self.frozen[i] == 0 && self.label[i] > g && self.label[i] < target {

@@ -11,8 +11,18 @@
 //! When the forests touch, the connecting path is augmented; saturated
 //! arcs orphan their subtrees, which are re-adopted or freed, reusing
 //! the search trees across augmentations — the property that makes BK
-//! fast on vision instances and that §6.3 of the paper exploits across
-//! ARD stages.
+//! fast on vision instances.
+//!
+//! Two entry points expose that reuse at different scopes. [`Bk::run`]
+//! is the *cold* start: it discards any previous forests and grows from
+//! scratch (correct whenever the residual network changed behind the
+//! solver's back, e.g. between ARD discharges). [`Bk::run_warm`] is the
+//! §6.3 *warm* start used by ARD between the stages of one discharge:
+//! the forests of the previous stage are kept, the T-forest is re-rooted
+//! at the vertices that joined the cumulative absorb set `T_k`, and only
+//! vertices invalidated by saturated arcs are orphaned — so a stage that
+//! routes nothing new costs one incremental grow instead of a full
+//! rebuild.
 //!
 //! The timestamp/distance adoption heuristics follow the original BK
 //! implementation.
@@ -42,7 +52,16 @@ pub struct Bk {
     time: u64,
     active: VecDeque<NodeId>,
     orphans: Vec<NodeId>,
-    /// Statistics of the last run.
+    /// Absorb set the forests were last grown against; `run_warm` only
+    /// re-roots the vertices that joined since (the §6.3 delta).
+    absorb_seen: Vec<bool>,
+    /// The forests describe the graph's current residual state (set when
+    /// a run completes, cleared by `reset`), so `run_warm` may reuse
+    /// them.
+    warm: bool,
+    /// Work counters, cumulative over the workspace lifetime (callers
+    /// that need per-run numbers snapshot and diff — see
+    /// `ArdCore::counters`).
     pub augmentations: u64,
     pub adoptions: u64,
     pub grown: u64,
@@ -51,6 +70,16 @@ pub struct Bk {
 impl Bk {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Approximate resident workspace memory, bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.tree.len()
+            + self.parent.len() * 4
+            + self.parent_arc.len() * 4
+            + self.ts.len() * 8
+            + self.dist.len() * 4
+            + self.absorb_seen.len()
     }
 
     fn reset(&mut self, n: usize) {
@@ -67,38 +96,16 @@ impl Bk {
         self.time = 0;
         self.active.clear();
         self.orphans.clear();
-        self.augmentations = 0;
-        self.adoptions = 0;
-        self.grown = 0;
+        self.warm = false;
     }
 
-    /// Run BK: route excess to the sink (and to `absorb`-flagged
-    /// vertices, which swallow flow into their own excess). `source_ok`
-    /// restricts which vertices may act as S-forest roots. Returns total
-    /// absorbed flow.
-    pub fn run(
-        &mut self,
-        g: &mut Graph,
-        absorb: Option<&[bool]>,
-        source_ok: Option<&[bool]>,
-    ) -> Cap {
-        let n = g.n();
-        self.reset(n);
+    /// Seed the initial forests: T-roots at absorbing vertices and at
+    /// vertices with residual sink capacity, S-roots at admissible
+    /// vertices holding excess.
+    fn seed_forests(&mut self, g: &Graph, absorb: Option<&[bool]>, source_ok: Option<&[bool]>) {
         let is_absorb = |v: usize| absorb.map_or(false, |m| m[v]);
         let is_source = |v: usize| source_ok.map_or(true, |m| m[v]);
-        let mut total: Cap = 0;
-
-        // Trivial absorption: a source vertex with its own sink capacity.
-        for v in 0..n {
-            if is_source(v) && g.excess[v] > 0 && g.sink_cap[v] > 0 {
-                let d = g.excess[v].min(g.sink_cap[v]);
-                g.push_to_sink(v as NodeId, d);
-                total += d;
-            }
-        }
-
-        // Initial forests.
-        for v in 0..n {
+        for v in 0..g.n() {
             if is_absorb(v) || g.sink_cap[v] > 0 {
                 self.tree[v] = TREE_T;
                 self.parent[v] = TERMINAL;
@@ -113,14 +120,166 @@ impl Bk {
                 self.active.push_back(v as NodeId);
             }
         }
+    }
 
-        // Main loop: grow → augment → adopt. The incremental forest
-        // bookkeeping (adoption + push reactivation) covers the regular
-        // cases; as a *certified* termination criterion the loop
-        // restarts with fresh forests until a whole restart produces no
-        // augmentation — a grow from empty forests explores the full
-        // residual reachability, so exhausting it proves the preflow is
-        // maximum (cf. HIPR's final global relabel).
+    /// Record the absorb set the forests now reflect.
+    fn note_absorb(&mut self, absorb: Option<&[bool]>, n: usize) {
+        self.absorb_seen.clear();
+        self.absorb_seen.resize(n, false);
+        if let Some(m) = absorb {
+            self.absorb_seen.copy_from_slice(m);
+        }
+    }
+
+    /// Run BK cold: route excess to the sink (and to `absorb`-flagged
+    /// vertices, which swallow flow into their own excess). `source_ok`
+    /// restricts which vertices may act as S-forest roots. Any previous
+    /// forest state is discarded. Returns total absorbed flow.
+    pub fn run(
+        &mut self,
+        g: &mut Graph,
+        absorb: Option<&[bool]>,
+        source_ok: Option<&[bool]>,
+    ) -> Cap {
+        let n = g.n();
+        self.reset(n);
+        let is_source = |v: usize| source_ok.map_or(true, |m| m[v]);
+        let mut total: Cap = 0;
+
+        // Trivial absorption: a source vertex with its own sink capacity.
+        for v in 0..n {
+            if is_source(v) && g.excess[v] > 0 && g.sink_cap[v] > 0 {
+                let d = g.excess[v].min(g.sink_cap[v]);
+                g.push_to_sink(v as NodeId, d);
+                total += d;
+            }
+        }
+
+        self.seed_forests(g, absorb, source_ok);
+        total + self.main_loop(g, absorb, source_ok)
+    }
+
+    /// Run BK warm (§6.3): reuse the forests left by the previous run on
+    /// the *same, unmodified* residual network, re-rooting the T-forest
+    /// at every vertex that joined the absorb set since. ARD calls this
+    /// between the stages of one discharge, where the only change from
+    /// stage to stage is the growing cumulative target set `T_k` — a
+    /// stage that finds no new augmenting path then costs one
+    /// incremental grow from the new roots instead of a full rebuild.
+    ///
+    /// Falls back to a cold [`Bk::run`] when no reusable forests exist
+    /// (first call, size change, or after `reset`). The caller must not
+    /// have touched capacities, excess or sink capacities since the
+    /// previous run; `absorb` may only grow and `source_ok` must be
+    /// unchanged.
+    pub fn run_warm(
+        &mut self,
+        g: &mut Graph,
+        absorb: Option<&[bool]>,
+        source_ok: Option<&[bool]>,
+    ) -> Cap {
+        let n = g.n();
+        if !self.warm || self.tree.len() != n {
+            return self.run(g, absorb, source_ok);
+        }
+        // New epoch before any surgery: the fix-ups below sever parent
+        // chains, and `origin_dist` trusts distance caches stamped with
+        // the *current* `time` — after a completed run every vertex can
+        // sit at `ts == time` (the certified final pass leaves
+        // `ts == 0 == time`), so without this bump an orphan could adopt
+        // its own just-severed descendant and close a parent cycle. The
+        // cold path is safe for the same reason: `main_loop` bumps
+        // `time` before every augment/adopt cycle.
+        self.time += 1;
+        let is_absorb = |v: usize| absorb.map_or(false, |m| m[v]);
+        let is_source = |v: usize| source_ok.map_or(true, |m| m[v]);
+        let mut total: Cap = 0;
+
+        // Trivial absorption with forest fix-up. Under ARD's staging
+        // this loop routes nothing (stage 0 already drained every
+        // source vertex with private sink capacity), but the entry
+        // point stays correct for arbitrary mask schedules.
+        for v in 0..n {
+            if is_source(v) && g.excess[v] > 0 && g.sink_cap[v] > 0 {
+                let d = g.excess[v].min(g.sink_cap[v]);
+                g.push_to_sink(v as NodeId, d);
+                total += d;
+                if g.excess[v] == 0 && self.tree[v] == TREE_S && self.parent[v] == TERMINAL {
+                    self.parent[v] = NONE;
+                    self.orphans.push(v as NodeId);
+                }
+                if g.sink_cap[v] == 0
+                    && self.tree[v] == TREE_T
+                    && self.parent[v] == TERMINAL
+                    && !is_absorb(v)
+                {
+                    self.parent[v] = NONE;
+                    self.orphans.push(v as NodeId);
+                }
+            }
+        }
+
+        // Re-root the T-forest at the vertices that joined the absorb
+        // set; orphaned S-subtrees re-attach (or free) in `adopt`.
+        for v in 0..n {
+            if is_absorb(v) && !self.absorb_seen[v] {
+                self.attach_t_root(g, v as NodeId);
+            }
+        }
+        self.adopt(g, absorb, source_ok);
+
+        // Nothing left to route: keep the (still valid) forests for the
+        // next stage; growing now would only certify vacuously.
+        if !(0..n).any(|v| is_source(v) && !is_absorb(v) && g.excess[v] > 0) {
+            self.note_absorb(absorb, n);
+            return total;
+        }
+        total + self.main_loop(g, absorb, source_ok)
+    }
+
+    /// Make `v` a root of the T-forest (it became absorbing). If `v` was
+    /// an S-forest member its children are orphaned; the caller runs
+    /// `adopt` afterwards.
+    fn attach_t_root(&mut self, g: &Graph, v: NodeId) {
+        if self.tree[v as usize] == TREE_S {
+            for a in g.arc_range(v) {
+                let u = g.head(a as ArcId);
+                if self.tree[u as usize] == TREE_S && self.parent[u as usize] == v {
+                    self.parent[u as usize] = NONE;
+                    self.parent_arc[u as usize] = NO_ARC;
+                    self.orphans.push(u);
+                }
+            }
+        }
+        self.tree[v as usize] = TREE_T;
+        self.parent[v as usize] = TERMINAL;
+        self.parent_arc[v as usize] = NO_ARC;
+        self.ts[v as usize] = self.time;
+        self.dist[v as usize] = 1;
+        self.active.push_back(v);
+    }
+
+    /// Grow → augment → adopt until exhaustion. The incremental forest
+    /// bookkeeping (adoption + push reactivation) covers the regular
+    /// cases; as a *certified* termination criterion the loop restarts
+    /// with fresh forests until a whole restart produces no augmentation
+    /// — a grow from empty forests explores the full residual
+    /// reachability, so exhausting it proves the preflow is maximum
+    /// (cf. HIPR's final global relabel). A call that augments nothing
+    /// relies on the forests it started from being exhausted already —
+    /// true after `seed_forests` (cold: the grow explores everything)
+    /// and after a completed previous run (warm: nothing changed but the
+    /// new T-roots, which are grown here).
+    fn main_loop(
+        &mut self,
+        g: &mut Graph,
+        absorb: Option<&[bool]>,
+        source_ok: Option<&[bool]>,
+    ) -> Cap {
+        let n = g.n();
+        let is_absorb = |v: usize| absorb.map_or(false, |m| m[v]);
+        let is_source = |v: usize| source_ok.map_or(true, |m| m[v]);
+        let mut total: Cap = 0;
         loop {
             let mut augmented = false;
             loop {
@@ -140,23 +299,12 @@ impl Bk {
                 break;
             }
             // fresh forests, flow state kept
-            let stats = (self.augmentations, self.adoptions, self.grown);
             self.reset(n);
-            (self.augmentations, self.adoptions, self.grown) = stats;
-            for v in 0..n {
-                if is_absorb(v) || g.sink_cap[v] > 0 {
-                    self.tree[v] = TREE_T;
-                    self.parent[v] = TERMINAL;
-                    self.dist[v] = 1;
-                    self.active.push_back(v as NodeId);
-                } else if is_source(v) && g.excess[v] > 0 {
-                    self.tree[v] = TREE_S;
-                    self.parent[v] = TERMINAL;
-                    self.dist[v] = 1;
-                    self.active.push_back(v as NodeId);
-                }
-            }
+            self.seed_forests(g, absorb, source_ok);
         }
+        // the forests now reflect the final residual state: reusable
+        self.warm = true;
+        self.note_absorb(absorb, n);
         total
     }
 
@@ -380,7 +528,11 @@ impl Bk {
                     continue;
                 }
                 // the connecting arc must carry flow toward the terminal
-                let conn = if vt == TREE_S { g.sister(a as u32) } else { a as u32 };
+                let conn = if vt == TREE_S {
+                    g.sister(a as u32)
+                } else {
+                    a as u32
+                };
                 if g.cap[conn as usize] == 0 {
                     continue;
                 }
@@ -415,7 +567,11 @@ impl Bk {
                     } else {
                         // a potential future parent: reactivate so the
                         // subtree can regrow toward v later
-                        let conn = if vt == TREE_S { g.sister(a as u32) } else { a as u32 };
+                        let conn = if vt == TREE_S {
+                            g.sister(a as u32)
+                        } else {
+                            a as u32
+                        };
                         if g.cap[conn as usize] > 0 {
                             self.active.push_back(u);
                         }
@@ -603,6 +759,122 @@ mod tests {
         bk.run(&mut g, None, None);
         assert_eq!(g.flow_value(), want);
         assert!(g.is_max_preflow());
+    }
+
+    #[test]
+    fn warm_stages_match_cold_stages() {
+        // §6.3: growing the absorb set across `run_warm` calls routes,
+        // per stage, exactly what a cold solver routes. Per-stage totals
+        // are unique max-flow values given the stage's input state, and
+        // both chains exhaust every prefix target set, so the totals
+        // must coincide even though the split between individual targets
+        // (and hence the residual networks) may differ — cf.
+        // `absorb_mode_matches_dinic_absorb`.
+        let mut rng = Rng::new(0x6E63);
+        for trial in 0..60 {
+            let n = 4 + rng.index(24);
+            let m = rng.index(4 * n);
+            let g0 = random_graph(&mut rng, n, m);
+            // nested absorb sets A1 ⊆ A2 ⊆ A3; the union is never a source
+            let mut masks: Vec<Vec<bool>> = Vec::new();
+            let mut cur = vec![false; n];
+            for _ in 0..3 {
+                for v in 0..n {
+                    if !cur[v] && rng.chance(0.12) {
+                        cur[v] = true;
+                    }
+                }
+                masks.push(cur.clone());
+            }
+            let src_ok: Vec<bool> = (0..n).map(|v| !masks[2][v]).collect();
+
+            let mut g_cold = g0.clone();
+            let mut g_warm = g0.clone();
+            let mut warm = Bk::new();
+            for (k, mask) in masks.iter().enumerate() {
+                let mut cold = Bk::new();
+                let fc = cold.run(&mut g_cold, Some(mask), Some(&src_ok));
+                let fw = if k == 0 {
+                    warm.run(&mut g_warm, Some(mask), Some(&src_ok))
+                } else {
+                    warm.run_warm(&mut g_warm, Some(mask), Some(&src_ok))
+                };
+                assert_eq!(fc, fw, "trial {trial} stage {k}");
+                g_warm.check_invariants();
+            }
+            // the warm preflow is maximal: a fresh cold run from the
+            // final state routes nothing further
+            let mut extra = Bk::new();
+            assert_eq!(
+                extra.run(&mut g_warm, Some(&masks[2]), Some(&src_ok)),
+                0,
+                "trial {trial}: warm run left an augmenting path behind"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_absorbing_a_mid_tree_vertex_keeps_forests_acyclic() {
+        // 0(excess) → 1 → 2 ↔ 3: the warm stage absorbs vertex 1, which
+        // sits mid-S-tree with the 2 ↔ 3 subtree hanging below it. The
+        // severed subtree must not re-adopt into itself via stale
+        // distance caches (regression: without opening a new `time`
+        // epoch in `run_warm`, 2 adopted its own descendant 3 and the
+        // parent cycle hung the next augment walk).
+        let mut b = GraphBuilder::new(4);
+        b.add_terminal(0, 10, 0);
+        b.add_edge(0, 1, 8, 0);
+        b.add_edge(1, 2, 8, 8);
+        b.add_edge(2, 3, 5, 5);
+        let mut g = b.build();
+        let absorb0 = vec![false; 4];
+        let mut absorb1 = vec![false; 4];
+        absorb1[1] = true;
+        let src_ok = vec![true, false, true, true];
+        let mut bk = Bk::new();
+        let f0 = bk.run(&mut g, Some(&absorb0), Some(&src_ok));
+        assert_eq!(f0, 0, "no targets yet; forests grown over the chain");
+        let f1 = bk.run_warm(&mut g, Some(&absorb1), Some(&src_ok));
+        assert_eq!(f1, 8, "absorption at 1 is bounded by the 0→1 arc");
+        assert_eq!(g.excess[1], 8);
+        g.check_invariants();
+    }
+
+    #[test]
+    fn warm_without_forests_falls_back_to_cold() {
+        let mut rng = Rng::new(0xC01D);
+        let g0 = random_graph(&mut rng, 16, 40);
+        let mut g1 = g0.clone();
+        let mut g2 = g0.clone();
+        let f1 = Bk::new().run(&mut g1, None, None);
+        let f2 = Bk::new().run_warm(&mut g2, None, None);
+        assert_eq!(f1, f2);
+        assert_eq!(g1.flow_value(), g2.flow_value());
+    }
+
+    #[test]
+    fn warm_rerun_with_unchanged_masks_is_a_noop() {
+        let mut rng = Rng::new(0x1D1E);
+        for trial in 0..30 {
+            let n = 4 + rng.index(20);
+            let g0 = random_graph(&mut rng, n, rng.index(4 * n));
+            let mut absorb = vec![false; n];
+            let mut src_ok = vec![true; n];
+            for v in 0..n {
+                if rng.chance(0.2) {
+                    absorb[v] = true;
+                    src_ok[v] = false;
+                }
+            }
+            let mut g = g0.clone();
+            let mut bk = Bk::new();
+            bk.run(&mut g, Some(&absorb), Some(&src_ok));
+            let before = g.clone();
+            let again = bk.run_warm(&mut g, Some(&absorb), Some(&src_ok));
+            assert_eq!(again, 0, "trial {trial}: nothing new to route");
+            assert_eq!(g.cap, before.cap, "trial {trial}: residual untouched");
+            assert_eq!(g.excess, before.excess, "trial {trial}");
+        }
     }
 
     #[test]

@@ -26,15 +26,21 @@ pub struct Dinic {
     cur: Vec<u32>,
     queue: Vec<NodeId>,
     path: Vec<ArcId>,
-    /// Number of BFS phases run by the last call (for metrics).
+    /// Number of BFS phases run, cumulative over the workspace lifetime
+    /// (callers that need per-run numbers snapshot and diff).
     pub phases: u64,
-    /// Number of augmenting paths found by the last call.
+    /// Number of augmenting paths found, cumulative like `phases`.
     pub augmentations: u64,
 }
 
 impl Dinic {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Approximate resident workspace memory, bytes.
+    pub fn memory_bytes(&self) -> usize {
+        (self.level.len() + self.cur.len() + self.queue.len() + self.path.len()) * 4
     }
 
     fn ensure(&mut self, n: usize) {
@@ -56,8 +62,6 @@ impl Dinic {
     ) -> Cap {
         let n = g.n();
         self.ensure(n);
-        self.phases = 0;
-        self.augmentations = 0;
         let mut total: Cap = 0;
         let is_absorb = |v: usize| absorb.map_or(false, |m| m[v]);
         let is_source = |v: usize| source_ok.map_or(true, |m| m[v]);
@@ -268,7 +272,8 @@ mod tests {
             let u = rng.index(n);
             let v = rng.index(n);
             if u != v {
-                b.add_edge(u as NodeId, v as NodeId, rng.range_i64(0, cmax), rng.range_i64(0, cmax));
+                let (cu, cv) = (rng.range_i64(0, cmax), rng.range_i64(0, cmax));
+                b.add_edge(u as NodeId, v as NodeId, cu, cv);
             }
         }
         b.build()

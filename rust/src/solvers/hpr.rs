@@ -48,6 +48,16 @@ impl Hpr {
         Hpr { global_relabel_freq: freq, ..Self::default() }
     }
 
+    /// Approximate resident workspace memory, bytes.
+    pub fn memory_bytes(&self) -> usize {
+        (self.cur.len() + self.label_count.len()) * 4
+            + self
+                .buckets
+                .iter()
+                .map(|b| b.len() * 4 + std::mem::size_of::<Vec<u32>>())
+                .sum::<usize>()
+    }
+
     fn bucket_put(&mut self, v: NodeId, d: u32) {
         let d = d as usize;
         if self.buckets.len() <= d {
@@ -301,7 +311,11 @@ impl Hpr {
                 }
             }
         }
-        let target = if d_next >= d_inf { d_inf } else { (d_next + 1).min(d_inf) };
+        let target = if d_next >= d_inf {
+            d_inf
+        } else {
+            (d_next + 1).min(d_inf)
+        };
         self.gap_events += 1;
         for v in 0..n {
             if !is_frozen(v) && label[v] > gap && label[v] < target {

@@ -150,7 +150,8 @@ mod tests {
                 let u = rng.index(n);
                 let vv = rng.index(n);
                 if u != vv {
-                    b.add_edge(u as NodeId, vv as NodeId, rng.range_i64(0, 10), rng.range_i64(0, 10));
+                    let (cu, cv) = (rng.range_i64(0, 10), rng.range_i64(0, 10));
+                    b.add_edge(u as NodeId, vv as NodeId, cu, cv);
                 }
             }
             let mut g = b.build();

@@ -1,8 +1,9 @@
 //! Cross-algorithm integration: every solver in the crate — BK, HIPR0,
-//! HIPR0.5, Dinic, S-ARD (both cores, with/without heuristics,
-//! streaming), S-PRD, P-ARD, P-PRD, DD — must return the same maximum
-//! flow on shared structured and random instances, and every returned
-//! cut must be a certificate (cost == flow).
+//! HIPR0.5, Dinic, S-ARD (both cores, warm- and cold-forest BK,
+//! with/without heuristics, streaming), S-PRD, P-ARD, P-PRD, DD — must
+//! return the same maximum flow on shared structured and random
+//! instances, and every returned cut must be a certificate
+//! (cost == flow).
 
 use armincut::coordinator::dd::{solve_dd, DdOptions};
 use armincut::coordinator::parallel::{solve_parallel, ParOptions};
@@ -37,6 +38,17 @@ fn check_all(g: &Graph, k: usize) {
         ("s-ard-dinic", {
             let mut o = SeqOptions::ard();
             o.core = CoreKind::Dinic;
+            o
+        }),
+        ("s-ard-bk", {
+            let mut o = SeqOptions::ard();
+            o.core = CoreKind::Bk;
+            o
+        }),
+        ("s-ard-bk-cold", {
+            let mut o = SeqOptions::ard();
+            o.core = CoreKind::Bk;
+            o.warm_start = false;
             o
         }),
     ] {

@@ -87,7 +87,7 @@ fn exact_region_distance(g: &Graph, p: &Partition) -> Vec<u32> {
             if g.cap[g.sister(a as u32) as usize] == 0 {
                 continue;
             }
-            let w = if p.region(u as u32) != p.region(v) { 1 } else { 0 };
+            let w = u32::from(p.region(u as u32) != p.region(v));
             if dv + w < dist[u] {
                 dist[u] = dv + w;
                 if w == 0 {

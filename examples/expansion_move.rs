@@ -138,7 +138,7 @@ impl Mrf {
         }
         let g = b.build();
         let partition = Partition::by_node_ranges(n, regions);
-        let res = solve_sequential(&g, &partition, opts);
+        let res = solve_sequential(&g, &partition, opts).expect("solve");
         assert!(res.metrics.converged);
         // cut side true (T, sink) = "keep current"; false (S) = take α
         let before = self.energy(x);

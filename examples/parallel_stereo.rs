@@ -33,7 +33,7 @@ fn main() {
     println!("\n{:<12} {:>9} {:>8} {:>10}", "solver", "time s", "sweeps", "flow");
     println!("{:<12} {:>9.3} {:>8} {:>10}", "BK", t_bk, "-", flow);
 
-    let seq = solve_sequential(&g, &partition, &SeqOptions::ard());
+    let seq = solve_sequential(&g, &partition, &SeqOptions::ard()).expect("solve");
     assert_eq!(seq.metrics.flow, flow);
     println!(
         "{:<12} {:>9.3} {:>8} {:>10}",

@@ -39,7 +39,7 @@ fn main() {
         let mut o = SeqOptions::ard();
         o.core = core;
         o.warm_start = warm;
-        let res = solve_sequential(&g, &part, &o);
+        let res = solve_sequential(&g, &part, &o).expect("solve");
         assert_eq!(res.metrics.flow, f);
         println!(
             "S-ARD {name}: total {:.3}s discharge {:.3}s relabel {:.3}s gap {:.3}s \
@@ -55,7 +55,7 @@ fn main() {
             res.metrics.core_adopt
         );
     }
-    let res = solve_sequential(&g, &part, &SeqOptions::prd());
+    let res = solve_sequential(&g, &part, &SeqOptions::prd()).expect("solve");
     assert_eq!(res.metrics.flow, f);
     println!(
         "S-PRD: total {:.3}s discharge {:.3}s sweeps {}",

@@ -34,7 +34,7 @@ fn main() {
     // Two regions (left/right half) — `|B|` is the 2·h middle column.
     let partition = Partition::grid2d(w, h, 2, 1);
 
-    let result = solve_sequential(&g, &partition, &SeqOptions::ard());
+    let result = solve_sequential(&g, &partition, &SeqOptions::ard()).expect("solve");
     println!("max flow / min cut value: {}", result.metrics.flow);
     println!(
         "solved in {} sweeps (+{} label-only), {} region discharges",

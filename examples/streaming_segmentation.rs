@@ -58,14 +58,14 @@ fn main() {
     let mut io = Vec::new();
     for (name, mut opts) in [("S-ARD", SeqOptions::ard()), ("S-PRD", SeqOptions::prd())] {
         opts.streaming_dir = Some(dir.clone());
-        let res = solve_sequential(&g, &partition, &opts);
+        let res = solve_sequential(&g, &partition, &opts).expect("streaming solve");
         let m = &res.metrics;
         assert!(m.converged, "{name} did not converge");
         assert_eq!(m.flow, flow_bk, "{name} flow must match BK");
         let snap = g.snapshot();
         assert_eq!(g.cut_cost(&snap, &res.cut), flow_bk, "{name} cut certificate");
         println!(
-            "\n{name} (streaming, 1 region resident):\n  flow        = {} (matches BK ✓)\n  sweeps      = {} (+{} label-only)\n  cpu         = {:.2}s  (discharge {:.2}s, relabel {:.2}s, gap {:.2}s, msg {:.2}s)\n  disk I/O    = {} MB read, {} MB written\n  memory      = {:.1} MB shared + {:.1} MB region page (vs {} MB whole graph)",
+            "\n{name} (streaming, 1 region resident):\n  flow        = {} (matches BK ✓)\n  sweeps      = {} (+{} label-only)\n  cpu         = {:.2}s  (discharge {:.2}s, relabel {:.2}s, gap {:.2}s, msg {:.2}s)\n  disk I/O    = {} MB read, {} MB written ({} MB raw before page compression)\n  disk time   = {:.2}s blocking + {:.2}s overlapped; prefetch {}/{} hits\n  memory      = {:.1} MB shared + {:.1} MB region page (vs {} MB whole graph)",
             m.flow,
             m.sweeps,
             m.extra_sweeps,
@@ -76,6 +76,11 @@ fn main() {
             m.t_msg.as_secs_f64(),
             m.disk_read_bytes >> 20,
             m.disk_write_bytes >> 20,
+            m.page_raw_bytes >> 20,
+            m.t_disk.as_secs_f64(),
+            m.t_disk_overlapped.as_secs_f64(),
+            m.prefetch_hits,
+            m.prefetch_hits + m.prefetch_misses,
             m.shared_mem_bytes as f64 / (1 << 20) as f64,
             m.max_region_mem_bytes as f64 / (1 << 20) as f64,
             g.memory_bytes() >> 20,

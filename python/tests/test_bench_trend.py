@@ -1,0 +1,100 @@
+"""Tests for scripts/bench_trend.py (the BENCH_*.json trend differ).
+
+The script lives outside the python package tree, so it is loaded by
+file path; it is stdlib-only and must run on the CI runner's system
+python3.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).resolve().parents[2] / "scripts" / "bench_trend.py"
+
+spec = importlib.util.spec_from_file_location("bench_trend", SCRIPT)
+bench_trend = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_trend)
+
+
+def write_bench(dirpath: Path, bench_id: str, records):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    doc = {"bench": bench_id, "schema": 3, "quick": True,
+           "experiment_wall_seconds": None, "records": records}
+    (dirpath / f"BENCH_{bench_id}.json").write_text(json.dumps(doc))
+
+
+def rec(case="g", solver="S-ARD", flow=42, wall=1.0, stored=0):
+    return {"case": case, "solver": solver, "flow": flow,
+            "sweeps": 3, "discharges": 9, "wall_seconds": wall,
+            "converged": True, "page_stored_bytes": stored}
+
+
+def test_matching_flows_exit_zero(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec(wall=1.2, stored=100)])
+    write_bench(tmp_path / "base", "fig6", [rec(wall=1.0, stored=120)])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 0
+    assert "0 flow mismatch(es)" in out
+    assert "+20.0%" in out  # wall-time delta reported
+    assert "pages" in out  # schema-3 disk bytes reported
+
+
+def test_flow_mismatch_exits_one(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec(flow=42)])
+    write_bench(tmp_path / "base", "fig6", [rec(flow=41)])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 1
+    assert "FLOW MISMATCH" in out
+
+
+def test_missing_baseline_is_ok(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "nowhere")])
+    assert code == 0
+    assert "first run" in capsys.readouterr().out
+
+
+def test_missing_current_is_an_error(tmp_path):
+    assert bench_trend.main([str(tmp_path / "nope"), str(tmp_path)]) == 2
+
+
+def test_new_and_disappeared_records_are_advisory(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec(solver="S-ARD"), rec(solver="BK")])
+    write_bench(tmp_path / "base", "fig6", [rec(solver="S-ARD"), rec(solver="HPR")])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 0
+    assert "new record" in out
+    assert "disappeared" in out
+
+
+def test_slowdown_marker(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec(wall=2.0)])
+    write_bench(tmp_path / "base", "fig6", [rec(wall=1.0)])
+    code = bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "base"), "--wall-warn-pct", "50"])
+    out = capsys.readouterr().out
+    assert code == 0, "slowdowns are advisory"
+    assert "[slower]" in out
+
+
+def test_corrupt_json_is_skipped_not_fatal(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    write_bench(tmp_path / "base", "fig6", [rec()])
+    (tmp_path / "cur" / "BENCH_bad.json").write_text("{not json")
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 0
+    assert "skipping unreadable" in out
+
+
+@pytest.mark.parametrize("stored,expect", [(0, False), (77, True)])
+def test_disk_bytes_only_shown_when_present(tmp_path, capsys, stored, expect):
+    write_bench(tmp_path / "cur", "t1", [rec(stored=stored)])
+    write_bench(tmp_path / "base", "t1", [rec(stored=stored)])
+    bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    assert ("pages" in capsys.readouterr().out) is expect

@@ -20,6 +20,15 @@ pub struct RunMetrics {
     /// Streaming mode: bytes read/written to region page files.
     pub disk_read_bytes: u64,
     pub disk_write_bytes: u64,
+    /// Streaming mode, page-compression accounting: what the written
+    /// pages would have occupied uncompressed vs what they actually
+    /// occupied on disk (page headers included in both).
+    pub page_raw_bytes: u64,
+    pub page_stored_bytes: u64,
+    /// Streaming mode, prefetch pipeline: region loads served by the
+    /// read-ahead vs loads that fell back to a synchronous read.
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
     /// ARD-core work totals (§6.3 forest-reuse visibility): vertices
     /// grown into the search structure (BK) / BFS phases (Dinic),
     /// augmenting paths, and orphan adoptions (BK only). Zero for PRD.
@@ -33,7 +42,10 @@ pub struct RunMetrics {
     pub t_relabel: Duration,
     pub t_gap: Duration,
     pub t_msg: Duration,
+    /// Disk time on the critical path (the coordinator was stalled).
     pub t_disk: Duration,
+    /// Disk + codec time the prefetch pipeline hid behind discharges.
+    pub t_disk_overlapped: Duration,
     /// Wall-clock of the whole solve.
     pub t_total: Duration,
     /// Shared + maximum region-resident memory estimate, bytes.
@@ -55,10 +67,23 @@ impl RunMetrics {
 
     /// One-line summary used by the CLI and benches.
     pub fn summary(&self, name: &str) -> String {
+        let stream = if self.disk_read_bytes + self.disk_write_bytes > 0 {
+            format!(
+                " [disk block {:.3}s overlap {:.3}s, pages {}->{} MB, prefetch {}/{}]",
+                self.t_disk.as_secs_f64(),
+                self.t_disk_overlapped.as_secs_f64(),
+                self.page_raw_bytes / (1 << 20),
+                self.page_stored_bytes / (1 << 20),
+                self.prefetch_hits,
+                self.prefetch_hits + self.prefetch_misses,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{name}: flow={} sweeps={}(+{}) discharges={} core g/a/a {}/{}/{} \
              cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) \
-             io r/w {}/{} MB mem {}+{}+{} MB{}",
+             io r/w {}/{} MB mem {}+{}+{} MB{stream}{}",
             self.flow,
             self.sweeps,
             self.extra_sweeps,
@@ -124,5 +149,19 @@ mod tests {
     fn summary_flags_divergence() {
         let m = RunMetrics { converged: false, ..Default::default() };
         assert!(m.summary("dd").contains("NOT CONVERGED"));
+    }
+
+    #[test]
+    fn summary_stream_tail_only_when_streaming() {
+        let m = RunMetrics { converged: true, ..Default::default() };
+        assert!(!m.summary("s").contains("prefetch"));
+        let m = RunMetrics {
+            converged: true,
+            disk_read_bytes: 1 << 20,
+            prefetch_hits: 3,
+            prefetch_misses: 1,
+            ..Default::default()
+        };
+        assert!(m.summary("s").contains("prefetch 3/4"));
     }
 }

@@ -462,7 +462,7 @@ mod tests {
         for seed in 0..5 {
             let g = random_graph(1234 + seed, 50, 100);
             let p = Partition::by_node_ranges(g.n(), 4);
-            let s = solve_sequential(&g, &p, &SeqOptions::ard());
+            let s = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
             let r = solve_parallel(&g, &p, &ParOptions::ard(4));
             assert_eq!(s.metrics.flow, r.metrics.flow);
         }

@@ -3,8 +3,11 @@
 //! Takes regions one-by-one from the fixed partition and applies the
 //! plugged Discharge operation (ARD or PRD) until no vertex is active.
 //! Optionally runs in *streaming* mode (§5.3): only one region resident
-//! in memory at a time, the others paged to disk, with byte-accurate
-//! I/O accounting.
+//! in memory at a time, the others paged out through the out-of-core
+//! region store ([`crate::store`]) — compressed, checksummed pages,
+//! with a prefetch pipeline that writes back region `r−1` and reads
+//! ahead region `r+1` while region `r` discharges. Byte-accurate I/O
+//! accounting separates blocking from overlapped disk time.
 //!
 //! After the preflow converges, the labeling is only a lower bound on
 //! the distance; extra label-only sweeps (region-relabel + gap) run
@@ -12,6 +15,7 @@
 //! (§5.3 — "in practice it takes from 0 to 2 extra sweeps").
 
 use crate::coordinator::metrics::{RunMetrics, Timer};
+use crate::core::error::{Context, Result};
 use crate::core::graph::{Cap, Graph};
 use crate::core::partition::Partition;
 use crate::region::ard::{Ard, ArdCore};
@@ -19,6 +23,7 @@ use crate::region::boundary_relabel::boundary_relabel;
 use crate::region::decompose::{Decomposition, DistanceMode, RegionPart};
 use crate::region::prd::Prd;
 use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
+use crate::store::{Residency, StoreConfig};
 use std::path::PathBuf;
 
 /// Which region-discharge operation drives the sweep.
@@ -59,6 +64,12 @@ pub struct SeqOptions {
     pub max_sweeps: u32,
     /// Streaming mode: page regions to files under this directory.
     pub streaming_dir: Option<PathBuf>,
+    /// Streaming: overlap paging with discharges via the store's
+    /// background I/O thread (`--no-prefetch` disables).
+    pub streaming_prefetch: bool,
+    /// Streaming: varint+delta page compression with raw fallback
+    /// (`--no-compress` disables).
+    pub streaming_compress: bool,
     /// Region overlaps (paper Conclusion): keep *two* consecutive
     /// regions resident and alternate their discharges until both are
     /// quiet before moving to the next pair — "load pairs of regions
@@ -84,6 +95,8 @@ impl Default for SeqOptions {
             global_gap: true,
             max_sweeps: 0,
             streaming_dir: None,
+            streaming_prefetch: true,
+            streaming_compress: true,
             overlap_pairs: false,
             check_invariants: false,
         }
@@ -257,49 +270,6 @@ impl GapState {
     }
 }
 
-/// Streaming pager: regions live in page files; the coordinator swaps
-/// them in and out one at a time (§5.3).
-struct Pager {
-    dir: PathBuf,
-    resident: Option<usize>,
-}
-
-impl Pager {
-    fn new(dir: PathBuf) -> std::io::Result<Pager> {
-        std::fs::create_dir_all(&dir)?;
-        Ok(Pager { dir, resident: None })
-    }
-
-    fn path(&self, r: usize) -> PathBuf {
-        self.dir.join(format!("region_{r}.page"))
-    }
-
-    /// Unload region `r` to its page file. Returns bytes written.
-    fn unload(&mut self, dec: &mut Decomposition, r: usize) -> std::io::Result<u64> {
-        let part = &dec.parts[r];
-        let bytes = part.to_bytes();
-        std::fs::write(self.path(r), &bytes)?;
-        let shell = RegionPart::shell(part.region_id, part.active, part.pending_gap);
-        dec.parts[r] = shell;
-        self.resident = None;
-        Ok(bytes.len() as u64)
-    }
-
-    /// Load region `r` from its page file. Returns bytes read.
-    fn load(&mut self, dec: &mut Decomposition, r: usize) -> std::io::Result<u64> {
-        let bytes = std::fs::read(self.path(r))?;
-        let mut part = RegionPart::from_bytes(&bytes).ok_or_else(|| {
-            std::io::Error::new(std::io::ErrorKind::InvalidData, "corrupt region page")
-        })?;
-        // the shell carries fresher coordinator-side fields
-        part.active = dec.parts[r].active;
-        part.pending_gap = dec.parts[r].pending_gap;
-        dec.parts[r] = part;
-        self.resident = Some(r);
-        Ok(bytes.len() as u64)
-    }
-}
-
 /// The theoretical sweep bound plus slack, used when `max_sweeps == 0`.
 fn sweep_limit(opts: &SeqOptions, dec: &Decomposition) -> u64 {
     if opts.max_sweeps > 0 {
@@ -378,7 +348,14 @@ fn discharge_region(
 /// Solve `g` under `partition` with Algorithm 1. The input graph is not
 /// modified; the result carries the flow value, the minimum cut and the
 /// run metrics.
-pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> SolveResult {
+///
+/// Errors are only possible in streaming mode (store creation, page
+/// I/O, corrupt pages); the in-memory path is infallible.
+pub fn solve_sequential(
+    g: &Graph,
+    partition: &Partition,
+    opts: &SeqOptions,
+) -> Result<SolveResult> {
     let t_total = std::time::Instant::now();
     let mode = match opts.algorithm {
         Algorithm::Ard => DistanceMode::Ard,
@@ -415,16 +392,25 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
         .global_gap
         .then(|| GapState::new(&dec, opts.algorithm == Algorithm::Prd));
 
-    let mut pager = opts
-        .streaming_dir
-        .clone()
-        .map(|dir| Pager::new(dir).expect("create streaming dir"));
-    if let Some(p) = pager.as_mut() {
-        let td = Timer::start();
-        for r in 0..dec.parts.len() {
-            metrics.disk_write_bytes += p.unload(&mut dec, r).expect("page write");
+    // The out-of-core region store (§5.3): every region is paged out up
+    // front; during a sweep the prefetch pipeline (when enabled) writes
+    // back the previous region and reads ahead the next one while the
+    // current region discharges.
+    let mut store = match &opts.streaming_dir {
+        Some(dir) => {
+            let cfg = StoreConfig {
+                dir: Some(dir.clone()),
+                prefetch: opts.streaming_prefetch,
+                compress: opts.streaming_compress,
+            };
+            Some(Residency::new(&cfg).context("create streaming store")?)
         }
-        td.stop(&mut metrics.t_disk);
+        None => None,
+    };
+    if let Some(st) = store.as_mut() {
+        for r in 0..dec.parts.len() {
+            st.unload(&mut dec, r).context("page out region")?;
+        }
     }
 
     let limit = sweep_limit(opts, &dec);
@@ -444,18 +430,32 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
             u32::MAX
         };
         if opts.overlap_pairs && dec.parts.len() >= 2 {
-            // region overlaps: pairs (0,1), (1,2), … alternate in memory
+            // Region overlaps: pairs (0,1), (1,2), … alternate in memory.
+            // Streaming keeps the shared partner resident across
+            // consecutive pairs (it is needed again immediately) and
+            // prefetches the *next* pair's partner while this pair
+            // discharges — two regions resident, as the Conclusion asks.
             let k = dec.parts.len();
+            let mut carried: Option<usize> = None;
             for a in 0..k - 1 {
                 let b = a + 1;
                 if !dec.region_needs(a) && !dec.region_needs(b) {
+                    if carried == Some(a) {
+                        if let Some(st) = store.as_mut() {
+                            st.unload(&mut dec, a).context("page out region")?;
+                        }
+                    }
+                    carried = None;
                     continue;
                 }
-                if let Some(p) = pager.as_mut() {
-                    let td = Timer::start();
-                    metrics.disk_read_bytes += p.load(&mut dec, a).expect("page read");
-                    metrics.disk_read_bytes += p.load(&mut dec, b).expect("page read");
-                    td.stop(&mut metrics.t_disk);
+                if let Some(st) = store.as_mut() {
+                    if carried != Some(a) {
+                        st.load(&mut dec, a).context("page in region")?;
+                    }
+                    st.load(&mut dec, b).context("page in region")?;
+                    if b + 1 < k {
+                        st.prefetch(b + 1);
+                    }
                 }
                 // alternate until the pair is mutually quiet (bounded by
                 // the pair's own 2|B_pair|² dynamics; cap generously)
@@ -484,19 +484,26 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
                         break;
                     }
                 }
-                if let Some(p) = pager.as_mut() {
-                    let td = Timer::start();
-                    metrics.disk_write_bytes += p.unload(&mut dec, a).expect("page write");
-                    metrics.disk_write_bytes += p.unload(&mut dec, b).expect("page write");
-                    td.stop(&mut metrics.t_disk);
+                if let Some(st) = store.as_mut() {
+                    st.unload(&mut dec, a).context("page out region")?;
+                    carried = Some(b);
+                } else {
+                    carried = None;
+                }
+            }
+            if let Some(c) = carried {
+                if let Some(st) = store.as_mut() {
+                    st.unload(&mut dec, c).context("page out region")?;
                 }
             }
         } else {
-            for r in dec.active_regions() {
-                if let Some(p) = pager.as_mut() {
-                    let td = Timer::start();
-                    metrics.disk_read_bytes += p.load(&mut dec, r).expect("page read");
-                    td.stop(&mut metrics.t_disk);
+            let order = dec.active_regions();
+            for (i, &r) in order.iter().enumerate() {
+                if let Some(st) = store.as_mut() {
+                    st.load(&mut dec, r).context("page in region")?;
+                    if let Some(&next) = order.get(i + 1) {
+                        st.prefetch(next);
+                    }
                 }
                 discharge_region(
                     &mut dec,
@@ -510,10 +517,8 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
                     d_inf,
                     max_stage,
                 );
-                if let Some(p) = pager.as_mut() {
-                    let td = Timer::start();
-                    metrics.disk_write_bytes += p.unload(&mut dec, r).expect("page write");
-                    td.stop(&mut metrics.t_disk);
+                if let Some(st) = store.as_mut() {
+                    st.unload(&mut dec, r).context("page out region")?;
                 }
             }
         }
@@ -546,10 +551,11 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
         loop {
             let mut increase = 0u64;
             for r in 0..dec.parts.len() {
-                if let Some(p) = pager.as_mut() {
-                    let td = Timer::start();
-                    metrics.disk_read_bytes += p.load(&mut dec, r).expect("page read");
-                    td.stop(&mut metrics.t_disk);
+                if let Some(st) = store.as_mut() {
+                    st.load(&mut dec, r).context("page in region")?;
+                    if r + 1 < dec.parts.len() {
+                        st.prefetch(r + 1);
+                    }
                 }
                 let tm = Timer::start();
                 metrics.msg_bytes += dec.sync_in(r);
@@ -563,10 +569,8 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
                 let tm = Timer::start();
                 metrics.msg_bytes += dec.sync_out(r);
                 tm.stop(&mut metrics.t_msg);
-                if let Some(p) = pager.as_mut() {
-                    let td = Timer::start();
-                    metrics.disk_write_bytes += p.unload(&mut dec, r).expect("page write");
-                    td.stop(&mut metrics.t_disk);
+                if let Some(st) = store.as_mut() {
+                    st.unload(&mut dec, r).context("page out region")?;
                 }
             }
             metrics.extra_sweeps += 1;
@@ -580,13 +584,27 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
         }
     }
 
-    // reload everything for cut extraction in streaming mode
-    if let Some(p) = pager.as_mut() {
-        let td = Timer::start();
+    // Reload everything for cut extraction in streaming mode, then
+    // settle the pipeline and account the final I/O split: `t_disk` is
+    // the blocking share on the critical path, `t_disk_overlapped` the
+    // share hidden behind discharge compute.
+    if let Some(st) = store.as_mut() {
         for r in 0..dec.parts.len() {
-            metrics.disk_read_bytes += p.load(&mut dec, r).expect("page read");
+            st.load(&mut dec, r).context("page in region")?;
+            if r + 1 < dec.parts.len() {
+                st.prefetch(r + 1);
+            }
         }
-        td.stop(&mut metrics.t_disk);
+        st.flush().context("flush streaming store")?;
+        let s = st.stats();
+        metrics.disk_read_bytes = s.read_bytes;
+        metrics.disk_write_bytes = s.write_bytes;
+        metrics.page_raw_bytes = s.page_raw_bytes;
+        metrics.page_stored_bytes = s.page_stored_bytes;
+        metrics.prefetch_hits = s.prefetch_hits;
+        metrics.prefetch_misses = s.prefetch_misses;
+        metrics.t_disk = s.t_blocked;
+        metrics.t_disk_overlapped = s.t_overlapped();
     }
 
     metrics.flow = dec.flow_value();
@@ -595,7 +613,7 @@ pub fn solve_sequential(g: &Graph, partition: &Partition, opts: &SeqOptions) -> 
         + prds.iter().map(|p| p.memory_bytes()).sum::<usize>();
     let cut = dec.cut_sides_by_label();
     metrics.t_total = t_total.elapsed();
-    SolveResult { metrics, cut }
+    Ok(SolveResult { metrics, cut })
 }
 
 #[cfg(test)]
@@ -630,7 +648,7 @@ mod tests {
     fn check_solve(g: &Graph, opts: &SeqOptions, k: usize) {
         let expect = reference_value(g);
         let p = Partition::by_node_ranges(g.n(), k);
-        let res = solve_sequential(g, &p, opts);
+        let res = solve_sequential(g, &p, opts).unwrap();
         assert!(res.metrics.converged, "did not converge");
         assert_eq!(res.metrics.flow, expect, "flow mismatch");
         // the cut is a certificate: its cost equals the flow value
@@ -703,8 +721,8 @@ mod tests {
             warm.core = CoreKind::Bk;
             let mut cold = warm.clone();
             cold.warm_start = false;
-            let a = solve_sequential(&g, &p, &warm);
-            let b = solve_sequential(&g, &p, &cold);
+            let a = solve_sequential(&g, &p, &warm).unwrap();
+            let b = solve_sequential(&g, &p, &cold).unwrap();
             assert!(a.metrics.converged && b.metrics.converged, "seed {seed}");
             assert_eq!(a.metrics.flow, b.metrics.flow, "seed {seed}: flow");
             assert_eq!(a.metrics.flow, reference_value(&g), "seed {seed}: oracle");
@@ -737,13 +755,113 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("armincut_stream_test_{}", std::process::id()));
         let mut o = SeqOptions::ard();
         o.streaming_dir = Some(dir.clone());
-        let res = solve_sequential(&g, &p, &o);
-        let mem = solve_sequential(&g, &p, &SeqOptions::ard());
+        let res = solve_sequential(&g, &p, &o).unwrap();
+        let mem = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
         assert_eq!(res.metrics.flow, mem.metrics.flow);
         assert!(res.metrics.disk_read_bytes > 0);
         assert!(res.metrics.disk_write_bytes > 0);
         let snap = g.snapshot();
         assert_eq!(g.cut_cost(&snap, &res.cut), res.metrics.flow);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The acceptance bar of the store subsystem: prefetch+compression
+    /// must be invisible to the algorithm — bit-identical flow, cut,
+    /// sweep counts and discharges against both blocking streaming and
+    /// the in-memory mode — while actually compressing and actually
+    /// prefetching.
+    #[test]
+    fn streaming_prefetch_compress_equivalent_to_memory() {
+        let g = random_graph(4711, 80, 160);
+        let p = Partition::by_node_ranges(g.n(), 5);
+        let base = std::env::temp_dir()
+            .join(format!("armincut_stream_eq_{}", std::process::id()));
+        let mem = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
+
+        for (name, prefetch, compress) in [
+            ("blocking-raw", false, false),
+            ("blocking-compressed", false, true),
+            ("prefetch-raw", true, false),
+            ("prefetch-compressed", true, true),
+        ] {
+            let mut o = SeqOptions::ard();
+            o.streaming_dir = Some(base.join(name));
+            o.streaming_prefetch = prefetch;
+            o.streaming_compress = compress;
+            let res = solve_sequential(&g, &p, &o).unwrap();
+            assert_eq!(res.metrics.flow, mem.metrics.flow, "{name}: flow");
+            assert_eq!(res.cut, mem.cut, "{name}: cut (labels)");
+            assert_eq!(res.metrics.sweeps, mem.metrics.sweeps, "{name}: sweeps");
+            assert_eq!(
+                res.metrics.extra_sweeps, mem.metrics.extra_sweeps,
+                "{name}: extra sweeps"
+            );
+            assert_eq!(
+                res.metrics.discharges, mem.metrics.discharges,
+                "{name}: discharges"
+            );
+            if compress {
+                assert!(
+                    res.metrics.page_stored_bytes < res.metrics.page_raw_bytes,
+                    "{name}: compression must shrink pages"
+                );
+            } else {
+                assert_eq!(res.metrics.page_stored_bytes, res.metrics.page_raw_bytes);
+            }
+            if prefetch {
+                assert!(res.metrics.prefetch_hits > 0, "{name}: prefetch hits");
+            } else {
+                assert_eq!(res.metrics.prefetch_hits + res.metrics.prefetch_misses, 0);
+            }
+        }
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn streaming_errors_propagate_not_panic() {
+        // a regular file where the page directory should be: store
+        // creation must fail as Err, not expect()-panic
+        let g = random_graph(99, 20, 30);
+        let p = Partition::by_node_ranges(g.n(), 2);
+        let path = std::env::temp_dir()
+            .join(format!("armincut_stream_err_{}", std::process::id()));
+        std::fs::write(&path, b"not a directory").unwrap();
+        let mut o = SeqOptions::ard();
+        o.streaming_dir = Some(path.clone());
+        let err = solve_sequential(&g, &p, &o).unwrap_err();
+        assert!(
+            err.to_string().contains("create streaming store"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streaming_rejects_corrupt_page() {
+        // flip a byte in a page mid-store: the next load must surface a
+        // checksum error instead of decoding garbage
+        use crate::store::{decode_page, StoreConfig};
+        let g = random_graph(7, 24, 40);
+        let p = Partition::by_node_ranges(g.n(), 3);
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_stream_corrupt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mode = DistanceMode::Ard;
+        let mut dec = Decomposition::new(&g, &p, mode);
+        let mut st =
+            crate::store::Residency::new(&StoreConfig::streaming(dir.clone())).unwrap();
+        for r in 0..dec.parts.len() {
+            st.unload(&mut dec, r).unwrap();
+        }
+        st.flush().unwrap();
+        let page_path = dir.join("region_1.page");
+        let mut bytes = std::fs::read(&page_path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(decode_page(&bytes).is_err(), "tamper detected directly");
+        std::fs::write(&page_path, &bytes).unwrap();
+        let err = st.load(&mut dec, 1).unwrap_err();
+        assert!(err.to_string().contains("page"), "unexpected error: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -754,7 +872,7 @@ mod tests {
             let p = Partition::by_node_ranges(g.n(), 5);
             let mut o = SeqOptions::ard();
             o.overlap_pairs = true;
-            let res = solve_sequential(&g, &p, &o);
+            let res = solve_sequential(&g, &p, &o).unwrap();
             assert!(res.metrics.converged);
             assert_eq!(res.metrics.flow, reference_value(&g), "seed {seed}");
             let snap = g.snapshot();
@@ -775,8 +893,8 @@ mod tests {
         let mut ovl = plain.clone();
         ovl.streaming_dir = Some(dir.join("b"));
         ovl.overlap_pairs = true;
-        let r1 = solve_sequential(&g, &p, &plain);
-        let r2 = solve_sequential(&g, &p, &ovl);
+        let r1 = solve_sequential(&g, &p, &plain).unwrap();
+        let r2 = solve_sequential(&g, &p, &ovl).unwrap();
         std::fs::remove_dir_all(&dir).ok();
         assert_eq!(r1.metrics.flow, r2.metrics.flow);
         assert!(
@@ -795,7 +913,7 @@ mod tests {
             let p = Partition::by_node_ranges(g.n(), 3);
             let mut o = SeqOptions::ard();
             o.partial_discharge = false; // the theorem covers full ARD
-            let res = solve_sequential(&g, &p, &o);
+            let res = solve_sequential(&g, &p, &o).unwrap();
             let d = Decomposition::new(&g, &p, DistanceMode::Ard);
             let b = d.shared.num_boundary() as u64;
             assert!(res.metrics.converged);
@@ -816,8 +934,8 @@ mod tests {
             let p = Partition::by_node_ranges(g.n(), 4);
             let mut no_gap = SeqOptions::ard();
             no_gap.global_gap = false;
-            let a = solve_sequential(&g, &p, &SeqOptions::ard());
-            let b = solve_sequential(&g, &p, &no_gap);
+            let a = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
+            let b = solve_sequential(&g, &p, &no_gap).unwrap();
             assert_eq!(a.metrics.flow, b.metrics.flow);
         }
     }
@@ -832,7 +950,7 @@ mod tests {
         b.add_edge(2, 3, 5, 5);
         let g = b.build();
         let p = Partition::by_node_ranges(4, 2);
-        let res = solve_sequential(&g, &p, &SeqOptions::ard());
+        let res = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
         assert_eq!(res.metrics.flow, 0);
         // nodes 0,1 are trapped on the source side
         assert!(!res.cut[0] && !res.cut[1]);

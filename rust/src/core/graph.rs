@@ -12,6 +12,7 @@
 //! are `arc_range(v)`. This is the layout every solver in the crate
 //! (BK, HPR, Dinic, ARD, PRD) iterates over in its hot loop.
 
+use crate::store::codec::{Codec, Dec, Enc};
 use std::ops::Range;
 
 /// Integer capacity type. The paper assumes integer capacities
@@ -26,7 +27,7 @@ pub type ArcId = u32;
 pub const NO_ARC: ArcId = ArcId::MAX;
 
 /// A mutable residual network in excess form.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Graph {
     /// CSR offsets, `n + 1` entries.
     first_out: Vec<u32>,
@@ -231,70 +232,65 @@ impl Graph {
 }
 
 impl Graph {
-    /// Serialize the full graph (structure + mutable state) to bytes —
-    /// the streaming coordinator pages regions to disk in this format.
+    /// Serialize the full graph (structure + mutable state) through the
+    /// store codec. `Codec::Raw` reproduces the historical `to_bytes`
+    /// layout byte-for-byte; `Codec::Compact` is what compressed region
+    /// pages use (CSR offsets delta-coded, everything else varints).
+    pub fn encode(&self, e: &mut Enc) {
+        e.u32_slice_delta(&self.first_out);
+        e.u32_slice(&self.head);
+        e.u32_slice(&self.sister);
+        e.i64_slice(&self.cap);
+        e.i64_slice(&self.excess);
+        e.i64_slice(&self.sink_cap);
+        e.i64(self.flow_to_sink);
+        e.i64(self.base_flow);
+    }
+
+    /// Inverse of [`Graph::encode`]. Light structural sanity checks
+    /// guard against payloads that decode but cannot be a CSR graph.
+    pub fn decode(d: &mut Dec) -> Option<Graph> {
+        let first_out = d.u32_slice_delta()?;
+        let head = d.u32_slice()?;
+        let sister = d.u32_slice()?;
+        let cap = d.i64_slice()?;
+        let excess = d.i64_slice()?;
+        let sink_cap = d.i64_slice()?;
+        let flow_to_sink = d.i64()?;
+        let base_flow = d.i64()?;
+        if first_out.is_empty()
+            || *first_out.last()? as usize != head.len()
+            || sister.len() != head.len()
+            || cap.len() != head.len()
+            || excess.len() + 1 != first_out.len()
+            || sink_cap.len() != excess.len()
+        {
+            return None;
+        }
+        Some(Graph { first_out, head, sister, cap, excess, sink_cap, flow_to_sink, base_flow })
+    }
+
+    /// Exact size of [`Graph::encode`] output under `Codec::Raw`
+    /// (fixed-width layout), computed without serializing — keep in
+    /// lockstep with `encode`.
+    pub fn raw_encoded_len(&self) -> usize {
+        6 * 8 // six slice length prefixes
+            + 4 * (self.first_out.len() + self.head.len() + self.sister.len())
+            + 8 * (self.cap.len() + self.excess.len() + self.sink_cap.len())
+            + 16 // flow_to_sink, base_flow
+    }
+
+    /// Legacy fixed-width serialization (the `split` part-file format).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.memory_bytes() + 64);
-        let push_u32s = |out: &mut Vec<u8>, xs: &[u32]| {
-            out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
-            for &x in xs {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        };
-        let push_i64s = |out: &mut Vec<u8>, xs: &[i64]| {
-            out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
-            for &x in xs {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        };
-        push_u32s(&mut out, &self.first_out);
-        push_u32s(&mut out, &self.head);
-        push_u32s(&mut out, &self.sister);
-        push_i64s(&mut out, &self.cap);
-        push_i64s(&mut out, &self.excess);
-        push_i64s(&mut out, &self.sink_cap);
-        out.extend_from_slice(&self.flow_to_sink.to_le_bytes());
-        out.extend_from_slice(&self.base_flow.to_le_bytes());
-        out
+        let mut e = Enc::with_capacity(Codec::Raw, self.raw_encoded_len());
+        self.encode(&mut e);
+        debug_assert_eq!(e.len(), self.raw_encoded_len());
+        e.into_bytes()
     }
 
     /// Deserialize a graph written by [`Graph::to_bytes`].
     pub fn from_bytes(data: &[u8]) -> Option<Graph> {
-        let mut pos = 0usize;
-        let take_u64 = |pos: &mut usize| -> Option<u64> {
-            let b = data.get(*pos..*pos + 8)?;
-            *pos += 8;
-            Some(u64::from_le_bytes(b.try_into().ok()?))
-        };
-        fn take_u32s(data: &[u8], pos: &mut usize) -> Option<Vec<u32>> {
-            let n = u64::from_le_bytes(data.get(*pos..*pos + 8)?.try_into().ok()?) as usize;
-            *pos += 8;
-            let mut v = Vec::with_capacity(n);
-            for _ in 0..n {
-                v.push(u32::from_le_bytes(data.get(*pos..*pos + 4)?.try_into().ok()?));
-                *pos += 4;
-            }
-            Some(v)
-        }
-        fn take_i64s(data: &[u8], pos: &mut usize) -> Option<Vec<i64>> {
-            let n = u64::from_le_bytes(data.get(*pos..*pos + 8)?.try_into().ok()?) as usize;
-            *pos += 8;
-            let mut v = Vec::with_capacity(n);
-            for _ in 0..n {
-                v.push(i64::from_le_bytes(data.get(*pos..*pos + 8)?.try_into().ok()?));
-                *pos += 8;
-            }
-            Some(v)
-        }
-        let first_out = take_u32s(data, &mut pos)?;
-        let head = take_u32s(data, &mut pos)?;
-        let sister = take_u32s(data, &mut pos)?;
-        let cap = take_i64s(data, &mut pos)?;
-        let excess = take_i64s(data, &mut pos)?;
-        let sink_cap = take_i64s(data, &mut pos)?;
-        let flow_to_sink = take_u64(&mut pos)? as i64;
-        let base_flow = take_u64(&mut pos)? as i64;
-        Some(Graph { first_out, head, sister, cap, excess, sink_cap, flow_to_sink, base_flow })
+        Graph::decode(&mut Dec::new(Codec::Raw, data))
     }
 }
 
@@ -571,6 +567,37 @@ mod tests {
         assert_eq!(g2.sink_cap, g.sink_cap);
         assert_eq!(g2.flow_value(), g.flow_value());
         g2.check_invariants();
+    }
+
+    #[test]
+    fn compact_codec_roundtrip_and_shrinks() {
+        let mut g = diamond();
+        let a = g.arc_range(0).start as ArcId;
+        g.push(a, 1);
+        let mut e = Enc::new(Codec::Compact);
+        g.encode(&mut e);
+        let bytes = e.into_bytes();
+        let g2 = Graph::decode(&mut Dec::new(Codec::Compact, &bytes)).unwrap();
+        assert_eq!(g2, g);
+        assert!(bytes.len() < g.to_bytes().len(), "varints beat fixed width here");
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_csr() {
+        // a graph whose last CSR offset disagrees with the arc count
+        let g = diamond();
+        let mut e = Enc::new(Codec::Raw);
+        let mut bad = g.first_out.clone();
+        *bad.last_mut().unwrap() += 1;
+        e.u32_slice_delta(&bad);
+        e.u32_slice(&g.head);
+        e.u32_slice(&g.sister);
+        e.i64_slice(&g.cap);
+        e.i64_slice(&g.excess);
+        e.i64_slice(&g.sink_cap);
+        e.i64(0);
+        e.i64(0);
+        assert!(Graph::from_bytes(&e.into_bytes()).is_none());
     }
 
     #[test]

@@ -81,6 +81,15 @@ pub struct BenchRecord {
     pub core_grow: u64,
     pub core_augment: u64,
     pub core_adopt: u64,
+    /// Streaming-store accounting (schema 3; zero off-streaming): page
+    /// bytes before/after compression, prefetch hit split, and the
+    /// blocking vs overlapped share of disk time.
+    pub page_raw_bytes: u64,
+    pub page_stored_bytes: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub disk_blocked_seconds: f64,
+    pub disk_overlapped_seconds: f64,
 }
 
 impl BenchRecord {
@@ -96,6 +105,12 @@ impl BenchRecord {
             core_grow: r.core_grow,
             core_augment: r.core_augment,
             core_adopt: r.core_adopt,
+            page_raw_bytes: r.page_raw_bytes,
+            page_stored_bytes: r.page_stored_bytes,
+            prefetch_hits: r.prefetch_hits,
+            prefetch_misses: r.prefetch_misses,
+            disk_blocked_seconds: r.disk_blocked_seconds,
+            disk_overlapped_seconds: r.disk_overlapped_seconds,
         }
     }
 
@@ -111,6 +126,12 @@ impl BenchRecord {
             core_grow: res.metrics.core_grow,
             core_augment: res.metrics.core_augment,
             core_adopt: res.metrics.core_adopt,
+            page_raw_bytes: res.metrics.page_raw_bytes,
+            page_stored_bytes: res.metrics.page_stored_bytes,
+            prefetch_hits: res.metrics.prefetch_hits,
+            prefetch_misses: res.metrics.prefetch_misses,
+            disk_blocked_seconds: res.metrics.t_disk.as_secs_f64(),
+            disk_overlapped_seconds: res.metrics.t_disk_overlapped.as_secs_f64(),
         }
     }
 }
@@ -220,6 +241,12 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 core_grow: 0,
                 core_augment: 0,
                 core_adopt: 0,
+                page_raw_bytes: 0,
+                page_stored_bytes: 0,
+                prefetch_hits: 0,
+                prefetch_misses: 0,
+                disk_blocked_seconds: 0.0,
+                disk_overlapped_seconds: 0.0,
             });
         }
         "appendix_a" => {
@@ -234,7 +261,7 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 ("s-ard-basic", SeqOptions::ard_basic()),
                 ("s-ard-heuristics", SeqOptions::ard()),
             ] {
-                let res = solve_sequential(&g, &part, &opts);
+                let res = solve_sequential(&g, &part, &opts).expect("in-memory solve");
                 assert!(res.metrics.converged, "{name} did not converge");
                 out.push(BenchRecord::from_solve(&case, name, &res));
             }
@@ -265,6 +292,12 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 core_grow: 0,
                 core_augment: 0,
                 core_adopt: 0,
+                page_raw_bytes: 0,
+                page_stored_bytes: 0,
+                prefetch_hits: 0,
+                prefetch_misses: 0,
+                disk_blocked_seconds: 0.0,
+                disk_overlapped_seconds: 0.0,
             });
         }
         other => panic!("no probe defined for experiment id: {other}"),
@@ -300,8 +333,10 @@ pub fn to_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
-    // schema 2: adds core_grow / core_augment / core_adopt per record
-    s.push_str("  \"schema\": 2,\n");
+    // schema 3: adds the streaming-store fields (page_raw_bytes,
+    // page_stored_bytes, prefetch_hits/misses, disk blocked/overlapped
+    // seconds) per record; schema 2 added the core work counters
+    s.push_str("  \"schema\": 3,\n");
     let _ = writeln!(s, "  \"quick\": {quick},");
     match experiment_seconds {
         Some(t) => {
@@ -315,7 +350,10 @@ pub fn to_json(
             s,
             "    {{\"case\": \"{}\", \"solver\": \"{}\", \"flow\": {}, \"sweeps\": {}, \
              \"discharges\": {}, \"wall_seconds\": {:.6}, \"converged\": {}, \
-             \"core_grow\": {}, \"core_augment\": {}, \"core_adopt\": {}}}{}",
+             \"core_grow\": {}, \"core_augment\": {}, \"core_adopt\": {}, \
+             \"page_raw_bytes\": {}, \"page_stored_bytes\": {}, \
+             \"prefetch_hits\": {}, \"prefetch_misses\": {}, \
+             \"disk_blocked_seconds\": {:.6}, \"disk_overlapped_seconds\": {:.6}}}{}",
             json_escape(&r.case),
             json_escape(&r.solver),
             r.flow,
@@ -326,6 +364,12 @@ pub fn to_json(
             r.core_grow,
             r.core_augment,
             r.core_adopt,
+            r.page_raw_bytes,
+            r.page_stored_bytes,
+            r.prefetch_hits,
+            r.prefetch_misses,
+            r.disk_blocked_seconds,
+            r.disk_overlapped_seconds,
             if i + 1 < records.len() { "," } else { "" },
         );
     }
@@ -391,17 +435,51 @@ mod tests {
             core_grow: 100,
             core_augment: 20,
             core_adopt: 7,
+            page_raw_bytes: 4096,
+            page_stored_bytes: 1024,
+            prefetch_hits: 9,
+            prefetch_misses: 2,
+            disk_blocked_seconds: 0.01,
+            disk_overlapped_seconds: 0.05,
         }];
         let j = to_json("fig6", true, Some(1.5), &recs);
         assert!(j.contains("\"bench\": \"fig6\""));
-        assert!(j.contains("\"schema\": 2"));
+        assert!(j.contains("\"schema\": 3"));
         assert!(j.contains("\\\"1"));
         assert!(j.contains("\"flow\": 42"));
         assert!(j.contains("\"converged\": true"));
         assert!(j.contains("\"core_grow\": 100"));
         assert!(j.contains("\"core_augment\": 20"));
         assert!(j.contains("\"core_adopt\": 7"));
+        assert!(j.contains("\"page_raw_bytes\": 4096"));
+        assert!(j.contains("\"page_stored_bytes\": 1024"));
+        assert!(j.contains("\"prefetch_hits\": 9"));
+        assert!(j.contains("\"prefetch_misses\": 2"));
+        assert!(j.contains("\"disk_blocked_seconds\": 0.010000"));
+        assert!(j.contains("\"disk_overlapped_seconds\": 0.050000"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    /// The acceptance check of the store subsystem at the bench level:
+    /// the table1 probe runs the streaming competitors, whose records
+    /// must show compression strictly winning and the prefetch pipeline
+    /// actually hitting.
+    #[test]
+    fn table1_stream_records_show_compression_and_prefetch() {
+        let recs = probe_records("table1", true);
+        let streams: Vec<_> =
+            recs.iter().filter(|r| r.solver.contains("stream")).collect();
+        assert!(!streams.is_empty(), "table1 probes the streaming solvers");
+        for r in streams {
+            assert!(
+                r.page_stored_bytes < r.page_raw_bytes,
+                "{}: stored {} !< raw {}",
+                r.solver,
+                r.page_stored_bytes,
+                r.page_raw_bytes
+            );
+            assert!(r.prefetch_hits > 0, "{}: no prefetch hits", r.solver);
+        }
     }
 
     #[test]

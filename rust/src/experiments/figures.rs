@@ -301,11 +301,11 @@ pub fn appendix_a_tightness(quick: bool) {
     );
     for &k in ks {
         let (g, p) = adversarial_chains(k, 1000);
-        let a = solve_sequential(&g, &p, &SeqOptions::ard());
-        let b = solve_sequential(&g, &p, &SeqOptions::prd());
+        let a = solve_sequential(&g, &p, &SeqOptions::ard()).expect("in-memory solve");
+        let b = solve_sequential(&g, &p, &SeqOptions::prd()).expect("in-memory solve");
         let mut o = SeqOptions::prd();
         o.global_gap = false;
-        let c = solve_sequential(&g, &p, &o);
+        let c = solve_sequential(&g, &p, &o).expect("in-memory solve");
         assert!(a.metrics.converged && b.metrics.converged && c.metrics.converged);
         assert_eq!(a.metrics.flow, 0);
         print_row(&[

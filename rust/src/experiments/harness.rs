@@ -9,6 +9,8 @@ use crate::core::partition::Partition;
 use crate::solvers::bk::Bk as BkSolver;
 use crate::solvers::hpr::Hpr as HprSolver;
 use crate::solvers::MaxFlowSolver;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Quick scale unless `ARMINCUT_FULL=1`.
@@ -76,6 +78,42 @@ pub struct CompetitorResult {
     pub core_grow: u64,
     pub core_augment: u64,
     pub core_adopt: u64,
+    /// Streaming-store accounting (schema 3): page bytes before/after
+    /// compression, prefetch pipeline hit split, and the blocking vs
+    /// overlapped share of disk time. Zero for non-streaming solvers.
+    pub page_raw_bytes: u64,
+    pub page_stored_bytes: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub disk_blocked_seconds: f64,
+    pub disk_overlapped_seconds: f64,
+}
+
+/// Monotone counter making every streaming temp dir unique within one
+/// process, so repeated competitor runs can never collide.
+static STREAM_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Owns a per-run streaming temp dir and removes it on drop — also on
+/// panic paths (a failed probe assertion must not leak page files in
+/// `$TMPDIR`).
+struct StreamDirGuard(PathBuf);
+
+impl StreamDirGuard {
+    fn new(tag: &str) -> StreamDirGuard {
+        let dir = std::env::temp_dir().join(format!(
+            "armincut_exp_{}_{}_{}",
+            std::process::id(),
+            STREAM_DIR_SEQ.fetch_add(1, Ordering::Relaxed),
+            tag.replace(['(', ')'], "_")
+        ));
+        StreamDirGuard(dir)
+    }
+}
+
+impl Drop for StreamDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
 }
 
 /// Run one competitor on (a private copy of) `g`.
@@ -89,17 +127,16 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 Competitor::SArd | Competitor::SArdStream => SeqOptions::ard(),
                 _ => SeqOptions::prd(),
             };
-            if matches!(c, Competitor::SArdStream | Competitor::SPrdStream) {
-                o.streaming_dir = Some(std::env::temp_dir().join(format!(
-                    "armincut_exp_{}_{}",
-                    std::process::id(),
-                    c.name().replace(['(', ')'], "_")
-                )));
-            }
-            let res = solve_sequential(g, partition, &o);
-            if let Some(dir) = &o.streaming_dir {
-                std::fs::remove_dir_all(dir).ok();
-            }
+            let guard = if matches!(c, Competitor::SArdStream | Competitor::SPrdStream) {
+                let guard = StreamDirGuard::new(&c.name());
+                o.streaming_dir = Some(guard.0.clone());
+                Some(guard)
+            } else {
+                None
+            };
+            let res = solve_sequential(g, partition, &o)
+                .unwrap_or_else(|e| panic!("{} solve failed: {e}", c.name()));
+            drop(guard);
             let m = &res.metrics;
             CompetitorResult {
                 name: c.name(),
@@ -120,6 +157,12 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 core_grow: m.core_grow,
                 core_augment: m.core_augment,
                 core_adopt: m.core_adopt,
+                page_raw_bytes: m.page_raw_bytes,
+                page_stored_bytes: m.page_stored_bytes,
+                prefetch_hits: m.prefetch_hits,
+                prefetch_misses: m.prefetch_misses,
+                disk_blocked_seconds: m.t_disk.as_secs_f64(),
+                disk_overlapped_seconds: m.t_disk_overlapped.as_secs_f64(),
             }
         }
         Competitor::PArd(t) | Competitor::PPrd(t) => {
@@ -149,6 +192,12 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 core_grow: m.core_grow,
                 core_augment: m.core_augment,
                 core_adopt: m.core_adopt,
+                page_raw_bytes: 0,
+                page_stored_bytes: 0,
+                prefetch_hits: 0,
+                prefetch_misses: 0,
+                disk_blocked_seconds: 0.0,
+                disk_overlapped_seconds: 0.0,
             }
         }
         Competitor::Dd(k) => {
@@ -169,6 +218,12 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 core_grow: 0,
                 core_augment: 0,
                 core_adopt: 0,
+                page_raw_bytes: 0,
+                page_stored_bytes: 0,
+                prefetch_hits: 0,
+                prefetch_misses: 0,
+                disk_blocked_seconds: 0.0,
+                disk_overlapped_seconds: 0.0,
             }
         }
     }
@@ -193,6 +248,12 @@ fn whole_graph(c: Competitor, g: &Graph, solver: &mut dyn MaxFlowSolver) -> Comp
         core_grow: 0,
         core_augment: 0,
         core_adopt: 0,
+        page_raw_bytes: 0,
+        page_stored_bytes: 0,
+        prefetch_hits: 0,
+        prefetch_misses: 0,
+        disk_blocked_seconds: 0.0,
+        disk_overlapped_seconds: 0.0,
     }
 }
 

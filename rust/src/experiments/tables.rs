@@ -133,7 +133,7 @@ pub fn ablation_heuristics(quick: bool) {
         let mut o = SeqOptions::ard();
         o.partial_discharge = partial;
         o.boundary_relabel = brel;
-        let res = solve_sequential(&g, &part, &o);
+        let res = solve_sequential(&g, &part, &o).expect("in-memory solve");
         assert!(res.metrics.converged);
         flows.push(res.metrics.flow);
         print_row(&[

@@ -61,7 +61,7 @@ mod tests {
     #[test]
     fn flow_is_zero_and_all_trapped() {
         let (g, p) = adversarial_chains(3, 50);
-        let res = solve_sequential(&g, &p, &SeqOptions::ard());
+        let res = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
         assert!(res.metrics.converged);
         assert_eq!(res.metrics.flow, 0);
         assert!(res.cut.iter().all(|&sink_side| !sink_side), "no vertex reaches t");
@@ -75,7 +75,7 @@ mod tests {
             let mut o = SeqOptions::ard();
             o.global_gap = false; // isolate the labeling dynamics
             o.boundary_relabel = false;
-            let res = solve_sequential(&g, &p, &o);
+            let res = solve_sequential(&g, &p, &o).unwrap();
             assert!(res.metrics.converged);
             sweeps.push(res.metrics.sweeps);
         }
@@ -95,7 +95,7 @@ mod tests {
         let mut grew = false;
         for k in [2usize, 8, 32] {
             let (g, p) = adversarial_chains(k, 100);
-            let res = solve_sequential(&g, &p, &o);
+            let res = solve_sequential(&g, &p, &o).unwrap();
             assert!(res.metrics.converged);
             if res.metrics.sweeps > prev {
                 grew = true;

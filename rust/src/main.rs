@@ -43,6 +43,8 @@ SOLVE OPTIONS:
   --regions K          partition into K regions by node ranges (default 4)
   --threads N          worker threads for p-ard/p-prd/dd (default 4)
   --streaming DIR      sequential streaming mode, one region in memory
+  --no-prefetch        streaming: disable the background I/O pipeline
+  --no-compress        streaming: store raw (uncompressed) region pages
   --core {bk|dinic}    ARD augmenting core (default dinic)
   --cold-start         disable §6.3 BK forest reuse across ARD stages
   --no-gap / --no-brelabel / --no-partial   disable heuristics
@@ -214,7 +216,21 @@ fn cmd_solve(opts: &Flags) -> i32 {
             if let Some(dir) = opts.get("streaming") {
                 o.streaming_dir = Some(dir.into());
             }
-            let res = solve_sequential(&g, &part, &o);
+            if opts.contains_key("no-prefetch") {
+                o.streaming_prefetch = false;
+            }
+            if opts.contains_key("no-compress") {
+                o.streaming_compress = false;
+            }
+            // streaming store failures (unwritable dir, corrupt pages)
+            // surface as exit code 1, not a panic
+            let res = match solve_sequential(&g, &part, &o) {
+                Ok(res) => res,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
             (res.metrics.summary(algo), res.cut)
         }
         "p-ard" | "p-prd" => {

@@ -20,6 +20,7 @@
 
 use crate::core::graph::{ArcId, Cap, Graph, GraphBuilder, NodeId};
 use crate::core::partition::Partition;
+use crate::store::codec::{Codec, Dec, Enc};
 
 /// Sentinel for "not a boundary vertex".
 pub const NOT_BOUNDARY: u32 = u32::MAX;
@@ -79,7 +80,7 @@ impl SharedState {
 }
 
 /// Mapping of one local boundary arc to its shared counterpart.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BoundaryArcRef {
     /// Local arc id (tail = inner vertex, head = foreign boundary).
     pub local_arc: ArcId,
@@ -90,7 +91,7 @@ pub struct BoundaryArcRef {
 }
 
 /// One region's private network and bookkeeping.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RegionPart {
     pub region_id: u32,
     /// Local residual network over `R ∪ B^R` (no `s`/`t`; excess form).
@@ -589,105 +590,96 @@ impl Decomposition {
 }
 
 impl RegionPart {
-    /// Serialize the full region (structure + mutable state) to bytes —
-    /// the streaming coordinator (§5.3 "allocating all the region's data
-    /// into a fixed page") writes this to the region's page file.
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.memory_bytes() + 128);
-        out.extend_from_slice(&self.region_id.to_le_bytes());
-        out.extend_from_slice(&(self.n_inner as u64).to_le_bytes());
-        let g = self.graph.to_bytes();
-        out.extend_from_slice(&(g.len() as u64).to_le_bytes());
-        out.extend_from_slice(&g);
-        let push_u32s = |out: &mut Vec<u8>, xs: &[u32]| {
-            out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
-            for &x in xs {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
-        };
-        push_u32s(&mut out, &self.global_ids);
-        push_u32s(&mut out, &self.label);
-        let pairs = |out: &mut Vec<u8>, xs: &[(u32, u32)]| {
-            out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    /// Serialize the full region (structure + mutable state) through the
+    /// store codec — the streaming coordinator (§5.3 "allocating all the
+    /// region's data into a fixed page") wraps this payload in the
+    /// checksummed page format of [`crate::store::page`]. `Codec::Raw`
+    /// reproduces the historical `to_bytes` layout byte-for-byte.
+    pub fn encode(&self, e: &mut Enc) {
+        e.u32(self.region_id);
+        e.u64(self.n_inner as u64);
+        // nested graph, length-prefixed in both modes
+        let mut ge = Enc::with_capacity(e.codec(), self.graph.memory_bytes() / 4 + 64);
+        self.graph.encode(&mut ge);
+        let gb = ge.into_bytes();
+        e.u64(gb.len() as u64);
+        e.bytes(&gb);
+        e.u32_slice_delta(&self.global_ids);
+        e.u32_slice(&self.label);
+        let pairs = |e: &mut Enc, xs: &[(u32, u32)]| {
+            e.u64(xs.len() as u64);
             for &(a, b) in xs {
-                out.extend_from_slice(&a.to_le_bytes());
-                out.extend_from_slice(&b.to_le_bytes());
+                e.u32(a);
+                e.u32(b);
             }
         };
-        pairs(&mut out, &self.owned_boundary);
-        pairs(&mut out, &self.foreign_boundary);
-        out.extend_from_slice(&(self.boundary_arcs.len() as u64).to_le_bytes());
+        pairs(e, &self.owned_boundary);
+        pairs(e, &self.foreign_boundary);
+        e.u64(self.boundary_arcs.len() as u64);
         for ba in &self.boundary_arcs {
-            out.extend_from_slice(&ba.local_arc.to_le_bytes());
-            out.extend_from_slice(&ba.shared.to_le_bytes());
-            out.push(ba.forward as u8);
+            e.u32(ba.local_arc);
+            e.u32(ba.shared);
+            e.u8(ba.forward as u8);
         }
         for &c in &self.synced_cap {
-            out.extend_from_slice(&c.to_le_bytes());
+            e.i64(c);
         }
-        out.push(self.active as u8);
-        out.extend_from_slice(&self.pending_gap.to_le_bytes());
-        out
+        e.u8(self.active as u8);
+        e.u32(self.pending_gap);
     }
 
-    /// Deserialize a region written by [`RegionPart::to_bytes`].
-    pub fn from_bytes(data: &[u8]) -> Option<RegionPart> {
-        let mut pos = 0usize;
-        fn u32_at(data: &[u8], pos: &mut usize) -> Option<u32> {
-            let b = data.get(*pos..*pos + 4)?;
-            *pos += 4;
-            Some(u32::from_le_bytes(b.try_into().ok()?))
+    /// Inverse of [`RegionPart::encode`], with structural sanity checks
+    /// (array lengths must agree with the nested graph).
+    pub fn decode(d: &mut Dec) -> Option<RegionPart> {
+        let region_id = d.u32()?;
+        let n_inner = usize::try_from(d.u64()?).ok()?;
+        let glen = usize::try_from(d.u64()?).ok()?;
+        let gbytes = d.bytes(glen)?;
+        let mut gd = Dec::new(d.codec(), gbytes);
+        let graph = Graph::decode(&mut gd)?;
+        if !gd.finished() {
+            return None; // slack inside the nested blob = corrupt page
         }
-        fn u64_at(data: &[u8], pos: &mut usize) -> Option<u64> {
-            let b = data.get(*pos..*pos + 8)?;
-            *pos += 8;
-            Some(u64::from_le_bytes(b.try_into().ok()?))
-        }
-        fn u32s(data: &[u8], pos: &mut usize) -> Option<Vec<u32>> {
-            let n = u64_at(data, pos)? as usize;
-            let mut v = Vec::with_capacity(n);
-            for _ in 0..n {
-                v.push(u32_at(data, pos)?);
+        let global_ids = d.u32_slice_delta()?;
+        let label = d.u32_slice()?;
+        let pairs = |d: &mut Dec| -> Option<Vec<(u32, u32)>> {
+            let n = usize::try_from(d.u64()?).ok()?;
+            if n > d.remaining() {
+                return None; // corrupt length guard (each pair needs bytes)
             }
-            Some(v)
-        }
-        fn pairs(data: &[u8], pos: &mut usize) -> Option<Vec<(u32, u32)>> {
-            let n = u64_at(data, pos)? as usize;
             let mut v = Vec::with_capacity(n);
             for _ in 0..n {
-                let a = u32_at(data, pos)?;
-                let b = u32_at(data, pos)?;
+                let a = d.u32()?;
+                let b = d.u32()?;
                 v.push((a, b));
             }
             Some(v)
+        };
+        let owned_boundary = pairs(d)?;
+        let foreign_boundary = pairs(d)?;
+        let nba = usize::try_from(d.u64()?).ok()?;
+        if nba > d.remaining() {
+            return None;
         }
-        let region_id = u32_at(data, &mut pos)?;
-        let n_inner = u64_at(data, &mut pos)? as usize;
-        let glen = u64_at(data, &mut pos)? as usize;
-        let graph = Graph::from_bytes(data.get(pos..pos + glen)?)?;
-        pos += glen;
-        let global_ids = u32s(data, &mut pos)?;
-        let label = u32s(data, &mut pos)?;
-        let owned_boundary = pairs(data, &mut pos)?;
-        let foreign_boundary = pairs(data, &mut pos)?;
-        let nba = u64_at(data, &mut pos)? as usize;
         let mut boundary_arcs = Vec::with_capacity(nba);
         for _ in 0..nba {
-            let local_arc = u32_at(data, &mut pos)?;
-            let shared = u32_at(data, &mut pos)?;
-            let forward = *data.get(pos)? != 0;
-            pos += 1;
+            let local_arc = d.u32()?;
+            let shared = d.u32()?;
+            let forward = d.u8()? != 0;
             boundary_arcs.push(BoundaryArcRef { local_arc, shared, forward });
         }
         let mut synced_cap = Vec::with_capacity(nba);
         for _ in 0..nba {
-            let b = data.get(pos..pos + 8)?;
-            pos += 8;
-            synced_cap.push(Cap::from_le_bytes(b.try_into().ok()?));
+            synced_cap.push(d.i64()?);
         }
-        let active = *data.get(pos)? != 0;
-        pos += 1;
-        let pending_gap = u32_at(data, &mut pos)?;
+        let active = d.u8()? != 0;
+        let pending_gap = d.u32()?;
+        if n_inner > global_ids.len()
+            || global_ids.len() != graph.n()
+            || label.len() != global_ids.len()
+        {
+            return None;
+        }
         Some(RegionPart {
             region_id,
             graph,
@@ -701,6 +693,35 @@ impl RegionPart {
             active,
             pending_gap,
         })
+    }
+
+    /// Exact size of [`RegionPart::encode`] output under `Codec::Raw`
+    /// (fixed-width layout), computed without serializing — keep in
+    /// lockstep with `encode`.
+    pub fn raw_encoded_len(&self) -> usize {
+        4 + 8 + 8 // region_id, n_inner, nested graph length prefix
+            + self.graph.raw_encoded_len()
+            + (8 + 4 * self.global_ids.len())
+            + (8 + 4 * self.label.len())
+            + (8 + 8 * self.owned_boundary.len())
+            + (8 + 8 * self.foreign_boundary.len())
+            + (8 + 9 * self.boundary_arcs.len())
+            + 8 * self.synced_cap.len()
+            + 1 // active
+            + 4 // pending_gap
+    }
+
+    /// Legacy fixed-width serialization (the `split` part-file format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(Codec::Raw, self.raw_encoded_len());
+        self.encode(&mut e);
+        debug_assert_eq!(e.len(), self.raw_encoded_len());
+        e.into_bytes()
+    }
+
+    /// Deserialize a region written by [`RegionPart::to_bytes`].
+    pub fn from_bytes(data: &[u8]) -> Option<RegionPart> {
+        RegionPart::decode(&mut Dec::new(Codec::Raw, data))
     }
 
     /// A zero-footprint placeholder left in memory while the real region

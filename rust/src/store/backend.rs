@@ -1,0 +1,130 @@
+//! Region page storage backends.
+//!
+//! A backend is a dumb keyed byte store: page encoding/decoding and
+//! prefetch scheduling live above it ([`crate::store::pipeline`]), so
+//! the same pipeline runs against files on disk or an in-memory map
+//! (the latter is what tests and the non-streaming fallback use).
+
+use crate::store::StoreError;
+use std::path::PathBuf;
+
+/// Keyed page storage. `Send` so the prefetch pipeline can own a
+/// backend on its I/O thread.
+pub trait RegionStore: Send {
+    /// Human-readable location, used in error messages.
+    fn describe(&self) -> String;
+    /// Store the page of region `r`, replacing any previous page.
+    fn put(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError>;
+    /// Fetch the page of region `r`.
+    fn get(&mut self, r: usize) -> Result<Vec<u8>, StoreError>;
+}
+
+/// One file per region under a directory (`region_<r>.page`).
+pub struct FileStore {
+    dir: PathBuf,
+}
+
+impl FileStore {
+    /// Create the directory (and parents) if needed.
+    pub fn create(dir: PathBuf) -> Result<FileStore, StoreError> {
+        std::fs::create_dir_all(&dir).map_err(|e| StoreError::io("create dir", &dir, e))?;
+        Ok(FileStore { dir })
+    }
+
+    fn path(&self, r: usize) -> PathBuf {
+        self.dir.join(format!("region_{r}.page"))
+    }
+}
+
+impl RegionStore for FileStore {
+    fn describe(&self) -> String {
+        self.dir.display().to_string()
+    }
+
+    fn put(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError> {
+        let path = self.path(r);
+        std::fs::write(&path, page).map_err(|e| StoreError::io("write page", &path, e))
+    }
+
+    fn get(&mut self, r: usize) -> Result<Vec<u8>, StoreError> {
+        let path = self.path(r);
+        std::fs::read(&path).map_err(|e| StoreError::io("read page", &path, e))
+    }
+}
+
+/// In-memory backend: pages live in a vector of byte buffers.
+#[derive(Default)]
+pub struct MemStore {
+    pages: Vec<Option<Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    /// Total bytes currently held.
+    pub fn stored_bytes(&self) -> usize {
+        self.pages.iter().flatten().map(|p| p.len()).sum()
+    }
+}
+
+impl RegionStore for MemStore {
+    fn describe(&self) -> String {
+        "<memory>".to_string()
+    }
+
+    fn put(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError> {
+        if self.pages.len() <= r {
+            self.pages.resize(r + 1, None);
+        }
+        self.pages[r] = Some(page.to_vec());
+        Ok(())
+    }
+
+    fn get(&mut self, r: usize) -> Result<Vec<u8>, StoreError> {
+        self.pages
+            .get(r)
+            .and_then(|p| p.clone())
+            .ok_or_else(|| StoreError::Missing { region: r })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_store_roundtrip_and_missing() {
+        let mut s = MemStore::new();
+        assert!(s.get(0).is_err());
+        s.put(2, b"abc").unwrap();
+        assert_eq!(s.get(2).unwrap(), b"abc");
+        assert!(s.get(1).is_err(), "hole stays missing");
+        s.put(2, b"xy").unwrap();
+        assert_eq!(s.get(2).unwrap(), b"xy", "put replaces");
+        assert_eq!(s.stored_bytes(), 2);
+    }
+
+    #[test]
+    fn file_store_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_store_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::create(dir.clone()).unwrap();
+        s.put(0, b"page-zero").unwrap();
+        assert_eq!(s.get(0).unwrap(), b"page-zero");
+        assert!(s.get(1).is_err(), "absent page file is an error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_store_rejects_uncreatable_dir() {
+        // a regular file where the directory should be
+        let base = std::env::temp_dir()
+            .join(format!("armincut_store_file_{}", std::process::id()));
+        std::fs::write(&base, b"x").unwrap();
+        assert!(FileStore::create(base.clone()).is_err());
+        std::fs::remove_file(&base).ok();
+    }
+}

@@ -1,0 +1,414 @@
+//! Zero-dependency array codec for region pages.
+//!
+//! Two wire modes behind one encoder/decoder pair:
+//!
+//! * [`Codec::Raw`] — the historical fixed-width little-endian layout
+//!   (`u64` length prefixes, 4-byte `u32`s, 8-byte `i64`s). Byte-for-byte
+//!   identical to what `Graph::to_bytes`/`RegionPart::to_bytes` always
+//!   produced, so `.part` files written by the `split` tool stay valid.
+//! * [`Codec::Compact`] — LEB128 varints with zigzag for signed values
+//!   and delta-zigzag for monotone-ish index arrays (CSR `first_out`,
+//!   `global_ids`). Residual capacities and local vertex ids are small
+//!   integers on the paper's instances, so pages shrink severalfold;
+//!   when a page happens not to shrink, [`crate::store::page`] falls
+//!   back to Raw and records that in the page header.
+//!
+//! The decoder never trusts a length field: every slice read is bounded
+//! by the bytes actually remaining, so corrupt or truncated input yields
+//! `None` instead of a huge allocation or a panic.
+
+/// Wire mode of one encoded payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Fixed-width little-endian (the legacy `to_bytes` layout).
+    Raw = 0,
+    /// Varint + delta encoding.
+    Compact = 1,
+}
+
+impl Codec {
+    /// Parse the page-header codec byte.
+    pub fn from_u8(x: u8) -> Option<Codec> {
+        match x {
+            0 => Some(Codec::Raw),
+            1 => Some(Codec::Compact),
+            _ => None,
+        }
+    }
+}
+
+#[inline]
+fn zigzag(x: i64) -> u64 {
+    ((x << 1) ^ (x >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// Streaming encoder over a growable byte buffer.
+pub struct Enc {
+    codec: Codec,
+    out: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new(codec: Codec) -> Enc {
+        Enc { codec, out: Vec::new() }
+    }
+
+    pub fn with_capacity(codec: Codec, cap: usize) -> Enc {
+        Enc { codec, out: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.out
+    }
+
+    /// Append raw bytes verbatim (nested pre-encoded payloads).
+    #[inline]
+    pub fn bytes(&mut self, xs: &[u8]) {
+        self.out.extend_from_slice(xs);
+    }
+
+    /// One byte, both modes.
+    #[inline]
+    pub fn u8(&mut self, x: u8) {
+        self.out.push(x);
+    }
+
+    fn varint(&mut self, mut x: u64) {
+        loop {
+            let b = (x & 0x7f) as u8;
+            x >>= 7;
+            if x == 0 {
+                self.out.push(b);
+                break;
+            }
+            self.out.push(b | 0x80);
+        }
+    }
+
+    #[inline]
+    pub fn u32(&mut self, x: u32) {
+        match self.codec {
+            Codec::Raw => self.out.extend_from_slice(&x.to_le_bytes()),
+            Codec::Compact => self.varint(x as u64),
+        }
+    }
+
+    #[inline]
+    pub fn u64(&mut self, x: u64) {
+        match self.codec {
+            Codec::Raw => self.out.extend_from_slice(&x.to_le_bytes()),
+            Codec::Compact => self.varint(x),
+        }
+    }
+
+    #[inline]
+    pub fn i64(&mut self, x: i64) {
+        match self.codec {
+            Codec::Raw => self.out.extend_from_slice(&x.to_le_bytes()),
+            Codec::Compact => self.varint(zigzag(x)),
+        }
+    }
+
+    /// Length-prefixed `u32` array, element-wise encoded.
+    pub fn u32_slice(&mut self, xs: &[u32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+
+    /// Length-prefixed `u32` array; Compact mode stores zigzag deltas
+    /// between consecutive elements (wins on monotone-ish arrays like
+    /// CSR offsets and sorted id lists, harmless otherwise).
+    pub fn u32_slice_delta(&mut self, xs: &[u32]) {
+        self.u64(xs.len() as u64);
+        match self.codec {
+            Codec::Raw => {
+                for &x in xs {
+                    self.out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Codec::Compact => {
+                let mut prev = 0i64;
+                for &x in xs {
+                    self.varint(zigzag(x as i64 - prev));
+                    prev = x as i64;
+                }
+            }
+        }
+    }
+
+    /// Length-prefixed `i64` array (zigzag varints in Compact mode).
+    pub fn i64_slice(&mut self, xs: &[i64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.i64(x);
+        }
+    }
+}
+
+/// Bounds-checked decoder over a byte slice.
+pub struct Dec<'a> {
+    codec: Codec,
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(codec: Codec, data: &'a [u8]) -> Dec<'a> {
+        Dec { codec, data, pos: 0 }
+    }
+
+    #[inline]
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// All input consumed — required by the page layer so trailing
+    /// garbage cannot hide behind a valid prefix.
+    #[inline]
+    pub fn finished(&self) -> bool {
+        self.pos == self.data.len()
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Option<u8> {
+        let b = *self.data.get(self.pos)?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.data.get(self.pos..self.pos.checked_add(n)?)?;
+        self.pos += n;
+        Some(s)
+    }
+
+    fn varint(&mut self) -> Option<u64> {
+        let mut x = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift == 63 && b > 1 {
+                return None; // overflows u64
+            }
+            x |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Some(x);
+            }
+            shift += 7;
+            if shift > 63 {
+                return None;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Option<u32> {
+        match self.codec {
+            Codec::Raw => {
+                let b = self.bytes(4)?;
+                Some(u32::from_le_bytes(b.try_into().ok()?))
+            }
+            Codec::Compact => u32::try_from(self.varint()?).ok(),
+        }
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Option<u64> {
+        match self.codec {
+            Codec::Raw => {
+                let b = self.bytes(8)?;
+                Some(u64::from_le_bytes(b.try_into().ok()?))
+            }
+            Codec::Compact => self.varint(),
+        }
+    }
+
+    #[inline]
+    pub fn i64(&mut self) -> Option<i64> {
+        match self.codec {
+            Codec::Raw => {
+                let b = self.bytes(8)?;
+                Some(i64::from_le_bytes(b.try_into().ok()?))
+            }
+            Codec::Compact => Some(unzigzag(self.varint()?)),
+        }
+    }
+
+    /// Read a length prefix and sanity-cap it: each element needs at
+    /// least `min_elem_bytes` input bytes, so a corrupt length can never
+    /// drive `Vec::with_capacity` beyond the input size.
+    fn checked_len(&mut self, min_elem_bytes: usize) -> Option<usize> {
+        let n = usize::try_from(self.u64()?).ok()?;
+        if n.checked_mul(min_elem_bytes)? > self.remaining() {
+            return None;
+        }
+        Some(n)
+    }
+
+    pub fn u32_slice(&mut self) -> Option<Vec<u32>> {
+        let min = if self.codec == Codec::Raw { 4 } else { 1 };
+        let n = self.checked_len(min)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Some(v)
+    }
+
+    pub fn u32_slice_delta(&mut self) -> Option<Vec<u32>> {
+        let min = if self.codec == Codec::Raw { 4 } else { 1 };
+        let n = self.checked_len(min)?;
+        let mut v = Vec::with_capacity(n);
+        match self.codec {
+            Codec::Raw => {
+                for _ in 0..n {
+                    let b = self.bytes(4)?;
+                    v.push(u32::from_le_bytes(b.try_into().ok()?));
+                }
+            }
+            Codec::Compact => {
+                let mut prev = 0i64;
+                for _ in 0..n {
+                    let x = prev.checked_add(unzigzag(self.varint()?))?;
+                    v.push(u32::try_from(x).ok()?);
+                    prev = x;
+                }
+            }
+        }
+        Some(v)
+    }
+
+    pub fn i64_slice(&mut self) -> Option<Vec<i64>> {
+        let min = if self.codec == Codec::Raw { 8 } else { 1 };
+        let n = self.checked_len(min)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i64()?);
+        }
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(codec: Codec) {
+        let u32s = vec![0u32, 1, 127, 128, 300, u32::MAX, 42];
+        let mono = vec![0u32, 3, 3, 10, 500, 501, 1_000_000];
+        let i64s = vec![0i64, -1, 1, 63, -64, 1 << 40, i64::MIN, i64::MAX];
+        let mut e = Enc::new(codec);
+        e.u8(7);
+        e.u32(999);
+        e.u64(u64::MAX);
+        e.i64(-12345);
+        e.u32_slice(&u32s);
+        e.u32_slice_delta(&mono);
+        e.i64_slice(&i64s);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(codec, &bytes);
+        assert_eq!(d.u8(), Some(7));
+        assert_eq!(d.u32(), Some(999));
+        assert_eq!(d.u64(), Some(u64::MAX));
+        assert_eq!(d.i64(), Some(-12345));
+        assert_eq!(d.u32_slice().as_deref(), Some(&u32s[..]));
+        assert_eq!(d.u32_slice_delta().as_deref(), Some(&mono[..]));
+        assert_eq!(d.i64_slice().as_deref(), Some(&i64s[..]));
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn roundtrip_raw() {
+        roundtrip(Codec::Raw);
+    }
+
+    #[test]
+    fn roundtrip_compact() {
+        roundtrip(Codec::Compact);
+    }
+
+    #[test]
+    fn raw_layout_is_fixed_width_le() {
+        let mut e = Enc::new(Codec::Raw);
+        e.u32_slice(&[1, 2]);
+        let b = e.into_bytes();
+        let mut want = 2u64.to_le_bytes().to_vec();
+        want.extend_from_slice(&1u32.to_le_bytes());
+        want.extend_from_slice(&2u32.to_le_bytes());
+        assert_eq!(b, want);
+    }
+
+    #[test]
+    fn compact_is_smaller_on_small_values() {
+        let xs: Vec<i64> = (0..1000).map(|i| (i % 37) - 18).collect();
+        let mut raw = Enc::new(Codec::Raw);
+        raw.i64_slice(&xs);
+        let mut compact = Enc::new(Codec::Compact);
+        compact.i64_slice(&xs);
+        assert!(compact.len() * 4 < raw.len(), "{} vs {}", compact.len(), raw.len());
+    }
+
+    #[test]
+    fn corrupt_length_does_not_allocate() {
+        // a huge length prefix over a tiny buffer must decode to None
+        let mut e = Enc::new(Codec::Raw);
+        e.u64(u64::MAX);
+        e.u32(5);
+        let bytes = e.into_bytes();
+        assert!(Dec::new(Codec::Raw, &bytes).u32_slice().is_none());
+        assert!(Dec::new(Codec::Raw, &bytes).i64_slice().is_none());
+    }
+
+    #[test]
+    fn truncated_input_is_rejected_not_panicked() {
+        let mut e = Enc::new(Codec::Compact);
+        e.u32_slice(&[1, 2, 3, 400, 500]);
+        let bytes = e.into_bytes();
+        for cut in 0..bytes.len() {
+            let _ = Dec::new(Codec::Compact, &bytes[..cut]).u32_slice();
+        }
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        // 11 continuation bytes can encode > 64 bits: must be rejected
+        let bytes = [0xffu8; 11];
+        assert!(Dec::new(Codec::Compact, &bytes).u64().is_none());
+    }
+
+    #[test]
+    fn delta_handles_non_monotone() {
+        let xs = vec![10u32, 3, 900, 0, u32::MAX, 1];
+        let mut e = Enc::new(Codec::Compact);
+        e.u32_slice_delta(&xs);
+        let bytes = e.into_bytes();
+        assert_eq!(Dec::new(Codec::Compact, &bytes).u32_slice_delta().as_deref(), Some(&xs[..]));
+    }
+}

@@ -1,0 +1,103 @@
+//! Out-of-core region store (§5.3 streaming made a first-class
+//! subsystem).
+//!
+//! The paper's headline memory result — huge instances solved with one
+//! region resident at a time — needs region residency to be more than a
+//! side effect of the sweep loop. This module owns it end to end:
+//!
+//! * [`codec`] — zero-dependency varint + delta array codec with a raw
+//!   fixed-width mode (the legacy `to_bytes` layout, byte-identical);
+//! * [`page`] — versioned page format: magic, schema version, CRC-32,
+//!   compressed-with-raw-fallback payload; corrupt, truncated or
+//!   foreign pages are rejected, never mis-decoded;
+//! * [`backend`] — the [`RegionStore`] trait with file and in-memory
+//!   backends;
+//! * [`pipeline`] — [`Residency`]: blocking paging, or a double-buffered
+//!   prefetch pipeline whose background I/O thread writes back region
+//!   `r−1` and reads ahead region `r+1` while region `r` discharges,
+//!   preserving the one-region-plus-buffers memory bound.
+//!
+//! The sequential coordinator drives all of this through
+//! [`StoreConfig`]; per-solve accounting lands in
+//! [`pipeline::IoStats`] and from there in `RunMetrics` /
+//! `BENCH_<id>.json` (schema 3).
+
+pub mod backend;
+pub mod codec;
+pub mod page;
+pub mod pipeline;
+
+pub use backend::{FileStore, MemStore, RegionStore};
+pub use codec::{Codec, Dec, Enc};
+pub use page::{decode_page, encode_page, PageError, PageInfo, PAGE_VERSION};
+pub use pipeline::{IoStats, Residency};
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// How the coordinator should keep regions resident.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Page directory (file backend); `None` = in-memory backend.
+    pub dir: Option<PathBuf>,
+    /// Overlap paging with discharge via the background I/O thread.
+    pub prefetch: bool,
+    /// Varint+delta page payloads (raw fallback when they don't shrink).
+    pub compress: bool,
+}
+
+impl StoreConfig {
+    /// File-backed store with prefetch and compression on — the
+    /// `--streaming DIR` default.
+    pub fn streaming(dir: PathBuf) -> StoreConfig {
+        StoreConfig { dir: Some(dir), prefetch: true, compress: true }
+    }
+}
+
+/// Errors of the store subsystem.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Backend I/O failure.
+    Io { op: &'static str, path: String, source: std::io::Error },
+    /// A stored page failed validation or decoding.
+    Page { region: usize, source: PageError },
+    /// No page stored for the region.
+    Missing { region: usize },
+    /// The background I/O thread went away.
+    Pipeline(String),
+}
+
+impl StoreError {
+    pub(crate) fn io(op: &'static str, path: &Path, source: std::io::Error) -> StoreError {
+        StoreError::Io { op, path: path.display().to_string(), source }
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io { op, path, source } => write!(f, "{op} {path}: {source}"),
+            StoreError::Page { region, source } => {
+                write!(f, "region {region} page: {source}")
+            }
+            StoreError::Missing { region } => write!(f, "region {region}: no page stored"),
+            StoreError::Pipeline(msg) => write!(f, "store pipeline: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            StoreError::Page { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<StoreError> for crate::core::error::Error {
+    fn from(e: StoreError) -> Self {
+        crate::core::error::Error::msg(e)
+    }
+}

@@ -1,0 +1,298 @@
+//! Versioned, checksummed on-disk page format for region data.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic           b"ARMP"
+//!      4     2  version         PAGE_VERSION
+//!      6     1  codec           store::codec::Codec as u8
+//!      7     1  reserved        0
+//!      8     8  raw_len         payload size under Codec::Raw (stats)
+//!     16     8  payload_len     size of the payload that follows
+//!     24     4  crc32           IEEE CRC-32 of bytes [4..28) ++ payload
+//!     28     …  payload         RegionPart encoded per `codec`
+//! ```
+//!
+//! Decoding validates magic, version, codec, exact length and checksum
+//! before touching the payload, and the payload decoder itself is
+//! bounds-checked — a truncated, bit-flipped or foreign page is always
+//! rejected ([`PageError`]), never mis-decoded. The CRC covers the
+//! header fields after the magic, so a flipped length or codec byte is
+//! caught even when the payload happens to survive it.
+
+use crate::region::decompose::RegionPart;
+use crate::store::codec::{Codec, Dec, Enc};
+use std::fmt;
+
+/// First bytes of every region page.
+pub const PAGE_MAGIC: [u8; 4] = *b"ARMP";
+/// Bumped on any layout change; readers reject other versions.
+pub const PAGE_VERSION: u16 = 1;
+/// Fixed header size preceding the payload.
+pub const PAGE_HEADER_LEN: usize = 28;
+
+/// Why a page was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PageError {
+    /// Shorter than the header, or `payload_len` disagrees with the
+    /// actual byte count.
+    Truncated,
+    /// Not a region page at all.
+    BadMagic,
+    /// A page from a different format generation.
+    BadVersion(u16),
+    /// Unknown codec byte.
+    BadCodec(u8),
+    /// Stored checksum does not match the content.
+    ChecksumMismatch,
+    /// Header checks passed but the payload does not decode cleanly.
+    Malformed,
+}
+
+impl fmt::Display for PageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PageError::Truncated => write!(f, "page truncated"),
+            PageError::BadMagic => write!(f, "not a region page (bad magic)"),
+            PageError::BadVersion(v) => {
+                write!(f, "unsupported page version {v} (expected {PAGE_VERSION})")
+            }
+            PageError::BadCodec(c) => write!(f, "unknown page codec {c}"),
+            PageError::ChecksumMismatch => write!(f, "page checksum mismatch"),
+            PageError::Malformed => write!(f, "page payload is malformed"),
+        }
+    }
+}
+
+impl std::error::Error for PageError {}
+
+/// Compression/size accounting of one encoded page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageInfo {
+    pub codec: Codec,
+    /// Payload size under `Codec::Raw` (what an uncompressed page would
+    /// have stored).
+    pub raw_len: u64,
+    /// Full on-disk page size: header + actual payload.
+    pub stored_len: u64,
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut b = 0;
+        while b < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            b += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE CRC-32 over the concatenation of `chunks`.
+pub fn crc32(chunks: &[&[u8]]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for chunk in chunks {
+        for &b in *chunk {
+            crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xff) as usize];
+        }
+    }
+    !crc
+}
+
+/// Encode `part` into a page. With `compress` the varint-delta payload
+/// is used when it is strictly smaller than the raw payload; otherwise
+/// (and always when `compress` is off) the page stores the raw layout —
+/// compression never pessimizes the stored size. The raw size is known
+/// analytically ([`RegionPart::raw_encoded_len`]), so the comparison
+/// costs one encode, not two; the raw bytes are only materialized when
+/// they are actually stored.
+pub fn encode_page(part: &RegionPart, compress: bool) -> (Vec<u8>, PageInfo) {
+    let raw_len = part.raw_encoded_len() as u64;
+    let raw_encode = |part: &RegionPart| {
+        let mut raw = Enc::with_capacity(Codec::Raw, raw_len as usize);
+        part.encode(&mut raw);
+        debug_assert_eq!(raw.len() as u64, raw_len);
+        raw.into_bytes()
+    };
+
+    let (codec, payload) = if compress {
+        let mut compact = Enc::with_capacity(Codec::Compact, raw_len as usize / 2 + 64);
+        part.encode(&mut compact);
+        if (compact.len() as u64) < raw_len {
+            (Codec::Compact, compact.into_bytes())
+        } else {
+            (Codec::Raw, raw_encode(part))
+        }
+    } else {
+        (Codec::Raw, raw_encode(part))
+    };
+
+    let mut page = Vec::with_capacity(PAGE_HEADER_LEN + payload.len());
+    page.extend_from_slice(&PAGE_MAGIC);
+    page.extend_from_slice(&PAGE_VERSION.to_le_bytes());
+    page.push(codec as u8);
+    page.push(0);
+    page.extend_from_slice(&raw_len.to_le_bytes());
+    page.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let crc = crc32(&[&page[4..24], payload.as_slice()]);
+    page.extend_from_slice(&crc.to_le_bytes());
+    page.extend_from_slice(&payload);
+    let info =
+        PageInfo { codec, raw_len, stored_len: (PAGE_HEADER_LEN + payload.len()) as u64 };
+    (page, info)
+}
+
+/// Validate and decode a page produced by [`encode_page`].
+pub fn decode_page(data: &[u8]) -> Result<(RegionPart, PageInfo), PageError> {
+    if data.len() < PAGE_HEADER_LEN {
+        return Err(PageError::Truncated);
+    }
+    if data[0..4] != PAGE_MAGIC {
+        return Err(PageError::BadMagic);
+    }
+    let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
+    if version != PAGE_VERSION {
+        return Err(PageError::BadVersion(version));
+    }
+    let codec = Codec::from_u8(data[6]).ok_or(PageError::BadCodec(data[6]))?;
+    let raw_len = u64::from_le_bytes(data[8..16].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(data[16..24].try_into().unwrap());
+    let stored_crc = u32::from_le_bytes(data[24..28].try_into().unwrap());
+    let payload = &data[PAGE_HEADER_LEN..];
+    if payload_len != payload.len() as u64 {
+        return Err(PageError::Truncated);
+    }
+    if crc32(&[&data[4..24], payload]) != stored_crc {
+        return Err(PageError::ChecksumMismatch);
+    }
+    if codec == Codec::Raw && raw_len != payload_len {
+        return Err(PageError::Malformed);
+    }
+    let mut dec = Dec::new(codec, payload);
+    let part = RegionPart::decode(&mut dec).ok_or(PageError::Malformed)?;
+    if !dec.finished() {
+        return Err(PageError::Malformed);
+    }
+    let info = PageInfo { codec, raw_len, stored_len: data.len() as u64 };
+    Ok((part, info))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+    use crate::region::decompose::{Decomposition, DistanceMode};
+
+    fn sample_part() -> RegionPart {
+        let mut b = GraphBuilder::new(8);
+        b.add_terminal(0, 9, 0);
+        b.add_terminal(7, 0, 9);
+        for v in 0..7 {
+            b.add_edge(v, v + 1, 4 + v as i64, 3);
+        }
+        b.add_edge(0, 5, 2, 2);
+        let g = b.build();
+        let p = Partition::by_node_ranges(8, 2);
+        let mut d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        d.sync_in(0);
+        d.parts[0].label[1] = 5;
+        d.parts[0].pending_gap = 3;
+        d.parts.swap_remove(0)
+    }
+
+    #[test]
+    fn roundtrip_both_codecs() {
+        let part = sample_part();
+        for compress in [false, true] {
+            let (page, info) = encode_page(&part, compress);
+            let (back, info2) = decode_page(&page).expect("decode");
+            assert_eq!(back, part, "compress={compress}");
+            assert_eq!(info, info2);
+            assert_eq!(info.stored_len as usize, page.len());
+        }
+    }
+
+    #[test]
+    fn compression_strictly_smaller_here() {
+        let part = sample_part();
+        let (_, info) = encode_page(&part, true);
+        assert_eq!(info.codec, Codec::Compact);
+        assert!(info.stored_len < info.raw_len + PAGE_HEADER_LEN as u64);
+    }
+
+    #[test]
+    fn no_compress_stores_raw() {
+        let part = sample_part();
+        let (_, info) = encode_page(&part, false);
+        assert_eq!(info.codec, Codec::Raw);
+        assert_eq!(info.stored_len, info.raw_len + PAGE_HEADER_LEN as u64);
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_cut() {
+        let (page, _) = encode_page(&sample_part(), true);
+        for cut in 0..page.len() {
+            assert!(decode_page(&page[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_every_single_bit_flip() {
+        let (page, _) = encode_page(&sample_part(), true);
+        for byte in 0..page.len() {
+            for bit in 0..8 {
+                let mut p = page.clone();
+                p[byte] ^= 1 << bit;
+                assert!(
+                    decode_page(&p).is_err(),
+                    "flip of byte {byte} bit {bit} accepted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_pages() {
+        let (page, _) = encode_page(&sample_part(), false);
+        let mut foreign = page.clone();
+        foreign[0..4].copy_from_slice(b"ELF\x7f");
+        assert_eq!(decode_page(&foreign), Err(PageError::BadMagic));
+
+        // future version with a re-stamped checksum: version gate fires
+        let mut future = page.clone();
+        future[4..6].copy_from_slice(&(PAGE_VERSION + 1).to_le_bytes());
+        let crc = crc32(&[&future[4..24], &future[PAGE_HEADER_LEN..]]);
+        future[24..28].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(decode_page(&future), Err(PageError::BadVersion(PAGE_VERSION + 1)));
+
+        // unknown codec with a re-stamped checksum: codec gate fires
+        let mut codec = page;
+        codec[6] = 9;
+        let crc = crc32(&[&codec[4..24], &codec[PAGE_HEADER_LEN..]]);
+        codec[24..28].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(decode_page(&codec), Err(PageError::BadCodec(9)));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let (mut page, _) = encode_page(&sample_part(), true);
+        page.push(0);
+        assert!(decode_page(&page).is_err());
+    }
+
+    #[test]
+    fn crc_reference_value() {
+        // "123456789" is the canonical CRC-32/IEEE check string
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+    }
+}

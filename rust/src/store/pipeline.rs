@@ -1,0 +1,536 @@
+//! Region residency: blocking paging or a double-buffered prefetch
+//! pipeline over a [`RegionStore`] backend.
+//!
+//! In pipelined mode a single background I/O thread owns the backend
+//! and processes commands strictly in order: write-backs ship the
+//! evicted [`RegionPart`] to the thread (which encodes *and* writes off
+//! the critical path), read-aheads decode the predicted next region
+//! while the current one discharges. The command channel is bounded at
+//! one entry and at most one read-ahead is outstanding, so total
+//! residency stays at "one region plus a constant number of buffers" —
+//! the §5.3 memory bound — regardless of region count.
+//!
+//! Ordering guarantee: because one thread executes commands FIFO, a
+//! write-back of region `r` enqueued before any later read of `r` is
+//! always visible to that read; the coordinator never prefetches a
+//! region that is still resident, so a read-ahead can never observe a
+//! page that is about to be rewritten.
+
+use crate::region::decompose::{Decomposition, RegionPart};
+use crate::store::backend::{FileStore, MemStore, RegionStore};
+use crate::store::page::{decode_page, encode_page, PageInfo};
+use crate::store::{StoreConfig, StoreError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+/// Aggregated I/O accounting of one solve.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IoStats {
+    /// Bytes moved from / to the backend (stored page sizes).
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// What the written pages would have occupied uncompressed vs what
+    /// they actually occupied (header included in both).
+    pub page_raw_bytes: u64,
+    pub page_stored_bytes: u64,
+    /// Loads served by (or already underway in) the read-ahead.
+    pub prefetch_hits: u64,
+    /// Loads that had to issue a synchronous read.
+    pub prefetch_misses: u64,
+    /// Wall time the coordinator spent stalled on the store (blocking
+    /// ops, back-pressure, waiting out an in-flight read).
+    pub t_blocked: Duration,
+    /// Total encode/decode + backend time, wherever it ran.
+    pub t_io: Duration,
+}
+
+impl IoStats {
+    /// I/O time hidden behind discharge compute by the pipeline.
+    pub fn t_overlapped(&self) -> Duration {
+        self.t_io.saturating_sub(self.t_blocked)
+    }
+}
+
+fn write_region(
+    store: &mut dyn RegionStore,
+    r: usize,
+    part: &RegionPart,
+    compress: bool,
+) -> Result<PageInfo, StoreError> {
+    let (page, info) = encode_page(part, compress);
+    store.put(r, &page)?;
+    Ok(info)
+}
+
+fn read_region(
+    store: &mut dyn RegionStore,
+    r: usize,
+) -> Result<(RegionPart, PageInfo), StoreError> {
+    let page = store.get(r)?;
+    decode_page(&page).map_err(|e| StoreError::Page { region: r, source: e })
+}
+
+enum Cmd {
+    // boxed: a RegionPart is hundreds of inline bytes and would bloat
+    // every channel slot (clippy: large_enum_variant)
+    Write(usize, Box<RegionPart>),
+    Read(usize),
+    Exit,
+}
+
+enum Rsp {
+    Write(usize, Result<PageInfo, StoreError>, Duration),
+    Read(usize, Result<(Box<RegionPart>, PageInfo), StoreError>, Duration),
+}
+
+struct Pipeline {
+    cmd_tx: SyncSender<Cmd>,
+    rsp_rx: Receiver<Rsp>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Completed read-ahead waiting to be claimed.
+    ready: Option<(usize, Box<RegionPart>, PageInfo)>,
+    /// Region of the one read command in flight, if any.
+    inflight_read: Option<usize>,
+    pending_writes: usize,
+    /// First write-back failure observed while draining responses;
+    /// surfaced on the next fallible call.
+    deferred_err: Option<StoreError>,
+}
+
+impl Pipeline {
+    fn spawn(mut store: Box<dyn RegionStore>, compress: bool) -> Pipeline {
+        // capacity 1: at most one queued command (back-pressure bounds
+        // the number of region-sized buffers in the channel)
+        let (cmd_tx, cmd_rx) = sync_channel::<Cmd>(1);
+        let (rsp_tx, rsp_rx) = channel::<Rsp>();
+        let handle = std::thread::Builder::new()
+            .name("armincut-region-io".into())
+            .spawn(move || {
+                while let Ok(cmd) = cmd_rx.recv() {
+                    match cmd {
+                        Cmd::Write(r, part) => {
+                            let t = Instant::now();
+                            let res = write_region(store.as_mut(), r, &part, compress);
+                            drop(part);
+                            let _ = rsp_tx.send(Rsp::Write(r, res, t.elapsed()));
+                        }
+                        Cmd::Read(r) => {
+                            let t = Instant::now();
+                            let res = read_region(store.as_mut(), r)
+                                .map(|(part, info)| (Box::new(part), info));
+                            let _ = rsp_tx.send(Rsp::Read(r, res, t.elapsed()));
+                        }
+                        Cmd::Exit => break,
+                    }
+                }
+            })
+            .expect("spawn region I/O thread");
+        Pipeline {
+            cmd_tx,
+            rsp_rx,
+            handle: Some(handle),
+            ready: None,
+            inflight_read: None,
+            pending_writes: 0,
+            deferred_err: None,
+        }
+    }
+
+    fn disconnected() -> StoreError {
+        StoreError::Pipeline("region I/O thread terminated unexpectedly".into())
+    }
+
+    /// Fold one response into the bookkeeping. Read responses are only
+    /// produced for the single in-flight read, so a read response here
+    /// (outside an explicit wait) completes the read-ahead.
+    fn note(&mut self, rsp: Rsp, stats: &mut IoStats) {
+        match rsp {
+            Rsp::Write(_, res, dur) => {
+                stats.t_io += dur;
+                self.pending_writes -= 1;
+                match res {
+                    Ok(info) => {
+                        stats.write_bytes += info.stored_len;
+                        stats.page_raw_bytes +=
+                            info.raw_len + crate::store::page::PAGE_HEADER_LEN as u64;
+                        stats.page_stored_bytes += info.stored_len;
+                    }
+                    Err(e) => {
+                        if self.deferred_err.is_none() {
+                            self.deferred_err = Some(e);
+                        }
+                    }
+                }
+            }
+            Rsp::Read(r, res, dur) => {
+                stats.t_io += dur;
+                self.inflight_read = None;
+                match res {
+                    Ok((part, info)) => {
+                        stats.read_bytes += info.stored_len;
+                        self.ready = Some((r, part, info));
+                    }
+                    Err(e) => {
+                        if self.deferred_err.is_none() {
+                            self.deferred_err = Some(e);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_nonblocking(&mut self, stats: &mut IoStats) {
+        while let Ok(rsp) = self.rsp_rx.try_recv() {
+            self.note(rsp, stats);
+        }
+    }
+
+    fn send(&mut self, cmd: Cmd, stats: &mut IoStats) -> Result<(), StoreError> {
+        let t = Instant::now();
+        let res = self.cmd_tx.send(cmd).map_err(|_| Self::disconnected());
+        stats.t_blocked += t.elapsed(); // back-pressure is a real stall
+        res
+    }
+
+    /// Wait for the read of region `r` to complete (responses are FIFO;
+    /// intervening write responses are folded in on the way).
+    fn wait_read(
+        &mut self,
+        r: usize,
+        stats: &mut IoStats,
+    ) -> Result<(Box<RegionPart>, PageInfo), StoreError> {
+        let t = Instant::now();
+        let out = loop {
+            let rsp = match self.rsp_rx.recv() {
+                Ok(rsp) => rsp,
+                Err(_) => break Err(Self::disconnected()),
+            };
+            match rsp {
+                Rsp::Read(rr, res, dur) => {
+                    stats.t_io += dur;
+                    self.inflight_read = None;
+                    debug_assert_eq!(rr, r, "single outstanding read");
+                    match res {
+                        Ok((part, info)) => {
+                            stats.read_bytes += info.stored_len;
+                            break Ok((part, info));
+                        }
+                        Err(e) => break Err(e),
+                    }
+                }
+                w => self.note(w, stats),
+            }
+        };
+        stats.t_blocked += t.elapsed();
+        out
+    }
+
+    fn writeback(
+        &mut self,
+        r: usize,
+        part: Box<RegionPart>,
+        stats: &mut IoStats,
+    ) -> Result<(), StoreError> {
+        // a prefetched copy of r would be stale after this write;
+        // unreachable under the coordinator's schedule, but cheap to hold
+        if self.ready.as_ref().map_or(false, |(rr, _, _)| *rr == r) {
+            self.ready = None;
+        }
+        self.send(Cmd::Write(r, part), stats)?;
+        self.pending_writes += 1;
+        self.drain_nonblocking(stats);
+        self.take_deferred()
+    }
+
+    fn prefetch(&mut self, r: usize, stats: &mut IoStats) {
+        self.drain_nonblocking(stats);
+        // one read-ahead buffer: if it is taken (ready or in flight),
+        // skip — the later load simply degrades to a synchronous read
+        if self.ready.is_some() || self.inflight_read.is_some() {
+            return;
+        }
+        if self.send(Cmd::Read(r), stats).is_ok() {
+            self.inflight_read = Some(r);
+        }
+    }
+
+    fn fetch(
+        &mut self,
+        r: usize,
+        stats: &mut IoStats,
+    ) -> Result<(Box<RegionPart>, PageInfo), StoreError> {
+        self.drain_nonblocking(stats);
+        self.take_deferred()?;
+        if self.ready.as_ref().map_or(false, |(rr, _, _)| *rr == r) {
+            stats.prefetch_hits += 1;
+            let (_, part, info) = self.ready.take().unwrap();
+            return Ok((part, info));
+        }
+        if self.inflight_read == Some(r) {
+            // issued ahead of time and still decoding/reading: the wait
+            // below only covers the un-overlapped tail
+            stats.prefetch_hits += 1;
+            return self.wait_read(r, stats);
+        }
+        stats.prefetch_misses += 1;
+        if let Some(other) = self.inflight_read {
+            // a mispredicted read-ahead is in flight; park it in the
+            // ready slot (it may still be wanted later) before reading r
+            let got = self.wait_read(other, stats)?;
+            self.ready = Some((other, got.0, got.1));
+        }
+        self.send(Cmd::Read(r), stats)?;
+        self.wait_read(r, stats)
+    }
+
+    fn flush(&mut self, stats: &mut IoStats) -> Result<(), StoreError> {
+        let t = Instant::now();
+        while self.pending_writes > 0 || self.inflight_read.is_some() {
+            let rsp = self.rsp_rx.recv().map_err(|_| Self::disconnected())?;
+            self.note(rsp, stats);
+        }
+        stats.t_blocked += t.elapsed();
+        self.take_deferred()
+    }
+
+    fn take_deferred(&mut self) -> Result<(), StoreError> {
+        match self.deferred_err.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        let _ = self.cmd_tx.send(Cmd::Exit);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+enum Mode {
+    Blocking(Box<dyn RegionStore>),
+    Pipelined(Box<Pipeline>),
+}
+
+/// The coordinator-facing residency manager: swaps [`RegionPart`]s
+/// between the decomposition and a page store, leaving a
+/// [`RegionPart::shell`] behind while a region is out of memory.
+pub struct Residency {
+    mode: Mode,
+    compress: bool,
+    stats: IoStats,
+}
+
+impl Residency {
+    pub fn new(cfg: &StoreConfig) -> Result<Residency, StoreError> {
+        let store: Box<dyn RegionStore> = match &cfg.dir {
+            Some(dir) => Box::new(FileStore::create(dir.clone())?),
+            None => Box::new(MemStore::new()),
+        };
+        let mode = if cfg.prefetch {
+            Mode::Pipelined(Box::new(Pipeline::spawn(store, cfg.compress)))
+        } else {
+            Mode::Blocking(store)
+        };
+        Ok(Residency { mode, compress: cfg.compress, stats: IoStats::default() })
+    }
+
+    /// Evict region `r` to the store, leaving a shell. In pipelined
+    /// mode the encode + write happen on the I/O thread while the
+    /// coordinator moves on to the next region.
+    pub fn unload(&mut self, dec: &mut Decomposition, r: usize) -> Result<(), StoreError> {
+        let part = &dec.parts[r];
+        let shell = RegionPart::shell(part.region_id, part.active, part.pending_gap);
+        let part = std::mem::replace(&mut dec.parts[r], shell);
+        match &mut self.mode {
+            Mode::Blocking(store) => {
+                let t = Instant::now();
+                let info = write_region(store.as_mut(), r, &part, self.compress)?;
+                let dt = t.elapsed();
+                self.stats.t_blocked += dt;
+                self.stats.t_io += dt;
+                self.stats.write_bytes += info.stored_len;
+                self.stats.page_raw_bytes +=
+                    info.raw_len + crate::store::page::PAGE_HEADER_LEN as u64;
+                self.stats.page_stored_bytes += info.stored_len;
+                Ok(())
+            }
+            Mode::Pipelined(p) => p.writeback(r, Box::new(part), &mut self.stats),
+        }
+    }
+
+    /// Hint that region `r` will be loaded soon. No-op in blocking mode
+    /// and when the single read-ahead buffer is already in use. Must
+    /// only be called for regions that are not resident.
+    pub fn prefetch(&mut self, r: usize) {
+        if let Mode::Pipelined(p) = &mut self.mode {
+            p.prefetch(r, &mut self.stats);
+        }
+    }
+
+    /// Bring region `r` back into memory, merging the coordinator-side
+    /// shell fields (`active`, `pending_gap`) that moved on while the
+    /// region was paged out.
+    pub fn load(&mut self, dec: &mut Decomposition, r: usize) -> Result<(), StoreError> {
+        let mut part = match &mut self.mode {
+            Mode::Blocking(store) => {
+                let t = Instant::now();
+                let got = read_region(store.as_mut(), r)?;
+                let dt = t.elapsed();
+                self.stats.t_blocked += dt;
+                self.stats.t_io += dt;
+                self.stats.read_bytes += got.1.stored_len;
+                got.0
+            }
+            Mode::Pipelined(p) => *p.fetch(r, &mut self.stats)?.0,
+        };
+        part.active = dec.parts[r].active;
+        part.pending_gap = dec.parts[r].pending_gap;
+        dec.parts[r] = part;
+        Ok(())
+    }
+
+    /// Wait for all queued write-backs (and any stray read-ahead) to
+    /// finish, surfacing deferred errors. Call before reading final
+    /// stats or dropping the decomposition.
+    pub fn flush(&mut self) -> Result<(), StoreError> {
+        match &mut self.mode {
+            Mode::Blocking(_) => Ok(()),
+            Mode::Pipelined(p) => p.flush(&mut self.stats),
+        }
+    }
+
+    pub fn stats(&self) -> &IoStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+    use crate::region::decompose::DistanceMode;
+
+    fn decomposition(n: usize, k: usize) -> Decomposition {
+        let mut b = GraphBuilder::new(n);
+        b.add_terminal(0, 50, 0);
+        b.add_terminal((n - 1) as u32, 0, 50);
+        for v in 0..n - 1 {
+            b.add_edge(v as u32, v as u32 + 1, 7, 3);
+        }
+        let g = b.build();
+        Decomposition::new(&g, &Partition::by_node_ranges(n, k), DistanceMode::Ard)
+    }
+
+    fn cfg(prefetch: bool, compress: bool) -> StoreConfig {
+        StoreConfig { dir: None, prefetch, compress }
+    }
+
+    fn roundtrip_all(cfg: &StoreConfig) {
+        let mut dec = decomposition(24, 4);
+        let want: Vec<_> = dec.parts.clone();
+        let mut res = Residency::new(cfg).unwrap();
+        for r in 0..4 {
+            res.unload(&mut dec, r).unwrap();
+            assert_eq!(dec.parts[r].n_inner, 0, "shell left behind");
+        }
+        for r in 0..4 {
+            if let Some(next) = [1usize, 2, 3].get(r) {
+                res.prefetch(*next);
+            }
+            res.load(&mut dec, r).unwrap();
+        }
+        res.flush().unwrap();
+        for r in 0..4 {
+            assert_eq!(dec.parts[r], want[r], "region {r} roundtrip");
+        }
+        let s = res.stats();
+        assert!(s.read_bytes > 0 && s.write_bytes > 0);
+        assert_eq!(s.read_bytes, s.write_bytes, "same pages in and out");
+    }
+
+    #[test]
+    fn blocking_memory_roundtrip() {
+        roundtrip_all(&cfg(false, false));
+        roundtrip_all(&cfg(false, true));
+    }
+
+    #[test]
+    fn pipelined_memory_roundtrip_counts_hits() {
+        let c = cfg(true, true);
+        let mut dec = decomposition(24, 4);
+        let mut res = Residency::new(&c).unwrap();
+        for r in 0..4 {
+            res.unload(&mut dec, r).unwrap();
+        }
+        // sweep-order loads with a one-ahead prefetch chain
+        for r in 0..4 {
+            res.load(&mut dec, r).unwrap();
+            if r + 1 < 4 {
+                res.prefetch(r + 1);
+            }
+            res.unload(&mut dec, r).unwrap();
+        }
+        res.flush().unwrap();
+        let s = *res.stats();
+        assert!(s.prefetch_hits >= 3, "hits {}", s.prefetch_hits);
+        assert_eq!(s.prefetch_hits + s.prefetch_misses, 4);
+        assert!(s.page_stored_bytes < s.page_raw_bytes, "compression won");
+    }
+
+    #[test]
+    fn mispredicted_prefetch_degrades_gracefully() {
+        let c = cfg(true, false);
+        let mut dec = decomposition(24, 4);
+        let want = dec.parts[2].clone();
+        let mut res = Residency::new(&c).unwrap();
+        for r in 0..4 {
+            res.unload(&mut dec, r).unwrap();
+        }
+        res.prefetch(3); // wrong guess
+        res.load(&mut dec, 2).unwrap(); // miss, parks 3 in the ready slot
+        assert_eq!(dec.parts[2], want);
+        res.load(&mut dec, 3).unwrap(); // served from the parked read
+        res.flush().unwrap();
+        let s = res.stats();
+        assert_eq!(s.prefetch_misses, 1, "load of 2 was the only miss");
+        assert_eq!(s.prefetch_hits, 1, "load of 3 was served by the parked read");
+    }
+
+    #[test]
+    fn missing_region_is_an_error_not_a_panic() {
+        let mut dec = decomposition(12, 2);
+        let mut res = Residency::new(&cfg(false, true)).unwrap();
+        assert!(res.load(&mut dec, 1).is_err(), "nothing stored yet");
+        let mut res = Residency::new(&cfg(true, true)).unwrap();
+        assert!(res.load(&mut dec, 1).is_err(), "pipelined miss on empty store");
+        res.flush().unwrap();
+    }
+
+    #[test]
+    fn file_backend_end_to_end() {
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_residency_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = StoreConfig { dir: Some(dir.clone()), prefetch: true, compress: true };
+        let mut dec = decomposition(30, 3);
+        let want: Vec<_> = dec.parts.clone();
+        let mut res = Residency::new(&c).unwrap();
+        for r in 0..3 {
+            res.unload(&mut dec, r).unwrap();
+        }
+        res.flush().unwrap();
+        assert!(dir.join("region_0.page").exists());
+        for r in 0..3 {
+            res.load(&mut dec, r).unwrap();
+            assert_eq!(dec.parts[r], want[r]);
+        }
+        drop(res);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

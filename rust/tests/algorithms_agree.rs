@@ -52,7 +52,7 @@ fn check_all(g: &Graph, k: usize) {
             o
         }),
     ] {
-        let res = solve_sequential(g, &p, &opts);
+        let res = solve_sequential(g, &p, &opts).unwrap();
         assert!(res.metrics.converged, "{name} converged");
         assert_eq!(res.metrics.flow, expect, "{name} flow");
         assert_eq!(g.cut_cost(&snap, &res.cut), expect, "{name} cut certificate");
@@ -122,7 +122,7 @@ fn streaming_agrees_on_structured_instance() {
         std::env::temp_dir().join(format!("armincut_it_stream_{}", std::process::id()));
     let mut o = SeqOptions::ard();
     o.streaming_dir = Some(dir.clone());
-    let res = solve_sequential(&g, &p, &o);
+    let res = solve_sequential(&g, &p, &o).unwrap();
     std::fs::remove_dir_all(&dir).ok();
     assert!(res.metrics.converged);
     assert_eq!(res.metrics.flow, expect);
@@ -149,11 +149,11 @@ fn five_solvers_agree_on_seeded_synthetic2d() {
             assert_eq!(whole(&g, &mut Hpr::new()), expect, "hpr seed {seed} s{strength}");
             let p = Partition::by_node_ranges(g.n(), 4);
             let snap = g.snapshot();
-            let ard = solve_sequential(&g, &p, &SeqOptions::ard());
+            let ard = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
             assert!(ard.metrics.converged, "s-ard seed {seed}");
             assert_eq!(ard.metrics.flow, expect, "s-ard seed {seed} s{strength}");
             assert_eq!(g.cut_cost(&snap, &ard.cut), expect, "s-ard cut seed {seed}");
-            let prd = solve_sequential(&g, &p, &SeqOptions::prd());
+            let prd = solve_sequential(&g, &p, &SeqOptions::prd()).unwrap();
             assert!(prd.metrics.converged, "s-prd seed {seed}");
             assert_eq!(prd.metrics.flow, expect, "s-prd seed {seed} s{strength}");
             assert_eq!(g.cut_cost(&snap, &prd.cut), expect, "s-prd cut seed {seed}");
@@ -197,7 +197,7 @@ fn grid_aligned_partitions_agree() {
     let expect = whole(&g, &mut Bk::new());
     for s in [2usize, 3, 4] {
         let p = Partition::grid2d(24, 24, s, s);
-        let res = solve_sequential(&g, &p, &SeqOptions::ard());
+        let res = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
         assert_eq!(res.metrics.flow, expect, "{s}x{s} tiles");
     }
 }

@@ -1,0 +1,143 @@
+//! Checked-in miniature DIMACS `max` fixtures (stand-ins for the UWO
+//! benchmark instances) driven end to end: through the library reader
+//! with every sequential mode — including streaming through the
+//! out-of-core region store — and through the real `armincut solve
+//! --input … --streaming …` CLI binary.
+
+use armincut::coordinator::sequential::{solve_sequential, SeqOptions};
+use armincut::core::dimacs::read_dimacs;
+use armincut::core::graph::Graph;
+use armincut::core::partition::Partition;
+use armincut::solvers::{bk::Bk, MaxFlowSolver};
+use std::io::BufReader;
+use std::process::Command;
+
+const FIXTURES: &[(&str, i64)] = &[
+    ("tests/data/mini_a.max", 14), // hand-verified min cut {s,2,3,5}
+    ("tests/data/mini_b.max", 6),  // hand-verified min cut at 4->t
+];
+
+fn fixture_path(rel: &str) -> String {
+    format!("{}/{}", env!("CARGO_MANIFEST_DIR"), rel)
+}
+
+fn load(rel: &str) -> Graph {
+    let f = std::fs::File::open(fixture_path(rel)).expect("open fixture");
+    read_dimacs(BufReader::new(f), false).expect("parse fixture").builder.build()
+}
+
+#[test]
+fn fixtures_have_the_pinned_maxflow() {
+    for &(rel, want) in FIXTURES {
+        let g = load(rel);
+        let flow = Bk::new().solve(&mut g.clone());
+        assert_eq!(flow, want, "{rel}: BK flow");
+    }
+}
+
+#[test]
+fn fixtures_solve_through_the_streaming_store() {
+    for &(rel, want) in FIXTURES {
+        let g = load(rel);
+        let p = Partition::by_node_ranges(g.n(), 2);
+        let base = std::env::temp_dir().join(format!(
+            "armincut_fixture_{}_{}",
+            std::process::id(),
+            rel.rsplit('/').next().unwrap().replace('.', "_")
+        ));
+        for (tag, prefetch) in [("blocking", false), ("prefetch", true)] {
+            let mut o = SeqOptions::ard();
+            o.streaming_dir = Some(base.join(tag));
+            o.streaming_prefetch = prefetch;
+            let res = solve_sequential(&g, &p, &o).unwrap();
+            assert!(res.metrics.converged, "{rel} {tag}");
+            assert_eq!(res.metrics.flow, want, "{rel} {tag}: flow");
+            let snap = g.snapshot();
+            assert_eq!(g.cut_cost(&snap, &res.cut), want, "{rel} {tag}: certificate");
+            assert!(res.metrics.disk_read_bytes > 0, "{rel} {tag}: streamed");
+        }
+        std::fs::remove_dir_all(&base).ok();
+    }
+}
+
+/// Drive the real binary: `armincut solve --input FIXTURE --algo s-ard
+/// --streaming DIR` must exit 0 and print the pinned flow plus the
+/// matching cut-certificate line.
+#[test]
+fn cli_solves_fixtures_through_streaming_store() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    for &(rel, want) in FIXTURES {
+        let dir = std::env::temp_dir().join(format!(
+            "armincut_fixture_cli_{}_{}",
+            std::process::id(),
+            want
+        ));
+        let out = Command::new(exe)
+            .args([
+                "solve",
+                "--input",
+                &fixture_path(rel),
+                "--algo",
+                "s-ard",
+                "--regions",
+                "2",
+                "--streaming",
+                dir.to_str().unwrap(),
+            ])
+            .output()
+            .expect("run armincut");
+        std::fs::remove_dir_all(&dir).ok();
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            out.status.success(),
+            "{rel}: exit {:?}\nstdout:\n{stdout}\nstderr:\n{}",
+            out.status.code(),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(stdout.contains(&format!("flow={want}")), "{rel}: {stdout}");
+        assert!(stdout.contains(&format!("cut cost = {want}")), "{rel}: {stdout}");
+    }
+}
+
+/// Streaming-store failures must surface as a clean nonzero exit code
+/// (satellite: no more `expect("create streaming dir")` panics).
+#[test]
+fn cli_reports_streaming_errors_as_exit_code() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    // a regular file where the page directory should go
+    let blocker = std::env::temp_dir()
+        .join(format!("armincut_cli_err_{}", std::process::id()));
+    std::fs::write(&blocker, b"x").unwrap();
+    let out = Command::new(exe)
+        .args([
+            "solve",
+            "--input",
+            &fixture_path(FIXTURES[0].0),
+            "--algo",
+            "s-ard",
+            "--regions",
+            "2",
+            "--streaming",
+            blocker.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run armincut");
+    std::fs::remove_file(&blocker).ok();
+    assert_eq!(out.status.code(), Some(1), "streaming failure exits 1");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "stderr: {stderr}");
+    assert!(
+        !stderr.contains("panicked"),
+        "must be a clean error, not a panic: {stderr}"
+    );
+}
+
+#[test]
+fn cli_rejects_missing_input_with_exit_2() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let out = Command::new(exe)
+        .args(["solve", "--input", "/nonexistent/nowhere.max", "--algo", "s-ard"])
+        .output()
+        .expect("run armincut");
+    assert_eq!(out.status.code(), Some(2));
+}

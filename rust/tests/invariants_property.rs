@@ -221,7 +221,7 @@ fn boundary_relabel_preserves_validity_and_flow() {
         let expect = reference_value(&g);
         let mut o = SeqOptions::ard();
         o.boundary_relabel = true;
-        let res = solve_sequential(&g, &p, &o);
+        let res = solve_sequential(&g, &p, &o).unwrap();
         assert!(res.metrics.converged, "trial {trial}");
         assert_eq!(res.metrics.flow, expect, "trial {trial}");
         // validity preserved when applied to an arbitrary mid-solve state
@@ -254,7 +254,7 @@ fn theorem3_sweep_bound_holds() {
         o.partial_discharge = false; // Theorem 3 covers full discharges
         o.boundary_relabel = false;
         o.global_gap = false;
-        let res = solve_sequential(&g, &p, &o);
+        let res = solve_sequential(&g, &p, &o).unwrap();
         assert!(res.metrics.converged, "trial {trial}");
         assert!(
             (res.metrics.sweeps as u64) <= 2 * b * b + 1,
@@ -295,7 +295,7 @@ fn streaming_pages_roundtrip_random() {
             .join(format!("armincut_prop_{}_{}", std::process::id(), trial));
         let mut o = SeqOptions::ard();
         o.streaming_dir = Some(dir.clone());
-        let res = solve_sequential(&g, &p, &o);
+        let res = solve_sequential(&g, &p, &o).unwrap();
         std::fs::remove_dir_all(&dir).ok();
         assert!(res.metrics.converged, "trial {trial}");
         assert_eq!(res.metrics.flow, expect, "trial {trial}");

@@ -1,0 +1,223 @@
+//! Property-style integration suite for the out-of-core region store:
+//! random `RegionPart`s must survive encode→decode bit-identically
+//! under both codecs, and corrupted pages (truncated, bit-flipped,
+//! foreign, future-versioned) must be rejected — never mis-decoded.
+
+use armincut::core::graph::{Graph, GraphBuilder};
+use armincut::core::partition::Partition;
+use armincut::core::prng::Rng;
+use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
+use armincut::region::ard::{Ard, ArdCore};
+use armincut::region::decompose::{Decomposition, DistanceMode, RegionPart};
+use armincut::store::{decode_page, encode_page, Codec, Dec, Enc, PageError};
+
+/// Random decomposition mid-solve: realistic residual caps, labels,
+/// synced boundary state — the exact payloads streaming pages carry.
+fn random_parts(seed: u64) -> Vec<RegionPart> {
+    let mut rng = Rng::new(seed);
+    let w = 6 + rng.index(10);
+    let h = 5 + rng.index(8);
+    let g = synthetic_2d(&Synthetic2dParams::small(w, h, 1 + rng.index(100) as i64, seed));
+    let k = 2 + rng.index(3);
+    let p = Partition::by_node_ranges(g.n(), k);
+    let mut dec = Decomposition::new(&g, &p, DistanceMode::Ard);
+    let d_inf = dec.shared.d_inf;
+    let mut ard = Ard::new(ArdCore::dinic());
+    for r in 0..k {
+        dec.sync_in(r);
+        ard.discharge(&mut dec.parts[r], d_inf, u32::MAX);
+        dec.sync_out(r);
+    }
+    // leave one region in its post-sync_in shape too
+    dec.sync_in(0);
+    for part in dec.parts.iter_mut() {
+        part.pending_gap = rng.index(8) as u32;
+    }
+    dec.parts
+}
+
+#[test]
+fn random_parts_roundtrip_bit_identically() {
+    for seed in 0..12u64 {
+        for part in random_parts(seed) {
+            for compress in [false, true] {
+                let (page, info) = encode_page(&part, compress);
+                let (back, info2) =
+                    decode_page(&page).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                assert_eq!(back, part, "seed {seed} compress {compress}");
+                assert_eq!(info, info2, "seed {seed}: header agrees");
+            }
+        }
+    }
+}
+
+#[test]
+fn compact_codec_roundtrips_and_raw_matches_legacy_layout() {
+    for seed in [3u64, 17, 99] {
+        for part in random_parts(seed) {
+            // the uncompressed page payload IS the legacy to_bytes layout
+            let (page, info) = encode_page(&part, false);
+            assert_eq!(&page[28..], &part.to_bytes()[..], "seed {seed}");
+            assert_eq!(info.raw_len as usize, part.to_bytes().len());
+            assert_eq!(RegionPart::from_bytes(&page[28..]).unwrap(), part);
+
+            // compact payload decodes to the same part and is smaller
+            let mut e = Enc::new(Codec::Compact);
+            part.encode(&mut e);
+            let bytes = e.into_bytes();
+            let back = RegionPart::decode(&mut Dec::new(Codec::Compact, &bytes)).unwrap();
+            assert_eq!(back, part, "seed {seed}");
+            assert!(
+                bytes.len() < part.to_bytes().len(),
+                "seed {seed}: compact should shrink these instances"
+            );
+        }
+    }
+}
+
+#[test]
+fn raw_encoded_len_matches_serialization() {
+    // encode_page compares against the analytic raw size instead of
+    // materializing the raw bytes; the two must never drift
+    for seed in 0..6u64 {
+        for part in random_parts(seed) {
+            assert_eq!(part.raw_encoded_len(), part.to_bytes().len(), "seed {seed}");
+            assert_eq!(part.graph.raw_encoded_len(), part.graph.to_bytes().len());
+        }
+    }
+}
+
+#[test]
+fn slack_inside_nested_graph_blob_rejected() {
+    // trailing bytes hidden inside the length-prefixed graph blob must
+    // not decode (the outer stream still ends exactly on time)
+    let part = random_parts(4).remove(0);
+    let bytes = part.to_bytes();
+    // raw layout: region_id u32 (4) + n_inner u64 (8) + glen u64 at [12..20)
+    let glen = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+    let mut bad = bytes.clone();
+    bad[12..20].copy_from_slice(&((glen + 1) as u64).to_le_bytes());
+    bad.insert(20 + glen, 0);
+    assert!(RegionPart::from_bytes(&bytes).is_some());
+    assert!(RegionPart::from_bytes(&bad).is_none(), "nested slack accepted");
+}
+
+#[test]
+fn truncated_pages_always_rejected() {
+    let part = random_parts(1).remove(0);
+    for compress in [false, true] {
+        let (page, _) = encode_page(&part, compress);
+        // every prefix, stepping fast through the middle
+        let mut cut = 0usize;
+        while cut < page.len() {
+            assert!(
+                decode_page(&page[..cut]).is_err(),
+                "compress {compress}: prefix of {cut} bytes accepted"
+            );
+            cut += 1 + cut / 16;
+        }
+    }
+}
+
+#[test]
+fn bit_flips_always_rejected() {
+    // CRC-32 guarantees single-bit detection; sample densely anyway
+    let part = random_parts(2).remove(0);
+    for compress in [false, true] {
+        let (page, _) = encode_page(&part, compress);
+        for i in 0..page.len() * 8 {
+            let (byte, bit) = (i / 8, i % 8);
+            let mut p = page.clone();
+            p[byte] ^= 1 << bit;
+            assert!(
+                decode_page(&p).is_err(),
+                "compress {compress}: flip byte {byte} bit {bit} accepted"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrong_version_and_foreign_pages_rejected() {
+    let part = random_parts(3).remove(0);
+    let (page, _) = encode_page(&part, true);
+
+    let mut foreign = page.clone();
+    foreign[0] = b'X';
+    assert_eq!(decode_page(&foreign), Err(PageError::BadMagic));
+
+    // a version bump alone is caught by the version gate (before CRC)
+    let mut future = page.clone();
+    future[4] = future[4].wrapping_add(1);
+    assert!(matches!(decode_page(&future), Err(PageError::BadVersion(_))));
+
+    // random non-page bytes
+    let mut rng = Rng::new(7);
+    let junk: Vec<u8> = (0..512).map(|_| rng.index(256) as u8).collect();
+    assert!(decode_page(&junk).is_err());
+}
+
+#[test]
+fn graph_codec_roundtrips_under_flow() {
+    // graphs with routed flow (negative-delta residuals, nonzero
+    // flow_to_sink) keep exact values under the zigzag varints
+    let mut rng = Rng::new(11);
+    for _ in 0..10 {
+        let n = 4 + rng.index(20);
+        let mut b = GraphBuilder::new(n);
+        for v in 0..n {
+            b.add_signed_terminal(v as u32, rng.range_i64(-1_000_000, 1_000_000));
+        }
+        for v in 1..n {
+            let u = rng.index(v) as u32;
+            b.add_edge(u, v as u32, rng.range_i64(0, 1 << 40), rng.range_i64(0, 100));
+        }
+        let mut g = b.build();
+        if g.sink_cap[n - 1] > 0 {
+            let take = g.excess[n - 1].min(g.sink_cap[n - 1]);
+            if take > 0 {
+                g.push_to_sink((n - 1) as u32, take);
+            }
+        }
+        for codec in [Codec::Raw, Codec::Compact] {
+            let mut e = Enc::new(codec);
+            g.encode(&mut e);
+            let bytes = e.into_bytes();
+            let mut d = Dec::new(codec, &bytes);
+            let g2 = Graph::decode(&mut d).expect("decode");
+            assert!(d.finished());
+            assert_eq!(g2, g);
+        }
+    }
+}
+
+/// Streaming through the store must be invisible to the algorithm —
+/// same flow, same cut, same sweep counts as the in-memory solve, with
+/// prefetch hits and compression wins actually recorded.
+#[test]
+fn streaming_store_equivalent_to_in_memory_on_grid() {
+    use armincut::coordinator::sequential::{solve_sequential, SeqOptions};
+    let g = synthetic_2d(&Synthetic2dParams::small(20, 16, 60, 5));
+    let p = Partition::grid2d(20, 16, 2, 2);
+    let mem = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
+    let base = std::env::temp_dir()
+        .join(format!("armincut_store_eq_{}", std::process::id()));
+    for (prefetch, compress) in [(false, false), (true, true)] {
+        let mut o = SeqOptions::ard();
+        o.streaming_dir = Some(base.join(format!("p{prefetch}_c{compress}")));
+        o.streaming_prefetch = prefetch;
+        o.streaming_compress = compress;
+        let res = solve_sequential(&g, &p, &o).unwrap();
+        assert_eq!(res.metrics.flow, mem.metrics.flow);
+        assert_eq!(res.cut, mem.cut);
+        assert_eq!(res.metrics.sweeps, mem.metrics.sweeps);
+        assert_eq!(res.metrics.discharges, mem.metrics.discharges);
+        if prefetch {
+            assert!(res.metrics.prefetch_hits > 0);
+        }
+        if compress {
+            assert!(res.metrics.page_stored_bytes < res.metrics.page_raw_bytes);
+        }
+    }
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Diff two directories of BENCH_<id>.json bench records.
+
+First move on the ROADMAP "track BENCH_*.json across merges" item: the
+CI bench-smoke job keeps the previous run's records as a rolling
+baseline and runs this script against the fresh ones.
+
+For every (bench, case, solver) record present in both directories:
+
+* ``flow`` MUST match — a flow drift is a correctness regression and
+  makes the script exit 1;
+* ``wall_seconds`` and the disk-byte fields (schema 3:
+  ``page_stored_bytes``, ``page_raw_bytes``; older schemas fall back to
+  zero) are reported as deltas — advisory only, machines differ.
+
+No baseline directory (first run) is not an error: the script reports
+it and exits 0. Stdlib only.
+
+Usage:
+    bench_trend.py CURRENT_DIR BASELINE_DIR [--wall-warn-pct 25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_dir(path: Path) -> dict[str, dict]:
+    """Map bench id -> parsed BENCH_<id>.json for every file in `path`."""
+    out = {}
+    for f in sorted(path.glob("BENCH_*.json")):
+        bench_id = f.stem[len("BENCH_"):]
+        try:
+            out[bench_id] = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {f.name}: {e}")
+    return out
+
+
+def record_key(rec: dict) -> tuple[str, str]:
+    return (rec.get("case", "?"), rec.get("solver", "?"))
+
+
+def index_records(doc: dict) -> dict[tuple[str, str], dict]:
+    return {record_key(r): r for r in doc.get("records", [])}
+
+
+def fmt_delta(cur: float, base: float, unit: str = "") -> str:
+    if base == 0:
+        return f"{cur:g}{unit} (new)" if cur else "0 -> 0"
+    pct = 100.0 * (cur - base) / base
+    return f"{base:g}{unit} -> {cur:g}{unit} ({pct:+.1f}%)"
+
+
+def compare(current: dict[str, dict], baseline: dict[str, dict],
+            wall_warn_pct: float) -> tuple[int, int]:
+    """Print the trend report. Returns (flow_mismatches, compared)."""
+    mismatches = 0
+    compared = 0
+    for bench_id in sorted(current):
+        if bench_id not in baseline:
+            print(f"{bench_id}: no baseline record, skipping")
+            continue
+        cur = index_records(current[bench_id])
+        base = index_records(baseline[bench_id])
+        for key in sorted(cur):
+            if key not in base:
+                print(f"{bench_id} {key}: new record (no baseline)")
+                continue
+            c, b = cur[key], base[key]
+            compared += 1
+            case, solver = key
+            if c.get("flow") != b.get("flow"):
+                mismatches += 1
+                print(
+                    f"{bench_id} {case} {solver}: FLOW MISMATCH "
+                    f"{b.get('flow')} -> {c.get('flow')}"
+                )
+                continue
+            cw = float(c.get("wall_seconds", 0.0))
+            bw = float(b.get("wall_seconds", 0.0))
+            marker = ""
+            if bw > 0 and cw > bw * (1 + wall_warn_pct / 100.0):
+                marker = "  [slower]"
+            elif bw > 0 and cw < bw * (1 - wall_warn_pct / 100.0):
+                marker = "  [faster]"
+            disk = ""
+            stored_c = int(c.get("page_stored_bytes", 0))
+            stored_b = int(b.get("page_stored_bytes", 0))
+            if stored_c or stored_b:
+                disk = f", pages {fmt_delta(stored_c, stored_b, 'B')}"
+            print(
+                f"{bench_id} {case} {solver}: "
+                f"wall {fmt_delta(cw, bw, 's')}{disk}{marker}"
+            )
+        for key in sorted(set(base) - set(cur)):
+            print(f"{bench_id} {key}: record disappeared from current run")
+    return mismatches, compared
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", type=Path, help="fresh bench_results dir")
+    ap.add_argument("baseline", type=Path, help="previous run's dir")
+    ap.add_argument("--wall-warn-pct", type=float, default=25.0,
+                    help="flag wall-time moves beyond this percentage")
+    args = ap.parse_args(argv)
+
+    if not args.current.is_dir():
+        print(f"error: current dir {args.current} does not exist")
+        return 2
+    current = load_dir(args.current)
+    if not current:
+        print(f"error: no BENCH_*.json in {args.current}")
+        return 2
+    if not args.baseline.is_dir():
+        print(f"no baseline at {args.baseline} (first run?) — nothing to diff")
+        return 0
+    baseline = load_dir(args.baseline)
+    if not baseline:
+        print(f"baseline {args.baseline} holds no BENCH_*.json — nothing to diff")
+        return 0
+
+    mismatches, compared = compare(current, baseline, args.wall_warn_pct)
+    print(f"\ncompared {compared} records, {mismatches} flow mismatch(es)")
+    return 1 if mismatches else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -98,3 +98,62 @@ def test_disk_bytes_only_shown_when_present(tmp_path, capsys, stored, expect):
     write_bench(tmp_path / "base", "t1", [rec(stored=stored)])
     bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
     assert ("pages" in capsys.readouterr().out) is expect
+
+
+def wire_rec(sent=1000, recv=900, raw=5000, sync=0.25):
+    r = rec(solver="D-ARD(2)")
+    r.update({"wire_bytes_sent": sent, "wire_bytes_recv": recv,
+              "wire_raw_bytes": raw, "sync_wall_seconds": sync})
+    return r
+
+
+def test_wire_bytes_delta_shown_for_distributed_records(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "table2", [wire_rec(sent=1200)])
+    write_bench(tmp_path / "base", "table2", [wire_rec(sent=1000)])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 0
+    assert "wire" in out and "2100B" in out  # 1200 + 900 current total
+
+
+def test_history_appends_and_trims(tmp_path, capsys):
+    hist = tmp_path / "deep" / "history.jsonl"
+    write_bench(tmp_path / "cur", "fig6", [wire_rec()])
+    for i in range(4):
+        code = bench_trend.main(
+            [str(tmp_path / "cur"), str(tmp_path / "nowhere"),
+             "--history", str(hist), "--history-max", "3",
+             "--run-label", f"run{i}"])
+        assert code == 0, "no baseline stays exit 0 with history on"
+    lines = [json.loads(l) for l in hist.read_text().splitlines()]
+    assert len(lines) == 3, "trimmed to --history-max"
+    assert [l["run"] for l in lines] == ["run1", "run2", "run3"]
+    r = lines[-1]["records"][0]
+    assert r["bench"] == "fig6" and r["solver"] == "D-ARD(2)"
+    # schema-4 wire fields survive into the condensed history
+    assert r["wire_bytes_sent"] == 1000 and r["wire_raw_bytes"] == 5000
+    assert r["sync_wall_seconds"] == 0.25
+    # older-schema fields missing from the record default to 0
+    assert r["page_raw_bytes"] == 0
+    assert "history: 3 run(s)" in capsys.readouterr().out
+
+
+def test_history_written_even_on_flow_mismatch(tmp_path):
+    hist = tmp_path / "history.jsonl"
+    write_bench(tmp_path / "cur", "fig6", [rec(flow=42)])
+    write_bench(tmp_path / "base", "fig6", [rec(flow=41)])
+    code = bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "base"), "--history", str(hist)])
+    assert code == 1, "mismatch still exits 1"
+    assert hist.is_file(), "the run is recorded regardless"
+
+
+def test_history_drops_corrupt_lines(tmp_path):
+    hist = tmp_path / "history.jsonl"
+    hist.write_text('{"run": "old", "records": []}\nNOT JSON\n')
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"), "--history", str(hist)])
+    lines = hist.read_text().splitlines()
+    assert len(lines) == 2
+    assert json.loads(lines[0])["run"] == "old"

@@ -1,0 +1,333 @@
+//! Algorithm-2 fusion (lines 4–6 of the paper) as a coordinator-neutral
+//! module.
+//!
+//! Discharging a region produces a *boundary delta*: the flow it pushed
+//! over inter-region arcs, the new labels of its owned boundary
+//! vertices, and the excess left parked on them. Fusing deltas into the
+//! shared state is the conflict-resolution step of the parallel
+//! algorithm: labels are fused first (`d'|R_k := d'_k|R_k`), then every
+//! pushed flow survives only if the labeling stays valid on the reverse
+//! residual arc it creates — a push `u → v` is kept iff
+//! `d'(v) ≤ d'(u) + 1` (the paper's line-5 flow-cancellation
+//! coefficient `α(u,v)`); a cancelled push returns to its tail vertex
+//! as excess (the tail of an inter-region arc is always a boundary
+//! vertex, so the refund parks in shared state).
+//!
+//! [`RegionBoundaryDelta`] is expressed purely in *shared* ids, so the
+//! same value crosses a function call (sequential coordinator), a
+//! thread boundary (threaded Algorithm 2) or a network socket (the
+//! distributed runtime, [`crate::dist`]) unchanged — all three
+//! coordinators run this one implementation.
+//!
+//! With a single discharged region the α-filter provably never fires:
+//! the head of every boundary push kept its synced label while the
+//! tail's label only grew, so `d'(v) = d(u) − 1 ≤ d'(u) + 1`. Singleton
+//! fusion is therefore exactly the old `Decomposition::sync_out`, which
+//! is what makes the distributed master bit-identical to
+//! [`crate::coordinator::sequential::solve_sequential`].
+
+use crate::core::graph::Cap;
+use crate::region::decompose::{RegionPart, SharedState};
+
+/// Everything one region discharge publishes to shared state, in shared
+/// ids (boundary-vertex ids `b`, shared-arc ids).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RegionBoundaryDelta {
+    pub region: u32,
+    /// Net flow pushed over inter-region arcs:
+    /// `(shared arc id, forward direction?, amount > 0)`.
+    pub arc_flow: Vec<(u32, bool, Cap)>,
+    /// New labels of the region's owned boundary vertices `(b, d)`.
+    /// Published for *every* owned vertex — label fusion is
+    /// unconditional.
+    pub owned_labels: Vec<(u32, u32)>,
+    /// Excess left parked on owned boundary vertices `(b, e > 0)`.
+    pub owned_excess: Vec<(u32, Cap)>,
+    /// Whether the region still holds active inner vertices.
+    pub active: bool,
+    /// Cumulative flow the region has routed to its sink capacities.
+    pub flow_to_sink: Cap,
+}
+
+/// Outcome of one fusion round.
+#[derive(Debug, Clone, Default)]
+pub struct FuseOutcome {
+    /// Modeled message bytes (the legacy `msg_bytes` accounting: 4 per
+    /// published label, 16 per non-zero arc direction, 8 per exported
+    /// excess).
+    pub bytes: u64,
+    /// Pushes cancelled by the α-filter `(shared arc, forward, amount)`;
+    /// their flow was refunded to the tail vertex as excess.
+    pub cancelled: Vec<(u32, bool, Cap)>,
+}
+
+/// Collect region `part`'s discharge results as a [`RegionBoundaryDelta`]
+/// and reset its exported state: foreign-boundary excess is zeroed (it
+/// is re-credited arc-wise at fusion), owned-boundary excess moves into
+/// the delta, and `part.active` is refreshed. The local boundary-arc
+/// capacities are left stale on purpose — the next sync-in overwrites
+/// them from shared state, exactly as before.
+pub fn take_boundary_delta(part: &mut RegionPart, d_inf: u32) -> RegionBoundaryDelta {
+    let mut arc_flow = Vec::new();
+    for (i, ba) in part.boundary_arcs.iter().enumerate() {
+        let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
+        debug_assert!(delta >= 0, "net boundary flow cannot be negative");
+        if delta != 0 {
+            arc_flow.push((ba.shared, ba.forward, delta));
+        }
+    }
+    #[cfg(debug_assertions)]
+    {
+        // exported foreign excess must match the per-arc deltas: pushes
+        // over boundary arcs are the only source of foreign excess
+        let mut per_vertex: std::collections::HashMap<u32, Cap> = Default::default();
+        for (i, ba) in part.boundary_arcs.iter().enumerate() {
+            let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
+            let head = part.graph.head(ba.local_arc);
+            *per_vertex.entry(head).or_default() += delta;
+        }
+        for &(lv, _) in &part.foreign_boundary {
+            let e = part.graph.excess[lv as usize];
+            assert_eq!(
+                e,
+                per_vertex.get(&lv).copied().unwrap_or(0),
+                "foreign excess must equal net arc inflow"
+            );
+        }
+    }
+    for &(lv, _) in &part.foreign_boundary {
+        // already represented arc-wise in `arc_flow`
+        part.graph.excess[lv as usize] = 0;
+    }
+    let owned_labels: Vec<(u32, u32)> = part
+        .owned_boundary
+        .iter()
+        .map(|&(lv, b)| (b, part.label[lv as usize]))
+        .collect();
+    let mut owned_excess = Vec::new();
+    for &(lv, b) in &part.owned_boundary {
+        let e = part.graph.excess[lv as usize];
+        if e > 0 {
+            owned_excess.push((b, e));
+            part.graph.excess[lv as usize] = 0;
+        }
+    }
+    part.active = part.has_active_inner(d_inf);
+    RegionBoundaryDelta {
+        region: part.region_id,
+        arc_flow,
+        owned_labels,
+        owned_excess,
+        active: part.active,
+        flow_to_sink: part.graph.flow_to_sink,
+    }
+}
+
+/// Fuse the deltas of one round of concurrent discharges into the
+/// shared state (lines 4–6 of Alg. 2): publish labels, α-filter the
+/// pushed flows, park exported excess.
+pub fn fuse_deltas(shared: &mut SharedState, deltas: &[RegionBoundaryDelta]) -> FuseOutcome {
+    let d_inf = shared.d_inf;
+    let mut bytes = 0u64;
+
+    // ---- fuse labels: owners publish their new boundary labels ---------
+    for delta in deltas {
+        for &(b, d) in &delta.owned_labels {
+            shared.d[b as usize] = d;
+            bytes += 4;
+        }
+    }
+
+    // ---- collect per-arc flows from both sides --------------------------
+    // (BTreeMap: deterministic order, sparse in the number of touched arcs)
+    let mut per_arc: std::collections::BTreeMap<u32, (Cap, Cap)> = Default::default();
+    for delta in deltas {
+        for &(s, forward, amt) in &delta.arc_flow {
+            let e = per_arc.entry(s).or_insert((0, 0));
+            if forward {
+                e.0 += amt;
+            } else {
+                e.1 += amt;
+            }
+        }
+    }
+
+    // ---- α-filter and apply ---------------------------------------------
+    let mut cancelled = Vec::new();
+    for (&s, &(dfw, dbw)) in &per_arc {
+        if dfw == 0 && dbw == 0 {
+            continue;
+        }
+        let arc = shared.arcs[s as usize];
+        let (bu, bv) = (arc.bu as usize, arc.bv as usize);
+        let du = shared.d[bu].min(d_inf);
+        let dv = shared.d[bv].min(d_inf);
+        // a push u→v creates residual (v,u); keep it iff d'(v) ≤ d'(u)+1
+        let keep_fw = dv <= du + 1;
+        let keep_bw = du <= dv + 1;
+        debug_assert!(keep_fw || keep_bw, "both directions cannot be invalid");
+        let sa = &mut shared.arcs[s as usize];
+        if dfw > 0 {
+            if keep_fw {
+                sa.cap_fw -= dfw;
+                sa.cap_bw += dfw;
+                shared.excess[bv] += dfw;
+            } else {
+                shared.excess[bu] += dfw; // cancelled: stays at tail
+                cancelled.push((s, true, dfw));
+            }
+            bytes += 16;
+        }
+        if dbw > 0 {
+            if keep_bw {
+                sa.cap_bw -= dbw;
+                sa.cap_fw += dbw;
+                shared.excess[bu] += dbw;
+            } else {
+                shared.excess[bv] += dbw;
+                cancelled.push((s, false, dbw));
+            }
+            bytes += 16;
+        }
+    }
+
+    // ---- exported owned-boundary excess ---------------------------------
+    for delta in deltas {
+        for &(b, e) in &delta.owned_excess {
+            shared.excess[b as usize] += e;
+            bytes += 8;
+        }
+    }
+    FuseOutcome { bytes, cancelled }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+    use crate::region::decompose::{Decomposition, DistanceMode, SharedArc};
+
+    /// A bare two-vertex shared state with one inter-region arc
+    /// `b0 → b1` (forward) of capacity 5 each way.
+    fn shared2(d0: u32, d1: u32, d_inf: u32) -> SharedState {
+        SharedState {
+            global_of_b: vec![0, 1],
+            b_of_global: vec![0, 1],
+            owner: vec![0, 1],
+            d: vec![d0, d1],
+            excess: vec![0, 0],
+            arcs: vec![SharedArc { bu: 0, bv: 1, cap_fw: 5, cap_bw: 5 }],
+            d_inf,
+        }
+    }
+
+    fn push3(labels: Vec<(u32, u32)>) -> RegionBoundaryDelta {
+        RegionBoundaryDelta {
+            region: 0,
+            arc_flow: vec![(0, true, 3)],
+            owned_labels: labels,
+            owned_excess: vec![],
+            active: false,
+            flow_to_sink: 0,
+        }
+    }
+
+    /// The cancellation rule on a hand-built 2-region example: region 0
+    /// pushed 3 units over `u → v`. With fused labels `d'(u) = 2`,
+    /// `d'(v) = 0` the reverse residual arc stays valid
+    /// (`d'(v) ≤ d'(u) + 1`) and the flow survives: caps move, the
+    /// excess arrives at `v`.
+    #[test]
+    fn kept_push_moves_caps_and_excess() {
+        let mut sh = shared2(0, 0, 4);
+        let out = fuse_deltas(&mut sh, &[push3(vec![(0, 2)])]);
+        assert!(out.cancelled.is_empty());
+        assert_eq!(sh.d, vec![2, 0], "labels fused first");
+        assert_eq!(sh.arcs[0].cap_fw, 2);
+        assert_eq!(sh.arcs[0].cap_bw, 8);
+        assert_eq!(sh.excess, vec![0, 3]);
+    }
+
+    /// Same push, but region 1 concurrently raised `d'(v) = 4` while
+    /// region 0 kept `d'(u) = 1`: keeping the push would create the
+    /// residual arc `(v, u)` with `d'(v) = 4 > d'(u) + 1 = 2` — invalid.
+    /// The α-filter cancels it: caps stay put and the 3 units return to
+    /// the tail `u` as excess.
+    #[test]
+    fn cancelled_push_refunds_tail() {
+        let mut sh = shared2(0, 0, 8);
+        let deltas = [
+            push3(vec![(0, 1)]),
+            RegionBoundaryDelta {
+                region: 1,
+                owned_labels: vec![(1, 4)],
+                ..Default::default()
+            },
+        ];
+        let out = fuse_deltas(&mut sh, &deltas);
+        assert_eq!(out.cancelled, vec![(0, true, 3)]);
+        assert_eq!(sh.d, vec![1, 4]);
+        assert_eq!(sh.arcs[0].cap_fw, 5, "cancelled push leaves caps");
+        assert_eq!(sh.arcs[0].cap_bw, 5);
+        assert_eq!(sh.excess, vec![3, 0], "refund parks at the tail");
+    }
+
+    /// Opposing pushes from both sides fuse independently per direction.
+    #[test]
+    fn bidirectional_pushes_fuse_per_direction() {
+        let mut sh = shared2(1, 1, 8);
+        let deltas = [
+            push3(vec![(0, 2)]),
+            RegionBoundaryDelta {
+                region: 1,
+                arc_flow: vec![(0, false, 2)],
+                owned_labels: vec![(1, 3)],
+                ..Default::default()
+            },
+        ];
+        let out = fuse_deltas(&mut sh, &deltas);
+        // fw: d'(v)=3 ≤ d'(u)+1=3 → kept; bw: d'(u)=2 ≤ d'(v)+1=4 → kept
+        assert!(out.cancelled.is_empty());
+        assert_eq!(sh.arcs[0].cap_fw, 5 - 3 + 2);
+        assert_eq!(sh.arcs[0].cap_bw, 5 + 3 - 2);
+        assert_eq!(sh.excess, vec![2, 3]);
+    }
+
+    /// `take_boundary_delta` against a real decomposition: the delta
+    /// carries exactly what `sync_out` used to publish, and fusing the
+    /// singleton delta reproduces `sync_out`'s shared state bit for bit.
+    #[test]
+    fn singleton_fusion_equals_sync_out() {
+        let mut b = GraphBuilder::new(6);
+        b.add_terminal(0, 9, 0);
+        b.add_terminal(5, 0, 9);
+        for v in 0..5 {
+            b.add_edge(v, v + 1, 4, 4);
+        }
+        let g = b.build();
+        let p = Partition::by_node_ranges(6, 2);
+        let mut via_fuse = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let mut via_sync = via_fuse.clone();
+        for dec in [&mut via_fuse, &mut via_sync] {
+            dec.sync_in(0);
+            let ba = dec.parts[0].boundary_arcs[0];
+            let (lv_foreign, _) = dec.parts[0].foreign_boundary[0];
+            dec.parts[0].graph.push(ba.local_arc, 3);
+            dec.parts[0].graph.excess[lv_foreign as usize] += 3;
+            dec.parts[0].label[2] = 1; // owned boundary vertex of region 0
+        }
+        let d_inf = via_fuse.shared.d_inf;
+        let delta = take_boundary_delta(&mut via_fuse.parts[0], d_inf);
+        assert_eq!(delta.arc_flow, vec![(0, true, 3)]);
+        let out = fuse_deltas(&mut via_fuse.shared, &[delta]);
+        assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
+        via_sync.sync_out(0);
+        assert_eq!(via_fuse.shared.d, via_sync.shared.d);
+        assert_eq!(via_fuse.shared.excess, via_sync.shared.excess);
+        for (a, b) in via_fuse.shared.arcs.iter().zip(&via_sync.shared.arcs) {
+            assert_eq!((a.cap_fw, a.cap_bw), (b.cap_fw, b.cap_bw));
+        }
+        assert_eq!(via_fuse.parts[0].active, via_sync.parts[0].active);
+    }
+}

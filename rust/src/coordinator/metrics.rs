@@ -29,6 +29,17 @@ pub struct RunMetrics {
     /// read-ahead vs loads that fell back to a synchronous read.
     pub prefetch_hits: u64,
     pub prefetch_misses: u64,
+    /// Distributed runtime (schema 4): protocol messages the master
+    /// exchanged with its workers.
+    pub dist_msgs_sent: u64,
+    pub dist_msgs_recv: u64,
+    /// Actual bytes on the wire (length-prefixed compact frames, both
+    /// directions) vs what the same payloads would have cost in the raw
+    /// fixed-width codec — the first real measurement of the paper's
+    /// "interaction between the regions is considered expensive".
+    pub wire_bytes_sent: u64,
+    pub wire_bytes_recv: u64,
+    pub wire_raw_bytes: u64,
     /// ARD-core work totals (§6.3 forest-reuse visibility): vertices
     /// grown into the search structure (BK) / BFS phases (Dinic),
     /// augmenting paths, and orphan adoptions (BK only). Zero for PRD.
@@ -42,6 +53,10 @@ pub struct RunMetrics {
     pub t_relabel: Duration,
     pub t_gap: Duration,
     pub t_msg: Duration,
+    /// Distributed runtime: wall time the master spent synchronizing
+    /// with workers (send + wait-for-reply on the critical path),
+    /// summed over all sweeps.
+    pub t_sync: Duration,
     /// Disk time on the critical path (the coordinator was stalled).
     pub t_disk: Duration,
     /// Disk + codec time the prefetch pipeline hid behind discharges.
@@ -80,10 +95,22 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let dist = if self.dist_msgs_sent + self.dist_msgs_recv > 0 {
+            format!(
+                " [dist msgs {}/{}, wire {}->{} KB, sync {:.3}s]",
+                self.dist_msgs_sent,
+                self.dist_msgs_recv,
+                self.wire_raw_bytes / 1024,
+                (self.wire_bytes_sent + self.wire_bytes_recv) / 1024,
+                self.t_sync.as_secs_f64(),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{name}: flow={} sweeps={}(+{}) discharges={} core g/a/a {}/{}/{} \
              cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) \
-             io r/w {}/{} MB mem {}+{}+{} MB{stream}{}",
+             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{}",
             self.flow,
             self.sweeps,
             self.extra_sweeps,
@@ -163,5 +190,22 @@ mod tests {
             ..Default::default()
         };
         assert!(m.summary("s").contains("prefetch 3/4"));
+    }
+
+    #[test]
+    fn summary_dist_tail_only_when_distributed() {
+        let m = RunMetrics { converged: true, ..Default::default() };
+        assert!(!m.summary("d").contains("dist msgs"));
+        let m = RunMetrics {
+            converged: true,
+            dist_msgs_sent: 10,
+            dist_msgs_recv: 8,
+            wire_bytes_sent: 4096,
+            wire_bytes_recv: 2048,
+            wire_raw_bytes: 10240,
+            ..Default::default()
+        };
+        assert!(m.summary("d").contains("dist msgs 10/8"));
+        assert!(m.summary("d").contains("wire 10->6 KB"));
     }
 }

@@ -1,7 +1,8 @@
 //! Coordinators: the generic sequential (Alg. 1) and parallel (Alg. 2)
-//! region-discharge drivers, the streaming pager, the dual-decomposition
-//! baseline, and run metrics.
+//! region-discharge drivers, the shared Algorithm-2 fusion step, the
+//! streaming pager, the dual-decomposition baseline, and run metrics.
 
+pub mod fuse;
 pub mod metrics;
 pub mod sequential;
 pub mod parallel;

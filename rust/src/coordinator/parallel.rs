@@ -14,9 +14,10 @@
 //! (the paper uses OpenMP); the fusion, gap and boundary-relabel steps
 //! run synchronously on the master thread, as in §5.3.
 
+use crate::coordinator::fuse::{fuse_deltas, take_boundary_delta};
 use crate::coordinator::metrics::{RunMetrics, Timer};
 use crate::coordinator::sequential::{Algorithm, CoreKind, GapState, SolveResult};
-use crate::core::graph::{Cap, Graph};
+use crate::core::graph::Graph;
 use crate::core::partition::Partition;
 use crate::region::ard::{Ard, ArdCore};
 use crate::region::boundary_relabel::boundary_relabel;
@@ -128,109 +129,15 @@ fn select_muts<'a, T>(items: &'a mut [T], idxs: &[usize]) -> Vec<&'a mut T> {
     out
 }
 
-/// The fusion step (lines 4–6 of Alg. 2). Returns message bytes.
+/// The fusion step (lines 4–6 of Alg. 2), through the shared
+/// [`crate::coordinator::fuse`] implementation. Returns message bytes.
 fn fuse(dec: &mut Decomposition, discharged: &[usize]) -> u64 {
-    let mut bytes = 0u64;
     let d_inf = dec.shared.d_inf;
-
-    // ---- fuse labels: owners publish their new boundary labels ---------
-    for &r in discharged {
-        let part = &dec.parts[r];
-        for &(lv, b) in &part.owned_boundary {
-            dec.shared.d[b as usize] = part.label[lv as usize];
-            bytes += 4;
-        }
-    }
-
-    // ---- collect per-arc deltas from both sides -------------------------
-    // deltas[s] = (flow pushed in fw direction, flow pushed in bw direction)
-    let mut deltas: Vec<(Cap, Cap)> = vec![(0, 0); dec.shared.arcs.len()];
-    for &r in discharged {
-        let part = &dec.parts[r];
-        for (i, ba) in part.boundary_arcs.iter().enumerate() {
-            let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
-            debug_assert!(delta >= 0, "net boundary flow cannot be negative");
-            if ba.forward {
-                deltas[ba.shared as usize].0 += delta;
-            } else {
-                deltas[ba.shared as usize].1 += delta;
-            }
-        }
-    }
-
-    // ---- α-filter and apply ---------------------------------------------
-    for (s, &(dfw, dbw)) in deltas.iter().enumerate() {
-        if dfw == 0 && dbw == 0 {
-            continue;
-        }
-        let arc = dec.shared.arcs[s];
-        let (bu, bv) = (arc.bu as usize, arc.bv as usize);
-        let du = dec.shared.d[bu].min(d_inf);
-        let dv = dec.shared.d[bv].min(d_inf);
-        // a push u→v creates residual (v,u); keep it iff d'(v) ≤ d'(u)+1
-        let keep_fw = dv <= du + 1;
-        let keep_bw = du <= dv + 1;
-        debug_assert!(keep_fw || keep_bw, "both directions cannot be invalid");
-        let sa = &mut dec.shared.arcs[s];
-        if dfw > 0 {
-            if keep_fw {
-                sa.cap_fw -= dfw;
-                sa.cap_bw += dfw;
-                dec.shared.excess[bv] += dfw;
-            } else {
-                dec.shared.excess[bu] += dfw; // cancelled: stays at tail
-            }
-            bytes += 16;
-        }
-        if dbw > 0 {
-            if keep_bw {
-                sa.cap_bw -= dbw;
-                sa.cap_fw += dbw;
-                dec.shared.excess[bu] += dbw;
-            } else {
-                dec.shared.excess[bv] += dbw;
-            }
-            bytes += 16;
-        }
-    }
-
-    // ---- per-part cleanup: excess bookkeeping & activity ----------------
-    let d_inf = dec.shared.d_inf;
-    for &r in discharged {
-        let part = &mut dec.parts[r];
-        #[cfg(debug_assertions)]
-        {
-            // exported foreign excess must match the per-arc deltas
-            let mut per_vertex: std::collections::HashMap<u32, Cap> = Default::default();
-            for (i, ba) in part.boundary_arcs.iter().enumerate() {
-                let delta = part.synced_cap[i] - part.graph.cap[ba.local_arc as usize];
-                let head = part.graph.head(ba.local_arc);
-                *per_vertex.entry(head).or_default() += delta;
-            }
-            for &(lv, _) in &part.foreign_boundary {
-                let e = part.graph.excess[lv as usize];
-                assert_eq!(
-                    e,
-                    per_vertex.get(&lv).copied().unwrap_or(0),
-                    "foreign excess must equal net arc inflow"
-                );
-            }
-        }
-        for &(lv, _) in &part.foreign_boundary {
-            // already distributed arc-wise above
-            part.graph.excess[lv as usize] = 0;
-        }
-        for &(lv, b) in &part.owned_boundary {
-            let e = part.graph.excess[lv as usize];
-            if e > 0 {
-                dec.shared.excess[b as usize] += e;
-                part.graph.excess[lv as usize] = 0;
-                bytes += 8;
-            }
-        }
-        part.active = part.has_active_inner(d_inf);
-    }
-    bytes
+    let deltas: Vec<_> = discharged
+        .iter()
+        .map(|&r| take_boundary_delta(&mut dec.parts[r], d_inf))
+        .collect();
+    fuse_deltas(&mut dec.shared, &deltas).bytes
 }
 
 /// Solve `g` under `partition` with Algorithm 2 on `opts.threads`
@@ -349,7 +256,9 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
                     Algorithm::Ard => region_relabel_ard(&mut dec.parts[r], d_inf),
                     Algorithm::Prd => region_relabel_prd(&mut dec.parts[r], d_inf),
                 };
-                metrics.msg_bytes += dec.sync_out(r);
+                // label-only publish through the shared fusion (no
+                // flows/foreign excess in a relabel round)
+                metrics.msg_bytes += fuse(&mut dec, &[r]);
             }
             tr.stop(&mut metrics.t_relabel);
             metrics.extra_sweeps += 1;

@@ -14,6 +14,7 @@
 //! until labels stop changing so the cut can be read off `d = d_inf`
 //! (§5.3 — "in practice it takes from 0 to 2 extra sweeps").
 
+use crate::coordinator::fuse::{fuse_deltas, take_boundary_delta};
 use crate::coordinator::metrics::{RunMetrics, Timer};
 use crate::core::error::{Context, Result};
 use crate::core::graph::{Cap, Graph};
@@ -185,7 +186,7 @@ impl GapState {
         }
     }
 
-    fn move_label(&mut self, from: u32, to: u32) {
+    pub(crate) fn move_label(&mut self, from: u32, to: u32) {
         let (f, t) = (self.bin(from), self.bin(to));
         if f != t {
             self.hist[f] -= 1;
@@ -271,7 +272,8 @@ impl GapState {
 }
 
 /// The theoretical sweep bound plus slack, used when `max_sweeps == 0`.
-fn sweep_limit(opts: &SeqOptions, dec: &Decomposition) -> u64 {
+/// (`pub(crate)`: the distributed master mirrors this loop.)
+pub(crate) fn sweep_limit(opts: &SeqOptions, dec: &Decomposition) -> u64 {
     if opts.max_sweeps > 0 {
         return opts.max_sweeps as u64;
     }
@@ -328,8 +330,15 @@ fn discharge_region(
     td.stop(&mut metrics.t_discharge);
     metrics.discharges += 1;
 
+    // Publish through the shared Algorithm-2 fusion (coordinator::fuse);
+    // with a single discharged region the α-filter provably never
+    // cancels, so this is `sync_out` exactly — and the same code path
+    // the threaded and distributed coordinators run.
     let tm = Timer::start();
-    metrics.msg_bytes += dec.sync_out(r);
+    let delta = take_boundary_delta(&mut dec.parts[r], d_inf);
+    let out = fuse_deltas(&mut dec.shared, std::slice::from_ref(&delta));
+    debug_assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
+    metrics.msg_bytes += out.bytes;
     tm.stop(&mut metrics.t_msg);
 
     if let Some(gs) = gap.as_mut() {
@@ -566,8 +575,13 @@ pub fn solve_sequential(
                     Algorithm::Prd => region_relabel_prd(&mut dec.parts[r], d_inf),
                 };
                 tr.stop(&mut metrics.t_relabel);
+                // label-only rounds publish through the same fusion as
+                // discharges (no flows, no foreign excess — the delta
+                // carries labels and re-parked owned excess only)
                 let tm = Timer::start();
-                metrics.msg_bytes += dec.sync_out(r);
+                let delta = take_boundary_delta(&mut dec.parts[r], d_inf);
+                metrics.msg_bytes +=
+                    fuse_deltas(&mut dec.shared, std::slice::from_ref(&delta)).bytes;
                 tm.stop(&mut metrics.t_msg);
                 if let Some(st) = store.as_mut() {
                     st.unload(&mut dec, r).context("page out region")?;

@@ -1,0 +1,635 @@
+//! The master side of the distributed runtime.
+//!
+//! [`solve_distributed`] drives Algorithm 1 with the regions living in
+//! worker processes: the master keeps only the shared boundary state
+//! (`O(|B|)`), per-region boundary metadata, and shells — every region
+//! network is shipped to its worker once ([`Msg::AssignShard`]) and
+//! never comes back. A sweep is a sequence of per-region rounds:
+//!
+//! ```text
+//! master                                   worker
+//!   │  Discharge (sync-in snapshot)  ──────▶  │  sync_in + ARD discharge
+//!   │  ◀──────  BoundaryDelta (flows+labels)  │
+//!   │  fuse_deltas + gap heuristics           │
+//!   │  FuseResult (α cancellations)  ──────▶  │
+//! ```
+//!
+//! Because the master mirrors `solve_sequential`'s control flow
+//! statement for statement — same sweep order, same gap/boundary-
+//! relabel schedule, same relabel-sweep epilogue — and the fusion of a
+//! single region's delta is exactly `sync_out`, a distributed solve is
+//! **bit-identical** to the sequential one: same flow, cut, sweep and
+//! discharge counts (pinned in `tests/distributed.rs`).
+//!
+//! The exchange is also the first place the repo actually *pays* for
+//! region interaction, so every frame is accounted: message counts,
+//! wire bytes (compact) vs the raw-codec baseline, and the wall time
+//! the master spent waiting on workers (`RunMetrics::t_sync`).
+
+use crate::coordinator::fuse::fuse_deltas;
+use crate::coordinator::metrics::{RunMetrics, Timer};
+use crate::coordinator::sequential::{
+    sweep_limit, Algorithm, CoreKind, GapState, SeqOptions, SolveResult,
+};
+use crate::core::error::{Context, Result};
+use crate::core::graph::{Cap, Graph};
+use crate::core::partition::Partition;
+use crate::dist::proto::{
+    read_msg, write_msg, AssignShard, DischargeReq, Msg, PROTO_VERSION,
+};
+use crate::dist::worker::{self, WorkerOptions};
+use crate::ensure;
+use crate::err;
+use crate::region::boundary_relabel::boundary_relabel;
+use crate::region::decompose::{BoundaryArcRef, Decomposition, DistanceMode, RegionPart};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Where the workers come from.
+#[derive(Debug, Clone)]
+pub enum WorkerSpec {
+    /// Auto-spawn `n` loopback `armincut worker --connect` child
+    /// processes (single-machine use; requires the current executable
+    /// to be the `armincut` CLI).
+    Spawn(usize),
+    /// Run `n` in-process worker threads over loopback TCP (tests,
+    /// benches — same wire protocol, no process management).
+    Threads(usize),
+    /// Connect to externally started `armincut worker --listen` peers.
+    Connect(Vec<String>),
+}
+
+/// Options of the distributed solve.
+#[derive(Debug, Clone)]
+pub struct DistOptions {
+    /// Algorithm/heuristic knobs, shared with the sequential
+    /// coordinator so the two runs are comparable knob for knob.
+    /// `algorithm` must be [`Algorithm::Ard`]; `streaming_dir` is
+    /// ignored here (see `worker_streaming`).
+    pub seq: SeqOptions,
+    pub workers: WorkerSpec,
+    /// Back spawned/thread workers' shards with the region store:
+    /// worker `i` pages under `<dir>/worker_<i>` and holds one resident
+    /// region (§5.3). Externally started workers decide for themselves.
+    pub worker_streaming: Option<PathBuf>,
+    /// Page compression for spawned/thread workers' stores
+    /// (`--no-compress` clears it; meaningful with `worker_streaming`).
+    pub worker_compress: bool,
+    /// Per-socket read/write timeout — a hung worker becomes a clean
+    /// error instead of a stuck master.
+    pub io_timeout: Duration,
+}
+
+impl DistOptions {
+    /// `n` auto-spawned loopback worker processes.
+    pub fn spawn(n: usize) -> DistOptions {
+        DistOptions {
+            seq: SeqOptions::ard(),
+            workers: WorkerSpec::Spawn(n),
+            worker_streaming: None,
+            worker_compress: true,
+            io_timeout: Duration::from_secs(120),
+        }
+    }
+
+    /// `n` in-process loopback worker threads.
+    pub fn threads(n: usize) -> DistOptions {
+        DistOptions { workers: WorkerSpec::Threads(n), ..Self::spawn(n) }
+    }
+
+    /// Externally started workers at `addrs`.
+    pub fn connect(addrs: Vec<String>) -> DistOptions {
+        DistOptions { workers: WorkerSpec::Connect(addrs), ..Self::spawn(0) }
+    }
+}
+
+/// One worker connection with its wire accounting.
+struct Conn {
+    stream: TcpStream,
+    msgs_sent: u64,
+    msgs_recv: u64,
+    wire_sent: u64,
+    wire_recv: u64,
+    raw_bytes: u64,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, timeout: Duration) -> Result<Conn> {
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
+        stream.set_write_timeout(Some(timeout)).context("set write timeout")?;
+        Ok(Conn { stream, msgs_sent: 0, msgs_recv: 0, wire_sent: 0, wire_recv: 0, raw_bytes: 0 })
+    }
+
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        let wb = write_msg(&mut self.stream, msg)
+            .with_context(|| format!("send {} to worker", msg.name()))?;
+        self.msgs_sent += 1;
+        self.wire_sent += wb.wire;
+        self.raw_bytes += wb.raw;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        let (msg, wire) =
+            read_msg(&mut self.stream).context("read from worker (did it die?)")?;
+        self.msgs_recv += 1;
+        self.wire_recv += wire;
+        self.raw_bytes += crate::dist::proto::raw_frame_len(&msg);
+        if let Msg::Abort { reason } = msg {
+            return Err(err!("worker aborted: {reason}"));
+        }
+        Ok(msg)
+    }
+}
+
+/// Spawned children, killed on drop so an error path never leaks
+/// worker processes.
+struct Children(Vec<std::process::Child>);
+
+impl Children {
+    /// Give exiting children `grace` to finish, then kill stragglers.
+    fn reap(&mut self, grace: Duration) {
+        let deadline = Instant::now() + grace;
+        for c in &mut self.0 {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Children {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+enum Backend {
+    Spawned(Children),
+    Threads(Vec<std::thread::JoinHandle<Result<()>>>),
+    External,
+}
+
+/// Per-region boundary metadata the master keeps after shipping the
+/// region body away: enough to compose sync-in snapshots and interpret
+/// deltas, `O(|B_R|)` per region.
+struct RegionMeta {
+    boundary_arcs: Vec<BoundaryArcRef>,
+    /// `(local index, boundary id)` — only the boundary id is used.
+    owned: Vec<(u32, u32)>,
+    foreign: Vec<(u32, u32)>,
+}
+
+struct Master<'a> {
+    opts: &'a DistOptions,
+    dec: Decomposition,
+    metas: Vec<RegionMeta>,
+    conns: Vec<Conn>,
+    conn_of_region: Vec<usize>,
+    region_flow: Vec<Cap>,
+    gap: Option<GapState>,
+    metrics: RunMetrics,
+    backend: Backend,
+}
+
+/// Solve `g` under `partition` on distributed workers. Mirrors
+/// [`crate::coordinator::sequential::solve_sequential`] bit for bit —
+/// see the module docs. S-ARD only (the PRD gap heuristic needs inner
+/// labels, which never leave the workers).
+pub fn solve_distributed(
+    g: &Graph,
+    partition: &Partition,
+    opts: &DistOptions,
+) -> Result<SolveResult> {
+    ensure!(
+        opts.seq.algorithm == Algorithm::Ard,
+        "distributed mode supports the s-ard algorithm only"
+    );
+    ensure!(
+        !opts.seq.check_invariants,
+        "check_invariants needs resident regions; unsupported in distributed mode"
+    );
+    let t_total = Instant::now();
+    let mut master = Master::new(g, partition, opts)?;
+    let run = master.run();
+    let shutdown = master.shutdown();
+    let cut = run?;
+    shutdown?;
+    let mut metrics = master.metrics;
+    for c in &master.conns {
+        metrics.dist_msgs_sent += c.msgs_sent;
+        metrics.dist_msgs_recv += c.msgs_recv;
+        metrics.wire_bytes_sent += c.wire_sent;
+        metrics.wire_bytes_recv += c.wire_recv;
+        metrics.wire_raw_bytes += c.raw_bytes;
+    }
+    metrics.t_total = t_total.elapsed();
+    Ok(SolveResult { metrics, cut })
+}
+
+impl<'a> Master<'a> {
+    fn new(g: &Graph, partition: &Partition, opts: &'a DistOptions) -> Result<Master<'a>> {
+        let dec = Decomposition::new(g, partition, DistanceMode::Ard);
+        let k = dec.parts.len();
+        let metrics = RunMetrics {
+            shared_mem_bytes: dec.shared.memory_bytes(),
+            max_region_mem_bytes: dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0),
+            ..RunMetrics::default()
+        };
+        let gap = opts.seq.global_gap.then(|| GapState::new(&dec, false));
+
+        let (mut conns, backend) = connect_workers(opts, k)?;
+        let n = conns.len();
+        ensure!(n >= 1, "no workers connected");
+        for (i, conn) in conns.iter_mut().enumerate() {
+            match conn.recv().with_context(|| format!("worker {i} handshake"))? {
+                Msg::Hello { proto } => ensure!(
+                    proto == PROTO_VERSION as u32,
+                    "worker {i} speaks protocol {proto}, master {PROTO_VERSION}"
+                ),
+                other => {
+                    return Err(err!("worker {i}: expected Hello, got {}", other.name()))
+                }
+            }
+        }
+
+        // contiguous balanced shards: region r → worker r·n/k
+        let conn_of_region: Vec<usize> = (0..k).map(|r| r * n / k).collect();
+
+        // keep boundary metadata, ship the region bodies
+        let metas: Vec<RegionMeta> = dec
+            .parts
+            .iter()
+            .map(|p| RegionMeta {
+                boundary_arcs: p.boundary_arcs.clone(),
+                owned: p.owned_boundary.clone(),
+                foreign: p.foreign_boundary.clone(),
+            })
+            .collect();
+        let core = match opts.seq.core {
+            CoreKind::Dinic => 0,
+            CoreKind::Bk => 1,
+        };
+        let mut master = Master {
+            opts,
+            dec,
+            metas,
+            conns,
+            conn_of_region,
+            region_flow: vec![0; k],
+            gap,
+            metrics,
+            backend,
+        };
+        for w in 0..n {
+            let mut regions = Vec::new();
+            for r in 0..k {
+                if master.conn_of_region[r] == w {
+                    let part = &master.dec.parts[r];
+                    let shell =
+                        RegionPart::shell(part.region_id, part.active, part.pending_gap);
+                    regions.push((
+                        r as u32,
+                        std::mem::replace(&mut master.dec.parts[r], shell),
+                    ));
+                }
+            }
+            let assign = Msg::AssignShard(Box::new(AssignShard {
+                d_inf: master.dec.shared.d_inf,
+                algorithm: 0, // ARD (ensured by the caller)
+                core,
+                warm_start: master.opts.seq.warm_start,
+                regions,
+            }));
+            let t = Timer::start();
+            master.conns[w].send(&assign)?;
+            t.stop(&mut master.metrics.t_sync);
+        }
+        Ok(master)
+    }
+
+    /// The solve loop — `solve_sequential` statement for statement,
+    /// with the discharge executed remotely. Returns the cut.
+    fn run(&mut self) -> Result<Vec<bool>> {
+        let limit = sweep_limit(&self.opts.seq, &self.dec);
+        let mut converged = true;
+        while self.dec.any_active() {
+            if self.metrics.sweeps as u64 >= limit {
+                converged = false;
+                break;
+            }
+            let sweep = self.metrics.sweeps;
+            self.metrics.sweeps += 1;
+            let max_stage = if self.opts.seq.partial_discharge {
+                sweep
+            } else {
+                u32::MAX
+            };
+            let order = self.dec.active_regions();
+            for &r in &order {
+                self.remote_round(r, false, max_stage)?;
+            }
+            if self.opts.seq.boundary_relabel {
+                let tg = Timer::start();
+                let increased = boundary_relabel(&mut self.dec.shared);
+                if increased > 0 {
+                    if let Some(gs) = self.gap.as_mut() {
+                        *gs = GapState::new(&self.dec, false);
+                        gs.run(&mut self.dec);
+                    }
+                }
+                tg.stop(&mut self.metrics.t_gap);
+            }
+        }
+
+        // ---- extra label-only sweeps to extract the cut (§5.3) ---------
+        if converged {
+            loop {
+                let mut increase = 0u64;
+                for r in 0..self.dec.parts.len() {
+                    increase += self.remote_round(r, true, u32::MAX)?;
+                }
+                self.metrics.extra_sweeps += 1;
+                if increase == 0 {
+                    break;
+                }
+                if self.metrics.extra_sweeps as u64
+                    > limit + self.dec.n_global as u64 + 4
+                {
+                    converged = false;
+                    break;
+                }
+            }
+        }
+
+        // ---- collect the cut from the workers ---------------------------
+        let mut sides = vec![true; self.dec.n_global];
+        for r in 0..self.dec.parts.len() {
+            let ci = self.conn_of_region[r];
+            let t = Timer::start();
+            self.conns[ci].send(&Msg::FetchCut { region: r as u32 })?;
+            let msg = self.conns[ci].recv()?;
+            t.stop(&mut self.metrics.t_sync);
+            match msg {
+                Msg::CutResult { region, src_side } if region == r as u32 => {
+                    for gv in src_side {
+                        ensure!(
+                            (gv as usize) < sides.len(),
+                            "worker {ci}: cut vertex {gv} out of range"
+                        );
+                        sides[gv as usize] = false;
+                    }
+                }
+                other => {
+                    return Err(err!(
+                        "worker {ci}: expected CutResult for region {r}, got {}",
+                        other.name()
+                    ))
+                }
+            }
+        }
+        self.metrics.flow = self.dec.base_flow + self.region_flow.iter().sum::<Cap>();
+        self.metrics.converged = converged;
+        Ok(sides)
+    }
+
+    /// One remote region round (see module docs). Returns the relabel
+    /// increase (0 for discharge rounds).
+    fn remote_round(&mut self, r: usize, relabel_only: bool, max_stage: u32) -> Result<u64> {
+        // ---- compose the sync-in snapshot (mirror of sync_in) -----------
+        let meta = &self.metas[r];
+        let arc_caps: Vec<Cap> = meta
+            .boundary_arcs
+            .iter()
+            .map(|ba| {
+                let sa = &self.dec.shared.arcs[ba.shared as usize];
+                if ba.forward {
+                    sa.cap_fw
+                } else {
+                    sa.cap_bw
+                }
+            })
+            .collect();
+        let foreign_d: Vec<u32> =
+            meta.foreign.iter().map(|&(_, b)| self.dec.shared.d[b as usize]).collect();
+        let owned_d: Vec<u32> =
+            meta.owned.iter().map(|&(_, b)| self.dec.shared.d[b as usize]).collect();
+        let mut owned_excess = Vec::with_capacity(meta.owned.len());
+        for &(_, b) in &self.metas[r].owned {
+            owned_excess.push(self.dec.shared.excess[b as usize]);
+            self.dec.shared.excess[b as usize] = 0;
+        }
+        let pending_gap = self.dec.parts[r].pending_gap;
+        self.dec.parts[r].pending_gap = u32::MAX;
+
+        let req = Msg::Discharge(Box::new(DischargeReq {
+            region: r as u32,
+            relabel_only,
+            max_stage,
+            pending_gap,
+            arc_caps,
+            foreign_d,
+            owned_d: owned_d.clone(),
+            owned_excess,
+        }));
+        let ci = self.conn_of_region[r];
+        let t = Timer::start();
+        self.conns[ci].send(&req)?;
+        let rsp = match self.conns[ci].recv()? {
+            Msg::BoundaryDelta(rsp) => rsp,
+            other => {
+                return Err(err!(
+                    "worker {ci}: expected BoundaryDelta for region {r}, got {}",
+                    other.name()
+                ))
+            }
+        };
+        t.stop(&mut self.metrics.t_sync);
+        ensure!(
+            rsp.delta.region == r as u32,
+            "worker {ci} answered for region {} instead of {r}",
+            rsp.delta.region
+        );
+        if !relabel_only {
+            self.metrics.discharges += 1;
+            self.metrics.core_grow += rsp.grow;
+            self.metrics.core_augment += rsp.augment;
+            self.metrics.core_adopt += rsp.adopt;
+        }
+
+        // ---- fuse (the shared Algorithm-2 step; singleton never cancels)
+        let tm = Timer::start();
+        let out = fuse_deltas(&mut self.dec.shared, std::slice::from_ref(&rsp.delta));
+        debug_assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
+        self.metrics.msg_bytes += out.bytes;
+        tm.stop(&mut self.metrics.t_msg);
+        let t = Timer::start();
+        self.conns[ci].send(&Msg::FuseResult { region: r as u32, cancelled: out.cancelled })?;
+        t.stop(&mut self.metrics.t_sync);
+
+        self.dec.parts[r].active = rsp.delta.active;
+        self.region_flow[r] = rsp.delta.flow_to_sink;
+
+        // ---- gap heuristic, exactly as the sequential coordinator ------
+        if !relabel_only {
+            if let Some(gs) = self.gap.as_mut() {
+                let tg = Timer::start();
+                let d_inf = self.dec.shared.d_inf;
+                for (i, &(b, d_new)) in rsp.delta.owned_labels.iter().enumerate() {
+                    debug_assert_eq!(b, self.metas[r].owned[i].1, "owned order is stable");
+                    // the "from" label is what the worker saw after its
+                    // sync-in, i.e. after the lazy pending-gap raise —
+                    // mirroring `owned_before` in the sequential
+                    // coordinator (captured post-sync_in)
+                    let from = if pending_gap != u32::MAX && owned_d[i] > pending_gap {
+                        d_inf
+                    } else {
+                        owned_d[i]
+                    };
+                    gs.move_label(from, d_new);
+                }
+                gs.run(&mut self.dec);
+                tg.stop(&mut self.metrics.t_gap);
+            }
+        }
+        Ok(rsp.relabel_increase)
+    }
+
+    /// Orderly teardown: Shutdown to every worker, then reap processes /
+    /// join threads, surfacing worker-side errors.
+    fn shutdown(&mut self) -> Result<()> {
+        for conn in &mut self.conns {
+            let _ = conn.send(&Msg::Shutdown);
+        }
+        match std::mem::replace(&mut self.backend, Backend::External) {
+            Backend::Spawned(mut children) => {
+                children.reap(Duration::from_secs(10));
+                Ok(())
+            }
+            Backend::Threads(handles) => {
+                for (i, h) in handles.into_iter().enumerate() {
+                    match h.join() {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => return Err(err!("worker thread {i}: {e}")),
+                        Err(_) => return Err(err!("worker thread {i} panicked")),
+                    }
+                }
+                Ok(())
+            }
+            Backend::External => Ok(()),
+        }
+    }
+}
+
+/// Establish the worker connections per [`WorkerSpec`]. Returns the
+/// streams in worker order plus the process/thread backend handle.
+fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)> {
+    let worker_dir = |i: usize| {
+        opts.worker_streaming.as_ref().map(|d| d.join(format!("worker_{i}")))
+    };
+    match &opts.workers {
+        WorkerSpec::Spawn(n) => {
+            let n = (*n).clamp(1, k.max(1));
+            let exe = std::env::current_exe().context("locate armincut executable")?;
+            let listener =
+                TcpListener::bind("127.0.0.1:0").context("bind master listener")?;
+            let addr = listener.local_addr().context("master listener address")?;
+            listener.set_nonblocking(true).context("set listener nonblocking")?;
+            let mut children = Children(Vec::new());
+            for i in 0..n {
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.arg("worker").arg("--connect").arg(addr.to_string());
+                if let Some(dir) = worker_dir(i) {
+                    cmd.arg("--streaming").arg(dir);
+                }
+                if !opts.worker_compress {
+                    cmd.arg("--no-compress");
+                }
+                children.0.push(
+                    cmd.spawn().with_context(|| format!("spawn worker {i}"))?,
+                );
+            }
+            let mut conns = Vec::with_capacity(n);
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while conns.len() < n {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).context("worker stream mode")?;
+                        conns.push(Conn::new(stream, opts.io_timeout)?);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        for (i, c) in children.0.iter_mut().enumerate() {
+                            if let Ok(Some(status)) = c.try_wait() {
+                                return Err(err!(
+                                    "worker {i} exited before connecting ({status})"
+                                ));
+                            }
+                        }
+                        ensure!(
+                            Instant::now() < deadline,
+                            "timed out waiting for {} worker connection(s)",
+                            n - conns.len()
+                        );
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => return Err(err!("accept worker connection: {e}")),
+                }
+            }
+            Ok((conns, Backend::Spawned(children)))
+        }
+        WorkerSpec::Threads(n) => {
+            let n = (*n).clamp(1, k.max(1));
+            let mut conns = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
+            for i in 0..n {
+                let listener =
+                    TcpListener::bind("127.0.0.1:0").context("bind worker listener")?;
+                let addr = listener.local_addr().context("worker listener address")?;
+                let wo = WorkerOptions {
+                    streaming_dir: worker_dir(i),
+                    streaming_compress: opts.worker_compress,
+                    fail_after: None,
+                };
+                let handle = std::thread::Builder::new()
+                    .name(format!("armincut-worker-{i}"))
+                    .spawn(move || worker::serve_listener(&listener, &wo))
+                    .context("spawn worker thread")?;
+                handles.push(handle);
+                let stream = TcpStream::connect(addr)
+                    .with_context(|| format!("connect to worker thread {i}"))?;
+                conns.push(Conn::new(stream, opts.io_timeout)?);
+            }
+            Ok((conns, Backend::Threads(handles)))
+        }
+        WorkerSpec::Connect(addrs) => {
+            ensure!(!addrs.is_empty(), "--workers needs at least one address");
+            let mut conns = Vec::with_capacity(addrs.len());
+            for addr in addrs {
+                let sock = addr
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolve worker address {addr}"))?
+                    .next()
+                    .with_context(|| format!("worker address {addr} resolves to nothing"))?;
+                let stream = TcpStream::connect_timeout(&sock, opts.io_timeout)
+                    .with_context(|| format!("connect to worker {addr}"))?;
+                conns.push(Conn::new(stream, opts.io_timeout)?);
+            }
+            Ok((conns, Backend::External))
+        }
+    }
+}

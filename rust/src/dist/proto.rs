@@ -1,0 +1,599 @@
+//! Wire protocol of the distributed runtime: typed messages over
+//! length-prefixed, CRC-32-framed TCP, reusing the [`crate::store`]
+//! codec for payloads.
+//!
+//! Frame layout (all integers little-endian), versioned like
+//! [`crate::store::page`]:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        b"ARMD"
+//!      4     2  version      PROTO_VERSION
+//!      6     1  kind         message discriminant
+//!      7     1  codec        store::codec::Codec as u8
+//!      8     4  payload_len
+//!     12     4  crc32        IEEE CRC-32 of bytes [4..12) ++ payload
+//!     16     …  payload      message fields encoded per `codec`
+//! ```
+//!
+//! Payloads ship in [`Codec::Compact`] (varint + delta — residual
+//! capacities and labels are small integers, so frames shrink
+//! severalfold); [`write_msg`] also reports what the same payload would
+//! have cost under [`Codec::Raw`], which is where the
+//! raw-vs-compressed wire accounting of `RunMetrics` (schema 4) comes
+//! from. A truncated, bit-flipped, foreign or future-versioned frame is
+//! rejected with a typed [`ProtoError`], never mis-decoded.
+
+use crate::coordinator::fuse::RegionBoundaryDelta;
+use crate::core::graph::Cap;
+use crate::region::decompose::RegionPart;
+use crate::store::codec::{Codec, Dec, Enc};
+use crate::store::page::crc32;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// First bytes of every frame.
+pub const FRAME_MAGIC: [u8; 4] = *b"ARMD";
+/// Bumped on any message-layout change; peers reject other versions.
+pub const PROTO_VERSION: u16 = 1;
+/// Fixed header size preceding the payload.
+pub const FRAME_HEADER_LEN: usize = 16;
+/// Upper bound on a single payload (a shard assignment of a huge
+/// region); anything larger is a protocol error, not an allocation.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Why a frame or message was rejected.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Socket-level failure (includes EOF on a dead peer).
+    Io(std::io::Error),
+    BadMagic,
+    BadVersion(u16),
+    BadCodec(u8),
+    BadKind(u8),
+    TooLarge(u32),
+    BadCrc,
+    Malformed(&'static str),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "wire i/o: {e}"),
+            ProtoError::BadMagic => write!(f, "not an armincut frame (bad magic)"),
+            ProtoError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (expected {PROTO_VERSION})")
+            }
+            ProtoError::BadCodec(c) => write!(f, "unknown frame codec {c}"),
+            ProtoError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            ProtoError::TooLarge(n) => write!(f, "frame payload of {n} bytes exceeds limit"),
+            ProtoError::BadCrc => write!(f, "frame checksum mismatch"),
+            ProtoError::Malformed(what) => write!(f, "malformed message payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProtoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
+
+impl From<ProtoError> for crate::core::error::Error {
+    fn from(e: ProtoError) -> Self {
+        crate::core::error::Error::msg(e)
+    }
+}
+
+/// A shard handed to a worker: the regions it owns, plus everything it
+/// needs to run discharges on them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AssignShard {
+    pub d_inf: u32,
+    /// 0 = ARD, 1 = PRD.
+    pub algorithm: u8,
+    /// 0 = Dinic, 1 = BK.
+    pub core: u8,
+    pub warm_start: bool,
+    /// `(region id, region network)` — region ids are global.
+    pub regions: Vec<(u32, RegionPart)>,
+}
+
+/// One remote region operation: the sync-in snapshot of the shared
+/// state the region sees, plus what to run on it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DischargeReq {
+    pub region: u32,
+    /// `false` = discharge, `true` = label-only region-relabel sweep
+    /// (the §5.3 cut-extraction phase).
+    pub relabel_only: bool,
+    /// §6.2 partial-discharge stage cap (`u32::MAX` = full).
+    pub max_stage: u32,
+    /// Lazy global-gap raise discovered while the region was remote.
+    pub pending_gap: u32,
+    /// Residual capacity per boundary arc, in the region's
+    /// `boundary_arcs` order.
+    pub arc_caps: Vec<Cap>,
+    /// Labels of foreign boundary vertices (`foreign_boundary` order).
+    pub foreign_d: Vec<u32>,
+    /// Labels and injected excess of owned boundary vertices
+    /// (`owned_boundary` order).
+    pub owned_d: Vec<u32>,
+    pub owned_excess: Vec<Cap>,
+}
+
+/// A worker's reply to [`DischargeReq`]: the region's boundary delta
+/// (fused by the master) plus work counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DeltaRsp {
+    pub delta: RegionBoundaryDelta,
+    pub grow: u64,
+    pub augment: u64,
+    pub adopt: u64,
+    /// Total label increase of a `relabel_only` sweep (0 otherwise).
+    pub relabel_increase: u64,
+}
+
+/// The protocol messages. Master → worker: `AssignShard`, `Discharge`,
+/// `FuseResult`, `FetchCut`, `Shutdown`. Worker → master: `Hello`,
+/// `BoundaryDelta`, `CutResult`, `Abort`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg {
+    /// Handshake, sent by the worker immediately after connecting.
+    Hello { proto: u32 },
+    AssignShard(Box<AssignShard>),
+    Discharge(Box<DischargeReq>),
+    BoundaryDelta(Box<DeltaRsp>),
+    /// Fusion outcome of the discharge round: the α-filtered
+    /// cancellations `(shared arc, forward, amount)` whose flow was
+    /// refunded in shared state. Completes every Discharge exchange.
+    FuseResult { region: u32, cancelled: Vec<(u32, bool, Cap)> },
+    FetchCut { region: u32 },
+    /// Global ids of the region's inner vertices on the source side
+    /// (`d ≥ d_inf`), ascending.
+    CutResult { region: u32, src_side: Vec<u32> },
+    Shutdown,
+    /// Fatal worker-side failure, surfaced as the master's error.
+    Abort { reason: String },
+}
+
+const KIND_HELLO: u8 = 1;
+const KIND_ASSIGN: u8 = 2;
+const KIND_DISCHARGE: u8 = 3;
+const KIND_DELTA: u8 = 4;
+const KIND_FUSE: u8 = 5;
+const KIND_FETCH_CUT: u8 = 6;
+const KIND_CUT: u8 = 7;
+const KIND_SHUTDOWN: u8 = 8;
+const KIND_ABORT: u8 = 9;
+
+fn enc_flows(e: &mut Enc, xs: &[(u32, bool, Cap)]) {
+    e.u64(xs.len() as u64);
+    for &(s, fwd, amt) in xs {
+        e.u32(s);
+        e.u8(fwd as u8);
+        e.i64(amt);
+    }
+}
+
+fn dec_flows(d: &mut Dec) -> Option<Vec<(u32, bool, Cap)>> {
+    let n = usize::try_from(d.u64()?).ok()?;
+    if n > d.remaining() {
+        return None; // every entry needs at least one byte
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = d.u32()?;
+        let fwd = d.u8()? != 0;
+        let amt = d.i64()?;
+        v.push((s, fwd, amt));
+    }
+    Some(v)
+}
+
+fn enc_pairs_u32(e: &mut Enc, xs: &[(u32, u32)]) {
+    e.u64(xs.len() as u64);
+    for &(a, b) in xs {
+        e.u32(a);
+        e.u32(b);
+    }
+}
+
+fn dec_pairs_u32(d: &mut Dec) -> Option<Vec<(u32, u32)>> {
+    let n = usize::try_from(d.u64()?).ok()?;
+    if n > d.remaining() {
+        return None;
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = d.u32()?;
+        let b = d.u32()?;
+        v.push((a, b));
+    }
+    Some(v)
+}
+
+fn enc_excess(e: &mut Enc, xs: &[(u32, Cap)]) {
+    e.u64(xs.len() as u64);
+    for &(b, x) in xs {
+        e.u32(b);
+        e.i64(x);
+    }
+}
+
+fn dec_excess(d: &mut Dec) -> Option<Vec<(u32, Cap)>> {
+    let n = usize::try_from(d.u64()?).ok()?;
+    if n > d.remaining() {
+        return None;
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let b = d.u32()?;
+        let x = d.i64()?;
+        v.push((b, x));
+    }
+    Some(v)
+}
+
+impl Msg {
+    fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => KIND_HELLO,
+            Msg::AssignShard(_) => KIND_ASSIGN,
+            Msg::Discharge(_) => KIND_DISCHARGE,
+            Msg::BoundaryDelta(_) => KIND_DELTA,
+            Msg::FuseResult { .. } => KIND_FUSE,
+            Msg::FetchCut { .. } => KIND_FETCH_CUT,
+            Msg::CutResult { .. } => KIND_CUT,
+            Msg::Shutdown => KIND_SHUTDOWN,
+            Msg::Abort { .. } => KIND_ABORT,
+        }
+    }
+
+    /// Short name for error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::AssignShard(_) => "AssignShard",
+            Msg::Discharge(_) => "Discharge",
+            Msg::BoundaryDelta(_) => "BoundaryDelta",
+            Msg::FuseResult { .. } => "FuseResult",
+            Msg::FetchCut { .. } => "FetchCut",
+            Msg::CutResult { .. } => "CutResult",
+            Msg::Shutdown => "Shutdown",
+            Msg::Abort { .. } => "Abort",
+        }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            Msg::Hello { proto } => e.u32(*proto),
+            Msg::AssignShard(a) => {
+                e.u32(a.d_inf);
+                e.u8(a.algorithm);
+                e.u8(a.core);
+                e.u8(a.warm_start as u8);
+                e.u64(a.regions.len() as u64);
+                for (id, part) in &a.regions {
+                    e.u32(*id);
+                    part.encode(e);
+                }
+            }
+            Msg::Discharge(q) => {
+                e.u32(q.region);
+                e.u8(q.relabel_only as u8);
+                e.u32(q.max_stage);
+                e.u32(q.pending_gap);
+                e.i64_slice(&q.arc_caps);
+                e.u32_slice(&q.foreign_d);
+                e.u32_slice(&q.owned_d);
+                e.i64_slice(&q.owned_excess);
+            }
+            Msg::BoundaryDelta(rsp) => {
+                e.u32(rsp.delta.region);
+                enc_flows(e, &rsp.delta.arc_flow);
+                enc_pairs_u32(e, &rsp.delta.owned_labels);
+                enc_excess(e, &rsp.delta.owned_excess);
+                e.u8(rsp.delta.active as u8);
+                e.i64(rsp.delta.flow_to_sink);
+                e.u64(rsp.grow);
+                e.u64(rsp.augment);
+                e.u64(rsp.adopt);
+                e.u64(rsp.relabel_increase);
+            }
+            Msg::FuseResult { region, cancelled } => {
+                e.u32(*region);
+                enc_flows(e, cancelled);
+            }
+            Msg::FetchCut { region } => e.u32(*region),
+            Msg::CutResult { region, src_side } => {
+                e.u32(*region);
+                e.u32_slice_delta(src_side);
+            }
+            Msg::Shutdown => {}
+            Msg::Abort { reason } => {
+                let bytes = reason.as_bytes();
+                e.u64(bytes.len() as u64);
+                e.bytes(bytes);
+            }
+        }
+    }
+
+    fn decode(kind: u8, d: &mut Dec) -> Option<Msg> {
+        Some(match kind {
+            KIND_HELLO => Msg::Hello { proto: d.u32()? },
+            KIND_ASSIGN => {
+                let d_inf = d.u32()?;
+                let algorithm = d.u8()?;
+                let core = d.u8()?;
+                let warm_start = d.u8()? != 0;
+                let n = usize::try_from(d.u64()?).ok()?;
+                if n > d.remaining() {
+                    return None;
+                }
+                let mut regions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let id = d.u32()?;
+                    let part = RegionPart::decode(d)?;
+                    regions.push((id, part));
+                }
+                Msg::AssignShard(Box::new(AssignShard {
+                    d_inf,
+                    algorithm,
+                    core,
+                    warm_start,
+                    regions,
+                }))
+            }
+            KIND_DISCHARGE => Msg::Discharge(Box::new(DischargeReq {
+                region: d.u32()?,
+                relabel_only: d.u8()? != 0,
+                max_stage: d.u32()?,
+                pending_gap: d.u32()?,
+                arc_caps: d.i64_slice()?,
+                foreign_d: d.u32_slice()?,
+                owned_d: d.u32_slice()?,
+                owned_excess: d.i64_slice()?,
+            })),
+            KIND_DELTA => {
+                let region = d.u32()?;
+                let arc_flow = dec_flows(d)?;
+                let owned_labels = dec_pairs_u32(d)?;
+                let owned_excess = dec_excess(d)?;
+                let active = d.u8()? != 0;
+                let flow_to_sink = d.i64()?;
+                Msg::BoundaryDelta(Box::new(DeltaRsp {
+                    delta: RegionBoundaryDelta {
+                        region,
+                        arc_flow,
+                        owned_labels,
+                        owned_excess,
+                        active,
+                        flow_to_sink,
+                    },
+                    grow: d.u64()?,
+                    augment: d.u64()?,
+                    adopt: d.u64()?,
+                    relabel_increase: d.u64()?,
+                }))
+            }
+            KIND_FUSE => Msg::FuseResult { region: d.u32()?, cancelled: dec_flows(d)? },
+            KIND_FETCH_CUT => Msg::FetchCut { region: d.u32()? },
+            KIND_CUT => Msg::CutResult { region: d.u32()?, src_side: d.u32_slice_delta()? },
+            KIND_SHUTDOWN => Msg::Shutdown,
+            KIND_ABORT => {
+                let n = usize::try_from(d.u64()?).ok()?;
+                let bytes = d.bytes(n)?;
+                Msg::Abort { reason: String::from_utf8_lossy(bytes).into_owned() }
+            }
+            _ => return None,
+        })
+    }
+}
+
+/// Byte accounting of one sent frame.
+#[derive(Debug, Clone, Copy)]
+pub struct WireBytes {
+    /// Actual frame size on the wire (header + compact payload).
+    pub wire: u64,
+    /// What the frame would have occupied with a raw fixed-width
+    /// payload — the uncompressed baseline of the schema-4 accounting.
+    pub raw: u64,
+}
+
+/// Frame size `msg` would occupy under [`Codec::Raw`] (header included).
+pub fn raw_frame_len(msg: &Msg) -> u64 {
+    let mut e = Enc::new(Codec::Raw);
+    msg.encode(&mut e);
+    (FRAME_HEADER_LEN + e.len()) as u64
+}
+
+/// Encode and send one message as a single frame.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<WireBytes, ProtoError> {
+    let mut e = Enc::new(Codec::Compact);
+    msg.encode(&mut e);
+    let payload = e.into_bytes();
+    if payload.len() > MAX_PAYLOAD as usize {
+        return Err(ProtoError::TooLarge(payload.len() as u32));
+    }
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    frame.extend_from_slice(&FRAME_MAGIC);
+    frame.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    frame.push(msg.kind());
+    frame.push(Codec::Compact as u8);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let crc = crc32(&[&frame[4..12], &payload]);
+    frame.extend_from_slice(&crc.to_le_bytes());
+    frame.extend_from_slice(&payload);
+    w.write_all(&frame)?;
+    Ok(WireBytes { wire: frame.len() as u64, raw: raw_frame_len(msg) })
+}
+
+/// Read, validate and decode one frame. Returns the message and its
+/// on-wire size.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<(Msg, u64), ProtoError> {
+    let mut hdr = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut hdr)?;
+    if hdr[0..4] != FRAME_MAGIC {
+        return Err(ProtoError::BadMagic);
+    }
+    let version = u16::from_le_bytes(hdr[4..6].try_into().unwrap());
+    if version != PROTO_VERSION {
+        return Err(ProtoError::BadVersion(version));
+    }
+    let kind = hdr[6];
+    let codec = Codec::from_u8(hdr[7]).ok_or(ProtoError::BadCodec(hdr[7]))?;
+    let len = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(ProtoError::TooLarge(len));
+    }
+    let crc = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    if crc32(&[&hdr[4..12], &payload]) != crc {
+        return Err(ProtoError::BadCrc);
+    }
+    let mut d = Dec::new(codec, &payload);
+    let msg = Msg::decode(kind, &mut d).ok_or(ProtoError::Malformed("undecodable fields"))?;
+    if !d.finished() {
+        return Err(ProtoError::Malformed("trailing bytes"));
+    }
+    Ok((msg, (FRAME_HEADER_LEN + payload.len()) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::partition::Partition;
+    use crate::region::decompose::{Decomposition, DistanceMode};
+
+    fn sample_part() -> RegionPart {
+        let mut b = GraphBuilder::new(8);
+        b.add_terminal(0, 9, 0);
+        b.add_terminal(7, 0, 9);
+        for v in 0..7 {
+            b.add_edge(v, v + 1, 4 + v as i64, 3);
+        }
+        let g = b.build();
+        let p = Partition::by_node_ranges(8, 2);
+        let mut d = Decomposition::new(&g, &p, DistanceMode::Ard);
+        d.sync_in(0);
+        d.parts.swap_remove(0)
+    }
+
+    fn all_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Hello { proto: PROTO_VERSION as u32 },
+            Msg::AssignShard(Box::new(AssignShard {
+                d_inf: 7,
+                algorithm: 0,
+                core: 1,
+                warm_start: true,
+                regions: vec![(0, sample_part()), (3, sample_part())],
+            })),
+            Msg::Discharge(Box::new(DischargeReq {
+                region: 3,
+                relabel_only: false,
+                max_stage: u32::MAX,
+                pending_gap: u32::MAX,
+                arc_caps: vec![4, 0, 17],
+                foreign_d: vec![1, 2],
+                owned_d: vec![0],
+                owned_excess: vec![12],
+            })),
+            Msg::BoundaryDelta(Box::new(DeltaRsp {
+                delta: RegionBoundaryDelta {
+                    region: 3,
+                    arc_flow: vec![(0, true, 3), (2, false, 1)],
+                    owned_labels: vec![(1, 4)],
+                    owned_excess: vec![(1, 2)],
+                    active: true,
+                    flow_to_sink: 9,
+                },
+                grow: 100,
+                augment: 5,
+                adopt: 2,
+                relabel_increase: 0,
+            })),
+            Msg::FuseResult { region: 3, cancelled: vec![(2, false, 1)] },
+            Msg::FetchCut { region: 1 },
+            Msg::CutResult { region: 1, src_side: vec![3, 4, 9, 200] },
+            Msg::Shutdown,
+            Msg::Abort { reason: "worker hit a corrupt page".into() },
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for msg in all_msgs() {
+            let mut buf = Vec::new();
+            let wb = write_msg(&mut buf, &msg).unwrap();
+            assert_eq!(wb.wire as usize, buf.len());
+            assert!(wb.raw >= FRAME_HEADER_LEN as u64);
+            let (back, wire) = read_msg(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, msg, "{} roundtrip", msg.name());
+            assert_eq!(wire, wb.wire);
+        }
+    }
+
+    #[test]
+    fn compact_frames_beat_raw_on_real_payloads() {
+        let msg = Msg::AssignShard(Box::new(AssignShard {
+            d_inf: 7,
+            algorithm: 0,
+            core: 0,
+            warm_start: true,
+            regions: vec![(0, sample_part())],
+        }));
+        let mut buf = Vec::new();
+        let wb = write_msg(&mut buf, &msg).unwrap();
+        assert!(wb.wire < wb.raw, "wire {} !< raw {}", wb.wire, wb.raw);
+    }
+
+    #[test]
+    fn truncation_and_bit_flips_are_rejected() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::FetchCut { region: 9 }).unwrap();
+        for cut in 0..buf.len() {
+            assert!(read_msg(&mut &buf[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        for byte in 0..buf.len() {
+            let mut b = buf.clone();
+            b[byte] ^= 0x10;
+            assert!(read_msg(&mut b.as_slice()).is_err(), "flip at {byte} accepted");
+        }
+    }
+
+    #[test]
+    fn future_version_is_rejected_even_with_valid_crc() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Shutdown).unwrap();
+        buf[4..6].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
+        let crc = crc32(&[&buf[4..12], &buf[FRAME_HEADER_LEN..]]);
+        buf[12..16].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            read_msg(&mut buf.as_slice()),
+            Err(ProtoError::BadVersion(v)) if v == PROTO_VERSION + 1
+        ));
+    }
+
+    #[test]
+    fn oversized_length_is_an_error_not_an_allocation() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Shutdown).unwrap();
+        buf[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let crc = crc32(&[&buf[4..12], &buf[FRAME_HEADER_LEN..]]);
+        buf[12..16].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(read_msg(&mut buf.as_slice()), Err(ProtoError::TooLarge(_))));
+    }
+}

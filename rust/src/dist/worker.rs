@@ -1,0 +1,290 @@
+//! The worker side of the distributed runtime: owns a shard of regions
+//! and executes the master's typed commands over one TCP connection.
+//!
+//! A worker is stateless until [`Msg::AssignShard`] arrives; from then
+//! on every [`Msg::Discharge`] is a full region round: apply the
+//! sync-in snapshot (the exact mirror of
+//! [`Decomposition::sync_in`][crate::region::decompose::Decomposition::sync_in]),
+//! run the discharge (or a label-only relabel sweep), and reply with
+//! the region's [`RegionBoundaryDelta`] for the master to fuse. The
+//! master's [`Msg::FuseResult`] ack completes the round.
+//!
+//! With `--streaming DIR` the shard is backed by the out-of-core region
+//! store ([`crate::store`]): every region is paged out after its round,
+//! so a worker holds **one resident region** regardless of shard size —
+//! the §5.3 memory bound survives distribution.
+
+use crate::coordinator::fuse::take_boundary_delta;
+use crate::coordinator::sequential::Algorithm;
+use crate::core::error::{Context, Result};
+use crate::dist::proto::{read_msg, write_msg, DeltaRsp, DischargeReq, Msg, PROTO_VERSION};
+use crate::ensure;
+use crate::err;
+use crate::region::ard::{Ard, ArdCore};
+use crate::region::decompose::RegionPart;
+use crate::region::prd::Prd;
+use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
+use crate::store::{Residency, StoreConfig};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+
+/// Worker-side configuration (all local decisions: the master never
+/// dictates how a worker stores its shard).
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Back the shard with the PR-4 region store under this directory:
+    /// one region resident at a time (§5.3).
+    pub streaming_dir: Option<PathBuf>,
+    /// Store pages compressed (varint+delta with raw fallback).
+    pub streaming_compress: bool,
+    /// Fault injection for tests: abruptly exit the process (simulating
+    /// a crashed worker) when about to handle discharge `n + 1`.
+    pub fail_after: Option<u64>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions { streaming_dir: None, streaming_compress: true, fail_after: None }
+    }
+}
+
+/// The assigned shard plus its solver workspaces.
+struct Shard {
+    d_inf: u32,
+    algorithm: Algorithm,
+    parts: Vec<RegionPart>,
+    slot_of: HashMap<u32, usize>,
+    ards: Vec<Ard>,
+    prds: Vec<Prd>,
+    store: Option<Residency>,
+}
+
+impl Shard {
+    fn new(a: crate::dist::proto::AssignShard, opts: &WorkerOptions) -> Result<Shard> {
+        let algorithm = match a.algorithm {
+            0 => Algorithm::Ard,
+            1 => Algorithm::Prd,
+            other => return Err(err!("unknown algorithm byte {other}")),
+        };
+        let (d_inf, core, warm_start) = (a.d_inf, a.core, a.warm_start);
+        let mut parts = Vec::with_capacity(a.regions.len());
+        let mut slot_of = HashMap::new();
+        for (id, part) in a.regions {
+            ensure!(part.region_id == id, "region id {id} does not match its part");
+            slot_of.insert(id, parts.len());
+            parts.push(part);
+        }
+        // Workspace policy mirrors the sequential coordinator: one
+        // persistent workspace per region, or a single shared one in
+        // streaming mode so the one-region memory bound is not defeated
+        // by per-region solver arrays. Warm starts are intra-discharge
+        // only, so sharing changes no results.
+        let n_ws = if opts.streaming_dir.is_some() { 1 } else { parts.len().max(1) };
+        let mk_ard = || {
+            let mut w = Ard::new(if core == 1 { ArdCore::bk() } else { ArdCore::dinic() });
+            w.warm_start = warm_start;
+            w
+        };
+        let ards = (0..n_ws).map(|_| mk_ard()).collect();
+        let prds = (0..n_ws).map(|_| Prd::new()).collect();
+        let mut store = match &opts.streaming_dir {
+            Some(dir) => {
+                let cfg = StoreConfig {
+                    dir: Some(dir.clone()),
+                    prefetch: false, // the master drives; no next-region prediction
+                    compress: opts.streaming_compress,
+                };
+                Some(Residency::new(&cfg).context("create shard store")?)
+            }
+            None => None,
+        };
+        if let Some(st) = store.as_mut() {
+            for (slot, part) in parts.iter_mut().enumerate() {
+                st.unload_part(slot, part).context("page out shard region")?;
+            }
+        }
+        Ok(Shard { d_inf, algorithm, parts, slot_of, ards, prds, store })
+    }
+
+    fn slot(&self, region: u32) -> Result<usize> {
+        self.slot_of
+            .get(&region)
+            .copied()
+            .with_context(|| format!("region {region} is not in this worker's shard"))
+    }
+
+    /// One region round: sync-in, discharge (or relabel), boundary
+    /// delta out. Mirrors `Decomposition::sync_in` + the sequential
+    /// coordinator's discharge step exactly — bit-identical results.
+    fn discharge(&mut self, q: &DischargeReq) -> Result<DeltaRsp> {
+        let slot = self.slot(q.region)?;
+        if let Some(st) = self.store.as_mut() {
+            st.load_part(slot, &mut self.parts[slot]).context("page in shard region")?;
+        }
+        let wi = if self.store.is_some() { 0 } else { slot };
+        let d_inf = self.d_inf;
+        let part = &mut self.parts[slot];
+
+        // ---- apply the sync-in snapshot (mirror of sync_in) -------------
+        ensure!(
+            q.arc_caps.len() == part.boundary_arcs.len()
+                && q.foreign_d.len() == part.foreign_boundary.len()
+                && q.owned_d.len() == part.owned_boundary.len()
+                && q.owned_excess.len() == part.owned_boundary.len(),
+            "region {}: sync-in payload shape mismatch",
+            q.region
+        );
+        for (i, ba) in part.boundary_arcs.iter().enumerate() {
+            let cap = q.arc_caps[i];
+            part.graph.cap[ba.local_arc as usize] = cap;
+            let sis = part.graph.sister(ba.local_arc) as usize;
+            part.graph.cap[sis] = 0;
+            part.synced_cap[i] = cap;
+        }
+        for (j, &(lv, _b)) in part.foreign_boundary.iter().enumerate() {
+            part.label[lv as usize] = q.foreign_d[j];
+            part.graph.excess[lv as usize] = 0;
+        }
+        for (j, &(lv, _b)) in part.owned_boundary.iter().enumerate() {
+            part.label[lv as usize] = q.owned_d[j];
+            part.graph.excess[lv as usize] = q.owned_excess[j];
+        }
+        part.pending_gap = part.pending_gap.min(q.pending_gap);
+        if part.pending_gap != u32::MAX {
+            let gap = part.pending_gap;
+            for v in 0..part.n_inner {
+                if part.label[v] > gap {
+                    part.label[v] = d_inf;
+                }
+            }
+            part.pending_gap = u32::MAX;
+        }
+
+        // ---- run the operation ------------------------------------------
+        let mut rsp = DeltaRsp::default();
+        if q.relabel_only {
+            rsp.relabel_increase = match self.algorithm {
+                Algorithm::Ard => region_relabel_ard(part, d_inf),
+                Algorithm::Prd => region_relabel_prd(part, d_inf),
+            };
+        } else {
+            match self.algorithm {
+                Algorithm::Ard => {
+                    let st = self.ards[wi].discharge(part, d_inf, q.max_stage);
+                    rsp.grow = st.grow;
+                    rsp.augment = st.augment;
+                    rsp.adopt = st.adopt;
+                }
+                Algorithm::Prd => {
+                    self.prds[wi].discharge(part, d_inf);
+                }
+            }
+        }
+        rsp.delta = take_boundary_delta(part, d_inf);
+        if let Some(st) = self.store.as_mut() {
+            st.unload_part(slot, &mut self.parts[slot]).context("page out shard region")?;
+        }
+        Ok(rsp)
+    }
+
+    /// Global ids of the region's source-side inner vertices
+    /// (`d ≥ d_inf`), ascending.
+    fn cut_of(&mut self, region: u32) -> Result<Vec<u32>> {
+        let slot = self.slot(region)?;
+        if let Some(st) = self.store.as_mut() {
+            st.load_part(slot, &mut self.parts[slot]).context("page in shard region")?;
+        }
+        let part = &self.parts[slot];
+        let mut src: Vec<u32> = (0..part.n_inner)
+            .filter(|&v| part.label[v] >= self.d_inf)
+            .map(|v| part.global_ids[v])
+            .collect();
+        src.sort_unstable();
+        if let Some(st) = self.store.as_mut() {
+            st.unload_part(slot, &mut self.parts[slot]).context("page out shard region")?;
+        }
+        Ok(src)
+    }
+}
+
+/// Serve one master session on an accepted connection. Returns when the
+/// master sends [`Msg::Shutdown`]; a dead master (EOF) or any protocol
+/// violation is an error.
+pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    write_msg(&mut stream, &Msg::Hello { proto: PROTO_VERSION as u32 })
+        .context("send handshake")?;
+    let mut shard: Option<Shard> = None;
+    let mut handled = 0u64;
+    loop {
+        let (msg, _) = read_msg(&mut stream).context("read command from master")?;
+        let outcome: Result<bool> = (|| {
+            match msg {
+                Msg::AssignShard(a) => {
+                    shard = Some(Shard::new(*a, opts)?);
+                }
+                Msg::Discharge(q) => {
+                    handled += 1;
+                    if opts.fail_after.map_or(false, |n| handled > n) {
+                        // fault injection: die like a crashed machine —
+                        // no Abort, no FIN handshake courtesy
+                        std::process::exit(3);
+                    }
+                    let shard =
+                        shard.as_mut().ok_or_else(|| err!("Discharge before AssignShard"))?;
+                    let rsp = shard.discharge(&q)?;
+                    write_msg(&mut stream, &Msg::BoundaryDelta(Box::new(rsp)))
+                        .context("send boundary delta")?;
+                    let (ack, _) = read_msg(&mut stream).context("read fusion ack")?;
+                    match ack {
+                        Msg::FuseResult { region, .. } if region == q.region => {}
+                        other => {
+                            return Err(err!(
+                                "expected FuseResult for region {}, got {}",
+                                q.region,
+                                other.name()
+                            ))
+                        }
+                    }
+                }
+                Msg::FetchCut { region } => {
+                    let shard =
+                        shard.as_mut().ok_or_else(|| err!("FetchCut before AssignShard"))?;
+                    let src_side = shard.cut_of(region)?;
+                    write_msg(&mut stream, &Msg::CutResult { region, src_side })
+                        .context("send cut result")?;
+                }
+                Msg::Shutdown => return Ok(true),
+                Msg::Abort { reason } => return Err(err!("master aborted: {reason}")),
+                other => return Err(err!("unexpected message from master: {}", other.name())),
+            }
+            Ok(false)
+        })();
+        match outcome {
+            Ok(true) => return Ok(()),
+            Ok(false) => {}
+            Err(e) => {
+                // best effort: tell the master why before bailing out
+                let _ = write_msg(&mut stream, &Msg::Abort { reason: e.to_string() });
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Accept exactly one master connection on `listener` and serve it.
+pub fn serve_listener(listener: &TcpListener, opts: &WorkerOptions) -> Result<()> {
+    let (stream, _peer) = listener.accept().context("accept master connection")?;
+    serve_stream(stream, opts)
+}
+
+/// Dial the master at `addr` and serve the session — the connection
+/// direction `armincut solve --distributed N` uses for auto-spawned
+/// loopback workers (the master knows its own port; the workers don't
+/// need one).
+pub fn connect_and_serve(addr: &str, opts: &WorkerOptions) -> Result<()> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to master {addr}"))?;
+    serve_stream(stream, opts)
+}

@@ -90,6 +90,15 @@ pub struct BenchRecord {
     pub prefetch_misses: u64,
     pub disk_blocked_seconds: f64,
     pub disk_overlapped_seconds: f64,
+    /// Distributed-runtime accounting (schema 4; zero for local
+    /// solvers): master↔worker message counts, wire bytes (compact
+    /// frames) vs the raw-codec baseline, and sync wall time.
+    pub dist_msgs_sent: u64,
+    pub dist_msgs_recv: u64,
+    pub wire_bytes_sent: u64,
+    pub wire_bytes_recv: u64,
+    pub wire_raw_bytes: u64,
+    pub sync_wall_seconds: f64,
 }
 
 impl BenchRecord {
@@ -111,6 +120,12 @@ impl BenchRecord {
             prefetch_misses: r.prefetch_misses,
             disk_blocked_seconds: r.disk_blocked_seconds,
             disk_overlapped_seconds: r.disk_overlapped_seconds,
+            dist_msgs_sent: r.dist_msgs_sent,
+            dist_msgs_recv: r.dist_msgs_recv,
+            wire_bytes_sent: r.wire_bytes_sent,
+            wire_bytes_recv: r.wire_bytes_recv,
+            wire_raw_bytes: r.wire_raw_bytes,
+            sync_wall_seconds: r.sync_wall_seconds,
         }
     }
 
@@ -132,6 +147,12 @@ impl BenchRecord {
             prefetch_misses: res.metrics.prefetch_misses,
             disk_blocked_seconds: res.metrics.t_disk.as_secs_f64(),
             disk_overlapped_seconds: res.metrics.t_disk_overlapped.as_secs_f64(),
+            dist_msgs_sent: res.metrics.dist_msgs_sent,
+            dist_msgs_recv: res.metrics.dist_msgs_recv,
+            wire_bytes_sent: res.metrics.wire_bytes_sent,
+            wire_bytes_recv: res.metrics.wire_bytes_recv,
+            wire_raw_bytes: res.metrics.wire_raw_bytes,
+            sync_wall_seconds: res.metrics.t_sync.as_secs_f64(),
         }
     }
 }
@@ -221,8 +242,10 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
             probe_competitors(&case, &g, &part, &[Bk, SArdStream, SPrdStream], &mut out);
         }
         "table2" => {
+            // the distributed runtime rides the parallel table: same
+            // instance, loopback workers over the real wire protocol
             let (case, g, part) = grid3d_probe(quick);
-            probe_competitors(&case, &g, &part, &[Bk, PArd(4), PPrd(4)], &mut out);
+            probe_competitors(&case, &g, &part, &[Bk, PArd(4), PPrd(4), DArd(2)], &mut out);
         }
         "table3" => {
             let (case, g, part) = grid3d_probe(quick);
@@ -247,6 +270,12 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 prefetch_misses: 0,
                 disk_blocked_seconds: 0.0,
                 disk_overlapped_seconds: 0.0,
+                dist_msgs_sent: 0,
+                dist_msgs_recv: 0,
+                wire_bytes_sent: 0,
+                wire_bytes_recv: 0,
+                wire_raw_bytes: 0,
+                sync_wall_seconds: 0.0,
             });
         }
         "appendix_a" => {
@@ -298,6 +327,12 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 prefetch_misses: 0,
                 disk_blocked_seconds: 0.0,
                 disk_overlapped_seconds: 0.0,
+                dist_msgs_sent: 0,
+                dist_msgs_recv: 0,
+                wire_bytes_sent: 0,
+                wire_bytes_recv: 0,
+                wire_raw_bytes: 0,
+                sync_wall_seconds: 0.0,
             });
         }
         other => panic!("no probe defined for experiment id: {other}"),
@@ -333,10 +368,11 @@ pub fn to_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
-    // schema 3: adds the streaming-store fields (page_raw_bytes,
-    // page_stored_bytes, prefetch_hits/misses, disk blocked/overlapped
-    // seconds) per record; schema 2 added the core work counters
-    s.push_str("  \"schema\": 3,\n");
+    // schema 4: adds the distributed-runtime fields (dist_msgs_sent/
+    // recv, wire_bytes_sent/recv vs wire_raw_bytes, sync_wall_seconds)
+    // per record; schema 3 added the streaming-store fields, schema 2
+    // the core work counters
+    s.push_str("  \"schema\": 4,\n");
     let _ = writeln!(s, "  \"quick\": {quick},");
     match experiment_seconds {
         Some(t) => {
@@ -353,7 +389,10 @@ pub fn to_json(
              \"core_grow\": {}, \"core_augment\": {}, \"core_adopt\": {}, \
              \"page_raw_bytes\": {}, \"page_stored_bytes\": {}, \
              \"prefetch_hits\": {}, \"prefetch_misses\": {}, \
-             \"disk_blocked_seconds\": {:.6}, \"disk_overlapped_seconds\": {:.6}}}{}",
+             \"disk_blocked_seconds\": {:.6}, \"disk_overlapped_seconds\": {:.6}, \
+             \"dist_msgs_sent\": {}, \"dist_msgs_recv\": {}, \
+             \"wire_bytes_sent\": {}, \"wire_bytes_recv\": {}, \
+             \"wire_raw_bytes\": {}, \"sync_wall_seconds\": {:.6}}}{}",
             json_escape(&r.case),
             json_escape(&r.solver),
             r.flow,
@@ -370,6 +409,12 @@ pub fn to_json(
             r.prefetch_misses,
             r.disk_blocked_seconds,
             r.disk_overlapped_seconds,
+            r.dist_msgs_sent,
+            r.dist_msgs_recv,
+            r.wire_bytes_sent,
+            r.wire_bytes_recv,
+            r.wire_raw_bytes,
+            r.sync_wall_seconds,
             if i + 1 < records.len() { "," } else { "" },
         );
     }
@@ -441,10 +486,16 @@ mod tests {
             prefetch_misses: 2,
             disk_blocked_seconds: 0.01,
             disk_overlapped_seconds: 0.05,
+            dist_msgs_sent: 40,
+            dist_msgs_recv: 33,
+            wire_bytes_sent: 8000,
+            wire_bytes_recv: 6000,
+            wire_raw_bytes: 50000,
+            sync_wall_seconds: 0.125,
         }];
         let j = to_json("fig6", true, Some(1.5), &recs);
         assert!(j.contains("\"bench\": \"fig6\""));
-        assert!(j.contains("\"schema\": 3"));
+        assert!(j.contains("\"schema\": 4"));
         assert!(j.contains("\\\"1"));
         assert!(j.contains("\"flow\": 42"));
         assert!(j.contains("\"converged\": true"));
@@ -457,6 +508,12 @@ mod tests {
         assert!(j.contains("\"prefetch_misses\": 2"));
         assert!(j.contains("\"disk_blocked_seconds\": 0.010000"));
         assert!(j.contains("\"disk_overlapped_seconds\": 0.050000"));
+        assert!(j.contains("\"dist_msgs_sent\": 40"));
+        assert!(j.contains("\"dist_msgs_recv\": 33"));
+        assert!(j.contains("\"wire_bytes_sent\": 8000"));
+        assert!(j.contains("\"wire_bytes_recv\": 6000"));
+        assert!(j.contains("\"wire_raw_bytes\": 50000"));
+        assert!(j.contains("\"sync_wall_seconds\": 0.125000"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 
@@ -480,6 +537,32 @@ mod tests {
             );
             assert!(r.prefetch_hits > 0, "{}: no prefetch hits", r.solver);
         }
+    }
+
+    /// The acceptance check of the distributed runtime at the bench
+    /// level: the table2 probe runs D-ARD over loopback workers, whose
+    /// record must show real messages, compressed wire traffic below
+    /// the raw baseline, and a measured sync time — while agreeing on
+    /// the flow with every other competitor (asserted inside
+    /// `probe_records`).
+    #[test]
+    fn table2_dist_record_measures_wire_traffic() {
+        let recs = probe_records("table2", true);
+        let d = recs
+            .iter()
+            .find(|r| r.solver.starts_with("D-ARD"))
+            .expect("table2 probes the distributed solver");
+        assert!(d.converged);
+        assert!(d.dist_msgs_sent > 0 && d.dist_msgs_recv > 0, "messages counted");
+        assert!(
+            d.wire_bytes_sent + d.wire_bytes_recv > 0
+                && d.wire_bytes_sent + d.wire_bytes_recv < d.wire_raw_bytes,
+            "compact wire {} + {} must beat the raw baseline {}",
+            d.wire_bytes_sent,
+            d.wire_bytes_recv,
+            d.wire_raw_bytes
+        );
+        assert!(d.sync_wall_seconds > 0.0, "sync wall time measured");
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! timing, and table formatting.
 
 use crate::coordinator::dd::{solve_dd, DdOptions};
+use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::parallel::{solve_parallel, ParOptions};
 use crate::coordinator::sequential::{solve_sequential, SeqOptions};
 use crate::core::graph::{Cap, Graph};
 use crate::core::partition::Partition;
+use crate::dist::{solve_distributed, DistOptions};
 use crate::solvers::bk::Bk as BkSolver;
 use crate::solvers::hpr::Hpr as HprSolver;
 use crate::solvers::MaxFlowSolver;
@@ -37,6 +39,10 @@ pub enum Competitor {
     SPrdStream,
     PArd(usize),
     PPrd(usize),
+    /// Distributed S-ARD: master + `n` in-process loopback workers over
+    /// the real TCP wire protocol ([`crate::dist`]) — measures actual
+    /// wire bytes and sync time, bit-identical flow to S-ARD.
+    DArd(usize),
     Dd(usize),
 }
 
@@ -53,6 +59,7 @@ impl Competitor {
             Competitor::SPrdStream => "S-PRD(stream)".into(),
             Competitor::PArd(t) => format!("P-ARD({t})"),
             Competitor::PPrd(t) => format!("P-PRD({t})"),
+            Competitor::DArd(n) => format!("D-ARD({n})"),
             Competitor::Dd(k) => format!("DDx{k}"),
         }
     }
@@ -87,6 +94,55 @@ pub struct CompetitorResult {
     pub prefetch_misses: u64,
     pub disk_blocked_seconds: f64,
     pub disk_overlapped_seconds: f64,
+    /// Distributed-runtime accounting (schema 4): master↔worker message
+    /// counts, wire bytes (compact frames) vs the raw-codec baseline,
+    /// and the master's sync wall time. Zero for local solvers.
+    pub dist_msgs_sent: u64,
+    pub dist_msgs_recv: u64,
+    pub wire_bytes_sent: u64,
+    pub wire_bytes_recv: u64,
+    pub wire_raw_bytes: u64,
+    pub sync_wall_seconds: f64,
+}
+
+impl CompetitorResult {
+    /// Assemble a result from a solve's metrics — one definition for
+    /// every coordinator-backed competitor, so new metric fields cannot
+    /// silently diverge between solver arms.
+    fn from_run(name: String, seconds: f64, mem_bytes: usize, m: &RunMetrics) -> CompetitorResult {
+        CompetitorResult {
+            name,
+            flow: m.flow,
+            seconds,
+            sweeps: m.sweeps,
+            discharges: m.discharges,
+            msg_bytes: m.msg_bytes,
+            disk_bytes: m.disk_read_bytes + m.disk_write_bytes,
+            mem_bytes,
+            converged: m.converged,
+            phases: [
+                m.t_discharge.as_secs_f64(),
+                m.t_relabel.as_secs_f64(),
+                m.t_gap.as_secs_f64(),
+                m.t_msg.as_secs_f64(),
+            ],
+            core_grow: m.core_grow,
+            core_augment: m.core_augment,
+            core_adopt: m.core_adopt,
+            page_raw_bytes: m.page_raw_bytes,
+            page_stored_bytes: m.page_stored_bytes,
+            prefetch_hits: m.prefetch_hits,
+            prefetch_misses: m.prefetch_misses,
+            disk_blocked_seconds: m.t_disk.as_secs_f64(),
+            disk_overlapped_seconds: m.t_disk_overlapped.as_secs_f64(),
+            dist_msgs_sent: m.dist_msgs_sent,
+            dist_msgs_recv: m.dist_msgs_recv,
+            wire_bytes_sent: m.wire_bytes_sent,
+            wire_bytes_recv: m.wire_bytes_recv,
+            wire_raw_bytes: m.wire_raw_bytes,
+            sync_wall_seconds: m.t_sync.as_secs_f64(),
+        }
+    }
 }
 
 /// Monotone counter making every streaming temp dir unique within one
@@ -138,32 +194,17 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
                 .unwrap_or_else(|e| panic!("{} solve failed: {e}", c.name()));
             drop(guard);
             let m = &res.metrics;
-            CompetitorResult {
-                name: c.name(),
-                flow: m.flow,
-                seconds: m.cpu().as_secs_f64(),
-                sweeps: m.sweeps,
-                discharges: m.discharges,
-                msg_bytes: m.msg_bytes,
-                disk_bytes: m.disk_read_bytes + m.disk_write_bytes,
-                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes,
-                converged: m.converged,
-                phases: [
-                    m.t_discharge.as_secs_f64(),
-                    m.t_relabel.as_secs_f64(),
-                    m.t_gap.as_secs_f64(),
-                    m.t_msg.as_secs_f64(),
-                ],
-                core_grow: m.core_grow,
-                core_augment: m.core_augment,
-                core_adopt: m.core_adopt,
-                page_raw_bytes: m.page_raw_bytes,
-                page_stored_bytes: m.page_stored_bytes,
-                prefetch_hits: m.prefetch_hits,
-                prefetch_misses: m.prefetch_misses,
-                disk_blocked_seconds: m.t_disk.as_secs_f64(),
-                disk_overlapped_seconds: m.t_disk_overlapped.as_secs_f64(),
-            }
+            let mem = m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes;
+            CompetitorResult::from_run(c.name(), m.cpu().as_secs_f64(), mem, m)
+        }
+        Competitor::DArd(n) => {
+            let o = DistOptions::threads(n);
+            let res = solve_distributed(g, partition, &o)
+                .unwrap_or_else(|e| panic!("{} solve failed: {e}", c.name()));
+            let m = &res.metrics;
+            // master-resident memory only: the regions live on workers
+            let mem = m.shared_mem_bytes + m.max_region_mem_bytes;
+            CompetitorResult::from_run(c.name(), m.t_total.as_secs_f64(), mem, m)
         }
         Competitor::PArd(t) | Competitor::PPrd(t) => {
             let o = if matches!(c, Competitor::PArd(_)) {
@@ -173,58 +214,15 @@ pub fn run_competitor(c: Competitor, g: &Graph, partition: &Partition) -> Compet
             };
             let res = solve_parallel(g, partition, &o);
             let m = &res.metrics;
-            CompetitorResult {
-                name: c.name(),
-                flow: m.flow,
-                seconds: m.t_total.as_secs_f64(),
-                sweeps: m.sweeps,
-                discharges: m.discharges,
-                msg_bytes: m.msg_bytes,
-                disk_bytes: 0,
-                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes,
-                converged: m.converged,
-                phases: [
-                    m.t_discharge.as_secs_f64(),
-                    m.t_relabel.as_secs_f64(),
-                    m.t_gap.as_secs_f64(),
-                    m.t_msg.as_secs_f64(),
-                ],
-                core_grow: m.core_grow,
-                core_augment: m.core_augment,
-                core_adopt: m.core_adopt,
-                page_raw_bytes: 0,
-                page_stored_bytes: 0,
-                prefetch_hits: 0,
-                prefetch_misses: 0,
-                disk_blocked_seconds: 0.0,
-                disk_overlapped_seconds: 0.0,
-            }
+            let mem = m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes;
+            CompetitorResult::from_run(c.name(), m.t_total.as_secs_f64(), mem, m)
         }
         Competitor::Dd(k) => {
             let p = Partition::by_node_ranges(g.n(), k);
             let res = solve_dd(g, &p, &DdOptions::default());
             let m = &res.metrics;
-            CompetitorResult {
-                name: c.name(),
-                flow: m.flow,
-                seconds: m.t_total.as_secs_f64(),
-                sweeps: m.sweeps,
-                discharges: m.discharges,
-                msg_bytes: m.msg_bytes,
-                disk_bytes: 0,
-                mem_bytes: m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes,
-                converged: m.converged,
-                phases: [m.t_discharge.as_secs_f64(), 0.0, 0.0, 0.0],
-                core_grow: 0,
-                core_augment: 0,
-                core_adopt: 0,
-                page_raw_bytes: 0,
-                page_stored_bytes: 0,
-                prefetch_hits: 0,
-                prefetch_misses: 0,
-                disk_blocked_seconds: 0.0,
-                disk_overlapped_seconds: 0.0,
-            }
+            let mem = m.shared_mem_bytes + m.max_region_mem_bytes + m.workspace_mem_bytes;
+            CompetitorResult::from_run(c.name(), m.t_total.as_secs_f64(), mem, m)
         }
     }
 }
@@ -234,27 +232,15 @@ fn whole_graph(c: Competitor, g: &Graph, solver: &mut dyn MaxFlowSolver) -> Comp
     let t = Instant::now();
     let flow = solver.solve(&mut gc);
     let seconds = t.elapsed().as_secs_f64();
-    CompetitorResult {
-        name: c.name(),
+    let m = RunMetrics {
         flow,
-        seconds,
         sweeps: 1,
         discharges: 1,
-        msg_bytes: 0,
-        disk_bytes: 0,
-        mem_bytes: gc.memory_bytes(),
         converged: true,
-        phases: [seconds, 0.0, 0.0, 0.0],
-        core_grow: 0,
-        core_augment: 0,
-        core_adopt: 0,
-        page_raw_bytes: 0,
-        page_stored_bytes: 0,
-        prefetch_hits: 0,
-        prefetch_misses: 0,
-        disk_blocked_seconds: 0.0,
-        disk_overlapped_seconds: 0.0,
-    }
+        t_discharge: std::time::Duration::from_secs_f64(seconds),
+        ..RunMetrics::default()
+    };
+    CompetitorResult::from_run(c.name(), seconds, gc.memory_bytes(), &m)
 }
 
 /// Mean over several seeds of one scalar per competitor.

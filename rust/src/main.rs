@@ -6,6 +6,7 @@
 //! * `gen`         — write a synthetic instance as DIMACS
 //! * `split`       — the paper's *splitter* tool: region part files
 //! * `reduce`      — Alg. 5 region reduction statistics (Table 3 style)
+//! * `worker`      — a distributed region worker (see `armincut::dist`)
 //! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3)
 //! * `bench`       — run paper-figure benches, emit `BENCH_<id>.json`
 //! * `accel`       — the PJRT kernel demo on a grid instance
@@ -18,6 +19,7 @@ use armincut::coordinator::sequential::{solve_sequential, CoreKind, SeqOptions};
 use armincut::core::dimacs::{read_dimacs, write_dimacs};
 use armincut::core::graph::Graph;
 use armincut::core::partition::Partition;
+use armincut::dist::{self, DistOptions, WorkerSpec};
 use armincut::gen::grid3d::{grid3d_segmentation, Grid3dParams};
 use armincut::gen::stereo::{stereo_bvz, stereo_kz2, StereoParams};
 use armincut::gen::synthetic2d::{synthetic_2d, Synthetic2dParams};
@@ -33,6 +35,7 @@ USAGE:
   armincut gen     --gen SPEC --out FILE
   armincut split   --input FILE|--gen SPEC --regions K --out DIR
   armincut reduce  --input FILE|--gen SPEC --regions K
+  armincut worker  --listen ADDR|--connect ADDR [--streaming DIR]
   armincut experiment ID [--full]
   armincut bench   ID|all [--quick|--full] [--out DIR] [--probe-only]
   armincut accel   [--artifacts DIR]
@@ -42,7 +45,14 @@ SOLVE OPTIONS:
   --algo {s-ard|s-prd|p-ard|p-prd|bk|hipr0|hipr0.5|dd}
   --regions K          partition into K regions by node ranges (default 4)
   --threads N          worker threads for p-ard/p-prd/dd (default 4)
+  --distributed N      s-ard over N auto-spawned loopback worker
+                       processes — bit-identical to the plain s-ard run,
+                       with wire bytes / messages / sync time measured
+  --workers A,B,..     like --distributed, but connect to externally
+                       started `armincut worker --listen` peers
   --streaming DIR      sequential streaming mode, one region in memory
+                       (with --distributed: workers page their shards
+                       under DIR/worker_<i>)
   --no-prefetch        streaming: disable the background I/O pipeline
   --no-compress        streaming: store raw (uncompressed) region pages
   --core {bk|dinic}    ARD augmenting core (default dinic)
@@ -50,6 +60,16 @@ SOLVE OPTIONS:
   --no-gap / --no-brelabel / --no-partial   disable heuristics
   --pair-arcs          pair reverse arcs when reading DIMACS
   --cut FILE           write the minimum cut (one side bit per line)
+
+WORKER OPTIONS:
+  --listen ADDR        bind, print the bound address, serve one master
+                       (ADDR defaults to 127.0.0.1:0)
+  --connect ADDR       dial a master instead (what --distributed spawns)
+  --streaming DIR      back the shard with the region store: one
+                       resident region at a time (§5.3)
+  --no-compress        store/stream raw (uncompressed) region pages
+  --fail-after N       fault injection for tests: crash (exit 3) when
+                       the (N+1)-th discharge arrives
 
 GEN SPECS:
   synth2d:W,H,CONN,STRENGTH,SEED     (§7.1 random grid)
@@ -79,6 +99,7 @@ fn main() {
         "gen" => cmd_gen(&opts),
         "split" => cmd_split(&opts),
         "reduce" => cmd_reduce(&opts),
+        "worker" => cmd_worker(&opts),
         "experiment" => cmd_experiment(&args[1..], &opts),
         "bench" => cmd_bench(&args[1..]),
         "accel" => cmd_accel(&opts),
@@ -206,6 +227,39 @@ fn cmd_solve(opts: &Flags) -> i32 {
             let dt = t.elapsed();
             (format!("{algo}: flow={flow} cpu={:.3}s", dt.as_secs_f64()), gc.min_cut_sides())
         }
+        "s-ard" | "s-prd" if opts.contains_key("distributed") || opts.contains_key("workers") => {
+            // distributed runtime: master here, regions on workers
+            if algo != "s-ard" {
+                eprintln!("error: --distributed/--workers support --algo s-ard only");
+                return 2;
+            }
+            let mut o = SeqOptions::ard();
+            apply_heuristic_flags(opts, &mut o);
+            let spec = if let Some(list) = opts.get("workers") {
+                WorkerSpec::Connect(
+                    list.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+                )
+            } else {
+                let n: usize =
+                    opts.get("distributed").and_then(|s| s.parse().ok()).unwrap_or(2);
+                WorkerSpec::Spawn(n.max(1))
+            };
+            let d = DistOptions {
+                seq: o,
+                workers: spec,
+                worker_streaming: opts.get("streaming").map(|s| s.into()),
+                worker_compress: !opts.contains_key("no-compress"),
+                ..DistOptions::spawn(0)
+            };
+            let res = match dist::solve_distributed(&g, &part, &d) {
+                Ok(res) => res,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+            (res.metrics.summary("dist-ard"), res.cut)
+        }
         "s-ard" | "s-prd" => {
             let mut o = if algo == "s-ard" {
                 SeqOptions::ard()
@@ -301,6 +355,51 @@ fn apply_heuristic_flags(opts: &Flags, o: &mut SeqOptions) {
     }
     if opts.contains_key("cold-start") {
         o.warm_start = false;
+    }
+}
+
+/// A distributed region worker: serve one master session, then exit.
+/// `--listen ADDR` binds and prints the actual bound address (so tests
+/// and scripts can bind port 0); `--connect ADDR` dials the master —
+/// the direction `solve --distributed N` uses for auto-spawned workers.
+fn cmd_worker(opts: &Flags) -> i32 {
+    let wo = armincut::dist::WorkerOptions {
+        streaming_dir: opts.get("streaming").map(|s| s.into()),
+        streaming_compress: !opts.contains_key("no-compress"),
+        fail_after: opts.get("fail-after").and_then(|s| s.parse().ok()),
+    };
+    let res = if let Some(addr) = opts.get("connect") {
+        armincut::dist::worker::connect_and_serve(addr, &wo)
+    } else {
+        let addr = match opts.get("listen") {
+            Some(a) if a != "true" => a.as_str(),
+            _ => "127.0.0.1:0",
+        };
+        match std::net::TcpListener::bind(addr) {
+            Ok(listener) => {
+                match listener.local_addr() {
+                    Ok(bound) => println!("worker listening on {bound}"),
+                    Err(e) => {
+                        eprintln!("error: local addr: {e}");
+                        return 1;
+                    }
+                }
+                use std::io::Write as _;
+                std::io::stdout().flush().ok();
+                armincut::dist::worker::serve_listener(&listener, &wo)
+            }
+            Err(e) => {
+                eprintln!("error: bind {addr}: {e}");
+                return 1;
+            }
+        }
+    };
+    match res {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
     }
 }
 

@@ -421,6 +421,13 @@ impl Decomposition {
     /// Publish region `r`'s discharge results back to the shared state:
     /// net boundary-arc flows, exported excess, new owned-boundary
     /// labels. Returns bytes "sent".
+    ///
+    /// The coordinators no longer call this directly — they publish via
+    /// [`crate::coordinator::fuse`] (whose single-region fusion is
+    /// exactly this operation, pinned by
+    /// `fuse::tests::singleton_fusion_equals_sync_out`), so the
+    /// threaded and distributed paths share one implementation. Kept
+    /// for tests and direct decomposition manipulation.
     pub fn sync_out(&mut self, r: usize) -> u64 {
         let part = &mut self.parts[r];
         let shared = &mut self.shared;

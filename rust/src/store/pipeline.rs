@@ -343,9 +343,17 @@ impl Residency {
     /// mode the encode + write happen on the I/O thread while the
     /// coordinator moves on to the next region.
     pub fn unload(&mut self, dec: &mut Decomposition, r: usize) -> Result<(), StoreError> {
-        let part = &dec.parts[r];
+        self.unload_part(r, &mut dec.parts[r])
+    }
+
+    /// [`Residency::unload`] without a [`Decomposition`]: evict `*part`
+    /// under store key `slot`, leaving a [`RegionPart::shell`] in its
+    /// place. This is what a distributed worker uses to back its shard
+    /// with the region store — it owns bare parts, not a decomposition.
+    pub fn unload_part(&mut self, slot: usize, part: &mut RegionPart) -> Result<(), StoreError> {
         let shell = RegionPart::shell(part.region_id, part.active, part.pending_gap);
-        let part = std::mem::replace(&mut dec.parts[r], shell);
+        let part = std::mem::replace(part, shell);
+        let r = slot;
         match &mut self.mode {
             Mode::Blocking(store) => {
                 let t = Instant::now();
@@ -376,7 +384,15 @@ impl Residency {
     /// shell fields (`active`, `pending_gap`) that moved on while the
     /// region was paged out.
     pub fn load(&mut self, dec: &mut Decomposition, r: usize) -> Result<(), StoreError> {
-        let mut part = match &mut self.mode {
+        self.load_part(r, &mut dec.parts[r])
+    }
+
+    /// [`Residency::load`] without a [`Decomposition`]: replace the
+    /// shell at `*part` with the stored page of `slot`, carrying over
+    /// the shell's `active`/`pending_gap`.
+    pub fn load_part(&mut self, slot: usize, part: &mut RegionPart) -> Result<(), StoreError> {
+        let r = slot;
+        let mut loaded = match &mut self.mode {
             Mode::Blocking(store) => {
                 let t = Instant::now();
                 let got = read_region(store.as_mut(), r)?;
@@ -388,9 +404,9 @@ impl Residency {
             }
             Mode::Pipelined(p) => *p.fetch(r, &mut self.stats)?.0,
         };
-        part.active = dec.parts[r].active;
-        part.pending_gap = dec.parts[r].pending_gap;
-        dec.parts[r] = part;
+        loaded.active = part.active;
+        loaded.pending_gap = part.pending_gap;
+        *part = loaded;
         Ok(())
     }
 

@@ -1,0 +1,251 @@
+//! Distributed-runtime equivalence and fault tests.
+//!
+//! The contract under test: a loopback master + workers run over the
+//! real TCP wire protocol is **bit-identical** to `solve_sequential` —
+//! same flow, same cut, same sweep / extra-sweep / discharge counts —
+//! because the master mirrors the sequential control flow and fuses
+//! every delta through the shared `coordinator::fuse` step. Plus: a
+//! worker killed mid-solve turns into a clean master error (exit 1),
+//! never a hang or a panic.
+
+use armincut::coordinator::sequential::{solve_sequential, SeqOptions};
+use armincut::core::graph::{Graph, GraphBuilder};
+use armincut::core::partition::Partition;
+use armincut::core::prng::Rng;
+use armincut::dist::{solve_distributed, DistOptions};
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn random_graph(seed: u64, n: usize, extra_edges: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for v in 0..n {
+        b.add_signed_terminal(v as u32, rng.range_i64(-30, 30));
+    }
+    for v in 1..n {
+        let u = rng.index(v) as u32;
+        b.add_edge(u, v as u32, rng.range_i64(0, 20), rng.range_i64(0, 20));
+    }
+    for _ in 0..extra_edges {
+        let u = rng.index(n) as u32;
+        let mut v = rng.index(n) as u32;
+        if u == v {
+            v = (v + 1) % n as u32;
+        }
+        b.add_edge(u, v, rng.range_i64(0, 20), rng.range_i64(0, 20));
+    }
+    b.build()
+}
+
+fn assert_bit_identical(g: &Graph, p: &Partition, d: &DistOptions, tag: &str) {
+    let seq = solve_sequential(g, p, &SeqOptions::ard()).unwrap();
+    let dist = solve_distributed(g, p, d).unwrap();
+    assert!(dist.metrics.converged, "{tag}: converged");
+    assert_eq!(dist.metrics.flow, seq.metrics.flow, "{tag}: flow");
+    assert_eq!(dist.cut, seq.cut, "{tag}: cut");
+    assert_eq!(dist.metrics.sweeps, seq.metrics.sweeps, "{tag}: sweeps");
+    assert_eq!(
+        dist.metrics.extra_sweeps, seq.metrics.extra_sweeps,
+        "{tag}: extra sweeps"
+    );
+    assert_eq!(
+        dist.metrics.discharges, seq.metrics.discharges,
+        "{tag}: discharges"
+    );
+    // the cut really is a certificate
+    let snap = g.snapshot();
+    assert_eq!(g.cut_cost(&snap, &dist.cut), dist.metrics.flow, "{tag}: certificate");
+    // the paper's premise is measured, not just simulated
+    assert!(dist.metrics.dist_msgs_sent > 0, "{tag}: messages sent");
+    assert!(dist.metrics.dist_msgs_recv > 0, "{tag}: messages received");
+    assert!(
+        dist.metrics.wire_bytes_sent + dist.metrics.wire_bytes_recv
+            < dist.metrics.wire_raw_bytes,
+        "{tag}: compact wire must beat the raw baseline"
+    );
+}
+
+#[test]
+fn loopback_two_workers_bit_identical_to_sequential() {
+    for seed in 0..5 {
+        let g = random_graph(7000 + seed, 50, 100);
+        let p = Partition::by_node_ranges(g.n(), 4);
+        assert_bit_identical(&g, &p, &DistOptions::threads(2), &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn worker_counts_and_region_counts_stay_identical() {
+    let g = random_graph(4242, 60, 120);
+    for k in [1usize, 3, 5] {
+        let p = Partition::by_node_ranges(g.n(), k);
+        for n in [1usize, 2, 3] {
+            assert_bit_identical(
+                &g,
+                &p,
+                &DistOptions::threads(n),
+                &format!("k={k} n={n}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_backed_workers_stay_bit_identical() {
+    // workers page their shards through the PR-4 region store: one
+    // resident region per worker, still bit-identical results
+    let g = random_graph(9001, 60, 120);
+    let p = Partition::by_node_ranges(g.n(), 5);
+    let dir = std::env::temp_dir()
+        .join(format!("armincut_dist_stream_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut o = DistOptions::threads(2);
+    o.worker_streaming = Some(dir.clone());
+    assert_bit_identical(&g, &p, &o, "streaming workers");
+    assert!(
+        dir.join("worker_0").join("region_0.page").exists(),
+        "worker 0 paged its shard to disk"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn distributed_rejects_prd() {
+    let g = random_graph(1, 20, 30);
+    let p = Partition::by_node_ranges(g.n(), 2);
+    let mut o = DistOptions::threads(2);
+    o.seq = SeqOptions::prd();
+    let err = solve_distributed(&g, &p, &o).unwrap_err();
+    assert!(err.to_string().contains("s-ard"), "unexpected error: {err}");
+}
+
+#[test]
+fn connect_spec_rejects_dead_address() {
+    // nothing listens at the address: a clean error, not a hang
+    let g = random_graph(2, 20, 30);
+    let p = Partition::by_node_ranges(g.n(), 2);
+    let mut o = DistOptions::connect(vec!["127.0.0.1:1".into()]);
+    o.io_timeout = Duration::from_secs(2);
+    assert!(solve_distributed(&g, &p, &o).is_err());
+}
+
+// ---- real-process tests through the CLI binary -------------------------
+
+/// Wait for `child` with a deadline; kill it and panic on timeout.
+fn wait_with_deadline(child: &mut Child, secs: u64, what: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => return status,
+            None if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50))
+            }
+            None => {
+                let _ = child.kill();
+                let _ = child.wait();
+                panic!("{what} did not finish within {secs}s (hang)");
+            }
+        }
+    }
+}
+
+#[test]
+fn cli_distributed_matches_cli_sequential() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let gen = "synth2d:24,24,8,150,1";
+    let flow_of = |out: &str| -> String {
+        out.lines()
+            .find_map(|l| {
+                l.split_whitespace().find_map(|w| w.strip_prefix("flow=").map(String::from))
+            })
+            .unwrap_or_else(|| panic!("no flow= in output:\n{out}"))
+    };
+    let seq = Command::new(exe)
+        .args(["solve", "--gen", gen, "--algo", "s-ard", "--regions", "4"])
+        .output()
+        .expect("run sequential CLI");
+    assert!(seq.status.success(), "sequential solve failed: {seq:?}");
+    let mut dist_child = Command::new(exe)
+        .args([
+            "solve",
+            "--gen",
+            gen,
+            "--algo",
+            "s-ard",
+            "--regions",
+            "4",
+            "--distributed",
+            "2",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn distributed CLI");
+    let status = wait_with_deadline(&mut dist_child, 120, "distributed solve");
+    let out = dist_child.wait_with_output().expect("collect output");
+    assert!(status.success(), "distributed solve failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert_eq!(
+        flow_of(&stdout),
+        flow_of(&String::from_utf8_lossy(&seq.stdout)),
+        "flows differ:\n{stdout}"
+    );
+    assert!(stdout.contains("dist msgs"), "wire metrics missing:\n{stdout}");
+}
+
+/// Start an `armincut worker --listen` process and parse the bound
+/// address it prints.
+fn spawn_listening_worker(extra: &[&str]) -> (Child, String) {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let mut child = Command::new(exe)
+        .args(["worker", "--listen", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("read worker banner");
+    let addr = line
+        .trim()
+        .strip_prefix("worker listening on ")
+        .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+#[test]
+fn worker_killed_mid_solve_is_a_clean_exit_1() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    // worker 0 crashes (exit 3) when its second discharge arrives;
+    // worker 1 is healthy
+    let (mut w0, a0) = spawn_listening_worker(&["--fail-after", "1"]);
+    let (mut w1, a1) = spawn_listening_worker(&[]);
+    let mut master = Command::new(exe)
+        .args([
+            "solve",
+            "--gen",
+            "synth2d:24,24,8,150,1",
+            "--algo",
+            "s-ard",
+            "--regions",
+            "4",
+            "--workers",
+            &format!("{a0},{a1}"),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn master");
+    let status = wait_with_deadline(&mut master, 120, "master with killed worker");
+    let out = master.wait_with_output().expect("collect master output");
+    assert_eq!(status.code(), Some(1), "master must exit 1, got {out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "no clean error message:\n{stderr}");
+    // both workers terminate: the crashed one with its injected code,
+    // the healthy one after the master's teardown
+    let s0 = wait_with_deadline(&mut w0, 30, "crashed worker");
+    assert_eq!(s0.code(), Some(3), "fault injection exit code");
+    let _ = wait_with_deadline(&mut w1, 30, "healthy worker");
+}

@@ -9,23 +9,48 @@ For every (bench, case, solver) record present in both directories:
 
 * ``flow`` MUST match — a flow drift is a correctness regression and
   makes the script exit 1;
-* ``wall_seconds`` and the disk-byte fields (schema 3:
-  ``page_stored_bytes``, ``page_raw_bytes``; older schemas fall back to
-  zero) are reported as deltas — advisory only, machines differ.
+* ``wall_seconds``, the disk-byte fields (schema 3:
+  ``page_stored_bytes``, ``page_raw_bytes``) and the distributed wire
+  fields (schema 4: ``wire_bytes_sent``/``recv``; older schemas fall
+  back to zero) are reported as deltas — advisory only, machines
+  differ.
+
+With ``--history FILE`` the script additionally maintains a rolling
+multi-run history: one JSON line per run (condensed records: flow,
+wall, page bytes, wire bytes, sync time), trimmed to the last
+``--history-max`` runs. CI keeps the file in a cache and uploads it as
+an artifact, so the perf trajectory survives across merges instead of
+only ever comparing two adjacent runs.
 
 No baseline directory (first run) is not an error: the script reports
 it and exits 0. Stdlib only.
 
 Usage:
     bench_trend.py CURRENT_DIR BASELINE_DIR [--wall-warn-pct 25]
+                   [--history FILE] [--history-max 50] [--run-label L]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import time
 from pathlib import Path
+
+#: Condensed per-record fields kept in the multi-run history (missing
+#: fields — older schemas — default to 0).
+HISTORY_FIELDS = (
+    "flow",
+    "wall_seconds",
+    "page_raw_bytes",
+    "page_stored_bytes",
+    "wire_bytes_sent",
+    "wire_bytes_recv",
+    "wire_raw_bytes",
+    "sync_wall_seconds",
+)
 
 
 def load_dir(path: Path) -> dict[str, dict]:
@@ -92,13 +117,51 @@ def compare(current: dict[str, dict], baseline: dict[str, dict],
             stored_b = int(b.get("page_stored_bytes", 0))
             if stored_c or stored_b:
                 disk = f", pages {fmt_delta(stored_c, stored_b, 'B')}"
+            wire = ""
+            wire_c = int(c.get("wire_bytes_sent", 0)) + int(c.get("wire_bytes_recv", 0))
+            wire_b = int(b.get("wire_bytes_sent", 0)) + int(b.get("wire_bytes_recv", 0))
+            if wire_c or wire_b:
+                wire = f", wire {fmt_delta(wire_c, wire_b, 'B')}"
             print(
                 f"{bench_id} {case} {solver}: "
-                f"wall {fmt_delta(cw, bw, 's')}{disk}{marker}"
+                f"wall {fmt_delta(cw, bw, 's')}{disk}{wire}{marker}"
             )
         for key in sorted(set(base) - set(cur)):
             print(f"{bench_id} {key}: record disappeared from current run")
     return mismatches, compared
+
+
+def append_history(path: Path, label: str, current: dict[str, dict],
+                   max_runs: int) -> int:
+    """Append one condensed line for this run to the rolling history at
+    `path` (JSON Lines, oldest first), trimming to `max_runs` lines.
+    Returns the number of runs now tracked."""
+    records = []
+    for bench_id in sorted(current):
+        for r in current[bench_id].get("records", []):
+            entry = {"bench": bench_id, "case": r.get("case", "?"),
+                     "solver": r.get("solver", "?")}
+            for f in HISTORY_FIELDS:
+                entry[f] = r.get(f, 0)
+            records.append(entry)
+    line = json.dumps({"run": label, "time": int(time.time()),
+                       "records": records}, sort_keys=True)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    lines: list[str] = []
+    if path.is_file():
+        for old in path.read_text().splitlines():
+            old = old.strip()
+            if not old:
+                continue
+            try:
+                json.loads(old)
+            except json.JSONDecodeError:
+                continue  # drop corrupt lines instead of carrying them
+            lines.append(old)
+    lines.append(line)
+    lines = lines[-max(max_runs, 1):]
+    path.write_text("\n".join(lines) + "\n")
+    return len(lines)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -107,6 +170,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("baseline", type=Path, help="previous run's dir")
     ap.add_argument("--wall-warn-pct", type=float, default=25.0,
                     help="flag wall-time moves beyond this percentage")
+    ap.add_argument("--history", type=Path, default=None,
+                    help="rolling multi-run history file (JSON lines)")
+    ap.add_argument("--history-max", type=int, default=50,
+                    help="keep at most this many runs in --history")
+    ap.add_argument("--run-label", default=None,
+                    help="label of this run in the history "
+                         "(default: $GITHUB_RUN_ID or 'local')")
     args = ap.parse_args(argv)
 
     if not args.current.is_dir():
@@ -116,6 +186,10 @@ def main(argv: list[str] | None = None) -> int:
     if not current:
         print(f"error: no BENCH_*.json in {args.current}")
         return 2
+    if args.history is not None:
+        label = args.run_label or os.environ.get("GITHUB_RUN_ID", "local")
+        runs = append_history(args.history, label, current, args.history_max)
+        print(f"history: {runs} run(s) tracked in {args.history}")
     if not args.baseline.is_dir():
         print(f"no baseline at {args.baseline} (first run?) — nothing to diff")
         return 0

@@ -1,7 +1,7 @@
 # Convenience targets. `make artifacts` needs JAX (python/compile/aot.py);
 # everything else is plain cargo/pytest.
 
-.PHONY: artifacts build test bench-quick pytest
+.PHONY: artifacts build test bench-quick table2 pytest
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts/model.hlo.txt
@@ -14,6 +14,12 @@ test:
 
 bench-quick:
 	cd rust && cargo run --release -- bench all --quick --out bench_results
+
+# Reproduce the Table-2 competition incl. the D-ARD(1..8) distributed
+# speedup curve. Quick tier by default; ARMINCUT_FULL=1 for
+# paper-scale instances.
+table2:
+	cd rust && cargo run --release -- bench table2 --out bench_results
 
 pytest:
 	python3 -m pytest python/tests -q

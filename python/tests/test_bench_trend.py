@@ -103,7 +103,9 @@ def test_disk_bytes_only_shown_when_present(tmp_path, capsys, stored, expect):
 def wire_rec(sent=1000, recv=900, raw=5000, sync=0.25):
     r = rec(solver="D-ARD(2)")
     r.update({"wire_bytes_sent": sent, "wire_bytes_recv": recv,
-              "wire_raw_bytes": raw, "sync_wall_seconds": sync})
+              "wire_raw_bytes": raw, "sync_wall_seconds": sync,
+              "dist_batches": 6, "max_inflight_discharges": 4,
+              "par_sweep_seconds": 0.5})
     return r
 
 
@@ -133,6 +135,10 @@ def test_history_appends_and_trims(tmp_path, capsys):
     # schema-4 wire fields survive into the condensed history
     assert r["wire_bytes_sent"] == 1000 and r["wire_raw_bytes"] == 5000
     assert r["sync_wall_seconds"] == 0.25
+    # schema-5 parallel-sweep fields survive too
+    assert r["dist_batches"] == 6
+    assert r["max_inflight_discharges"] == 4
+    assert r["par_sweep_seconds"] == 0.5
     # older-schema fields missing from the record default to 0
     assert r["page_raw_bytes"] == 0
     assert "history: 3 run(s)" in capsys.readouterr().out

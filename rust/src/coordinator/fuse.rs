@@ -23,8 +23,19 @@
 //! the head of every boundary push kept its synced label while the
 //! tail's label only grew, so `d'(v) = d(u) − 1 ≤ d'(u) + 1`. Singleton
 //! fusion is therefore exactly the old `Decomposition::sync_out`, which
-//! is what makes the distributed master bit-identical to
+//! is what makes the distributed master's `--deterministic` mode
+//! bit-identical to
 //! [`crate::coordinator::sequential::solve_sequential`].
+//!
+//! Fusion splits into an order-independent part and a barrier:
+//! publishing labels (owned boundary sets are disjoint across regions),
+//! parking exported excess (additive) and accruing per-arc flow sums
+//! all commute across deltas, while the α-filter must see *every*
+//! fused label before it can judge any push. [`FusionRound`] exposes
+//! exactly that split — `add` per delta as it arrives (overlapping
+//! fusion work with waiting on slower workers), `finish` once per
+//! round — and [`fuse_deltas`] is the all-at-once convenience built on
+//! top of it, so every coordinator still runs the one implementation.
 
 use crate::core::graph::Cap;
 use crate::region::decompose::{RegionPart, SharedState};
@@ -123,82 +134,104 @@ pub fn take_boundary_delta(part: &mut RegionPart, d_inf: u32) -> RegionBoundaryD
     }
 }
 
-/// Fuse the deltas of one round of concurrent discharges into the
-/// shared state (lines 4–6 of Alg. 2): publish labels, α-filter the
-/// pushed flows, park exported excess.
-pub fn fuse_deltas(shared: &mut SharedState, deltas: &[RegionBoundaryDelta]) -> FuseOutcome {
-    let d_inf = shared.d_inf;
-    let mut bytes = 0u64;
+/// Incremental fusion of one round of concurrent discharges — the
+/// per-sweep entry point of the parallel coordinators. [`Self::add`]
+/// performs the order-independent work as each delta arrives (label
+/// publish, excess parking, per-arc flow accrual); [`Self::finish`]
+/// runs the α-filter once every label is in. Adding the same round's
+/// deltas in any order yields the same post-`finish` shared state.
+#[derive(Debug, Default)]
+pub struct FusionRound {
+    bytes: u64,
+    /// Accrued `(forward, backward)` flow per touched shared arc
+    /// (BTreeMap: deterministic order, sparse in touched arcs).
+    per_arc: std::collections::BTreeMap<u32, (Cap, Cap)>,
+}
 
-    // ---- fuse labels: owners publish their new boundary labels ---------
-    for delta in deltas {
-        for &(b, d) in &delta.owned_labels {
-            shared.d[b as usize] = d;
-            bytes += 4;
-        }
+impl FusionRound {
+    pub fn new() -> FusionRound {
+        FusionRound::default()
     }
 
-    // ---- collect per-arc flows from both sides --------------------------
-    // (BTreeMap: deterministic order, sparse in the number of touched arcs)
-    let mut per_arc: std::collections::BTreeMap<u32, (Cap, Cap)> = Default::default();
-    for delta in deltas {
+    /// Publish `delta`'s owned labels and exported excess into `shared`
+    /// and accrue its arc flows for the α-filter. Owned boundary sets
+    /// are disjoint across regions and excess is additive, so this
+    /// commutes across the round's deltas.
+    pub fn add(&mut self, shared: &mut SharedState, delta: &RegionBoundaryDelta) {
+        for &(b, d) in &delta.owned_labels {
+            shared.d[b as usize] = d;
+            self.bytes += 4;
+        }
         for &(s, forward, amt) in &delta.arc_flow {
-            let e = per_arc.entry(s).or_insert((0, 0));
+            let e = self.per_arc.entry(s).or_insert((0, 0));
             if forward {
                 e.0 += amt;
             } else {
                 e.1 += amt;
             }
         }
-    }
-
-    // ---- α-filter and apply ---------------------------------------------
-    let mut cancelled = Vec::new();
-    for (&s, &(dfw, dbw)) in &per_arc {
-        if dfw == 0 && dbw == 0 {
-            continue;
-        }
-        let arc = shared.arcs[s as usize];
-        let (bu, bv) = (arc.bu as usize, arc.bv as usize);
-        let du = shared.d[bu].min(d_inf);
-        let dv = shared.d[bv].min(d_inf);
-        // a push u→v creates residual (v,u); keep it iff d'(v) ≤ d'(u)+1
-        let keep_fw = dv <= du + 1;
-        let keep_bw = du <= dv + 1;
-        debug_assert!(keep_fw || keep_bw, "both directions cannot be invalid");
-        let sa = &mut shared.arcs[s as usize];
-        if dfw > 0 {
-            if keep_fw {
-                sa.cap_fw -= dfw;
-                sa.cap_bw += dfw;
-                shared.excess[bv] += dfw;
-            } else {
-                shared.excess[bu] += dfw; // cancelled: stays at tail
-                cancelled.push((s, true, dfw));
-            }
-            bytes += 16;
-        }
-        if dbw > 0 {
-            if keep_bw {
-                sa.cap_bw -= dbw;
-                sa.cap_fw += dbw;
-                shared.excess[bu] += dbw;
-            } else {
-                shared.excess[bv] += dbw;
-                cancelled.push((s, false, dbw));
-            }
-            bytes += 16;
-        }
-    }
-
-    // ---- exported owned-boundary excess ---------------------------------
-    for delta in deltas {
         for &(b, e) in &delta.owned_excess {
             shared.excess[b as usize] += e;
-            bytes += 8;
+            self.bytes += 8;
         }
     }
-    FuseOutcome { bytes, cancelled }
+
+    /// α-filter and apply the accrued flows (lines 4–6 of Alg. 2) —
+    /// needs every label of the round published, hence the barrier.
+    pub fn finish(self, shared: &mut SharedState) -> FuseOutcome {
+        let d_inf = shared.d_inf;
+        let mut bytes = self.bytes;
+        let mut cancelled = Vec::new();
+        for (&s, &(dfw, dbw)) in &self.per_arc {
+            if dfw == 0 && dbw == 0 {
+                continue;
+            }
+            let arc = shared.arcs[s as usize];
+            let (bu, bv) = (arc.bu as usize, arc.bv as usize);
+            let du = shared.d[bu].min(d_inf);
+            let dv = shared.d[bv].min(d_inf);
+            // a push u→v creates residual (v,u); keep it iff d'(v) ≤ d'(u)+1
+            let keep_fw = dv <= du + 1;
+            let keep_bw = du <= dv + 1;
+            debug_assert!(keep_fw || keep_bw, "both directions cannot be invalid");
+            let sa = &mut shared.arcs[s as usize];
+            if dfw > 0 {
+                if keep_fw {
+                    sa.cap_fw -= dfw;
+                    sa.cap_bw += dfw;
+                    shared.excess[bv] += dfw;
+                } else {
+                    shared.excess[bu] += dfw; // cancelled: stays at tail
+                    cancelled.push((s, true, dfw));
+                }
+                bytes += 16;
+            }
+            if dbw > 0 {
+                if keep_bw {
+                    sa.cap_bw -= dbw;
+                    sa.cap_fw += dbw;
+                    shared.excess[bu] += dbw;
+                } else {
+                    shared.excess[bv] += dbw;
+                    cancelled.push((s, false, dbw));
+                }
+                bytes += 16;
+            }
+        }
+        FuseOutcome { bytes, cancelled }
+    }
+}
+
+/// Fuse the deltas of one round of concurrent discharges into the
+/// shared state (lines 4–6 of Alg. 2): publish labels, α-filter the
+/// pushed flows, park exported excess. The all-at-once convenience over
+/// [`FusionRound`].
+pub fn fuse_deltas(shared: &mut SharedState, deltas: &[RegionBoundaryDelta]) -> FuseOutcome {
+    let mut round = FusionRound::new();
+    for delta in deltas {
+        round.add(shared, delta);
+    }
+    round.finish(shared)
 }
 
 #[cfg(test)]
@@ -292,6 +325,40 @@ mod tests {
         assert_eq!(sh.arcs[0].cap_fw, 5 - 3 + 2);
         assert_eq!(sh.arcs[0].cap_bw, 5 + 3 - 2);
         assert_eq!(sh.excess, vec![2, 3]);
+    }
+
+    /// Incremental `FusionRound::add` in either arrival order matches
+    /// the all-at-once `fuse_deltas` — bytes, cancellations and the
+    /// whole post-fusion shared state.
+    #[test]
+    fn fusion_round_is_arrival_order_independent() {
+        let deltas = [
+            push3(vec![(0, 2)]),
+            RegionBoundaryDelta {
+                region: 1,
+                arc_flow: vec![(0, false, 2)],
+                owned_labels: vec![(1, 3)],
+                owned_excess: vec![(1, 4)],
+                ..Default::default()
+            },
+        ];
+        let mut batch = shared2(1, 1, 8);
+        let out_batch = fuse_deltas(&mut batch, &deltas);
+        for order in [[0usize, 1], [1, 0]] {
+            let mut sh = shared2(1, 1, 8);
+            let mut round = FusionRound::new();
+            for &i in &order {
+                round.add(&mut sh, &deltas[i]);
+            }
+            let out = round.finish(&mut sh);
+            assert_eq!(out.cancelled, out_batch.cancelled, "order {order:?}");
+            assert_eq!(out.bytes, out_batch.bytes, "order {order:?}");
+            assert_eq!(sh.d, batch.d, "order {order:?}");
+            assert_eq!(sh.excess, batch.excess, "order {order:?}");
+            for (a, b) in sh.arcs.iter().zip(&batch.arcs) {
+                assert_eq!((a.cap_fw, a.cap_bw), (b.cap_fw, b.cap_bw), "order {order:?}");
+            }
+        }
     }
 
     /// `take_boundary_delta` against a real decomposition: the delta

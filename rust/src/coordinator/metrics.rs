@@ -40,6 +40,12 @@ pub struct RunMetrics {
     pub wire_bytes_sent: u64,
     pub wire_bytes_recv: u64,
     pub wire_raw_bytes: u64,
+    /// Parallel sweeps (schema 5): `DischargeBatch` frames sent, and
+    /// the peak number of region discharges in flight at once (the
+    /// realized concurrency of Algorithm 3; also counts the peak batch
+    /// width of the in-memory parallel coordinator).
+    pub dist_batches: u64,
+    pub max_inflight_discharges: u64,
     /// ARD-core work totals (§6.3 forest-reuse visibility): vertices
     /// grown into the search structure (BK) / BFS phases (Dinic),
     /// augmenting paths, and orphan adoptions (BK only). Zero for PRD.
@@ -57,6 +63,10 @@ pub struct RunMetrics {
     /// with workers (send + wait-for-reply on the critical path),
     /// summed over all sweeps.
     pub t_sync: Duration,
+    /// Parallel sweeps (schema 5): wall time of the concurrent sweep
+    /// loop, start of the first sweep to end of the last relabel-only
+    /// epilogue round (excludes setup, shard shipping, cut collection).
+    pub t_par_sweep: Duration,
     /// Disk time on the critical path (the coordinator was stalled).
     pub t_disk: Duration,
     /// Disk + codec time the prefetch pipeline hid behind discharges.
@@ -107,10 +117,20 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let par = if self.max_inflight_discharges > 0 {
+            format!(
+                " [par batches {} inflight {} sweep {:.3}s]",
+                self.dist_batches,
+                self.max_inflight_discharges,
+                self.t_par_sweep.as_secs_f64(),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{name}: flow={} sweeps={}(+{}) discharges={} core g/a/a {}/{}/{} \
              cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) \
-             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{}",
+             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{par}{}",
             self.flow,
             self.sweeps,
             self.extra_sweeps,
@@ -207,5 +227,19 @@ mod tests {
         };
         assert!(m.summary("d").contains("dist msgs 10/8"));
         assert!(m.summary("d").contains("wire 10->6 KB"));
+    }
+
+    #[test]
+    fn summary_par_tail_only_when_parallel() {
+        let m = RunMetrics { converged: true, ..Default::default() };
+        assert!(!m.summary("p").contains("par batches"));
+        let m = RunMetrics {
+            converged: true,
+            dist_batches: 6,
+            max_inflight_discharges: 4,
+            t_par_sweep: Duration::from_millis(1500),
+            ..Default::default()
+        };
+        assert!(m.summary("p").contains("par batches 6 inflight 4 sweep 1.500s"));
     }
 }

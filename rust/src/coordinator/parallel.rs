@@ -182,6 +182,7 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
     let mut prds: Vec<Prd> = (0..dec.parts.len()).map(|_| Prd::new()).collect();
 
     let mut converged = true;
+    let t_par = std::time::Instant::now();
     while dec.any_active() {
         if metrics.sweeps as u64 >= limit {
             converged = false;
@@ -196,6 +197,8 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         };
 
         let active = dec.active_regions();
+        metrics.max_inflight_discharges =
+            metrics.max_inflight_discharges.max(active.len() as u64);
         let tm = Timer::start();
         for &r in &active {
             metrics.msg_bytes += dec.sync_in(r);
@@ -272,6 +275,7 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         }
     }
 
+    metrics.t_par_sweep = t_par.elapsed();
     metrics.flow = dec.flow_value();
     metrics.converged = converged;
     metrics.workspace_mem_bytes = ards.iter().map(|a| a.memory_bytes()).sum::<usize>()

@@ -1,32 +1,52 @@
 //! The master side of the distributed runtime.
 //!
-//! [`solve_distributed`] drives Algorithm 1 with the regions living in
-//! worker processes: the master keeps only the shared boundary state
-//! (`O(|B|)`), per-region boundary metadata, and shells — every region
-//! network is shipped to its worker once ([`Msg::AssignShard`]) and
-//! never comes back. A sweep is a sequence of per-region rounds:
+//! [`solve_distributed`] drives region discharging with the regions
+//! living in worker processes: the master keeps only the shared
+//! boundary state (`O(|B|)`), per-region boundary metadata, and shells
+//! — every region network is shipped to its worker once
+//! ([`Msg::AssignShard`]) and never comes back.
+//!
+//! Two sweep modes share the wire protocol and the Algorithm-2 fusion:
+//!
+//! **Parallel (default, Algorithm 3 §4).** Every sweep is one batched
+//! round-trip per worker: the master composes the sync-in snapshots of
+//! *all* active regions against the same shared state, sends each
+//! worker a [`Msg::DischargeBatch`], and fuses the
+//! [`Msg::DeltaBatch`] replies through an incremental
+//! [`FusionRound`] — each worker's deltas are folded in as its batch
+//! arrives, so fusion overlaps with waiting on slower workers, and the
+//! α-filter resolves conflicting concurrent pushes once per sweep.
+//! Workers do not wait for a fusion ack (the next batch is the sweep
+//! barrier), which pipelines the master's fusion + heuristics with the
+//! workers going idle. Same maxflow value and same minimum cut as
+//! `solve_sequential`; sweep/discharge counts may differ.
 //!
 //! ```text
-//! master                                   worker
-//!   │  Discharge (sync-in snapshot)  ──────▶  │  sync_in + ARD discharge
-//!   │  ◀──────  BoundaryDelta (flows+labels)  │
-//!   │  fuse_deltas + gap heuristics           │
-//!   │  FuseResult (α cancellations)  ──────▶  │
+//! master                                    workers (concurrently)
+//!   │  DischargeBatch (all snapshots)  ─▶▶  │  sync_in + discharge ×R
+//!   │  ◀◀─  DeltaBatch (flows+labels)       │  (then free — no ack)
+//!   │  FusionRound::add per batch,          │
+//!   │  finish (α-filter) + gap once/sweep   │
 //! ```
 //!
-//! Because the master mirrors `solve_sequential`'s control flow
+//! **Deterministic (`--deterministic`, Algorithm 1 oracle).** One region
+//! round at a time, mirroring `solve_sequential`'s control flow
 //! statement for statement — same sweep order, same gap/boundary-
-//! relabel schedule, same relabel-sweep epilogue — and the fusion of a
-//! single region's delta is exactly `sync_out`, a distributed solve is
-//! **bit-identical** to the sequential one: same flow, cut, sweep and
-//! discharge counts (pinned in `tests/distributed.rs`).
+//! relabel schedule, same relabel-sweep epilogue. Because the fusion of
+//! a single region's delta is exactly `sync_out`, this mode is
+//! **bit-identical** to the sequential run: same flow, cut, sweep and
+//! discharge counts (pinned in `tests/distributed.rs`), which makes it
+//! the oracle the parallel mode is tested against.
 //!
 //! The exchange is also the first place the repo actually *pays* for
 //! region interaction, so every frame is accounted: message counts,
-//! wire bytes (compact) vs the raw-codec baseline, and the wall time
-//! the master spent waiting on workers (`RunMetrics::t_sync`).
+//! wire bytes (compact) vs the raw-codec baseline, the wall time the
+//! master spent waiting on workers (`RunMetrics::t_sync`), and — new
+//! with schema 5 — batches sent, the peak number of in-flight region
+//! discharges, and the wall time of the parallel sweep loop
+//! (`t_par_sweep`).
 
-use crate::coordinator::fuse::fuse_deltas;
+use crate::coordinator::fuse::{fuse_deltas, FusionRound};
 use crate::coordinator::metrics::{RunMetrics, Timer};
 use crate::coordinator::sequential::{
     sweep_limit, Algorithm, CoreKind, GapState, SeqOptions, SolveResult,
@@ -77,8 +97,13 @@ pub struct DistOptions {
     /// (`--no-compress` clears it; meaningful with `worker_streaming`).
     pub worker_compress: bool,
     /// Per-socket read/write timeout — a hung worker becomes a clean
-    /// error instead of a stuck master.
+    /// error instead of a stuck master. Also bounds how long the master
+    /// waits for spawned workers to connect back (`--dist-timeout`).
     pub io_timeout: Duration,
+    /// Run the Algorithm-1 sequential mirror (one region round at a
+    /// time, bit-identical to `solve_sequential`) instead of the
+    /// default parallel Algorithm-3 sweeps. The oracle mode.
+    pub deterministic: bool,
 }
 
 impl DistOptions {
@@ -90,6 +115,7 @@ impl DistOptions {
             worker_streaming: None,
             worker_compress: true,
             io_timeout: Duration::from_secs(120),
+            deterministic: false,
         }
     }
 
@@ -104,9 +130,11 @@ impl DistOptions {
     }
 }
 
-/// One worker connection with its wire accounting.
+/// One worker connection with its wire accounting. `peer` is the
+/// worker's address, so every wire error names which worker died.
 struct Conn {
     stream: TcpStream,
+    peer: String,
     msgs_sent: u64,
     msgs_recv: u64,
     wire_sent: u64,
@@ -115,16 +143,24 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream, timeout: Duration) -> Result<Conn> {
+    fn new(stream: TcpStream, peer: String, timeout: Duration) -> Result<Conn> {
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
         stream.set_write_timeout(Some(timeout)).context("set write timeout")?;
-        Ok(Conn { stream, msgs_sent: 0, msgs_recv: 0, wire_sent: 0, wire_recv: 0, raw_bytes: 0 })
+        Ok(Conn {
+            stream,
+            peer,
+            msgs_sent: 0,
+            msgs_recv: 0,
+            wire_sent: 0,
+            wire_recv: 0,
+            raw_bytes: 0,
+        })
     }
 
     fn send(&mut self, msg: &Msg) -> Result<()> {
         let wb = write_msg(&mut self.stream, msg)
-            .with_context(|| format!("send {} to worker", msg.name()))?;
+            .with_context(|| format!("send {} to worker {}", msg.name(), self.peer))?;
         self.msgs_sent += 1;
         self.wire_sent += wb.wire;
         self.raw_bytes += wb.raw;
@@ -132,13 +168,13 @@ impl Conn {
     }
 
     fn recv(&mut self) -> Result<Msg> {
-        let (msg, wire) =
-            read_msg(&mut self.stream).context("read from worker (did it die?)")?;
+        let (msg, wire) = read_msg(&mut self.stream)
+            .with_context(|| format!("read from worker {} (did it die?)", self.peer))?;
         self.msgs_recv += 1;
         self.wire_recv += wire;
         self.raw_bytes += crate::dist::proto::raw_frame_len(&msg);
         if let Msg::Abort { reason } = msg {
-            return Err(err!("worker aborted: {reason}"));
+            return Err(err!("worker {} aborted: {reason}", self.peer));
         }
         Ok(msg)
     }
@@ -207,10 +243,13 @@ struct Master<'a> {
     backend: Backend,
 }
 
-/// Solve `g` under `partition` on distributed workers. Mirrors
-/// [`crate::coordinator::sequential::solve_sequential`] bit for bit —
-/// see the module docs. S-ARD only (the PRD gap heuristic needs inner
-/// labels, which never leave the workers).
+/// Solve `g` under `partition` on distributed workers. Runs the
+/// parallel Algorithm-3 sweeps by default (same maxflow and cut as
+/// `solve_sequential`), or — with [`DistOptions::deterministic`] — the
+/// Algorithm-1 mirror bit-identical to
+/// [`crate::coordinator::sequential::solve_sequential`]; see the module
+/// docs. S-ARD only (the PRD gap heuristic needs inner labels, which
+/// never leave the workers).
 pub fn solve_distributed(
     g: &Graph,
     partition: &Partition,
@@ -323,9 +362,21 @@ impl<'a> Master<'a> {
         Ok(master)
     }
 
-    /// The solve loop — `solve_sequential` statement for statement,
-    /// with the discharge executed remotely. Returns the cut.
+    /// The solve loop: parallel Algorithm-3 sweeps by default, the
+    /// Algorithm-1 sequential mirror under `--deterministic`. Returns
+    /// the cut.
     fn run(&mut self) -> Result<Vec<bool>> {
+        let converged = if self.opts.deterministic {
+            self.run_deterministic()?
+        } else {
+            self.run_parallel()?
+        };
+        self.collect_cut(converged)
+    }
+
+    /// `solve_sequential` statement for statement, with the discharge
+    /// executed remotely. Returns whether the run converged.
+    fn run_deterministic(&mut self) -> Result<bool> {
         let limit = sweep_limit(&self.opts.seq, &self.dec);
         let mut converged = true;
         while self.dec.any_active() {
@@ -376,8 +427,81 @@ impl<'a> Master<'a> {
                 }
             }
         }
+        Ok(converged)
+    }
 
-        // ---- collect the cut from the workers ---------------------------
+    /// Parallel Algorithm-3 sweeps (§4): every active region discharges
+    /// against the same start-of-sweep shared snapshot, one batched
+    /// round-trip per worker per sweep, one α-filter fusion per sweep.
+    /// Heuristics mirror `solve_parallel`: a fresh gap rebuild after
+    /// fusion, then boundary relabel, then another rebuild if labels
+    /// rose. Returns whether the run converged.
+    fn run_parallel(&mut self) -> Result<bool> {
+        let limit = sweep_limit(&self.opts.seq, &self.dec);
+        let t_par = Instant::now();
+        let mut converged = true;
+        while self.dec.any_active() {
+            if self.metrics.sweeps as u64 >= limit {
+                converged = false;
+                break;
+            }
+            let sweep = self.metrics.sweeps;
+            self.metrics.sweeps += 1;
+            let max_stage = if self.opts.seq.partial_discharge {
+                sweep
+            } else {
+                u32::MAX
+            };
+            let order = self.dec.active_regions();
+            self.batched_round(&order, false, max_stage)?;
+            // concurrent deltas invalidate incremental label tracking,
+            // so rebuild the gap state from the fused labels (the
+            // rebuild reads only `shared.d` — shell parts are fine)
+            if let Some(gs) = self.gap.as_mut() {
+                let tg = Timer::start();
+                *gs = GapState::new(&self.dec, false);
+                gs.run(&mut self.dec);
+                tg.stop(&mut self.metrics.t_gap);
+            }
+            if self.opts.seq.boundary_relabel {
+                let tg = Timer::start();
+                let increased = boundary_relabel(&mut self.dec.shared);
+                if increased > 0 {
+                    if let Some(gs) = self.gap.as_mut() {
+                        *gs = GapState::new(&self.dec, false);
+                        gs.run(&mut self.dec);
+                    }
+                }
+                tg.stop(&mut self.metrics.t_gap);
+            }
+        }
+
+        // ---- extra label-only sweeps to extract the cut (§5.3) ---------
+        // Batched too: one Jacobi relabel iteration over all regions per
+        // round-trip, looping until no label moves.
+        if converged {
+            let all: Vec<usize> = (0..self.dec.parts.len()).collect();
+            loop {
+                let increase = self.batched_round(&all, true, u32::MAX)?;
+                self.metrics.extra_sweeps += 1;
+                if increase == 0 {
+                    break;
+                }
+                if self.metrics.extra_sweeps as u64
+                    > limit + self.dec.n_global as u64 + 4
+                {
+                    converged = false;
+                    break;
+                }
+            }
+        }
+        self.metrics.t_par_sweep += t_par.elapsed();
+        Ok(converged)
+    }
+
+    /// Collect the cut from the workers, then finalise flow/convergence
+    /// in the metrics. Shared tail of both modes.
+    fn collect_cut(&mut self, converged: bool) -> Result<Vec<bool>> {
         let mut sides = vec![true; self.dec.n_global];
         for r in 0..self.dec.parts.len() {
             let ci = self.conn_of_region[r];
@@ -408,10 +532,11 @@ impl<'a> Master<'a> {
         Ok(sides)
     }
 
-    /// One remote region round (see module docs). Returns the relabel
-    /// increase (0 for discharge rounds).
-    fn remote_round(&mut self, r: usize, relabel_only: bool, max_stage: u32) -> Result<u64> {
-        // ---- compose the sync-in snapshot (mirror of sync_in) -----------
+    /// Compose the sync-in snapshot for region `r` against the current
+    /// shared state (mirror of `sync_in`): reads shared arc caps and
+    /// labels, parks the owned boundary excess into the request, and
+    /// consumes the lazy pending-gap mark.
+    fn compose_req(&mut self, r: usize, relabel_only: bool, max_stage: u32) -> DischargeReq {
         let meta = &self.metas[r];
         let arc_caps: Vec<Cap> = meta
             .boundary_arcs
@@ -436,17 +561,119 @@ impl<'a> Master<'a> {
         }
         let pending_gap = self.dec.parts[r].pending_gap;
         self.dec.parts[r].pending_gap = u32::MAX;
-
-        let req = Msg::Discharge(Box::new(DischargeReq {
+        DischargeReq {
             region: r as u32,
             relabel_only,
             max_stage,
             pending_gap,
             arc_caps,
             foreign_d,
-            owned_d: owned_d.clone(),
+            owned_d,
             owned_excess,
-        }));
+        }
+    }
+
+    /// One batched parallel round over `regions` (Algorithm 3): every
+    /// snapshot is composed against the same start-of-round shared
+    /// state, each worker gets one [`Msg::DischargeBatch`], and replies
+    /// are fused incrementally through a [`FusionRound`] as each
+    /// worker's [`Msg::DeltaBatch`] lands — the α-filter runs once at
+    /// the end, the round's only barrier. Returns the summed relabel
+    /// increase (0 for discharge rounds).
+    fn batched_round(
+        &mut self,
+        regions: &[usize],
+        relabel_only: bool,
+        max_stage: u32,
+    ) -> Result<u64> {
+        self.metrics.max_inflight_discharges =
+            self.metrics.max_inflight_discharges.max(regions.len() as u64);
+        // group per worker, preserving region order within each batch
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.conns.len()];
+        for &r in regions {
+            groups[self.conn_of_region[r]].push(r);
+        }
+        // send every batch before reading any reply: a worker never
+        // writes until it has read its whole batch, so draining replies
+        // in connection order afterwards cannot deadlock
+        for ci in 0..groups.len() {
+            if groups[ci].is_empty() {
+                continue;
+            }
+            let reqs: Vec<DischargeReq> = groups[ci]
+                .clone()
+                .into_iter()
+                .map(|r| self.compose_req(r, relabel_only, max_stage))
+                .collect();
+            let t = Timer::start();
+            self.conns[ci].send(&Msg::DischargeBatch(reqs))?;
+            t.stop(&mut self.metrics.t_sync);
+            self.metrics.dist_batches += 1;
+        }
+        // drain replies in connection order, folding each worker's
+        // deltas into the fusion round as they arrive so fusion
+        // overlaps with waiting on slower workers
+        let mut round = FusionRound::new();
+        let mut increase = 0u64;
+        for (ci, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let t = Timer::start();
+            let rsps = match self.conns[ci].recv()? {
+                Msg::DeltaBatch(rsps) => rsps,
+                other => {
+                    return Err(err!(
+                        "worker {}: expected DeltaBatch, got {}",
+                        self.conns[ci].peer,
+                        other.name()
+                    ))
+                }
+            };
+            t.stop(&mut self.metrics.t_sync);
+            ensure!(
+                rsps.len() == group.len(),
+                "worker {} answered {} deltas for a batch of {}",
+                self.conns[ci].peer,
+                rsps.len(),
+                group.len()
+            );
+            let tm = Timer::start();
+            for (&r, rsp) in group.iter().zip(&rsps) {
+                ensure!(
+                    rsp.delta.region == r as u32,
+                    "worker {} answered for region {} instead of {r}",
+                    self.conns[ci].peer,
+                    rsp.delta.region
+                );
+                if !relabel_only {
+                    self.metrics.discharges += 1;
+                    self.metrics.core_grow += rsp.grow;
+                    self.metrics.core_augment += rsp.augment;
+                    self.metrics.core_adopt += rsp.adopt;
+                }
+                round.add(&mut self.dec.shared, &rsp.delta);
+                self.dec.parts[r].active = rsp.delta.active;
+                self.region_flow[r] = rsp.delta.flow_to_sink;
+                increase += rsp.relabel_increase;
+            }
+            tm.stop(&mut self.metrics.t_msg);
+        }
+        // the round's barrier: the α-filter needs every worker's labels
+        let tm = Timer::start();
+        let out = round.finish(&mut self.dec.shared);
+        self.metrics.msg_bytes += out.bytes;
+        tm.stop(&mut self.metrics.t_msg);
+        Ok(increase)
+    }
+
+    /// One remote region round (deterministic mode — see module docs).
+    /// Returns the relabel increase (0 for discharge rounds).
+    fn remote_round(&mut self, r: usize, relabel_only: bool, max_stage: u32) -> Result<u64> {
+        let req = self.compose_req(r, relabel_only, max_stage);
+        let pending_gap = req.pending_gap;
+        let owned_d = req.owned_d.clone();
+        let req = Msg::Discharge(Box::new(req));
         let ci = self.conn_of_region[r];
         let t = Timer::start();
         self.conns[ci].send(&req)?;
@@ -565,12 +792,14 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
                 );
             }
             let mut conns = Vec::with_capacity(n);
-            let deadline = Instant::now() + Duration::from_secs(30);
+            // the accept deadline follows --dist-timeout, not a
+            // hard-coded constant
+            let deadline = Instant::now() + opts.io_timeout;
             while conns.len() < n {
                 match listener.accept() {
-                    Ok((stream, _)) => {
+                    Ok((stream, peer)) => {
                         stream.set_nonblocking(false).context("worker stream mode")?;
-                        conns.push(Conn::new(stream, opts.io_timeout)?);
+                        conns.push(Conn::new(stream, peer.to_string(), opts.io_timeout)?);
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         for (i, c) in children.0.iter_mut().enumerate() {
@@ -582,8 +811,9 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
                         }
                         ensure!(
                             Instant::now() < deadline,
-                            "timed out waiting for {} worker connection(s)",
-                            n - conns.len()
+                            "timed out waiting for {} worker connection(s) after {:?}",
+                            n - conns.len(),
+                            opts.io_timeout
                         );
                         std::thread::sleep(Duration::from_millis(20));
                     }
@@ -612,7 +842,7 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
                 handles.push(handle);
                 let stream = TcpStream::connect(addr)
                     .with_context(|| format!("connect to worker thread {i}"))?;
-                conns.push(Conn::new(stream, opts.io_timeout)?);
+                conns.push(Conn::new(stream, addr.to_string(), opts.io_timeout)?);
             }
             Ok((conns, Backend::Threads(handles)))
         }
@@ -627,7 +857,7 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
                     .with_context(|| format!("worker address {addr} resolves to nothing"))?;
                 let stream = TcpStream::connect_timeout(&sock, opts.io_timeout)
                     .with_context(|| format!("connect to worker {addr}"))?;
-                conns.push(Conn::new(stream, opts.io_timeout)?);
+                conns.push(Conn::new(stream, addr.clone(), opts.io_timeout)?);
             }
             Ok((conns, Backend::External))
         }

@@ -16,22 +16,36 @@
 //! * [`proto::Msg::BoundaryDelta`] — the reply: pushed boundary flows,
 //!   new owned-boundary labels, exported excess;
 //! * [`proto::Msg::FuseResult`] — the master's fusion outcome
-//!   (α-filtered cancellations), closing the round;
+//!   (α-filtered cancellations), closing a sequential round;
+//! * [`proto::Msg::DischargeBatch`] / [`proto::Msg::DeltaBatch`] — the
+//!   parallel-sweep framing: every region a worker discharges this
+//!   round, in one round-trip, with no fusion ack (the next batch is
+//!   the sweep barrier);
 //! * [`proto::Msg::Shutdown`] — orderly teardown.
 //!
-//! The master ([`master`]) mirrors the sequential coordinator's control
-//! flow exactly and fuses every delta through the shared
-//! [`crate::coordinator::fuse`] step, so `armincut solve --distributed
-//! N` is bit-identical to `solve_sequential` — same flow, cut, sweeps,
-//! discharges. Workers ([`worker`]) optionally back their shards with
-//! the PR-4 region store, holding one resident region regardless of
-//! shard size (the §5.3 bound survives distribution).
+//! The master ([`master`]) has two sweep modes. The **parallel
+//! default** runs the paper's Algorithm 3: all regions' sync-in
+//! snapshots go out at sweep start (one `DischargeBatch` per worker),
+//! deltas are folded into an incremental
+//! [`crate::coordinator::fuse::FusionRound`] as replies arrive, and the
+//! Algorithm-2 α-filter runs once at the sweep barrier — same maxflow
+//! and same minimal sink-side cut as `solve_sequential`, though sweep
+//! and discharge counts may differ. `--deterministic` instead mirrors
+//! the sequential coordinator's control flow statement for statement
+//! (one region per round-trip, fuse after each); with a single
+//! discharged region the α-filter provably never fires, so this mode is
+//! **bit-identical** to `solve_sequential` — same flow, cut, sweeps,
+//! discharges — and serves as the oracle for the parallel mode.
+//! Workers ([`worker`]) optionally back their shards with the PR-4
+//! region store, holding one resident region regardless of shard size
+//! (the §5.3 bound survives distribution).
 //!
-//! Every exchange is measured: `RunMetrics` (schema 4) reports messages
+//! Every exchange is measured: `RunMetrics` reports messages
 //! sent/received, wire bytes compact-vs-raw, and the wall time the
-//! master spent synchronizing — the first real numbers behind the
-//! paper's "interaction between the regions is considered expensive"
-//! premise.
+//! master spent synchronizing (schema 4), plus batch round-trips,
+//! peak in-flight discharges and parallel-sweep wall time (schema 5) —
+//! the real numbers behind the paper's "interaction between the
+//! regions is considered expensive" premise.
 
 pub mod master;
 pub mod proto;

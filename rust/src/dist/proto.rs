@@ -23,6 +23,15 @@
 //! raw-vs-compressed wire accounting of `RunMetrics` (schema 4) comes
 //! from. A truncated, bit-flipped, foreign or future-versioned frame is
 //! rejected with a typed [`ProtoError`], never mis-decoded.
+//!
+//! Protocol version 2 adds the batched round-trip of the parallel
+//! sweep mode: [`Msg::DischargeBatch`] carries every region request a
+//! worker handles this sweep in one frame, [`Msg::DeltaBatch`] returns
+//! all their deltas in one frame, and — unlike the per-region
+//! `Discharge`/`BoundaryDelta`/`FuseResult` exchange of the
+//! deterministic mode — the worker does *not* wait for a fusion ack:
+//! the next batch is the implicit sweep barrier, so a sweep costs one
+//! round-trip per worker instead of three frames per region.
 
 use crate::coordinator::fuse::RegionBoundaryDelta;
 use crate::core::graph::Cap;
@@ -35,7 +44,8 @@ use std::io::{Read, Write};
 /// First bytes of every frame.
 pub const FRAME_MAGIC: [u8; 4] = *b"ARMD";
 /// Bumped on any message-layout change; peers reject other versions.
-pub const PROTO_VERSION: u16 = 1;
+/// Version 2: batched sweep frames (`DischargeBatch`/`DeltaBatch`).
+pub const PROTO_VERSION: u16 = 2;
 /// Fixed header size preceding the payload.
 pub const FRAME_HEADER_LEN: usize = 16;
 /// Upper bound on a single payload (a shard assignment of a huge
@@ -144,8 +154,9 @@ pub struct DeltaRsp {
 }
 
 /// The protocol messages. Master → worker: `AssignShard`, `Discharge`,
-/// `FuseResult`, `FetchCut`, `Shutdown`. Worker → master: `Hello`,
-/// `BoundaryDelta`, `CutResult`, `Abort`.
+/// `DischargeBatch`, `FuseResult`, `FetchCut`, `Shutdown`. Worker →
+/// master: `Hello`, `BoundaryDelta`, `DeltaBatch`, `CutResult`,
+/// `Abort`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Msg {
     /// Handshake, sent by the worker immediately after connecting.
@@ -157,6 +168,14 @@ pub enum Msg {
     /// cancellations `(shared arc, forward, amount)` whose flow was
     /// refunded in shared state. Completes every Discharge exchange.
     FuseResult { region: u32, cancelled: Vec<(u32, bool, Cap)> },
+    /// Parallel sweep mode: every region request of this worker for the
+    /// current sweep in one frame. Answered by one [`Msg::DeltaBatch`];
+    /// no per-region `FuseResult` ack follows — the next batch is the
+    /// implicit sweep barrier.
+    DischargeBatch(Vec<DischargeReq>),
+    /// The batched reply: one [`DeltaRsp`] per request, in request
+    /// order.
+    DeltaBatch(Vec<DeltaRsp>),
     FetchCut { region: u32 },
     /// Global ids of the region's inner vertices on the source side
     /// (`d ≥ d_inf`), ascending.
@@ -175,6 +194,8 @@ const KIND_FETCH_CUT: u8 = 6;
 const KIND_CUT: u8 = 7;
 const KIND_SHUTDOWN: u8 = 8;
 const KIND_ABORT: u8 = 9;
+const KIND_DISCHARGE_BATCH: u8 = 10;
+const KIND_DELTA_BATCH: u8 = 11;
 
 fn enc_flows(e: &mut Enc, xs: &[(u32, bool, Cap)]) {
     e.u64(xs.len() as u64);
@@ -244,6 +265,66 @@ fn dec_excess(d: &mut Dec) -> Option<Vec<(u32, Cap)>> {
     Some(v)
 }
 
+fn enc_discharge_req(e: &mut Enc, q: &DischargeReq) {
+    e.u32(q.region);
+    e.u8(q.relabel_only as u8);
+    e.u32(q.max_stage);
+    e.u32(q.pending_gap);
+    e.i64_slice(&q.arc_caps);
+    e.u32_slice(&q.foreign_d);
+    e.u32_slice(&q.owned_d);
+    e.i64_slice(&q.owned_excess);
+}
+
+fn dec_discharge_req(d: &mut Dec) -> Option<DischargeReq> {
+    Some(DischargeReq {
+        region: d.u32()?,
+        relabel_only: d.u8()? != 0,
+        max_stage: d.u32()?,
+        pending_gap: d.u32()?,
+        arc_caps: d.i64_slice()?,
+        foreign_d: d.u32_slice()?,
+        owned_d: d.u32_slice()?,
+        owned_excess: d.i64_slice()?,
+    })
+}
+
+fn enc_delta_rsp(e: &mut Enc, rsp: &DeltaRsp) {
+    e.u32(rsp.delta.region);
+    enc_flows(e, &rsp.delta.arc_flow);
+    enc_pairs_u32(e, &rsp.delta.owned_labels);
+    enc_excess(e, &rsp.delta.owned_excess);
+    e.u8(rsp.delta.active as u8);
+    e.i64(rsp.delta.flow_to_sink);
+    e.u64(rsp.grow);
+    e.u64(rsp.augment);
+    e.u64(rsp.adopt);
+    e.u64(rsp.relabel_increase);
+}
+
+fn dec_delta_rsp(d: &mut Dec) -> Option<DeltaRsp> {
+    let region = d.u32()?;
+    let arc_flow = dec_flows(d)?;
+    let owned_labels = dec_pairs_u32(d)?;
+    let owned_excess = dec_excess(d)?;
+    let active = d.u8()? != 0;
+    let flow_to_sink = d.i64()?;
+    Some(DeltaRsp {
+        delta: RegionBoundaryDelta {
+            region,
+            arc_flow,
+            owned_labels,
+            owned_excess,
+            active,
+            flow_to_sink,
+        },
+        grow: d.u64()?,
+        augment: d.u64()?,
+        adopt: d.u64()?,
+        relabel_increase: d.u64()?,
+    })
+}
+
 impl Msg {
     fn kind(&self) -> u8 {
         match self {
@@ -252,6 +333,8 @@ impl Msg {
             Msg::Discharge(_) => KIND_DISCHARGE,
             Msg::BoundaryDelta(_) => KIND_DELTA,
             Msg::FuseResult { .. } => KIND_FUSE,
+            Msg::DischargeBatch(_) => KIND_DISCHARGE_BATCH,
+            Msg::DeltaBatch(_) => KIND_DELTA_BATCH,
             Msg::FetchCut { .. } => KIND_FETCH_CUT,
             Msg::CutResult { .. } => KIND_CUT,
             Msg::Shutdown => KIND_SHUTDOWN,
@@ -267,6 +350,8 @@ impl Msg {
             Msg::Discharge(_) => "Discharge",
             Msg::BoundaryDelta(_) => "BoundaryDelta",
             Msg::FuseResult { .. } => "FuseResult",
+            Msg::DischargeBatch(_) => "DischargeBatch",
+            Msg::DeltaBatch(_) => "DeltaBatch",
             Msg::FetchCut { .. } => "FetchCut",
             Msg::CutResult { .. } => "CutResult",
             Msg::Shutdown => "Shutdown",
@@ -288,31 +373,23 @@ impl Msg {
                     part.encode(e);
                 }
             }
-            Msg::Discharge(q) => {
-                e.u32(q.region);
-                e.u8(q.relabel_only as u8);
-                e.u32(q.max_stage);
-                e.u32(q.pending_gap);
-                e.i64_slice(&q.arc_caps);
-                e.u32_slice(&q.foreign_d);
-                e.u32_slice(&q.owned_d);
-                e.i64_slice(&q.owned_excess);
-            }
-            Msg::BoundaryDelta(rsp) => {
-                e.u32(rsp.delta.region);
-                enc_flows(e, &rsp.delta.arc_flow);
-                enc_pairs_u32(e, &rsp.delta.owned_labels);
-                enc_excess(e, &rsp.delta.owned_excess);
-                e.u8(rsp.delta.active as u8);
-                e.i64(rsp.delta.flow_to_sink);
-                e.u64(rsp.grow);
-                e.u64(rsp.augment);
-                e.u64(rsp.adopt);
-                e.u64(rsp.relabel_increase);
-            }
+            Msg::Discharge(q) => enc_discharge_req(e, q),
+            Msg::BoundaryDelta(rsp) => enc_delta_rsp(e, rsp),
             Msg::FuseResult { region, cancelled } => {
                 e.u32(*region);
                 enc_flows(e, cancelled);
+            }
+            Msg::DischargeBatch(reqs) => {
+                e.u64(reqs.len() as u64);
+                for q in reqs {
+                    enc_discharge_req(e, q);
+                }
+            }
+            Msg::DeltaBatch(rsps) => {
+                e.u64(rsps.len() as u64);
+                for rsp in rsps {
+                    enc_delta_rsp(e, rsp);
+                }
             }
             Msg::FetchCut { region } => e.u32(*region),
             Msg::CutResult { region, src_side } => {
@@ -354,39 +431,31 @@ impl Msg {
                     regions,
                 }))
             }
-            KIND_DISCHARGE => Msg::Discharge(Box::new(DischargeReq {
-                region: d.u32()?,
-                relabel_only: d.u8()? != 0,
-                max_stage: d.u32()?,
-                pending_gap: d.u32()?,
-                arc_caps: d.i64_slice()?,
-                foreign_d: d.u32_slice()?,
-                owned_d: d.u32_slice()?,
-                owned_excess: d.i64_slice()?,
-            })),
-            KIND_DELTA => {
-                let region = d.u32()?;
-                let arc_flow = dec_flows(d)?;
-                let owned_labels = dec_pairs_u32(d)?;
-                let owned_excess = dec_excess(d)?;
-                let active = d.u8()? != 0;
-                let flow_to_sink = d.i64()?;
-                Msg::BoundaryDelta(Box::new(DeltaRsp {
-                    delta: RegionBoundaryDelta {
-                        region,
-                        arc_flow,
-                        owned_labels,
-                        owned_excess,
-                        active,
-                        flow_to_sink,
-                    },
-                    grow: d.u64()?,
-                    augment: d.u64()?,
-                    adopt: d.u64()?,
-                    relabel_increase: d.u64()?,
-                }))
-            }
+            KIND_DISCHARGE => Msg::Discharge(Box::new(dec_discharge_req(d)?)),
+            KIND_DELTA => Msg::BoundaryDelta(Box::new(dec_delta_rsp(d)?)),
             KIND_FUSE => Msg::FuseResult { region: d.u32()?, cancelled: dec_flows(d)? },
+            KIND_DISCHARGE_BATCH => {
+                let n = usize::try_from(d.u64()?).ok()?;
+                if n > d.remaining() {
+                    return None;
+                }
+                let mut reqs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    reqs.push(dec_discharge_req(d)?);
+                }
+                Msg::DischargeBatch(reqs)
+            }
+            KIND_DELTA_BATCH => {
+                let n = usize::try_from(d.u64()?).ok()?;
+                if n > d.remaining() {
+                    return None;
+                }
+                let mut rsps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    rsps.push(dec_delta_rsp(d)?);
+                }
+                Msg::DeltaBatch(rsps)
+            }
             KIND_FETCH_CUT => Msg::FetchCut { region: d.u32()? },
             KIND_CUT => Msg::CutResult { region: d.u32()?, src_side: d.u32_slice_delta()? },
             KIND_SHUTDOWN => Msg::Shutdown,
@@ -526,6 +595,46 @@ mod tests {
                 relabel_increase: 0,
             })),
             Msg::FuseResult { region: 3, cancelled: vec![(2, false, 1)] },
+            Msg::DischargeBatch(vec![
+                DischargeReq {
+                    region: 0,
+                    relabel_only: false,
+                    max_stage: 2,
+                    pending_gap: u32::MAX,
+                    arc_caps: vec![7],
+                    foreign_d: vec![3],
+                    owned_d: vec![1, 2],
+                    owned_excess: vec![0, 5],
+                },
+                DischargeReq {
+                    region: 2,
+                    relabel_only: true,
+                    max_stage: u32::MAX,
+                    pending_gap: 6,
+                    arc_caps: vec![],
+                    foreign_d: vec![],
+                    owned_d: vec![4],
+                    owned_excess: vec![0],
+                },
+            ]),
+            Msg::DischargeBatch(vec![]),
+            Msg::DeltaBatch(vec![
+                DeltaRsp {
+                    delta: RegionBoundaryDelta {
+                        region: 0,
+                        arc_flow: vec![(1, true, 2)],
+                        owned_labels: vec![(0, 3), (2, 5)],
+                        owned_excess: vec![(2, 1)],
+                        active: true,
+                        flow_to_sink: 4,
+                    },
+                    grow: 11,
+                    augment: 3,
+                    adopt: 1,
+                    relabel_increase: 0,
+                },
+                DeltaRsp { relabel_increase: 9, ..Default::default() },
+            ]),
             Msg::FetchCut { region: 1 },
             Msg::CutResult { region: 1, src_side: vec![3, 4, 9, 200] },
             Msg::Shutdown,

@@ -7,7 +7,15 @@
 //! [`Decomposition::sync_in`][crate::region::decompose::Decomposition::sync_in]),
 //! run the discharge (or a label-only relabel sweep), and reply with
 //! the region's [`RegionBoundaryDelta`] for the master to fuse. The
-//! master's [`Msg::FuseResult`] ack completes the round.
+//! master's [`Msg::FuseResult`] ack completes the round (deterministic
+//! mode only).
+//!
+//! In the parallel sweep mode the master sends one
+//! [`Msg::DischargeBatch`] per sweep instead: the worker runs every
+//! request in order, replies with one [`Msg::DeltaBatch`], and
+//! immediately returns to reading the next command — no fusion ack.
+//! The next batch is the implicit sweep barrier, which is what lets
+//! workers overlap with the master's fusion and heuristics.
 //!
 //! With `--streaming DIR` the shard is backed by the out-of-core region
 //! store ([`crate::store`]): every region is paged out after its round,
@@ -247,6 +255,25 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                             ))
                         }
                     }
+                }
+                Msg::DischargeBatch(reqs) => {
+                    let shard = shard
+                        .as_mut()
+                        .ok_or_else(|| err!("DischargeBatch before AssignShard"))?;
+                    let mut rsps = Vec::with_capacity(reqs.len());
+                    for q in &reqs {
+                        handled += 1;
+                        if opts.fail_after.map_or(false, |n| handled > n) {
+                            // fault injection, as in the singleton arm
+                            std::process::exit(3);
+                        }
+                        rsps.push(shard.discharge(q)?);
+                    }
+                    // no fusion ack in batch mode: the next batch is the
+                    // sweep barrier, so the master's fusion overlaps
+                    // with this worker being free
+                    write_msg(&mut stream, &Msg::DeltaBatch(rsps))
+                        .context("send delta batch")?;
                 }
                 Msg::FetchCut { region } => {
                     let shard =

@@ -99,6 +99,12 @@ pub struct BenchRecord {
     pub wire_bytes_recv: u64,
     pub wire_raw_bytes: u64,
     pub sync_wall_seconds: f64,
+    /// Parallel-sweep accounting (schema 5; zero for sequential
+    /// solvers): discharge batches sent, peak concurrent region
+    /// discharges, and the wall time of the concurrent sweep loop.
+    pub dist_batches: u64,
+    pub max_inflight_discharges: u64,
+    pub par_sweep_seconds: f64,
 }
 
 impl BenchRecord {
@@ -126,6 +132,9 @@ impl BenchRecord {
             wire_bytes_recv: r.wire_bytes_recv,
             wire_raw_bytes: r.wire_raw_bytes,
             sync_wall_seconds: r.sync_wall_seconds,
+            dist_batches: r.dist_batches,
+            max_inflight_discharges: r.max_inflight_discharges,
+            par_sweep_seconds: r.par_sweep_seconds,
         }
     }
 
@@ -153,6 +162,9 @@ impl BenchRecord {
             wire_bytes_recv: res.metrics.wire_bytes_recv,
             wire_raw_bytes: res.metrics.wire_raw_bytes,
             sync_wall_seconds: res.metrics.t_sync.as_secs_f64(),
+            dist_batches: res.metrics.dist_batches,
+            max_inflight_discharges: res.metrics.max_inflight_discharges,
+            par_sweep_seconds: res.metrics.t_par_sweep.as_secs_f64(),
         }
     }
 }
@@ -243,9 +255,17 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
         }
         "table2" => {
             // the distributed runtime rides the parallel table: same
-            // instance, loopback workers over the real wire protocol
+            // instance, loopback workers over the real wire protocol.
+            // D-ARD(1..8) is the parallel-sweep speedup curve — one
+            // point per worker count, all on the same instance.
             let (case, g, part) = grid3d_probe(quick);
-            probe_competitors(&case, &g, &part, &[Bk, PArd(4), PPrd(4), DArd(2)], &mut out);
+            probe_competitors(
+                &case,
+                &g,
+                &part,
+                &[Bk, PArd(4), PPrd(4), DArd(1), DArd(2), DArd(4), DArd(8)],
+                &mut out,
+            );
         }
         "table3" => {
             let (case, g, part) = grid3d_probe(quick);
@@ -276,6 +296,9 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 wire_bytes_recv: 0,
                 wire_raw_bytes: 0,
                 sync_wall_seconds: 0.0,
+                dist_batches: 0,
+                max_inflight_discharges: 0,
+                par_sweep_seconds: 0.0,
             });
         }
         "appendix_a" => {
@@ -333,6 +356,9 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 wire_bytes_recv: 0,
                 wire_raw_bytes: 0,
                 sync_wall_seconds: 0.0,
+                dist_batches: 0,
+                max_inflight_discharges: 0,
+                par_sweep_seconds: 0.0,
             });
         }
         other => panic!("no probe defined for experiment id: {other}"),
@@ -368,11 +394,13 @@ pub fn to_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
-    // schema 4: adds the distributed-runtime fields (dist_msgs_sent/
-    // recv, wire_bytes_sent/recv vs wire_raw_bytes, sync_wall_seconds)
-    // per record; schema 3 added the streaming-store fields, schema 2
-    // the core work counters
-    s.push_str("  \"schema\": 4,\n");
+    // schema 5: adds the parallel-sweep fields (dist_batches,
+    // max_inflight_discharges, par_sweep_seconds) per record; schema 4
+    // added the distributed-runtime fields (dist_msgs_sent/recv,
+    // wire_bytes_sent/recv vs wire_raw_bytes, sync_wall_seconds),
+    // schema 3 the streaming-store fields, schema 2 the core work
+    // counters
+    s.push_str("  \"schema\": 5,\n");
     let _ = writeln!(s, "  \"quick\": {quick},");
     match experiment_seconds {
         Some(t) => {
@@ -392,7 +420,9 @@ pub fn to_json(
              \"disk_blocked_seconds\": {:.6}, \"disk_overlapped_seconds\": {:.6}, \
              \"dist_msgs_sent\": {}, \"dist_msgs_recv\": {}, \
              \"wire_bytes_sent\": {}, \"wire_bytes_recv\": {}, \
-             \"wire_raw_bytes\": {}, \"sync_wall_seconds\": {:.6}}}{}",
+             \"wire_raw_bytes\": {}, \"sync_wall_seconds\": {:.6}, \
+             \"dist_batches\": {}, \"max_inflight_discharges\": {}, \
+             \"par_sweep_seconds\": {:.6}}}{}",
             json_escape(&r.case),
             json_escape(&r.solver),
             r.flow,
@@ -415,6 +445,9 @@ pub fn to_json(
             r.wire_bytes_recv,
             r.wire_raw_bytes,
             r.sync_wall_seconds,
+            r.dist_batches,
+            r.max_inflight_discharges,
+            r.par_sweep_seconds,
             if i + 1 < records.len() { "," } else { "" },
         );
     }
@@ -492,10 +525,13 @@ mod tests {
             wire_bytes_recv: 6000,
             wire_raw_bytes: 50000,
             sync_wall_seconds: 0.125,
+            dist_batches: 5,
+            max_inflight_discharges: 8,
+            par_sweep_seconds: 0.75,
         }];
         let j = to_json("fig6", true, Some(1.5), &recs);
         assert!(j.contains("\"bench\": \"fig6\""));
-        assert!(j.contains("\"schema\": 4"));
+        assert!(j.contains("\"schema\": 5"));
         assert!(j.contains("\\\"1"));
         assert!(j.contains("\"flow\": 42"));
         assert!(j.contains("\"converged\": true"));
@@ -514,6 +550,9 @@ mod tests {
         assert!(j.contains("\"wire_bytes_recv\": 6000"));
         assert!(j.contains("\"wire_raw_bytes\": 50000"));
         assert!(j.contains("\"sync_wall_seconds\": 0.125000"));
+        assert!(j.contains("\"dist_batches\": 5"));
+        assert!(j.contains("\"max_inflight_discharges\": 8"));
+        assert!(j.contains("\"par_sweep_seconds\": 0.750000"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 
@@ -548,21 +587,31 @@ mod tests {
     #[test]
     fn table2_dist_record_measures_wire_traffic() {
         let recs = probe_records("table2", true);
-        let d = recs
-            .iter()
-            .find(|r| r.solver.starts_with("D-ARD"))
-            .expect("table2 probes the distributed solver");
-        assert!(d.converged);
-        assert!(d.dist_msgs_sent > 0 && d.dist_msgs_recv > 0, "messages counted");
+        let dards: Vec<_> =
+            recs.iter().filter(|r| r.solver.starts_with("D-ARD")).collect();
         assert!(
-            d.wire_bytes_sent + d.wire_bytes_recv > 0
-                && d.wire_bytes_sent + d.wire_bytes_recv < d.wire_raw_bytes,
-            "compact wire {} + {} must beat the raw baseline {}",
-            d.wire_bytes_sent,
-            d.wire_bytes_recv,
-            d.wire_raw_bytes
+            dards.len() >= 4,
+            "table2 probes the D-ARD(1..8) speedup curve, got {}",
+            dards.len()
         );
-        assert!(d.sync_wall_seconds > 0.0, "sync wall time measured");
+        for d in dards {
+            assert!(d.converged);
+            assert!(d.dist_msgs_sent > 0 && d.dist_msgs_recv > 0, "messages counted");
+            assert!(
+                d.wire_bytes_sent + d.wire_bytes_recv > 0
+                    && d.wire_bytes_sent + d.wire_bytes_recv < d.wire_raw_bytes,
+                "compact wire {} + {} must beat the raw baseline {}",
+                d.wire_bytes_sent,
+                d.wire_bytes_recv,
+                d.wire_raw_bytes
+            );
+            assert!(d.sync_wall_seconds > 0.0, "sync wall time measured");
+            // schema-5 parallel-sweep accounting (parallel is the
+            // default distributed mode)
+            assert!(d.dist_batches > 0, "{}: batches counted", d.solver);
+            assert!(d.max_inflight_discharges > 0, "{}: inflight peak", d.solver);
+            assert!(d.par_sweep_seconds > 0.0, "{}: sweep wall time", d.solver);
+        }
     }
 
     #[test]

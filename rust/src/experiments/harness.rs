@@ -40,8 +40,9 @@ pub enum Competitor {
     PArd(usize),
     PPrd(usize),
     /// Distributed S-ARD: master + `n` in-process loopback workers over
-    /// the real TCP wire protocol ([`crate::dist`]) — measures actual
-    /// wire bytes and sync time, bit-identical flow to S-ARD.
+    /// the real TCP wire protocol ([`crate::dist`]), parallel
+    /// Algorithm-3 sweeps — measures actual wire bytes, sync time, and
+    /// the D-ARD(1..8) speedup curve; same flow and cut as S-ARD.
     DArd(usize),
     Dd(usize),
 }
@@ -103,6 +104,12 @@ pub struct CompetitorResult {
     pub wire_bytes_recv: u64,
     pub wire_raw_bytes: u64,
     pub sync_wall_seconds: f64,
+    /// Parallel-sweep accounting (schema 5): discharge batches sent,
+    /// peak concurrent region discharges, and the wall time of the
+    /// concurrent sweep loop. Zero for sequential solvers.
+    pub dist_batches: u64,
+    pub max_inflight_discharges: u64,
+    pub par_sweep_seconds: f64,
 }
 
 impl CompetitorResult {
@@ -141,6 +148,9 @@ impl CompetitorResult {
             wire_bytes_recv: m.wire_bytes_recv,
             wire_raw_bytes: m.wire_raw_bytes,
             sync_wall_seconds: m.t_sync.as_secs_f64(),
+            dist_batches: m.dist_batches,
+            max_inflight_discharges: m.max_inflight_discharges,
+            par_sweep_seconds: m.t_par_sweep.as_secs_f64(),
         }
     }
 }

@@ -69,14 +69,17 @@ pub fn table1_sequential(quick: bool) {
     }
 }
 
-/// Table 2: parallel competition — BK vs DDx2/DDx4 vs P-ARD vs P-PRD.
+/// Table 2: parallel competition — BK vs DDx2/DDx4 vs P-ARD vs P-PRD,
+/// plus the distributed D-ARD(1..8) speedup curve (parallel
+/// Algorithm-3 sweeps over loopback workers).
 pub fn table2_parallel(quick: bool) {
     print_header(
         "Table 2 — parallel competition (4 threads)",
         &["instance", "solver", "time s", "sweeps", "flow", "status"],
     );
     for (name, g, part) in families(quick) {
-        let solvers = [Bk, Dd(2), Dd(4), PArd(4), PPrd(4)];
+        let solvers =
+            [Bk, Dd(2), Dd(4), PArd(4), PPrd(4), DArd(1), DArd(2), DArd(4), DArd(8)];
         let mut results = Vec::new();
         for c in solvers {
             let r = run_competitor(c, &g, &part);

@@ -46,10 +46,16 @@ SOLVE OPTIONS:
   --regions K          partition into K regions by node ranges (default 4)
   --threads N          worker threads for p-ard/p-prd/dd (default 4)
   --distributed N      s-ard over N auto-spawned loopback worker
-                       processes — bit-identical to the plain s-ard run,
-                       with wire bytes / messages / sync time measured
+                       processes — parallel Algorithm-3 sweeps (same
+                       flow and cut as plain s-ard), with wire bytes /
+                       messages / batches / sync time measured
   --workers A,B,..     like --distributed, but connect to externally
                        started `armincut worker --listen` peers
+  --deterministic      distributed only: run the Algorithm-1 sequential
+                       mirror instead — bit-identical to plain s-ard
+                       (same sweeps/discharges), the oracle mode
+  --dist-timeout SECS  distributed only: socket read/write timeout and
+                       worker accept/connect deadline (default 120)
   --streaming DIR      sequential streaming mode, one region in memory
                        (with --distributed: workers page their shards
                        under DIR/worker_<i>)
@@ -244,13 +250,23 @@ fn cmd_solve(opts: &Flags) -> i32 {
                     opts.get("distributed").and_then(|s| s.parse().ok()).unwrap_or(2);
                 WorkerSpec::Spawn(n.max(1))
             };
-            let d = DistOptions {
+            let mut d = DistOptions {
                 seq: o,
                 workers: spec,
                 worker_streaming: opts.get("streaming").map(|s| s.into()),
                 worker_compress: !opts.contains_key("no-compress"),
+                deterministic: opts.contains_key("deterministic"),
                 ..DistOptions::spawn(0)
             };
+            if let Some(secs) = opts.get("dist-timeout") {
+                match secs.parse::<u64>() {
+                    Ok(s) if s > 0 => d.io_timeout = std::time::Duration::from_secs(s),
+                    _ => {
+                        eprintln!("error: --dist-timeout needs a positive whole number of seconds");
+                        return 2;
+                    }
+                }
+            }
             let res = match dist::solve_distributed(&g, &part, &d) {
                 Ok(res) => res,
                 Err(e) => {

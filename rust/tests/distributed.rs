@@ -1,18 +1,31 @@
 //! Distributed-runtime equivalence and fault tests.
 //!
-//! The contract under test: a loopback master + workers run over the
-//! real TCP wire protocol is **bit-identical** to `solve_sequential` —
-//! same flow, same cut, same sweep / extra-sweep / discharge counts —
-//! because the master mirrors the sequential control flow and fuses
-//! every delta through the shared `coordinator::fuse` step. Plus: a
-//! worker killed mid-solve turns into a clean master error (exit 1),
-//! never a hang or a panic.
+//! The contract under test, per mode:
+//!
+//! * `--deterministic` (Algorithm-1 mirror): a loopback master +
+//!   workers run over the real TCP wire protocol is **bit-identical**
+//!   to `solve_sequential` — same flow, same cut, same sweep /
+//!   extra-sweep / discharge counts — because the master mirrors the
+//!   sequential control flow and fuses every delta through the shared
+//!   `coordinator::fuse` step.
+//! * parallel (default, Algorithm-3 sweeps): same maxflow value and
+//!   same minimum cut as `solve_sequential`; sweep and discharge counts
+//!   may differ, and the schema-5 batch metrics must be populated.
+//! * fusion itself is arrival-order independent: folding one round's
+//!   `BoundaryDelta`s into `FusionRound` in any permutation yields the
+//!   same post-fusion shared state.
+//!
+//! Plus: a worker killed mid-solve turns into a clean master error
+//! (exit 1) naming the dead worker, never a hang or a panic.
 
+use armincut::coordinator::fuse::{fuse_deltas, take_boundary_delta, FusionRound};
 use armincut::coordinator::sequential::{solve_sequential, SeqOptions};
 use armincut::core::graph::{Graph, GraphBuilder};
 use armincut::core::partition::Partition;
 use armincut::core::prng::Rng;
 use armincut::dist::{solve_distributed, DistOptions};
+use armincut::region::ard::{Ard, ArdCore};
+use armincut::region::decompose::{Decomposition, DistanceMode};
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
@@ -38,7 +51,15 @@ fn random_graph(seed: u64, n: usize, extra_edges: usize) -> Graph {
     b.build()
 }
 
+/// `n` loopback worker threads in the `--deterministic` oracle mode.
+fn det(n: usize) -> DistOptions {
+    let mut o = DistOptions::threads(n);
+    o.deterministic = true;
+    o
+}
+
 fn assert_bit_identical(g: &Graph, p: &Partition, d: &DistOptions, tag: &str) {
+    assert!(d.deterministic, "{tag}: bit-identity is the deterministic-mode contract");
     let seq = solve_sequential(g, p, &SeqOptions::ard()).unwrap();
     let dist = solve_distributed(g, p, d).unwrap();
     assert!(dist.metrics.converged, "{tag}: converged");
@@ -64,6 +85,29 @@ fn assert_bit_identical(g: &Graph, p: &Partition, d: &DistOptions, tag: &str) {
             < dist.metrics.wire_raw_bytes,
         "{tag}: compact wire must beat the raw baseline"
     );
+    // the oracle mode never batches
+    assert_eq!(dist.metrics.dist_batches, 0, "{tag}: deterministic mode is unbatched");
+}
+
+/// The parallel-mode contract: same maxflow *value* and same minimum
+/// *cut* as the sequential oracle (sweeps/discharges may differ), with
+/// the schema-5 batch accounting populated.
+fn assert_parallel_equivalent(g: &Graph, p: &Partition, n: usize, tag: &str) {
+    let seq = solve_sequential(g, p, &SeqOptions::ard()).unwrap();
+    let dist = solve_distributed(g, p, &DistOptions::threads(n)).unwrap();
+    assert!(dist.metrics.converged, "{tag}: converged");
+    assert_eq!(dist.metrics.flow, seq.metrics.flow, "{tag}: flow");
+    assert_eq!(dist.cut, seq.cut, "{tag}: cut");
+    let snap = g.snapshot();
+    assert_eq!(g.cut_cost(&snap, &dist.cut), dist.metrics.flow, "{tag}: certificate");
+    assert!(dist.metrics.dist_msgs_sent > 0, "{tag}: messages sent");
+    assert!(
+        dist.metrics.wire_bytes_sent + dist.metrics.wire_bytes_recv
+            < dist.metrics.wire_raw_bytes,
+        "{tag}: compact wire must beat the raw baseline"
+    );
+    assert!(dist.metrics.dist_batches > 0, "{tag}: batched sweeps counted");
+    assert!(dist.metrics.max_inflight_discharges > 0, "{tag}: in-flight peak recorded");
 }
 
 #[test]
@@ -71,7 +115,7 @@ fn loopback_two_workers_bit_identical_to_sequential() {
     for seed in 0..5 {
         let g = random_graph(7000 + seed, 50, 100);
         let p = Partition::by_node_ranges(g.n(), 4);
-        assert_bit_identical(&g, &p, &DistOptions::threads(2), &format!("seed {seed}"));
+        assert_bit_identical(&g, &p, &det(2), &format!("seed {seed}"));
     }
 }
 
@@ -81,14 +125,44 @@ fn worker_counts_and_region_counts_stay_identical() {
     for k in [1usize, 3, 5] {
         let p = Partition::by_node_ranges(g.n(), k);
         for n in [1usize, 2, 3] {
-            assert_bit_identical(
-                &g,
-                &p,
-                &DistOptions::threads(n),
-                &format!("k={k} n={n}"),
-            );
+            assert_bit_identical(&g, &p, &det(n), &format!("k={k} n={n}"));
         }
     }
+}
+
+#[test]
+fn parallel_sweeps_match_sequential_flow_and_cut() {
+    for seed in 0..5 {
+        let g = random_graph(7100 + seed, 50, 100);
+        let p = Partition::by_node_ranges(g.n(), 4);
+        assert_parallel_equivalent(&g, &p, 2, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn parallel_sweeps_across_worker_and_region_counts() {
+    let g = random_graph(4243, 60, 120);
+    for k in [1usize, 3, 5, 8] {
+        let p = Partition::by_node_ranges(g.n(), k);
+        for n in [1usize, 2, 4] {
+            assert_parallel_equivalent(&g, &p, n, &format!("k={k} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn parallel_mode_is_deterministic_for_fixed_topology() {
+    // batched collection happens in worker order, so two identical runs
+    // must agree on every pinned counter, not just the flow
+    let g = random_graph(5151, 60, 120);
+    let p = Partition::by_node_ranges(g.n(), 4);
+    let a = solve_distributed(&g, &p, &DistOptions::threads(2)).unwrap();
+    let b = solve_distributed(&g, &p, &DistOptions::threads(2)).unwrap();
+    assert_eq!(a.metrics.flow, b.metrics.flow);
+    assert_eq!(a.cut, b.cut);
+    assert_eq!(a.metrics.sweeps, b.metrics.sweeps);
+    assert_eq!(a.metrics.discharges, b.metrics.discharges);
+    assert_eq!(a.metrics.dist_batches, b.metrics.dist_batches);
 }
 
 #[test]
@@ -100,7 +174,7 @@ fn streaming_backed_workers_stay_bit_identical() {
     let dir = std::env::temp_dir()
         .join(format!("armincut_dist_stream_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let mut o = DistOptions::threads(2);
+    let mut o = det(2);
     o.worker_streaming = Some(dir.clone());
     assert_bit_identical(&g, &p, &o, "streaming workers");
     assert!(
@@ -108,6 +182,91 @@ fn streaming_backed_workers_stay_bit_identical() {
         "worker 0 paged its shard to disk"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One concurrent round against a real decomposition: sync every
+/// region in against the same shared snapshot, discharge all of them,
+/// and collect the boundary deltas (exactly what the master's batched
+/// round transports over the wire).
+fn one_round_deltas(
+    dec: &mut Decomposition,
+) -> Vec<armincut::coordinator::fuse::RegionBoundaryDelta> {
+    let d_inf = dec.shared.d_inf;
+    for r in 0..dec.parts.len() {
+        dec.sync_in(r);
+    }
+    let mut ard = Ard::new(ArdCore::dinic());
+    (0..dec.parts.len())
+        .map(|r| {
+            ard.discharge(&mut dec.parts[r], d_inf, u32::MAX);
+            take_boundary_delta(&mut dec.parts[r], d_inf)
+        })
+        .collect()
+}
+
+/// The property behind the parallel mode's correctness: fusing one
+/// round's `BoundaryDelta`s in ANY arrival permutation yields the same
+/// post-fusion shared state, conserves flow, and never lowers a label.
+/// Seeded across k ∈ {1, 2, 4} regions.
+#[test]
+fn fusion_is_arrival_permutation_independent() {
+    for (seed, k) in [(11u64, 1usize), (12, 2), (13, 2), (14, 4), (15, 4)] {
+        let g = random_graph(3000 + seed, 48, 96);
+        let p = Partition::by_node_ranges(g.n(), k);
+        let mut dec = Decomposition::new(&g, &p, DistanceMode::Ard);
+        let labels_before = dec.shared.d.clone();
+        let caps_before: Vec<_> =
+            dec.shared.arcs.iter().map(|a| a.cap_fw + a.cap_bw).collect();
+        let deltas = one_round_deltas(&mut dec);
+        let excess_before: i64 = dec.shared.excess.iter().sum();
+        let exported: i64 = deltas
+            .iter()
+            .flat_map(|d| d.owned_excess.iter().map(|&(_, e)| e))
+            .chain(deltas.iter().flat_map(|d| d.arc_flow.iter().map(|&(_, _, a)| a)))
+            .sum();
+
+        // the canonical all-at-once fusion every permutation must match
+        let mut canon = dec.shared.clone();
+        fuse_deltas(&mut canon, &deltas);
+
+        // flow conservation: every unit a region exported is parked in
+        // shared excess (at the push's head if kept, tail if cancelled)
+        // and residual capacity only moves between arc directions
+        assert_eq!(
+            canon.excess.iter().sum::<i64>(),
+            excess_before + exported,
+            "seed {seed} k={k}: excess conserved"
+        );
+        for (a, &c) in canon.arcs.iter().zip(&caps_before) {
+            assert_eq!(a.cap_fw + a.cap_bw, c, "seed {seed} k={k}: arc capacity conserved");
+        }
+        // label monotonicity: fusion publishes discharge labels, which
+        // only ever rise
+        for (after, before) in canon.d.iter().zip(&labels_before) {
+            assert!(after >= before, "seed {seed} k={k}: labels never drop");
+        }
+
+        // every seeded arrival permutation reproduces the canon state
+        let mut rng = Rng::new(900 + seed);
+        for round_no in 0..6 {
+            let mut order: Vec<usize> = (0..deltas.len()).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.index(i + 1));
+            }
+            let mut sh = dec.shared.clone();
+            let mut round = FusionRound::new();
+            for &i in &order {
+                round.add(&mut sh, &deltas[i]);
+            }
+            round.finish(&mut sh);
+            let tag = format!("seed {seed} k={k} perm {round_no} ({order:?})");
+            assert_eq!(sh.d, canon.d, "{tag}: labels");
+            assert_eq!(sh.excess, canon.excess, "{tag}: excess");
+            for (a, b) in sh.arcs.iter().zip(&canon.arcs) {
+                assert_eq!((a.cap_fw, a.cap_bw), (b.cap_fw, b.cap_bw), "{tag}: arcs");
+            }
+        }
+    }
 }
 
 #[test]
@@ -166,32 +325,67 @@ fn cli_distributed_matches_cli_sequential() {
         .output()
         .expect("run sequential CLI");
     assert!(seq.status.success(), "sequential solve failed: {seq:?}");
-    let mut dist_child = Command::new(exe)
+    // parallel (default) mode, then the --deterministic oracle — both
+    // must agree with the sequential CLI run; --dist-timeout plumbs
+    // through in both
+    for mode_flags in [&[][..], &["--deterministic"][..]] {
+        let mut dist_child = Command::new(exe)
+            .args([
+                "solve",
+                "--gen",
+                gen,
+                "--algo",
+                "s-ard",
+                "--regions",
+                "4",
+                "--distributed",
+                "2",
+                "--dist-timeout",
+                "90",
+            ])
+            .args(mode_flags)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn distributed CLI");
+        let status = wait_with_deadline(&mut dist_child, 120, "distributed solve");
+        let out = dist_child.wait_with_output().expect("collect output");
+        assert!(status.success(), "distributed solve {mode_flags:?} failed: {out:?}");
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        assert_eq!(
+            flow_of(&stdout),
+            flow_of(&String::from_utf8_lossy(&seq.stdout)),
+            "flows differ ({mode_flags:?}):\n{stdout}"
+        );
+        assert!(stdout.contains("dist msgs"), "wire metrics missing:\n{stdout}");
+        let batched = stdout.contains("par batches");
+        assert_eq!(
+            batched,
+            mode_flags.is_empty(),
+            "batch metrics follow the mode ({mode_flags:?}):\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn cli_rejects_bad_dist_timeout() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let out = Command::new(exe)
         .args([
             "solve",
             "--gen",
-            gen,
+            "synth2d:8,8,8,150,1",
             "--algo",
             "s-ard",
-            "--regions",
-            "4",
             "--distributed",
             "2",
+            "--dist-timeout",
+            "0",
         ])
-        .stdout(Stdio::piped())
-        .stderr(Stdio::piped())
-        .spawn()
-        .expect("spawn distributed CLI");
-    let status = wait_with_deadline(&mut dist_child, 120, "distributed solve");
-    let out = dist_child.wait_with_output().expect("collect output");
-    assert!(status.success(), "distributed solve failed: {out:?}");
-    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
-    assert_eq!(
-        flow_of(&stdout),
-        flow_of(&String::from_utf8_lossy(&seq.stdout)),
-        "flows differ:\n{stdout}"
-    );
-    assert!(stdout.contains("dist msgs"), "wire metrics missing:\n{stdout}");
+        .output()
+        .expect("run CLI");
+    assert_eq!(out.status.code(), Some(2), "bad --dist-timeout is a usage error");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("dist-timeout"));
 }
 
 /// Start an `armincut worker --listen` process and parse the bound
@@ -243,6 +437,11 @@ fn worker_killed_mid_solve_is_a_clean_exit_1() {
     assert_eq!(status.code(), Some(1), "master must exit 1, got {out:?}");
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("error:"), "no clean error message:\n{stderr}");
+    // the error names the address of the worker that died
+    assert!(
+        stderr.contains(&a0),
+        "error must name the dead worker {a0}:\n{stderr}"
+    );
     // both workers terminate: the crashed one with its injected code,
     // the healthy one after the master's teardown
     let s0 = wait_with_deadline(&mut w0, 30, "crashed worker");

@@ -10,10 +10,12 @@ For every (bench, case, solver) record present in both directories:
 * ``flow`` MUST match — a flow drift is a correctness regression and
   makes the script exit 1;
 * ``wall_seconds``, the disk-byte fields (schema 3:
-  ``page_stored_bytes``, ``page_raw_bytes``) and the distributed wire
-  fields (schema 4: ``wire_bytes_sent``/``recv``; older schemas fall
-  back to zero) are reported as deltas — advisory only, machines
-  differ.
+  ``page_stored_bytes``, ``page_raw_bytes``), the distributed wire
+  fields (schema 4: ``wire_bytes_sent``/``recv``) and the
+  parallel-sweep fields (schema 5: ``dist_batches``,
+  ``max_inflight_discharges``, ``par_sweep_seconds``; older schemas
+  fall back to zero) are reported as deltas or carried in the history —
+  advisory only, machines differ.
 
 With ``--history FILE`` the script additionally maintains a rolling
 multi-run history: one JSON line per run (condensed records: flow,
@@ -50,6 +52,9 @@ HISTORY_FIELDS = (
     "wire_bytes_recv",
     "wire_raw_bytes",
     "sync_wall_seconds",
+    "dist_batches",
+    "max_inflight_discharges",
+    "par_sweep_seconds",
 )
 
 

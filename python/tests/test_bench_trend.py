@@ -118,6 +118,52 @@ def test_wire_bytes_delta_shown_for_distributed_records(tmp_path, capsys):
     assert "wire" in out and "2100B" in out  # 1200 + 900 current total
 
 
+def fault_rec(restarts=1, ckpt=4096, recovery=0.75):
+    r = wire_rec()
+    r.update({"worker_restarts": restarts, "checkpoint_bytes": ckpt,
+              "recovery_wall_seconds": recovery})
+    return r
+
+
+def test_worker_restarts_delta_shown_for_recovered_records(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "table2", [fault_rec(restarts=2)])
+    write_bench(tmp_path / "base", "table2", [fault_rec(restarts=1)])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 0, "restart-count moves are advisory"
+    assert "restarts 1 -> 2" in out
+
+
+def test_restart_free_records_stay_silent_about_recovery(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "table2", [wire_rec()])
+    write_bench(tmp_path / "base", "table2", [wire_rec()])
+    bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    assert "restarts" not in capsys.readouterr().out
+
+
+def test_schema6_fields_survive_into_history(tmp_path):
+    hist = tmp_path / "history.jsonl"
+    write_bench(tmp_path / "cur", "table2", [fault_rec()])
+    code = bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"), "--history", str(hist)])
+    assert code == 0
+    r = json.loads(hist.read_text())["records"][0]
+    assert r["worker_restarts"] == 1
+    assert r["checkpoint_bytes"] == 4096
+    assert r["recovery_wall_seconds"] == 0.75
+
+
+def test_schema6_fields_default_to_zero_for_old_records(tmp_path):
+    hist = tmp_path / "history.jsonl"
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"), "--history", str(hist)])
+    r = json.loads(hist.read_text())["records"][0]
+    assert r["worker_restarts"] == 0
+    assert r["checkpoint_bytes"] == 0
+    assert r["recovery_wall_seconds"] == 0
+
+
 def test_history_appends_and_trims(tmp_path, capsys):
     hist = tmp_path / "deep" / "history.jsonl"
     write_bench(tmp_path / "cur", "fig6", [wire_rec()])

@@ -46,6 +46,13 @@ pub struct RunMetrics {
     /// width of the in-memory parallel coordinator).
     pub dist_batches: u64,
     pub max_inflight_discharges: u64,
+    /// Fault tolerance (schema 6): workers restarted/reconnected after
+    /// a failure, bytes of master boundary-state checkpoints written,
+    /// and the wall time spent detecting failures and re-attaching
+    /// workers (respawn + `Resume` + re-issued batches).
+    pub worker_restarts: u64,
+    pub checkpoint_bytes: u64,
+    pub t_recovery: Duration,
     /// ARD-core work totals (§6.3 forest-reuse visibility): vertices
     /// grown into the search structure (BK) / BFS phases (Dinic),
     /// augmenting paths, and orphan adoptions (BK only). Zero for PRD.
@@ -127,10 +134,20 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let recovery = if self.worker_restarts + self.checkpoint_bytes > 0 {
+            format!(
+                " [recovery restarts {} ckpt {} KB {:.3}s]",
+                self.worker_restarts,
+                self.checkpoint_bytes / 1024,
+                self.t_recovery.as_secs_f64(),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{name}: flow={} sweeps={}(+{}) discharges={} core g/a/a {}/{}/{} \
              cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) \
-             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{par}{}",
+             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{par}{recovery}{}",
             self.flow,
             self.sweeps,
             self.extra_sweeps,
@@ -227,6 +244,20 @@ mod tests {
         };
         assert!(m.summary("d").contains("dist msgs 10/8"));
         assert!(m.summary("d").contains("wire 10->6 KB"));
+    }
+
+    #[test]
+    fn summary_recovery_tail_only_after_restarts_or_checkpoints() {
+        let m = RunMetrics { converged: true, ..Default::default() };
+        assert!(!m.summary("r").contains("recovery"));
+        let m = RunMetrics {
+            converged: true,
+            worker_restarts: 2,
+            checkpoint_bytes: 4096,
+            t_recovery: Duration::from_millis(250),
+            ..Default::default()
+        };
+        assert!(m.summary("r").contains("recovery restarts 2 ckpt 4 KB 0.250s"));
     }
 
     #[test]

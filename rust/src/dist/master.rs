@@ -45,6 +45,22 @@
 //! with schema 5 — batches sent, the peak number of in-flight region
 //! discharges, and the wall time of the parallel sweep loop
 //! (`t_par_sweep`).
+//!
+//! **Fault tolerance (parallel mode).** A worker failure — dead socket,
+//! per-read timeout, a sweep exceeding its deadline, or a corrupt /
+//! protocol-violating frame — becomes a typed [`WorkerFailure`] instead
+//! of an abort. With restarts budgeted (`--max-worker-restarts`, on by
+//! default) the master respawns the loopback child (or reconnects to an
+//! external peer with exponential backoff), re-attaches it with
+//! [`Msg::Resume`] — the worker reloads its shard from its streaming
+//! store, which is why recovery forces a scratch store for spawned
+//! workers — and re-issues the failed [`Msg::DischargeBatch`] from the
+//! already-composed snapshots. Replies are folded at most once per
+//! region per sweep and the α-filter runs once at the barrier, so a
+//! retry can never double-apply deltas. The master additionally
+//! checkpoints its own boundary state each sweep ([`MasterCheckpoint`])
+//! so a crashed *master* can restart from the last barrier
+//! (`--resume-from`). See ARCHITECTURE.md, "Failure model & recovery".
 
 use crate::coordinator::fuse::{fuse_deltas, FusionRound};
 use crate::coordinator::metrics::{RunMetrics, Timer};
@@ -55,13 +71,16 @@ use crate::core::error::{Context, Result};
 use crate::core::graph::{Cap, Graph};
 use crate::core::partition::Partition;
 use crate::dist::proto::{
-    read_msg, write_msg, AssignShard, DischargeReq, Msg, PROTO_VERSION,
+    read_msg, write_msg, AssignShard, DischargeReq, Msg, ProtoError, ResumeShard,
+    PROTO_VERSION,
 };
-use crate::dist::worker::{self, WorkerOptions};
+use crate::dist::worker::{self, Inject, WorkerOptions};
 use crate::ensure;
 use crate::err;
 use crate::region::boundary_relabel::boundary_relabel;
 use crate::region::decompose::{BoundaryArcRef, Decomposition, DistanceMode, RegionPart};
+use crate::store::{FileStore, MasterCheckpoint};
+use std::fmt;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -104,6 +123,30 @@ pub struct DistOptions {
     /// time, bit-identical to `solve_sequential`) instead of the
     /// default parallel Algorithm-3 sweeps. The oracle mode.
     pub deterministic: bool,
+    /// Recovery budget per worker: how many times each worker may be
+    /// restarted (spawned) or reconnected (external) before the solve
+    /// gives up. `0` restores fail-fast aborts. Parallel mode only —
+    /// the deterministic oracle always fails fast.
+    pub max_worker_restarts: u32,
+    /// Deadline for one whole sweep round-trip (`--sweep-timeout`);
+    /// `None` = `4 × io_timeout`. A worker can evade the per-read
+    /// `io_timeout` forever by trickling heartbeats — the sweep
+    /// deadline cannot be evaded.
+    pub sweep_timeout: Option<Duration>,
+    /// Write a [`MasterCheckpoint`] to this directory at every sweep
+    /// barrier. Defaults to a scratch subdirectory when recovery forces
+    /// scratch streaming; `None` otherwise.
+    pub checkpoint: Option<PathBuf>,
+    /// Restart the solve from the checkpoint in this directory instead
+    /// of from scratch. Requires the same graph/partition/worker count
+    /// and the workers' streaming stores from the checkpointed run
+    /// (`worker_streaming` must point at them).
+    pub resume_from: Option<PathBuf>,
+    /// Fault injection for spawned workers (`--inject-worker I:SPEC`):
+    /// pass `--inject SPEC` to worker `I`'s *initial* spawn. Respawned
+    /// workers never inherit an injection — a recovered worker is
+    /// healthy, so an injected crash cannot loop.
+    pub worker_inject: Vec<(usize, String)>,
 }
 
 impl DistOptions {
@@ -116,6 +159,11 @@ impl DistOptions {
             worker_compress: true,
             io_timeout: Duration::from_secs(120),
             deterministic: false,
+            max_worker_restarts: 2,
+            sweep_timeout: None,
+            checkpoint: None,
+            resume_from: None,
+            worker_inject: Vec::new(),
         }
     }
 
@@ -178,6 +226,114 @@ impl Conn {
         }
         Ok(msg)
     }
+
+    /// [`Conn::send`] with the failure typed instead of stringified —
+    /// the recovery path must distinguish a wire failure (recoverable)
+    /// from a fatal logic error.
+    fn try_send(&mut self, msg: &Msg) -> std::result::Result<(), FailureKind> {
+        match write_msg(&mut self.stream, msg) {
+            Ok(wb) => {
+                self.msgs_sent += 1;
+                self.wire_sent += wb.wire;
+                self.raw_bytes += wb.raw;
+                Ok(())
+            }
+            Err(e) => Err(FailureKind::Io(e)),
+        }
+    }
+
+    /// Receive one non-heartbeat message before `deadline` (a sweep of
+    /// nominal length `sweep`), each read additionally bounded by the
+    /// per-read `io` timeout. [`Msg::Heartbeat`] frames are consumed
+    /// and accounted but do **not** stop the deadline clock — that is
+    /// the point: a stalled worker trickling keepalives still trips the
+    /// sweep deadline (a live socket is not a live sweep).
+    fn try_recv_deadline(
+        &mut self,
+        deadline: Instant,
+        sweep: Duration,
+        io: Duration,
+    ) -> std::result::Result<Msg, FailureKind> {
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(FailureKind::SweepStalled(sweep));
+            }
+            // a zero read timeout would mean "block forever", so floor it
+            let wait = io.min(deadline - now).max(Duration::from_millis(1));
+            let _ = self.stream.set_read_timeout(Some(wait));
+            match read_msg(&mut self.stream) {
+                Ok((msg, wire)) => {
+                    self.msgs_recv += 1;
+                    self.wire_recv += wire;
+                    self.raw_bytes += crate::dist::proto::raw_frame_len(&msg);
+                    match msg {
+                        Msg::Heartbeat { .. } => continue,
+                        Msg::Abort { reason } => {
+                            return Err(FailureKind::Protocol(format!("aborted: {reason}")))
+                        }
+                        other => {
+                            let _ = self.stream.set_read_timeout(Some(io));
+                            return Ok(other);
+                        }
+                    }
+                }
+                Err(ProtoError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // the read window expired: past the deadline that is
+                    // a stalled sweep, before it a silent worker (the
+                    // per-read io_timeout contract)
+                    return if Instant::now() >= deadline {
+                        Err(FailureKind::SweepStalled(sweep))
+                    } else {
+                        Err(FailureKind::Io(ProtoError::Io(e)))
+                    };
+                }
+                Err(e) => return Err(FailureKind::Io(e)),
+            }
+        }
+    }
+}
+
+/// Why a worker was declared failed.
+#[derive(Debug)]
+pub enum FailureKind {
+    /// Socket- or frame-level failure: dead socket, per-read timeout,
+    /// corrupt frame.
+    Io(ProtoError),
+    /// The sweep deadline elapsed without the worker's reply.
+    SweepStalled(Duration),
+    /// The worker answered with something that violates the protocol
+    /// (wrong kind, wrong shape, wrong region, or an explicit Abort).
+    Protocol(String),
+}
+
+/// A typed worker failure: which worker, its address, and why. The
+/// recovery path consumes these; with recovery disabled (or the budget
+/// exhausted) the failure becomes the solve's error, naming the dead
+/// worker's address.
+#[derive(Debug)]
+pub struct WorkerFailure {
+    pub worker: usize,
+    pub peer: String,
+    pub kind: FailureKind,
+}
+
+impl fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "worker {} ({}): ", self.worker, self.peer)?;
+        match &self.kind {
+            FailureKind::Io(e) => write!(f, "{e}"),
+            FailureKind::SweepStalled(d) => {
+                write!(f, "no reply within the sweep deadline of {d:?}")
+            }
+            FailureKind::Protocol(msg) => write!(f, "{msg}"),
+        }
+    }
 }
 
 /// Spawned children, killed on drop so an error path never leaks
@@ -215,8 +371,103 @@ impl Drop for Children {
     }
 }
 
+/// The spawned-worker pool: the kill-on-drop [`Children`] guard plus
+/// everything needed to respawn a crashed child — the executable, the
+/// master's still-listening accept socket, and each worker's respawn
+/// argument tail (streaming/compress flags, **never** the injection
+/// flags: a recovered worker is healthy, so an injected crash cannot
+/// loop).
+struct SpawnPool {
+    children: Children,
+    exe: PathBuf,
+    /// Nonblocking; kept open for the whole solve so a respawned child
+    /// can connect back.
+    listener: TcpListener,
+    addr: String,
+    args: Vec<Vec<std::ffi::OsString>>,
+}
+
+impl SpawnPool {
+    fn spawn_worker(&mut self, i: usize, extra: &[std::ffi::OsString]) -> Result<()> {
+        let mut cmd = std::process::Command::new(&self.exe);
+        cmd.arg("worker").arg("--connect").arg(&self.addr);
+        cmd.arg("--worker-id").arg(i.to_string());
+        cmd.args(&self.args[i]);
+        cmd.args(extra);
+        let child = cmd.spawn().with_context(|| format!("spawn worker {i}"))?;
+        if i < self.children.0.len() {
+            self.children.0[i] = child;
+        } else {
+            self.children.0.push(child);
+        }
+        Ok(())
+    }
+
+    /// Accept one worker connection back, with child-exit detection.
+    fn accept(&mut self, timeout: Duration) -> Result<Conn> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nonblocking(false).context("worker stream mode")?;
+                    return Conn::new(stream, peer.to_string(), timeout);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    for (i, c) in self.children.0.iter_mut().enumerate() {
+                        if let Ok(Some(status)) = c.try_wait() {
+                            return Err(err!(
+                                "worker {i} exited before connecting ({status})"
+                            ));
+                        }
+                    }
+                    ensure!(
+                        Instant::now() < deadline,
+                        "timed out waiting for a worker connection after {timeout:?}"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(err!("accept worker connection: {e}")),
+            }
+        }
+    }
+
+    /// Kill worker `i`'s (possibly already dead) process and spawn a
+    /// fresh one in its slot, returning its new connection.
+    fn respawn(&mut self, i: usize, timeout: Duration) -> Result<Conn> {
+        let _ = self.children.0[i].kill();
+        let _ = self.children.0[i].wait();
+        self.spawn_worker(i, &[])?;
+        self.accept(timeout)
+    }
+}
+
+/// Reconnect to an external worker with exponential backoff (100 ms
+/// doubling, 5 attempts) — the operator needs a moment to restart the
+/// `armincut worker --listen` process.
+fn reconnect_external(peer: &str, io_timeout: Duration) -> Result<Conn> {
+    let mut delay = Duration::from_millis(100);
+    let mut last = None;
+    for _ in 0..5 {
+        std::thread::sleep(delay);
+        delay *= 2;
+        let sock = peer
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut a| a.next())
+            .with_context(|| format!("resolve worker address {peer}"))?;
+        match TcpStream::connect_timeout(&sock, io_timeout) {
+            Ok(stream) => return Conn::new(stream, peer.to_string(), io_timeout),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(err!(
+        "reconnect to worker {peer} failed after 5 attempts: {}",
+        last.map_or_else(|| "no attempt made".to_string(), |e| e.to_string())
+    ))
+}
+
 enum Backend {
-    Spawned(Children),
+    Spawned(SpawnPool),
     Threads(Vec<std::thread::JoinHandle<Result<()>>>),
     External,
 }
@@ -231,8 +482,8 @@ struct RegionMeta {
     foreign: Vec<(u32, u32)>,
 }
 
-struct Master<'a> {
-    opts: &'a DistOptions,
+struct Master {
+    opts: DistOptions,
     dec: Decomposition,
     metas: Vec<RegionMeta>,
     conns: Vec<Conn>,
@@ -241,6 +492,15 @@ struct Master<'a> {
     gap: Option<GapState>,
     metrics: RunMetrics,
     backend: Backend,
+    /// Restarts consumed so far, per worker (`opts.max_worker_restarts`
+    /// is the budget for each).
+    restarts: Vec<u32>,
+    /// Open store for per-sweep [`MasterCheckpoint`] writes, when
+    /// checkpointing is on.
+    ck_store: Option<FileStore>,
+    /// Scratch streaming directory this solve created (and owns):
+    /// removed on shutdown.
+    scratch: Option<PathBuf>,
 }
 
 /// Solve `g` under `partition` on distributed workers. Runs the
@@ -263,10 +523,52 @@ pub fn solve_distributed(
         !opts.seq.check_invariants,
         "check_invariants needs resident regions; unsupported in distributed mode"
     );
+    ensure!(
+        opts.resume_from.is_none() || !opts.deterministic,
+        "--resume-from is parallel-mode only (the oracle mode has no checkpoint barrier)"
+    );
+    let mut opts = opts.clone();
+    if opts.deterministic {
+        // the oracle mode stays exactly PR-6 fail-fast: no recovery,
+        // no scratch stores, no checkpoints
+        opts.max_worker_restarts = 0;
+        opts.checkpoint = None;
+    }
+    if opts.resume_from.is_some() && !matches!(opts.workers, WorkerSpec::Connect(_)) {
+        ensure!(
+            opts.worker_streaming.is_some(),
+            "--resume-from needs --streaming pointing at the workers' stores \
+             from the checkpointed run"
+        );
+    }
+    // Recovery needs worker shards to survive a crash, which only
+    // streaming-backed workers provide: force a scratch store for
+    // spawned workers when none was configured (and default the master
+    // checkpoint next to it).
+    let mut scratch: Option<PathBuf> = None;
+    if opts.max_worker_restarts > 0
+        && matches!(opts.workers, WorkerSpec::Spawn(_))
+        && opts.worker_streaming.is_none()
+    {
+        let dir =
+            std::env::temp_dir().join(format!("armincut_dist_{}", std::process::id()));
+        if opts.checkpoint.is_none() {
+            opts.checkpoint = Some(dir.join("master_ck"));
+        }
+        opts.worker_streaming = Some(dir.clone());
+        scratch = Some(dir);
+    }
     let t_total = Instant::now();
-    let mut master = Master::new(g, partition, opts)?;
-    let run = master.run();
+    let mut master = Master::new(g, partition, opts, scratch)?;
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| master.run()));
+    // teardown runs even when the sweep loop panicked, so children are
+    // reaped (not merely killed by the Children guard) and the scratch
+    // store is removed before the panic resumes
     let shutdown = master.shutdown();
+    let run = match run {
+        Ok(run) => run,
+        Err(payload) => std::panic::resume_unwind(payload),
+    };
     let cut = run?;
     shutdown?;
     let mut metrics = master.metrics;
@@ -281,30 +583,91 @@ pub fn solve_distributed(
     Ok(SolveResult { metrics, cut })
 }
 
-impl<'a> Master<'a> {
-    fn new(g: &Graph, partition: &Partition, opts: &'a DistOptions) -> Result<Master<'a>> {
-        let dec = Decomposition::new(g, partition, DistanceMode::Ard);
+impl Master {
+    fn new(
+        g: &Graph,
+        partition: &Partition,
+        opts: DistOptions,
+        scratch: Option<PathBuf>,
+    ) -> Result<Master> {
+        let mut dec = Decomposition::new(g, partition, DistanceMode::Ard);
         let k = dec.parts.len();
-        let metrics = RunMetrics {
+        let mut metrics = RunMetrics {
             shared_mem_bytes: dec.shared.memory_bytes(),
             max_region_mem_bytes: dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0),
             ..RunMetrics::default()
         };
+
+        // ---- optional restart from a master checkpoint ------------------
+        let resume = match &opts.resume_from {
+            Some(dir) => {
+                let mut st = FileStore::create(dir.clone())?;
+                Some(MasterCheckpoint::load(&mut st).context("load master checkpoint")?)
+            }
+            None => None,
+        };
+        let mut region_flow = vec![0; k];
+        if let Some(ck) = &resume {
+            ensure!(
+                ck.d_inf == dec.shared.d_inf
+                    && ck.d.len() == dec.shared.d.len()
+                    && ck.excess.len() == dec.shared.excess.len()
+                    && ck.arc_cap_fw.len() == dec.shared.arcs.len()
+                    && ck.arc_cap_bw.len() == dec.shared.arcs.len()
+                    && ck.region_flow.len() == k
+                    && ck.region_active.len() == k
+                    && ck.region_pending_gap.len() == k,
+                "checkpoint does not match this graph/partition (resume needs the \
+                 identical instance and region topology)"
+            );
+            dec.shared.d.copy_from_slice(&ck.d);
+            dec.shared.excess.copy_from_slice(&ck.excess);
+            for (i, sa) in dec.shared.arcs.iter_mut().enumerate() {
+                sa.cap_fw = ck.arc_cap_fw[i];
+                sa.cap_bw = ck.arc_cap_bw[i];
+            }
+            for (r, part) in dec.parts.iter_mut().enumerate() {
+                part.active = ck.region_active[r];
+                part.pending_gap = ck.region_pending_gap[r];
+            }
+            region_flow.copy_from_slice(&ck.region_flow);
+            metrics.sweeps = u32::try_from(ck.sweep).unwrap_or(u32::MAX);
+        }
         let gap = opts.seq.global_gap.then(|| GapState::new(&dec, false));
 
-        let (mut conns, backend) = connect_workers(opts, k)?;
+        let (mut conns, backend) = connect_workers(&opts, k)?;
         let n = conns.len();
         ensure!(n >= 1, "no workers connected");
+        let mut ids = Vec::with_capacity(n);
         for (i, conn) in conns.iter_mut().enumerate() {
             match conn.recv().with_context(|| format!("worker {i} handshake"))? {
-                Msg::Hello { proto } => ensure!(
-                    proto == PROTO_VERSION as u32,
-                    "worker {i} speaks protocol {proto}, master {PROTO_VERSION}"
-                ),
+                Msg::Hello { proto, worker } => {
+                    ensure!(
+                        proto == PROTO_VERSION as u32,
+                        "worker {i} speaks protocol {proto}, master {PROTO_VERSION}"
+                    );
+                    ids.push(worker);
+                }
                 other => {
                     return Err(err!("worker {i}: expected Hello, got {}", other.name()))
                 }
             }
+        }
+        // spawned/thread workers echo their master-assigned id: reorder
+        // the accept-ordered connections so conns[i] IS worker i (child
+        // i, store directory worker_<i>) — recovery must know which
+        // process and store a dead connection belongs to
+        if ids.iter().all(|&w| w != u32::MAX) {
+            let mut slots: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
+            for (conn, &w) in conns.into_iter().zip(&ids) {
+                let w = w as usize;
+                ensure!(
+                    w < n && slots[w].is_none(),
+                    "worker ids are not a permutation of 0..{n}"
+                );
+                slots[w] = Some(conn);
+            }
+            conns = slots.into_iter().flatten().collect();
         }
 
         // contiguous balanced shards: region r → worker r·n/k
@@ -324,18 +687,31 @@ impl<'a> Master<'a> {
             CoreKind::Dinic => 0,
             CoreKind::Bk => 1,
         };
+        let ck_store = match &opts.checkpoint {
+            Some(dir) => {
+                Some(FileStore::create(dir.clone()).context("create checkpoint store")?)
+            }
+            None => None,
+        };
+        let resuming = resume.is_some();
         let mut master = Master {
             opts,
             dec,
             metas,
             conns,
             conn_of_region,
-            region_flow: vec![0; k],
+            region_flow,
             gap,
             metrics,
             backend,
+            restarts: vec![0; n],
+            ck_store,
+            scratch,
         };
         for w in 0..n {
+            // in both modes the master keeps only shells; on resume the
+            // region bodies are dropped unsent — every worker reloads
+            // its shard from its own store at the checkpointed barrier
             let mut regions = Vec::new();
             for r in 0..k {
                 if master.conn_of_region[r] == w {
@@ -348,18 +724,157 @@ impl<'a> Master<'a> {
                     ));
                 }
             }
-            let assign = Msg::AssignShard(Box::new(AssignShard {
-                d_inf: master.dec.shared.d_inf,
-                algorithm: 0, // ARD (ensured by the caller)
-                core,
-                warm_start: master.opts.seq.warm_start,
-                regions,
-            }));
             let t = Timer::start();
-            master.conns[w].send(&assign)?;
+            if resuming {
+                drop(regions);
+                let msg = Msg::Resume(Box::new(master.compose_resume(w)));
+                master.conns[w].send(&msg)?;
+                match master.conns[w].recv()? {
+                    Msg::Heartbeat { .. } => {}
+                    other => {
+                        return Err(err!(
+                            "worker {w}: expected Heartbeat (resume ack), got {}",
+                            other.name()
+                        ))
+                    }
+                }
+            } else {
+                let assign = Msg::AssignShard(Box::new(AssignShard {
+                    d_inf: master.dec.shared.d_inf,
+                    algorithm: 0, // ARD (ensured by the caller)
+                    core,
+                    warm_start: master.opts.seq.warm_start,
+                    regions,
+                }));
+                master.conns[w].send(&assign)?;
+            }
             t.stop(&mut master.metrics.t_sync);
         }
         Ok(master)
+    }
+
+    /// The [`ResumeShard`] for worker `w`: its region ids in the
+    /// original assignment (= store slot) order, plus the solver knobs
+    /// `AssignShard` carried, at the current sweep barrier.
+    fn compose_resume(&self, w: usize) -> ResumeShard {
+        ResumeShard {
+            d_inf: self.dec.shared.d_inf,
+            algorithm: 0, // ARD (ensured by the caller)
+            core: match self.opts.seq.core {
+                CoreKind::Dinic => 0,
+                CoreKind::Bk => 1,
+            },
+            warm_start: self.opts.seq.warm_start,
+            sweep: self.metrics.sweeps as u64,
+            regions: (0..self.dec.parts.len())
+                .filter(|&r| self.conn_of_region[r] == w)
+                .map(|r| r as u32)
+                .collect(),
+        }
+    }
+
+    /// The whole-sweep deadline (satellite of `--dist-timeout`): a
+    /// worker can evade the per-read timeout forever by trickling
+    /// heartbeats, but not this.
+    fn sweep_timeout(&self) -> Duration {
+        self.opts
+            .sweep_timeout
+            .unwrap_or_else(|| self.opts.io_timeout.checked_mul(4).unwrap_or(Duration::MAX))
+    }
+
+    /// Snapshot the master's boundary state at the sweep barrier
+    /// (labels, excess, residual arc capacities, the accrued-flow
+    /// ledger, activity) into the checkpoint store. No-op when
+    /// checkpointing is off.
+    fn write_checkpoint(&mut self) -> Result<()> {
+        let Some(store) = self.ck_store.as_mut() else {
+            return Ok(());
+        };
+        let ck = MasterCheckpoint {
+            sweep: self.metrics.sweeps as u64,
+            d_inf: self.dec.shared.d_inf,
+            d: self.dec.shared.d.clone(),
+            excess: self.dec.shared.excess.clone(),
+            arc_cap_fw: self.dec.shared.arcs.iter().map(|a| a.cap_fw).collect(),
+            arc_cap_bw: self.dec.shared.arcs.iter().map(|a| a.cap_bw).collect(),
+            region_flow: self.region_flow.clone(),
+            region_active: self.dec.parts.iter().map(|p| p.active).collect(),
+            region_pending_gap: self.dec.parts.iter().map(|p| p.pending_gap).collect(),
+        };
+        let bytes = ck.save(store, true).context("write master checkpoint")?;
+        self.metrics.checkpoint_bytes += bytes;
+        Ok(())
+    }
+
+    /// Consume one restart from worker `ci`'s budget and bring a fresh
+    /// incarnation up: respawn the loopback child (or reconnect to the
+    /// external peer with backoff), handshake, re-attach the shard with
+    /// [`Msg::Resume`], and await the readiness heartbeat. On return
+    /// the connection at `ci` is live again; the caller re-issues
+    /// whatever the dead worker still owed from its already-composed
+    /// snapshots.
+    fn recover(&mut self, ci: usize, kind: FailureKind) -> Result<()> {
+        let failure =
+            WorkerFailure { worker: ci, peer: self.conns[ci].peer.clone(), kind };
+        let budget = self.opts.max_worker_restarts;
+        if budget == 0 {
+            return Err(err!("{failure}"));
+        }
+        if self.restarts[ci] >= budget {
+            return Err(err!("{failure}; restart budget of {budget} exhausted"));
+        }
+        self.restarts[ci] += 1;
+        self.metrics.worker_restarts += 1;
+        let t = Timer::start();
+        let new_conn = match &mut self.backend {
+            Backend::Spawned(pool) => pool
+                .respawn(ci, self.opts.io_timeout)
+                .with_context(|| format!("{failure}; respawn failed"))?,
+            Backend::External => reconnect_external(&self.conns[ci].peer, self.opts.io_timeout)
+                .with_context(|| format!("{failure}; reconnect failed"))?,
+            Backend::Threads(_) => {
+                return Err(err!("{failure}; thread workers are not restartable"))
+            }
+        };
+        // retire the old connection, keeping its wire accounting
+        let old = std::mem::replace(&mut self.conns[ci], new_conn);
+        self.metrics.dist_msgs_sent += old.msgs_sent;
+        self.metrics.dist_msgs_recv += old.msgs_recv;
+        self.metrics.wire_bytes_sent += old.wire_sent;
+        self.metrics.wire_bytes_recv += old.wire_recv;
+        self.metrics.wire_raw_bytes += old.raw_bytes;
+        drop(old);
+        match self.conns[ci].recv().with_context(|| format!("worker {ci} re-handshake"))? {
+            Msg::Hello { proto, worker } => {
+                ensure!(
+                    proto == PROTO_VERSION as u32,
+                    "restarted worker {ci} speaks protocol {proto}, master {PROTO_VERSION}"
+                );
+                ensure!(
+                    worker == u32::MAX || worker == ci as u32,
+                    "restarted worker announced id {worker}, expected {ci}"
+                );
+            }
+            other => {
+                return Err(err!(
+                    "restarted worker {ci}: expected Hello, got {}",
+                    other.name()
+                ))
+            }
+        }
+        let msg = Msg::Resume(Box::new(self.compose_resume(ci)));
+        self.conns[ci].send(&msg)?;
+        match self.conns[ci].recv()? {
+            Msg::Heartbeat { .. } => {}
+            other => {
+                return Err(err!(
+                    "restarted worker {ci}: expected Heartbeat (resume ack), got {}",
+                    other.name()
+                ))
+            }
+        }
+        t.stop(&mut self.metrics.t_recovery);
+        Ok(())
     }
 
     /// The solve loop: parallel Algorithm-3 sweeps by default, the
@@ -474,6 +989,9 @@ impl<'a> Master<'a> {
                 }
                 tg.stop(&mut self.metrics.t_gap);
             }
+            // the sweep barrier: master state is consistent with every
+            // worker's stored pages — snapshot it for --resume-from
+            self.write_checkpoint()?;
         }
 
         // ---- extra label-only sweeps to extract the cut (§5.3) ---------
@@ -502,29 +1020,40 @@ impl<'a> Master<'a> {
     /// Collect the cut from the workers, then finalise flow/convergence
     /// in the metrics. Shared tail of both modes.
     fn collect_cut(&mut self, converged: bool) -> Result<Vec<bool>> {
+        let sweep_len = self.sweep_timeout();
+        let io = self.opts.io_timeout;
         let mut sides = vec![true; self.dec.n_global];
         for r in 0..self.dec.parts.len() {
             let ci = self.conn_of_region[r];
-            let t = Timer::start();
-            self.conns[ci].send(&Msg::FetchCut { region: r as u32 })?;
-            let msg = self.conns[ci].recv()?;
-            t.stop(&mut self.metrics.t_sync);
-            match msg {
-                Msg::CutResult { region, src_side } if region == r as u32 => {
-                    for gv in src_side {
-                        ensure!(
-                            (gv as usize) < sides.len(),
-                            "worker {ci}: cut vertex {gv} out of range"
-                        );
-                        sides[gv as usize] = false;
+            // FetchCut is a read-only query against the worker's stored
+            // labels, so after a failure it can simply be re-asked of
+            // the recovered incarnation
+            let src_side = loop {
+                let t = Timer::start();
+                let res = self
+                    .conns[ci]
+                    .try_send(&Msg::FetchCut { region: r as u32 })
+                    .and_then(|()| {
+                        self.conns[ci].try_recv_deadline(Instant::now() + sweep_len, sweep_len, io)
+                    });
+                t.stop(&mut self.metrics.t_sync);
+                match res {
+                    Ok(Msg::CutResult { region, src_side }) if region == r as u32 => {
+                        break src_side
                     }
+                    Ok(other) => self.recover(
+                        ci,
+                        FailureKind::Protocol(format!(
+                            "expected CutResult for region {r}, got {}",
+                            other.name()
+                        )),
+                    )?,
+                    Err(kind) => self.recover(ci, kind)?,
                 }
-                other => {
-                    return Err(err!(
-                        "worker {ci}: expected CutResult for region {r}, got {}",
-                        other.name()
-                    ))
-                }
+            };
+            for gv in src_side {
+                ensure!((gv as usize) < sides.len(), "worker {ci}: cut vertex {gv} out of range");
+                sides[gv as usize] = false;
             }
         }
         self.metrics.flow = self.dec.base_flow + self.region_flow.iter().sum::<Cap>();
@@ -593,76 +1122,148 @@ impl<'a> Master<'a> {
         for &r in regions {
             groups[self.conn_of_region[r]].push(r);
         }
-        // send every batch before reading any reply: a worker never
-        // writes until it has read its whole batch, so draining replies
-        // in connection order afterwards cannot deadlock
-        for ci in 0..groups.len() {
-            if groups[ci].is_empty() {
-                continue;
-            }
-            let reqs: Vec<DischargeReq> = groups[ci]
-                .clone()
-                .into_iter()
-                .map(|r| self.compose_req(r, relabel_only, max_stage))
-                .collect();
-            let t = Timer::start();
-            self.conns[ci].send(&Msg::DischargeBatch(reqs))?;
-            t.stop(&mut self.metrics.t_sync);
-            self.metrics.dist_batches += 1;
-        }
-        // drain replies in connection order, folding each worker's
-        // deltas into the fusion round as they arrive so fusion
-        // overlaps with waiting on slower workers
+        // Compose every batch ONCE, up front. compose_req is
+        // destructive — it consumes the owned boundary excess and the
+        // pending-gap marks — so a retry after a worker failure must
+        // re-send these exact cached snapshots, never recompose. That
+        // is also what makes the retry exactly-once: the re-issued
+        // batch is the same deterministic function of the same inputs.
+        let batches: Vec<Option<Msg>> = groups
+            .iter()
+            .map(|g| {
+                (!g.is_empty()).then(|| {
+                    let reqs: Vec<DischargeReq> = g
+                        .iter()
+                        .map(|&r| self.compose_req(r, relabel_only, max_stage))
+                        .collect();
+                    Msg::DischargeBatch(reqs)
+                })
+            })
+            .collect();
+        let sweep_len = self.sweep_timeout();
+        let io = self.opts.io_timeout;
+        let n = self.conns.len();
+        let mut sent = vec![false; n];
+        let mut folded = vec![false; n];
         let mut round = FusionRound::new();
         let mut increase = 0u64;
-        for (ci, group) in groups.iter().enumerate() {
-            if group.is_empty() {
-                continue;
-            }
-            let t = Timer::start();
-            let rsps = match self.conns[ci].recv()? {
-                Msg::DeltaBatch(rsps) => rsps,
-                other => {
-                    return Err(err!(
-                        "worker {}: expected DeltaBatch, got {}",
-                        self.conns[ci].peer,
-                        other.name()
-                    ))
+        let mut deadline = Instant::now() + sweep_len;
+        // Any failure recovers the worker, resets the sweep deadline,
+        // and restarts the loop: the recovered worker's batch is marked
+        // unsent and re-issued, while workers already folded are
+        // skipped — a reply is one atomic DeltaBatch frame, so a failed
+        // worker contributed zero deltas and folding stays
+        // exactly-once per region per sweep.
+        'sweep: loop {
+            // send every pending batch before reading any reply: a
+            // worker never writes until it has read its whole batch, so
+            // draining replies in connection order cannot deadlock
+            for ci in 0..n {
+                let Some(batch) = &batches[ci] else { continue };
+                if sent[ci] {
+                    continue;
                 }
-            };
-            t.stop(&mut self.metrics.t_sync);
-            ensure!(
-                rsps.len() == group.len(),
-                "worker {} answered {} deltas for a batch of {}",
-                self.conns[ci].peer,
-                rsps.len(),
-                group.len()
-            );
-            let tm = Timer::start();
-            for (&r, rsp) in group.iter().zip(&rsps) {
-                ensure!(
-                    rsp.delta.region == r as u32,
-                    "worker {} answered for region {} instead of {r}",
-                    self.conns[ci].peer,
-                    rsp.delta.region
-                );
-                if !relabel_only {
-                    self.metrics.discharges += 1;
-                    self.metrics.core_grow += rsp.grow;
-                    self.metrics.core_augment += rsp.augment;
-                    self.metrics.core_adopt += rsp.adopt;
+                let t = Timer::start();
+                let res = self.conns[ci].try_send(batch);
+                t.stop(&mut self.metrics.t_sync);
+                match res {
+                    Ok(()) => {
+                        sent[ci] = true;
+                        self.metrics.dist_batches += 1;
+                    }
+                    Err(kind) => {
+                        self.recover(ci, kind)?;
+                        deadline = Instant::now() + sweep_len;
+                        continue 'sweep;
+                    }
                 }
-                round.add(&mut self.dec.shared, &rsp.delta);
-                self.dec.parts[r].active = rsp.delta.active;
-                self.region_flow[r] = rsp.delta.flow_to_sink;
-                increase += rsp.relabel_increase;
             }
-            tm.stop(&mut self.metrics.t_msg);
+            // drain replies in connection order, folding each worker's
+            // deltas into the fusion round as they arrive so fusion
+            // overlaps with waiting on slower workers
+            for ci in 0..n {
+                if groups[ci].is_empty() || folded[ci] {
+                    continue;
+                }
+                let t = Timer::start();
+                let res = self.conns[ci].try_recv_deadline(deadline, sweep_len, io);
+                t.stop(&mut self.metrics.t_sync);
+                let outcome = res.and_then(|msg| {
+                    self.fold_reply(&groups[ci], msg, relabel_only, &mut round)
+                });
+                match outcome {
+                    Ok(inc) => {
+                        increase += inc;
+                        folded[ci] = true;
+                    }
+                    Err(kind) => {
+                        self.recover(ci, kind)?;
+                        sent[ci] = false;
+                        deadline = Instant::now() + sweep_len;
+                        continue 'sweep;
+                    }
+                }
+            }
+            break;
         }
         // the round's barrier: the α-filter needs every worker's labels
         let tm = Timer::start();
         let out = round.finish(&mut self.dec.shared);
         self.metrics.msg_bytes += out.bytes;
+        tm.stop(&mut self.metrics.t_msg);
+        Ok(increase)
+    }
+
+    /// Validate one worker's [`Msg::DeltaBatch`] and fold it into the
+    /// fusion round. Validation completes before any state is touched:
+    /// a rejected reply leaves the round (and shared state) unchanged,
+    /// so recovering the worker and re-issuing its batch stays
+    /// exactly-once.
+    fn fold_reply(
+        &mut self,
+        group: &[usize],
+        msg: Msg,
+        relabel_only: bool,
+        round: &mut FusionRound,
+    ) -> std::result::Result<u64, FailureKind> {
+        let rsps = match msg {
+            Msg::DeltaBatch(rsps) => rsps,
+            other => {
+                return Err(FailureKind::Protocol(format!(
+                    "expected DeltaBatch, got {}",
+                    other.name()
+                )))
+            }
+        };
+        if rsps.len() != group.len() {
+            return Err(FailureKind::Protocol(format!(
+                "answered {} deltas for a batch of {}",
+                rsps.len(),
+                group.len()
+            )));
+        }
+        for (&r, rsp) in group.iter().zip(&rsps) {
+            if rsp.delta.region != r as u32 {
+                return Err(FailureKind::Protocol(format!(
+                    "answered for region {} instead of {r}",
+                    rsp.delta.region
+                )));
+            }
+        }
+        let tm = Timer::start();
+        let mut increase = 0u64;
+        for (&r, rsp) in group.iter().zip(&rsps) {
+            if !relabel_only {
+                self.metrics.discharges += 1;
+                self.metrics.core_grow += rsp.grow;
+                self.metrics.core_augment += rsp.augment;
+                self.metrics.core_adopt += rsp.adopt;
+            }
+            round.add(&mut self.dec.shared, &rsp.delta);
+            self.dec.parts[r].active = rsp.delta.active;
+            self.region_flow[r] = rsp.delta.flow_to_sink;
+            increase += rsp.relabel_increase;
+        }
         tm.stop(&mut self.metrics.t_msg);
         Ok(increase)
     }
@@ -738,28 +1339,34 @@ impl<'a> Master<'a> {
     }
 
     /// Orderly teardown: Shutdown to every worker, then reap processes /
-    /// join threads, surfacing worker-side errors.
+    /// join threads, surfacing worker-side errors. Finally removes the
+    /// recovery scratch directory (if this solve forced one).
     fn shutdown(&mut self) -> Result<()> {
         for conn in &mut self.conns {
             let _ = conn.send(&Msg::Shutdown);
         }
-        match std::mem::replace(&mut self.backend, Backend::External) {
-            Backend::Spawned(mut children) => {
-                children.reap(Duration::from_secs(10));
+        let res = match std::mem::replace(&mut self.backend, Backend::External) {
+            Backend::Spawned(mut pool) => {
+                pool.children.reap(Duration::from_secs(10));
                 Ok(())
             }
             Backend::Threads(handles) => {
+                let mut res = Ok(());
                 for (i, h) in handles.into_iter().enumerate() {
                     match h.join() {
                         Ok(Ok(())) => {}
-                        Ok(Err(e)) => return Err(err!("worker thread {i}: {e}")),
-                        Err(_) => return Err(err!("worker thread {i} panicked")),
+                        Ok(Err(e)) => res = Err(err!("worker thread {i}: {e}")),
+                        Err(_) => res = Err(err!("worker thread {i} panicked")),
                     }
                 }
-                Ok(())
+                res
             }
             Backend::External => Ok(()),
+        };
+        if let Some(dir) = self.scratch.take() {
+            let _ = std::fs::remove_dir_all(&dir);
         }
+        res
     }
 }
 
@@ -772,55 +1379,49 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
     match &opts.workers {
         WorkerSpec::Spawn(n) => {
             let n = (*n).clamp(1, k.max(1));
+            for &(i, ref spec) in &opts.worker_inject {
+                ensure!(i < n, "--inject-worker index {i} out of range (workers 0..{n})");
+                Inject::parse(spec)?;
+            }
             let exe = std::env::current_exe().context("locate armincut executable")?;
             let listener =
                 TcpListener::bind("127.0.0.1:0").context("bind master listener")?;
             let addr = listener.local_addr().context("master listener address")?;
             listener.set_nonblocking(true).context("set listener nonblocking")?;
-            let mut children = Children(Vec::new());
+            let args: Vec<Vec<std::ffi::OsString>> = (0..n)
+                .map(|i| {
+                    let mut a: Vec<std::ffi::OsString> = Vec::new();
+                    if let Some(dir) = worker_dir(i) {
+                        a.push("--streaming".into());
+                        a.push(dir.into());
+                    }
+                    if !opts.worker_compress {
+                        a.push("--no-compress".into());
+                    }
+                    a
+                })
+                .collect();
+            let mut pool = SpawnPool {
+                children: Children(Vec::new()),
+                exe,
+                listener,
+                addr: addr.to_string(),
+                args,
+            };
             for i in 0..n {
-                let mut cmd = std::process::Command::new(&exe);
-                cmd.arg("worker").arg("--connect").arg(addr.to_string());
-                if let Some(dir) = worker_dir(i) {
-                    cmd.arg("--streaming").arg(dir);
-                }
-                if !opts.worker_compress {
-                    cmd.arg("--no-compress");
-                }
-                children.0.push(
-                    cmd.spawn().with_context(|| format!("spawn worker {i}"))?,
-                );
+                let extra: Vec<std::ffi::OsString> = opts
+                    .worker_inject
+                    .iter()
+                    .filter(|(w, _)| *w == i)
+                    .flat_map(|(_, spec)| ["--inject".into(), spec.as_str().into()])
+                    .collect();
+                pool.spawn_worker(i, &extra)?;
             }
             let mut conns = Vec::with_capacity(n);
-            // the accept deadline follows --dist-timeout, not a
-            // hard-coded constant
-            let deadline = Instant::now() + opts.io_timeout;
             while conns.len() < n {
-                match listener.accept() {
-                    Ok((stream, peer)) => {
-                        stream.set_nonblocking(false).context("worker stream mode")?;
-                        conns.push(Conn::new(stream, peer.to_string(), opts.io_timeout)?);
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        for (i, c) in children.0.iter_mut().enumerate() {
-                            if let Ok(Some(status)) = c.try_wait() {
-                                return Err(err!(
-                                    "worker {i} exited before connecting ({status})"
-                                ));
-                            }
-                        }
-                        ensure!(
-                            Instant::now() < deadline,
-                            "timed out waiting for {} worker connection(s) after {:?}",
-                            n - conns.len(),
-                            opts.io_timeout
-                        );
-                        std::thread::sleep(Duration::from_millis(20));
-                    }
-                    Err(e) => return Err(err!("accept worker connection: {e}")),
-                }
+                conns.push(pool.accept(opts.io_timeout)?);
             }
-            Ok((conns, Backend::Spawned(children)))
+            Ok((conns, Backend::Spawned(pool)))
         }
         WorkerSpec::Threads(n) => {
             let n = (*n).clamp(1, k.max(1));
@@ -833,7 +1434,8 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
                 let wo = WorkerOptions {
                     streaming_dir: worker_dir(i),
                     streaming_compress: opts.worker_compress,
-                    fail_after: None,
+                    worker_id: i as u32,
+                    inject: None,
                 };
                 let handle = std::thread::Builder::new()
                     .name(format!("armincut-worker-{i}"))
@@ -861,5 +1463,35 @@ fn connect_workers(opts: &DistOptions, k: usize) -> Result<(Vec<Conn>, Backend)>
             }
             Ok((conns, Backend::External))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: a master panic mid-sweep must not leak spawned worker
+    /// processes — the [`Children`] guard kills them on unwind.
+    #[test]
+    fn children_guard_reaps_on_unwind() {
+        // a stand-in long-lived child; skip quietly where `sleep` is absent
+        let Ok(child) = std::process::Command::new("sleep").arg("30").spawn() else {
+            return;
+        };
+        let pid = child.id();
+        let alive = |pid: u32| {
+            std::process::Command::new("kill")
+                .args(["-0", &pid.to_string()])
+                .status()
+                .map(|s| s.success())
+                .unwrap_or(false)
+        };
+        assert!(alive(pid));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _guard = Children(vec![child]);
+            panic!("boom");
+        }));
+        assert!(result.is_err());
+        assert!(!alive(pid), "child should be reaped on unwind");
     }
 }

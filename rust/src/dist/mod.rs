@@ -21,7 +21,10 @@
 //!   parallel-sweep framing: every region a worker discharges this
 //!   round, in one round-trip, with no fusion ack (the next batch is
 //!   the sweep barrier);
-//! * [`proto::Msg::Shutdown`] — orderly teardown.
+//! * [`proto::Msg::Shutdown`] — orderly teardown;
+//! * [`proto::Msg::Heartbeat`] / [`proto::Msg::Resume`] — the proto-v3
+//!   recovery frames: keep-alives from a busy worker, and re-attaching
+//!   a restarted worker to its store-backed shard.
 //!
 //! The master ([`master`]) has two sweep modes. The **parallel
 //! default** runs the paper's Algorithm 3: all regions' sync-in
@@ -43,9 +46,17 @@
 //! Every exchange is measured: `RunMetrics` reports messages
 //! sent/received, wire bytes compact-vs-raw, and the wall time the
 //! master spent synchronizing (schema 4), plus batch round-trips,
-//! peak in-flight discharges and parallel-sweep wall time (schema 5) —
-//! the real numbers behind the paper's "interaction between the
-//! regions is considered expensive" premise.
+//! peak in-flight discharges and parallel-sweep wall time (schema 5),
+//! plus worker restarts, checkpoint bytes and recovery wall time
+//! (schema 6) — the real numbers behind the paper's "interaction
+//! between the regions is considered expensive" premise.
+//!
+//! The parallel mode is fault tolerant: the master checkpoints its
+//! boundary state at every sweep barrier, detects worker failure
+//! (dead socket, per-sweep deadline, corrupt or ill-typed reply) and
+//! restarts the worker within a per-worker budget — see
+//! [`master`] and the "Failure model & recovery" section of
+//! ARCHITECTURE.md.
 
 pub mod master;
 pub mod proto;

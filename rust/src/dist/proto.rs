@@ -32,6 +32,15 @@
 //! deterministic mode — the worker does *not* wait for a fusion ack:
 //! the next batch is the implicit sweep barrier, so a sweep costs one
 //! round-trip per worker instead of three frames per region.
+//!
+//! Protocol version 3 adds the recovery frames: [`Msg::Resume`] re-
+//! attaches a restarted worker to the shard it already holds in its
+//! region store (metadata only — no region bodies cross the wire
+//! twice), and [`Msg::Heartbeat`] is both the readiness ack a resumed
+//! worker sends back and a keepalive a busy worker may trickle while a
+//! long discharge runs. [`Msg::Hello`] now carries the worker id the
+//! master assigned at spawn time, so the master can map a connection
+//! back to the worker's store directory when it has to respawn it.
 
 use crate::coordinator::fuse::RegionBoundaryDelta;
 use crate::core::graph::Cap;
@@ -45,7 +54,9 @@ use std::io::{Read, Write};
 pub const FRAME_MAGIC: [u8; 4] = *b"ARMD";
 /// Bumped on any message-layout change; peers reject other versions.
 /// Version 2: batched sweep frames (`DischargeBatch`/`DeltaBatch`).
-pub const PROTO_VERSION: u16 = 2;
+/// Version 3: recovery frames (`Heartbeat`/`Resume`) and the worker id
+/// in `Hello`, so a restarted worker can rejoin mid-solve.
+pub const PROTO_VERSION: u16 = 3;
 /// Fixed header size preceding the payload.
 pub const FRAME_HEADER_LEN: usize = 16;
 /// Upper bound on a single payload (a shard assignment of a huge
@@ -153,14 +164,35 @@ pub struct DeltaRsp {
     pub relabel_increase: u64,
 }
 
-/// The protocol messages. Master → worker: `AssignShard`, `Discharge`,
-/// `DischargeBatch`, `FuseResult`, `FetchCut`, `Shutdown`. Worker →
-/// master: `Hello`, `BoundaryDelta`, `DeltaBatch`, `CutResult`,
-/// `Abort`.
+/// Re-attach a restarted worker to a shard it was assigned before: the
+/// same metadata as [`AssignShard`] but region *ids* only — the bodies
+/// (with all their accrued interior flow) are reloaded from the
+/// worker's own region store, page slot `i` holding `regions[i]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResumeShard {
+    pub d_inf: u32,
+    /// 0 = ARD, 1 = PRD.
+    pub algorithm: u8,
+    /// 0 = Dinic, 1 = BK.
+    pub core: u8,
+    pub warm_start: bool,
+    /// Sweep counter at the barrier the master is resuming from.
+    pub sweep: u64,
+    /// Global region ids in the original assignment (= store slot)
+    /// order.
+    pub regions: Vec<u32>,
+}
+
+/// The protocol messages. Master → worker: `AssignShard`, `Resume`,
+/// `Discharge`, `DischargeBatch`, `FuseResult`, `FetchCut`,
+/// `Shutdown`. Worker → master: `Hello`, `BoundaryDelta`, `DeltaBatch`,
+/// `CutResult`, `Abort`. Either direction: `Heartbeat`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Msg {
     /// Handshake, sent by the worker immediately after connecting.
-    Hello { proto: u32 },
+    /// `worker` is the id the master assigned at spawn time
+    /// (`--worker-id`), or `u32::MAX` for externally started workers.
+    Hello { proto: u32, worker: u32 },
     AssignShard(Box<AssignShard>),
     Discharge(Box<DischargeReq>),
     BoundaryDelta(Box<DeltaRsp>),
@@ -183,6 +215,14 @@ pub enum Msg {
     Shutdown,
     /// Fatal worker-side failure, surfaced as the master's error.
     Abort { reason: String },
+    /// Liveness. A resumed worker acks [`Msg::Resume`] with the
+    /// checkpoint sweep in `nonce`; a busy worker may trickle
+    /// heartbeats mid-discharge (the master skips them, bounded by its
+    /// per-sweep deadline, never by the per-read timeout alone).
+    Heartbeat { nonce: u64 },
+    /// Re-attach a restarted worker to its stored shard (proto v3).
+    /// Acked by one [`Msg::Heartbeat`] once every page decoded.
+    Resume(Box<ResumeShard>),
 }
 
 const KIND_HELLO: u8 = 1;
@@ -196,6 +236,8 @@ const KIND_SHUTDOWN: u8 = 8;
 const KIND_ABORT: u8 = 9;
 const KIND_DISCHARGE_BATCH: u8 = 10;
 const KIND_DELTA_BATCH: u8 = 11;
+const KIND_HEARTBEAT: u8 = 12;
+const KIND_RESUME: u8 = 13;
 
 fn enc_flows(e: &mut Enc, xs: &[(u32, bool, Cap)]) {
     e.u64(xs.len() as u64);
@@ -339,6 +381,8 @@ impl Msg {
             Msg::CutResult { .. } => KIND_CUT,
             Msg::Shutdown => KIND_SHUTDOWN,
             Msg::Abort { .. } => KIND_ABORT,
+            Msg::Heartbeat { .. } => KIND_HEARTBEAT,
+            Msg::Resume(_) => KIND_RESUME,
         }
     }
 
@@ -356,12 +400,17 @@ impl Msg {
             Msg::CutResult { .. } => "CutResult",
             Msg::Shutdown => "Shutdown",
             Msg::Abort { .. } => "Abort",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::Resume(_) => "Resume",
         }
     }
 
     fn encode(&self, e: &mut Enc) {
         match self {
-            Msg::Hello { proto } => e.u32(*proto),
+            Msg::Hello { proto, worker } => {
+                e.u32(*proto);
+                e.u32(*worker);
+            }
             Msg::AssignShard(a) => {
                 e.u32(a.d_inf);
                 e.u8(a.algorithm);
@@ -402,12 +451,21 @@ impl Msg {
                 e.u64(bytes.len() as u64);
                 e.bytes(bytes);
             }
+            Msg::Heartbeat { nonce } => e.u64(*nonce),
+            Msg::Resume(rs) => {
+                e.u32(rs.d_inf);
+                e.u8(rs.algorithm);
+                e.u8(rs.core);
+                e.u8(rs.warm_start as u8);
+                e.u64(rs.sweep);
+                e.u32_slice(&rs.regions);
+            }
         }
     }
 
     fn decode(kind: u8, d: &mut Dec) -> Option<Msg> {
         Some(match kind {
-            KIND_HELLO => Msg::Hello { proto: d.u32()? },
+            KIND_HELLO => Msg::Hello { proto: d.u32()?, worker: d.u32()? },
             KIND_ASSIGN => {
                 let d_inf = d.u32()?;
                 let algorithm = d.u8()?;
@@ -464,6 +522,15 @@ impl Msg {
                 let bytes = d.bytes(n)?;
                 Msg::Abort { reason: String::from_utf8_lossy(bytes).into_owned() }
             }
+            KIND_HEARTBEAT => Msg::Heartbeat { nonce: d.u64()? },
+            KIND_RESUME => Msg::Resume(Box::new(ResumeShard {
+                d_inf: d.u32()?,
+                algorithm: d.u8()?,
+                core: d.u8()?,
+                warm_start: d.u8()? != 0,
+                sweep: d.u64()?,
+                regions: d.u32_slice()?,
+            })),
             _ => return None,
         })
     }
@@ -562,7 +629,7 @@ mod tests {
 
     fn all_msgs() -> Vec<Msg> {
         vec![
-            Msg::Hello { proto: PROTO_VERSION as u32 },
+            Msg::Hello { proto: PROTO_VERSION as u32, worker: 1 },
             Msg::AssignShard(Box::new(AssignShard {
                 d_inf: 7,
                 algorithm: 0,
@@ -639,6 +706,23 @@ mod tests {
             Msg::CutResult { region: 1, src_side: vec![3, 4, 9, 200] },
             Msg::Shutdown,
             Msg::Abort { reason: "worker hit a corrupt page".into() },
+            Msg::Heartbeat { nonce: 41 },
+            Msg::Resume(Box::new(ResumeShard {
+                d_inf: 7,
+                algorithm: 0,
+                core: 1,
+                warm_start: true,
+                sweep: 12,
+                regions: vec![2, 3, 5],
+            })),
+            Msg::Resume(Box::new(ResumeShard {
+                d_inf: 1,
+                algorithm: 1,
+                core: 0,
+                warm_start: false,
+                sweep: 0,
+                regions: vec![],
+            })),
         ]
     }
 
@@ -670,16 +754,66 @@ mod tests {
     }
 
     #[test]
-    fn truncation_and_bit_flips_are_rejected() {
-        let mut buf = Vec::new();
-        write_msg(&mut buf, &Msg::FetchCut { region: 9 }).unwrap();
-        for cut in 0..buf.len() {
-            assert!(read_msg(&mut &buf[..cut]).is_err(), "cut at {cut} accepted");
+    fn truncation_and_bit_flips_are_rejected_for_every_kind() {
+        // every message kind (incl. the v2 batch and v3 recovery
+        // frames), every truncation boundary, every single-byte flip:
+        // always a typed error, never a panic or a mis-decode
+        for msg in all_msgs() {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &msg).unwrap();
+            for cut in 0..buf.len() {
+                assert!(
+                    read_msg(&mut &buf[..cut]).is_err(),
+                    "{}: cut at {cut} accepted",
+                    msg.name()
+                );
+            }
+            for byte in 0..buf.len() {
+                let mut b = buf.clone();
+                b[byte] ^= 0x10;
+                assert!(
+                    read_msg(&mut b.as_slice()).is_err(),
+                    "{}: flip at {byte} accepted",
+                    msg.name()
+                );
+            }
         }
-        for byte in 0..buf.len() {
-            let mut b = buf.clone();
-            b[byte] ^= 0x10;
-            assert!(read_msg(&mut b.as_slice()).is_err(), "flip at {byte} accepted");
+    }
+
+    #[test]
+    fn hostile_length_prefixes_cannot_over_allocate() {
+        // hand-craft CRC-valid frames whose element-count prefix claims
+        // 2^40 entries: decoding must trip the remaining-bytes guard
+        // (typed Malformed), never attempt the matching allocation
+        let mut hostile: Vec<(u8, Vec<u8>)> = Vec::new();
+        let mut e = Enc::new(Codec::Compact);
+        e.u64(1 << 40);
+        hostile.push((KIND_DISCHARGE_BATCH, e.into_bytes()));
+        let mut e = Enc::new(Codec::Compact);
+        e.u64(1 << 40);
+        hostile.push((KIND_DELTA_BATCH, e.into_bytes()));
+        let mut e = Enc::new(Codec::Compact);
+        e.u32(7); // d_inf
+        e.u8(0); // algorithm
+        e.u8(1); // core
+        e.u8(1); // warm_start
+        e.u64(3); // sweep
+        e.u64(1 << 40); // region-id count, way past the payload end
+        hostile.push((KIND_RESUME, e.into_bytes()));
+        for (kind, payload) in hostile {
+            let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+            frame.extend_from_slice(&FRAME_MAGIC);
+            frame.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+            frame.push(kind);
+            frame.push(Codec::Compact as u8);
+            frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            let crc = crc32(&[&frame[4..12], &payload]);
+            frame.extend_from_slice(&crc.to_le_bytes());
+            frame.extend_from_slice(&payload);
+            assert!(
+                matches!(read_msg(&mut frame.as_slice()), Err(ProtoError::Malformed(_))),
+                "kind {kind}: hostile length prefix not rejected as malformed"
+            );
         }
     }
 

@@ -21,11 +21,24 @@
 //! store ([`crate::store`]): every region is paged out after its round,
 //! so a worker holds **one resident region** regardless of shard size —
 //! the §5.3 memory bound survives distribution.
+//!
+//! Streaming also makes the worker *recoverable*: batch rounds *stage*
+//! their page write-backs and publish them only when the master's next
+//! command proves the reply was accepted, so any failure — a crash
+//! mid-batch, a stall past the sweep deadline, a rejected reply frame —
+//! leaves the store at the last completed sweep barrier. A restarted
+//! worker re-attaches with [`Msg::Resume`] — the shard is rebuilt from
+//! those pages — and acks with [`Msg::Heartbeat`]. `--inject` gives
+//! tests a deterministic fault plan ([`Inject`]: crash / stall /
+//! corrupt).
 
 use crate::coordinator::fuse::take_boundary_delta;
 use crate::coordinator::sequential::Algorithm;
 use crate::core::error::{Context, Result};
-use crate::dist::proto::{read_msg, write_msg, DeltaRsp, DischargeReq, Msg, PROTO_VERSION};
+use crate::dist::proto::{
+    read_msg, write_msg, DeltaRsp, DischargeReq, Msg, ResumeShard, FRAME_HEADER_LEN,
+    PROTO_VERSION,
+};
 use crate::ensure;
 use crate::err;
 use crate::region::ard::{Ard, ArdCore};
@@ -36,6 +49,61 @@ use crate::store::{Residency, StoreConfig};
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::time::Duration;
+
+/// Structured fault injection (`--inject SPEC`): deterministic failures
+/// at a chosen discharge, exercising the master's recovery paths.
+///
+/// All variants are one-shot — they fire exactly when the worker is
+/// about to handle discharge `after + 1`, never again. `--fail-after N`
+/// is kept as an alias for `crash:N`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Inject {
+    /// Exit the process abruptly (exit code 3), like a crashed machine:
+    /// no Abort, no FIN courtesy.
+    Crash { after: u64 },
+    /// Hang before replying: trickle one [`Msg::Heartbeat`] per second
+    /// for `secs` seconds, then continue normally. Exercises the
+    /// master's per-sweep deadline (a live socket is not a live sweep).
+    Stall { after: u64, secs: u64 },
+    /// Flip one payload bit in the reply frame, exercising the master's
+    /// corrupt-frame rejection and recovery.
+    Corrupt { after: u64 },
+}
+
+impl Inject {
+    /// Parse an `--inject` spec: `crash:N`, `stall:N:SECS` or
+    /// `corrupt:N`.
+    pub fn parse(spec: &str) -> Result<Inject> {
+        let field = |s: Option<&str>| -> Result<u64> {
+            s.and_then(|v| v.parse().ok()).with_context(|| {
+                format!("bad --inject spec `{spec}` (want crash:N|stall:N:SECS|corrupt:N)")
+            })
+        };
+        let mut it = spec.split(':');
+        let inj = match it.next().unwrap_or("") {
+            "crash" => Inject::Crash { after: field(it.next())? },
+            "stall" => Inject::Stall { after: field(it.next())?, secs: field(it.next())? },
+            "corrupt" => Inject::Corrupt { after: field(it.next())? },
+            other => {
+                return Err(err!(
+                    "bad --inject kind `{other}` in `{spec}` (want crash|stall|corrupt)"
+                ))
+            }
+        };
+        ensure!(it.next().is_none(), "bad --inject spec `{spec}`: trailing fields");
+        Ok(inj)
+    }
+
+    fn fires_at(&self, handled: u64) -> bool {
+        let after = match self {
+            Inject::Crash { after }
+            | Inject::Stall { after, .. }
+            | Inject::Corrupt { after } => *after,
+        };
+        handled == after + 1
+    }
+}
 
 /// Worker-side configuration (all local decisions: the master never
 /// dictates how a worker stores its shard).
@@ -46,14 +114,22 @@ pub struct WorkerOptions {
     pub streaming_dir: Option<PathBuf>,
     /// Store pages compressed (varint+delta with raw fallback).
     pub streaming_compress: bool,
-    /// Fault injection for tests: abruptly exit the process (simulating
-    /// a crashed worker) when about to handle discharge `n + 1`.
-    pub fail_after: Option<u64>,
+    /// Master-assigned worker index, echoed in [`Msg::Hello`] so the
+    /// master can tie a connection to the child process / streaming
+    /// directory it belongs to. `u32::MAX` = external worker.
+    pub worker_id: u32,
+    /// Fault-injection plan for tests.
+    pub inject: Option<Inject>,
 }
 
 impl Default for WorkerOptions {
     fn default() -> WorkerOptions {
-        WorkerOptions { streaming_dir: None, streaming_compress: true, fail_after: None }
+        WorkerOptions {
+            streaming_dir: None,
+            streaming_compress: true,
+            worker_id: u32::MAX,
+            inject: None,
+        }
     }
 }
 
@@ -89,13 +165,7 @@ impl Shard {
         // by per-region solver arrays. Warm starts are intra-discharge
         // only, so sharing changes no results.
         let n_ws = if opts.streaming_dir.is_some() { 1 } else { parts.len().max(1) };
-        let mk_ard = || {
-            let mut w = Ard::new(if core == 1 { ArdCore::bk() } else { ArdCore::dinic() });
-            w.warm_start = warm_start;
-            w
-        };
-        let ards = (0..n_ws).map(|_| mk_ard()).collect();
-        let prds = (0..n_ws).map(|_| Prd::new()).collect();
+        let (ards, prds) = workspaces(core, warm_start, n_ws);
         let mut store = match &opts.streaming_dir {
             Some(dir) => {
                 let cfg = StoreConfig {
@@ -115,6 +185,58 @@ impl Shard {
         Ok(Shard { d_inf, algorithm, parts, slot_of, ards, prds, store })
     }
 
+    /// Rebuild a shard from its region store after a worker restart.
+    /// The stored pages were written at the last completed discharge of
+    /// each region — i.e. at (or before) the sweep barrier the master
+    /// is resuming from — so they are the authoritative shard state;
+    /// the shells lost with the crashed process are reconstructed from
+    /// them. Requires `--streaming`: an in-memory shard dies with the
+    /// process and cannot be resumed.
+    fn resume(rs: ResumeShard, opts: &WorkerOptions) -> Result<Shard> {
+        let algorithm = match rs.algorithm {
+            0 => Algorithm::Ard,
+            1 => Algorithm::Prd,
+            other => return Err(err!("unknown algorithm byte {other}")),
+        };
+        let dir = opts.streaming_dir.clone().ok_or_else(|| {
+            err!("cannot resume without --streaming: shard state died with the process")
+        })?;
+        let cfg = StoreConfig {
+            dir: Some(dir),
+            prefetch: false,
+            compress: opts.streaming_compress,
+        };
+        let mut store = Residency::new(&cfg).context("reopen shard store")?;
+        let mut parts = Vec::with_capacity(rs.regions.len());
+        let mut slot_of = HashMap::new();
+        for (slot, &id) in rs.regions.iter().enumerate() {
+            // Page in with the *stored* shell fields (active /
+            // pending_gap) — there is no live shell to carry over —
+            // validate the page, and page straight back out to keep the
+            // one-region residency bound.
+            let mut part = RegionPart::shell(id, false, u32::MAX);
+            store.load_part_stored(slot, &mut part).context("reload shard region")?;
+            ensure!(
+                part.region_id == id,
+                "stored page {slot} holds region {} (expected {id})",
+                part.region_id
+            );
+            store.unload_part(slot, &mut part).context("page out shard region")?;
+            slot_of.insert(id, slot);
+            parts.push(part);
+        }
+        let (ards, prds) = workspaces(rs.core, rs.warm_start, 1);
+        Ok(Shard {
+            d_inf: rs.d_inf,
+            algorithm,
+            parts,
+            slot_of,
+            ards,
+            prds,
+            store: Some(store),
+        })
+    }
+
     fn slot(&self, region: u32) -> Result<usize> {
         self.slot_of
             .get(&region)
@@ -125,7 +247,14 @@ impl Shard {
     /// One region round: sync-in, discharge (or relabel), boundary
     /// delta out. Mirrors `Decomposition::sync_in` + the sequential
     /// coordinator's discharge step exactly — bit-identical results.
-    fn discharge(&mut self, q: &DischargeReq) -> Result<DeltaRsp> {
+    ///
+    /// With `staged` the page-out is staged, not published: the caller
+    /// must [`Shard::commit`] once the master has accepted the whole
+    /// batch, so any failure in between leaves the store at the sweep
+    /// barrier and a re-issued batch replays against unmodified pages
+    /// (replaying a discharge on a *post*-discharge page would route
+    /// the same excess twice).
+    fn discharge(&mut self, q: &DischargeReq, staged: bool) -> Result<DeltaRsp> {
         let slot = self.slot(q.region)?;
         if let Some(st) = self.store.as_mut() {
             st.load_part(slot, &mut self.parts[slot]).context("page in shard region")?;
@@ -191,9 +320,25 @@ impl Shard {
         }
         rsp.delta = take_boundary_delta(part, d_inf);
         if let Some(st) = self.store.as_mut() {
-            st.unload_part(slot, &mut self.parts[slot]).context("page out shard region")?;
+            if staged {
+                st.unload_part_staged(slot, &mut self.parts[slot])
+                    .context("stage shard region")?;
+            } else {
+                st.unload_part(slot, &mut self.parts[slot])
+                    .context("page out shard region")?;
+            }
         }
         Ok(rsp)
+    }
+
+    /// Publish the pages staged by a batch round. Called when the next
+    /// command arrives — the master moving on is the proof it accepted
+    /// the batch reply.
+    fn commit(&mut self) -> Result<()> {
+        if let Some(st) = self.store.as_mut() {
+            st.commit().context("publish staged shard pages")?;
+        }
+        Ok(())
     }
 
     /// Global ids of the region's source-side inner vertices
@@ -216,34 +361,107 @@ impl Shard {
     }
 }
 
+/// Per-region solver workspaces (`core`/`warm_start` as wired in
+/// `AssignShard`/`Resume`).
+fn workspaces(core: u8, warm_start: bool, n_ws: usize) -> (Vec<Ard>, Vec<Prd>) {
+    let mk_ard = || {
+        let mut w = Ard::new(if core == 1 { ArdCore::bk() } else { ArdCore::dinic() });
+        w.warm_start = warm_start;
+        w
+    };
+    ((0..n_ws).map(|_| mk_ard()).collect(), (0..n_ws).map(|_| Prd::new()).collect())
+}
+
+/// Fire the injection plan if discharge number `handled` is its
+/// trigger. Returns `true` when the upcoming reply frame must be
+/// corrupted (the only variant that defers to send time).
+fn apply_inject(inject: Option<Inject>, handled: u64, stream: &mut TcpStream) -> Result<bool> {
+    let Some(inj) = inject else { return Ok(false) };
+    if !inj.fires_at(handled) {
+        return Ok(false);
+    }
+    match inj {
+        Inject::Crash { .. } => {
+            // die like a crashed machine — no Abort, no FIN courtesy
+            std::process::exit(3);
+        }
+        Inject::Stall { secs, .. } => {
+            for nonce in 0..secs {
+                write_msg(stream, &Msg::Heartbeat { nonce }).context("stall heartbeat")?;
+                std::thread::sleep(Duration::from_secs(1));
+            }
+            Ok(false)
+        }
+        Inject::Corrupt { .. } => Ok(true),
+    }
+}
+
+/// Send a reply frame, flipping one payload bit first when `corrupt`
+/// injection fired — the master must reject the frame and recover, so
+/// the damage has to pass through the CRC check, not around it.
+fn send_reply(stream: &mut TcpStream, msg: &Msg, corrupt: bool) -> Result<()> {
+    if !corrupt {
+        write_msg(stream, msg).with_context(|| format!("send {}", msg.name()))?;
+        return Ok(());
+    }
+    use std::io::Write;
+    let mut frame = Vec::new();
+    write_msg(&mut frame, msg).with_context(|| format!("encode {}", msg.name()))?;
+    let at = if frame.len() > FRAME_HEADER_LEN { FRAME_HEADER_LEN } else { 12 };
+    frame[at] ^= 0x01;
+    stream
+        .write_all(&frame)
+        .with_context(|| format!("send corrupted {}", msg.name()))?;
+    Ok(())
+}
+
 /// Serve one master session on an accepted connection. Returns when the
 /// master sends [`Msg::Shutdown`]; a dead master (EOF) or any protocol
 /// violation is an error.
 pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
     stream.set_nodelay(true).ok();
-    write_msg(&mut stream, &Msg::Hello { proto: PROTO_VERSION as u32 })
-        .context("send handshake")?;
+    write_msg(
+        &mut stream,
+        &Msg::Hello { proto: PROTO_VERSION as u32, worker: opts.worker_id },
+    )
+    .context("send handshake")?;
     let mut shard: Option<Shard> = None;
     let mut handled = 0u64;
     loop {
         let (msg, _) = read_msg(&mut stream).context("read command from master")?;
+        // The master sending anything further is the proof it accepted
+        // the previous batch reply: publish the pages that batch staged.
+        // Failures before this point (crash, stall past the deadline, a
+        // rejected reply frame) abandon the staged pages, so the store
+        // stays at the last sweep barrier for the resumed incarnation.
+        if let Some(sh) = shard.as_mut() {
+            sh.commit()?;
+        }
         let outcome: Result<bool> = (|| {
             match msg {
                 Msg::AssignShard(a) => {
                     shard = Some(Shard::new(*a, opts)?);
                 }
+                Msg::Resume(rs) => {
+                    let sweep = rs.sweep;
+                    shard = Some(Shard::resume(*rs, opts)?);
+                    // readiness ack: the master holds the sweep loop
+                    // until the reloaded shard is confirmed
+                    write_msg(&mut stream, &Msg::Heartbeat { nonce: sweep })
+                        .context("ack resume")?;
+                }
+                Msg::Heartbeat { nonce } => {
+                    // liveness probe: echo it back
+                    write_msg(&mut stream, &Msg::Heartbeat { nonce })
+                        .context("echo heartbeat")?;
+                }
                 Msg::Discharge(q) => {
                     handled += 1;
-                    if opts.fail_after.map_or(false, |n| handled > n) {
-                        // fault injection: die like a crashed machine —
-                        // no Abort, no FIN handshake courtesy
-                        std::process::exit(3);
-                    }
+                    let corrupt = apply_inject(opts.inject, handled, &mut stream)?;
                     let shard =
                         shard.as_mut().ok_or_else(|| err!("Discharge before AssignShard"))?;
-                    let rsp = shard.discharge(&q)?;
-                    write_msg(&mut stream, &Msg::BoundaryDelta(Box::new(rsp)))
-                        .context("send boundary delta")?;
+                    let rsp = shard.discharge(&q, false)?;
+                    send_reply(&mut stream, &Msg::BoundaryDelta(Box::new(rsp)), corrupt)?;
                     let (ack, _) = read_msg(&mut stream).context("read fusion ack")?;
                     match ack {
                         Msg::FuseResult { region, .. } if region == q.region => {}
@@ -261,19 +479,16 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                         .as_mut()
                         .ok_or_else(|| err!("DischargeBatch before AssignShard"))?;
                     let mut rsps = Vec::with_capacity(reqs.len());
+                    let mut corrupt = false;
                     for q in &reqs {
                         handled += 1;
-                        if opts.fail_after.map_or(false, |n| handled > n) {
-                            // fault injection, as in the singleton arm
-                            std::process::exit(3);
-                        }
-                        rsps.push(shard.discharge(q)?);
+                        corrupt |= apply_inject(opts.inject, handled, &mut stream)?;
+                        rsps.push(shard.discharge(q, true)?);
                     }
                     // no fusion ack in batch mode: the next batch is the
                     // sweep barrier, so the master's fusion overlaps
                     // with this worker being free
-                    write_msg(&mut stream, &Msg::DeltaBatch(rsps))
-                        .context("send delta batch")?;
+                    send_reply(&mut stream, &Msg::DeltaBatch(rsps), corrupt)?;
                 }
                 Msg::FetchCut { region } => {
                     let shard =
@@ -314,4 +529,28 @@ pub fn connect_and_serve(addr: &str, opts: &WorkerOptions) -> Result<()> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("connect to master {addr}"))?;
     serve_stream(stream, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inject_specs_parse() {
+        assert_eq!(Inject::parse("crash:2").unwrap(), Inject::Crash { after: 2 });
+        assert_eq!(Inject::parse("stall:0:5").unwrap(), Inject::Stall { after: 0, secs: 5 });
+        assert_eq!(Inject::parse("corrupt:7").unwrap(), Inject::Corrupt { after: 7 });
+        for bad in ["", "crash", "crash:x", "stall:1", "boom:1", "crash:1:2", "corrupt:"] {
+            assert!(Inject::parse(bad).is_err(), "`{bad}` accepted");
+        }
+    }
+
+    #[test]
+    fn inject_fires_exactly_once() {
+        let inj = Inject::Crash { after: 2 };
+        assert!(!inj.fires_at(1));
+        assert!(!inj.fires_at(2), "after = handled is not yet the trigger");
+        assert!(inj.fires_at(3), "fires when about to handle discharge after+1");
+        assert!(!inj.fires_at(4));
+    }
 }

@@ -105,6 +105,12 @@ pub struct BenchRecord {
     pub dist_batches: u64,
     pub max_inflight_discharges: u64,
     pub par_sweep_seconds: f64,
+    /// Fault-tolerance accounting (schema 6; zero for local solvers and
+    /// fault-free distributed runs): workers restarted after a failure,
+    /// master checkpoint bytes written, and recovery wall time.
+    pub worker_restarts: u64,
+    pub checkpoint_bytes: u64,
+    pub recovery_wall_seconds: f64,
 }
 
 impl BenchRecord {
@@ -135,10 +141,16 @@ impl BenchRecord {
             dist_batches: r.dist_batches,
             max_inflight_discharges: r.max_inflight_discharges,
             par_sweep_seconds: r.par_sweep_seconds,
+            worker_restarts: r.worker_restarts,
+            checkpoint_bytes: r.checkpoint_bytes,
+            recovery_wall_seconds: r.recovery_wall_seconds,
         }
     }
 
-    fn from_solve(case: &str, solver: &str, res: &SolveResult) -> BenchRecord {
+    /// Build a record straight from a solve result. Public so the CLI's
+    /// `solve --bench-json PATH` can emit a BENCH-schema record for one
+    /// ad-hoc run (the CI chaos leg asserts `worker_restarts` there).
+    pub fn from_solve(case: &str, solver: &str, res: &SolveResult) -> BenchRecord {
         BenchRecord {
             case: case.to_string(),
             solver: solver.to_string(),
@@ -165,6 +177,9 @@ impl BenchRecord {
             dist_batches: res.metrics.dist_batches,
             max_inflight_discharges: res.metrics.max_inflight_discharges,
             par_sweep_seconds: res.metrics.t_par_sweep.as_secs_f64(),
+            worker_restarts: res.metrics.worker_restarts,
+            checkpoint_bytes: res.metrics.checkpoint_bytes,
+            recovery_wall_seconds: res.metrics.t_recovery.as_secs_f64(),
         }
     }
 }
@@ -299,6 +314,9 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 dist_batches: 0,
                 max_inflight_discharges: 0,
                 par_sweep_seconds: 0.0,
+                worker_restarts: 0,
+                checkpoint_bytes: 0,
+                recovery_wall_seconds: 0.0,
             });
         }
         "appendix_a" => {
@@ -359,6 +377,9 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 dist_batches: 0,
                 max_inflight_discharges: 0,
                 par_sweep_seconds: 0.0,
+                worker_restarts: 0,
+                checkpoint_bytes: 0,
+                recovery_wall_seconds: 0.0,
             });
         }
         other => panic!("no probe defined for experiment id: {other}"),
@@ -394,13 +415,15 @@ pub fn to_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
-    // schema 5: adds the parallel-sweep fields (dist_batches,
-    // max_inflight_discharges, par_sweep_seconds) per record; schema 4
-    // added the distributed-runtime fields (dist_msgs_sent/recv,
+    // schema 6: adds the fault-tolerance fields (worker_restarts,
+    // checkpoint_bytes, recovery_wall_seconds) per record; schema 5
+    // added the parallel-sweep fields (dist_batches,
+    // max_inflight_discharges, par_sweep_seconds), schema 4 the
+    // distributed-runtime fields (dist_msgs_sent/recv,
     // wire_bytes_sent/recv vs wire_raw_bytes, sync_wall_seconds),
     // schema 3 the streaming-store fields, schema 2 the core work
     // counters
-    s.push_str("  \"schema\": 5,\n");
+    s.push_str("  \"schema\": 6,\n");
     let _ = writeln!(s, "  \"quick\": {quick},");
     match experiment_seconds {
         Some(t) => {
@@ -422,7 +445,8 @@ pub fn to_json(
              \"wire_bytes_sent\": {}, \"wire_bytes_recv\": {}, \
              \"wire_raw_bytes\": {}, \"sync_wall_seconds\": {:.6}, \
              \"dist_batches\": {}, \"max_inflight_discharges\": {}, \
-             \"par_sweep_seconds\": {:.6}}}{}",
+             \"par_sweep_seconds\": {:.6}, \"worker_restarts\": {}, \
+             \"checkpoint_bytes\": {}, \"recovery_wall_seconds\": {:.6}}}{}",
             json_escape(&r.case),
             json_escape(&r.solver),
             r.flow,
@@ -448,6 +472,9 @@ pub fn to_json(
             r.dist_batches,
             r.max_inflight_discharges,
             r.par_sweep_seconds,
+            r.worker_restarts,
+            r.checkpoint_bytes,
+            r.recovery_wall_seconds,
             if i + 1 < records.len() { "," } else { "" },
         );
     }
@@ -528,10 +555,13 @@ mod tests {
             dist_batches: 5,
             max_inflight_discharges: 8,
             par_sweep_seconds: 0.75,
+            worker_restarts: 1,
+            checkpoint_bytes: 2048,
+            recovery_wall_seconds: 0.2,
         }];
         let j = to_json("fig6", true, Some(1.5), &recs);
         assert!(j.contains("\"bench\": \"fig6\""));
-        assert!(j.contains("\"schema\": 5"));
+        assert!(j.contains("\"schema\": 6"));
         assert!(j.contains("\\\"1"));
         assert!(j.contains("\"flow\": 42"));
         assert!(j.contains("\"converged\": true"));
@@ -553,6 +583,9 @@ mod tests {
         assert!(j.contains("\"dist_batches\": 5"));
         assert!(j.contains("\"max_inflight_discharges\": 8"));
         assert!(j.contains("\"par_sweep_seconds\": 0.750000"));
+        assert!(j.contains("\"worker_restarts\": 1"));
+        assert!(j.contains("\"checkpoint_bytes\": 2048"));
+        assert!(j.contains("\"recovery_wall_seconds\": 0.200000"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 

@@ -110,6 +110,13 @@ pub struct CompetitorResult {
     pub dist_batches: u64,
     pub max_inflight_discharges: u64,
     pub par_sweep_seconds: f64,
+    /// Fault-tolerance accounting (schema 6): workers restarted after a
+    /// failure, master checkpoint bytes written, and the wall time spent
+    /// detecting failures and re-attaching workers. Zero for local
+    /// solvers and fault-free distributed runs.
+    pub worker_restarts: u64,
+    pub checkpoint_bytes: u64,
+    pub recovery_wall_seconds: f64,
 }
 
 impl CompetitorResult {
@@ -151,6 +158,9 @@ impl CompetitorResult {
             dist_batches: m.dist_batches,
             max_inflight_discharges: m.max_inflight_discharges,
             par_sweep_seconds: m.t_par_sweep.as_secs_f64(),
+            worker_restarts: m.worker_restarts,
+            checkpoint_bytes: m.checkpoint_bytes,
+            recovery_wall_seconds: m.t_recovery.as_secs_f64(),
         }
     }
 }

@@ -56,6 +56,28 @@ SOLVE OPTIONS:
                        (same sweeps/discharges), the oracle mode
   --dist-timeout SECS  distributed only: socket read/write timeout and
                        worker accept/connect deadline (default 120)
+  --sweep-timeout SECS distributed only: deadline for one whole sweep
+                       round-trip (default 4 x dist-timeout) — a worker
+                       trickling heartbeats keeps its socket alive but
+                       cannot extend the sweep
+  --max-worker-restarts N
+                       distributed only: recovery budget per worker —
+                       respawn (loopback) or reconnect (external) up to
+                       N times before giving up (default 2; 0 restores
+                       fail-fast; --deterministic always fails fast)
+  --checkpoint DIR     distributed only: write the master boundary
+                       checkpoint to DIR at every sweep barrier
+                       (spawned workers get one automatically when
+                       recovery is on)
+  --resume-from DIR    distributed only: restart a crashed master from
+                       the checkpoint in DIR — needs --streaming
+                       pointing at the same worker stores
+  --inject-worker I:SPEC[,I:SPEC..]
+                       distributed only, for tests: pass `--inject
+                       SPEC` to spawned worker I (see WORKER OPTIONS)
+  --bench-json PATH    distributed only: write a one-record BENCH
+                       schema json for this run (the CI chaos leg
+                       asserts worker_restarts there)
   --streaming DIR      sequential streaming mode, one region in memory
                        (with --distributed: workers page their shards
                        under DIR/worker_<i>)
@@ -74,8 +96,17 @@ WORKER OPTIONS:
   --streaming DIR      back the shard with the region store: one
                        resident region at a time (§5.3)
   --no-compress        store/stream raw (uncompressed) region pages
-  --fail-after N       fault injection for tests: crash (exit 3) when
-                       the (N+1)-th discharge arrives
+  --worker-id N        master-assigned worker index, echoed in the
+                       handshake (what --distributed spawns pass)
+  --inject SPEC        fault injection for tests: crash:N (exit 3 when
+                       the (N+1)-th discharge arrives), stall:N:SECS
+                       (trickle heartbeats for SECS instead of
+                       replying), corrupt:N (flip one reply payload
+                       bit)
+  --fail-after N       shorthand for --inject crash:N
+
+WORKER EXIT CODES:
+  0 clean shutdown | 1 runtime error | 2 usage | 3 injected crash
 
 GEN SPECS:
   synth2d:W,H,CONN,STRENGTH,SEED     (§7.1 random grid)
@@ -267,6 +298,49 @@ fn cmd_solve(opts: &Flags) -> i32 {
                     }
                 }
             }
+            if let Some(secs) = opts.get("sweep-timeout") {
+                match secs.parse::<u64>() {
+                    Ok(s) if s > 0 => d.sweep_timeout = Some(std::time::Duration::from_secs(s)),
+                    _ => {
+                        eprintln!(
+                            "error: --sweep-timeout needs a positive whole number of seconds"
+                        );
+                        return 2;
+                    }
+                }
+            }
+            if let Some(n) = opts.get("max-worker-restarts") {
+                match n.parse::<u32>() {
+                    Ok(n) => d.max_worker_restarts = n,
+                    Err(_) => {
+                        eprintln!("error: --max-worker-restarts needs a whole number");
+                        return 2;
+                    }
+                }
+            }
+            if let Some(dir) = opts.get("checkpoint") {
+                d.checkpoint = Some(dir.into());
+            }
+            if let Some(dir) = opts.get("resume-from") {
+                d.resume_from = Some(dir.into());
+            }
+            if let Some(list) = opts.get("inject-worker") {
+                for item in list.split(',').filter(|s| !s.is_empty()) {
+                    let parsed = item.split_once(':').and_then(|(idx, spec)| {
+                        let i: usize = idx.parse().ok()?;
+                        armincut::dist::worker::Inject::parse(spec).ok()?;
+                        Some((i, spec.to_string()))
+                    });
+                    let Some(pair) = parsed else {
+                        eprintln!(
+                            "error: bad --inject-worker item `{item}` \
+                             (want I:crash:N|I:stall:N:SECS|I:corrupt:N)"
+                        );
+                        return 2;
+                    };
+                    d.worker_inject.push(pair);
+                }
+            }
             let res = match dist::solve_distributed(&g, &part, &d) {
                 Ok(res) => res,
                 Err(e) => {
@@ -274,6 +348,21 @@ fn cmd_solve(opts: &Flags) -> i32 {
                     return 1;
                 }
             };
+            if let Some(path) = opts.get("bench-json") {
+                use armincut::experiments::bench_support::{to_json, BenchRecord};
+                let case = opts
+                    .get("gen")
+                    .or_else(|| opts.get("input"))
+                    .cloned()
+                    .unwrap_or_default();
+                let rec = BenchRecord::from_solve(&case, "D-ARD", &res);
+                let json = to_json("solve", false, None, &[rec]);
+                if let Err(e) = std::fs::write(path, json) {
+                    eprintln!("write {path}: {e}");
+                    return 1;
+                }
+                println!("bench record written to {path}");
+            }
             (res.metrics.summary("dist-ard"), res.cut)
         }
         "s-ard" | "s-prd" => {
@@ -379,10 +468,31 @@ fn apply_heuristic_flags(opts: &Flags, o: &mut SeqOptions) {
 /// and scripts can bind port 0); `--connect ADDR` dials the master —
 /// the direction `solve --distributed N` uses for auto-spawned workers.
 fn cmd_worker(opts: &Flags) -> i32 {
+    use armincut::dist::worker::Inject;
+    let inject = match (opts.get("inject"), opts.get("fail-after")) {
+        (Some(spec), _) => match Inject::parse(spec) {
+            Ok(inj) => Some(inj),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        // `--fail-after N` predates the richer specs; keep it as an
+        // alias so old scripts and tests stay valid
+        (None, Some(n)) => match n.parse::<u64>() {
+            Ok(after) => Some(Inject::Crash { after }),
+            Err(_) => {
+                eprintln!("error: --fail-after needs a whole number");
+                return 2;
+            }
+        },
+        (None, None) => None,
+    };
     let wo = armincut::dist::WorkerOptions {
         streaming_dir: opts.get("streaming").map(|s| s.into()),
         streaming_compress: !opts.contains_key("no-compress"),
-        fail_after: opts.get("fail-after").and_then(|s| s.parse().ok()),
+        worker_id: opts.get("worker-id").and_then(|s| s.parse().ok()).unwrap_or(u32::MAX),
+        inject,
     };
     let res = if let Some(addr) = opts.get("connect") {
         armincut::dist::worker::connect_and_serve(addr, &wo)

@@ -17,22 +17,36 @@ pub trait RegionStore: Send {
     fn put(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError>;
     /// Fetch the page of region `r`.
     fn get(&mut self, r: usize) -> Result<Vec<u8>, StoreError>;
+    /// Stage the page of region `r` without publishing it: `get` keeps
+    /// returning the previous page until [`RegionStore::commit`]. A
+    /// process that dies with staged pages leaves the store exactly as
+    /// it was — the worker's batch rounds rely on this to keep the
+    /// store at the last sweep barrier through any mid-batch failure.
+    fn stage(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError>;
+    /// Publish every staged page, replacing the previous ones.
+    fn commit(&mut self) -> Result<(), StoreError>;
 }
 
 /// One file per region under a directory (`region_<r>.page`).
 pub struct FileStore {
     dir: PathBuf,
+    /// Regions with a staged-but-unpublished temp file.
+    staged: Vec<usize>,
 }
 
 impl FileStore {
     /// Create the directory (and parents) if needed.
     pub fn create(dir: PathBuf) -> Result<FileStore, StoreError> {
         std::fs::create_dir_all(&dir).map_err(|e| StoreError::io("create dir", &dir, e))?;
-        Ok(FileStore { dir })
+        Ok(FileStore { dir, staged: Vec::new() })
     }
 
     fn path(&self, r: usize) -> PathBuf {
         self.dir.join(format!("region_{r}.page"))
+    }
+
+    fn tmp_path(&self, r: usize) -> PathBuf {
+        self.dir.join(format!("region_{r}.page.tmp"))
     }
 }
 
@@ -42,13 +56,40 @@ impl RegionStore for FileStore {
     }
 
     fn put(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError> {
+        // Write to a sibling temp file, then rename over the final
+        // name: rename is atomic within a directory, so a crash
+        // mid-write leaves the previous page intact instead of a torn
+        // one — recovery depends on every stored page being the last
+        // *complete* barrier state.
+        let tmp = self.tmp_path(r);
+        std::fs::write(&tmp, page).map_err(|e| StoreError::io("write page", &tmp, e))?;
         let path = self.path(r);
-        std::fs::write(&path, page).map_err(|e| StoreError::io("write page", &path, e))
+        std::fs::rename(&tmp, &path).map_err(|e| StoreError::io("publish page", &path, e))
     }
 
     fn get(&mut self, r: usize) -> Result<Vec<u8>, StoreError> {
         let path = self.path(r);
         std::fs::read(&path).map_err(|e| StoreError::io("read page", &path, e))
+    }
+
+    fn stage(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError> {
+        // the published page file is untouched until commit's rename
+        let tmp = self.tmp_path(r);
+        std::fs::write(&tmp, page).map_err(|e| StoreError::io("stage page", &tmp, e))?;
+        if !self.staged.contains(&r) {
+            self.staged.push(r);
+        }
+        Ok(())
+    }
+
+    fn commit(&mut self) -> Result<(), StoreError> {
+        for r in std::mem::take(&mut self.staged) {
+            let tmp = self.tmp_path(r);
+            let path = self.path(r);
+            std::fs::rename(&tmp, &path)
+                .map_err(|e| StoreError::io("publish page", &path, e))?;
+        }
+        Ok(())
     }
 }
 
@@ -56,6 +97,7 @@ impl RegionStore for FileStore {
 #[derive(Default)]
 pub struct MemStore {
     pages: Vec<Option<Vec<u8>>>,
+    staged: Vec<(usize, Vec<u8>)>,
 }
 
 impl MemStore {
@@ -88,6 +130,19 @@ impl RegionStore for MemStore {
             .and_then(|p| p.clone())
             .ok_or_else(|| StoreError::Missing { region: r })
     }
+
+    fn stage(&mut self, r: usize, page: &[u8]) -> Result<(), StoreError> {
+        self.staged.retain(|(sr, _)| *sr != r);
+        self.staged.push((r, page.to_vec()));
+        Ok(())
+    }
+
+    fn commit(&mut self) -> Result<(), StoreError> {
+        for (r, page) in std::mem::take(&mut self.staged) {
+            self.put(r, &page)?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +170,55 @@ mod tests {
         s.put(0, b"page-zero").unwrap();
         assert_eq!(s.get(0).unwrap(), b"page-zero");
         assert!(s.get(1).is_err(), "absent page file is an error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_store_put_is_atomic_replace() {
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_store_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::create(dir.clone()).unwrap();
+
+        // A stale temp file from an interrupted earlier write must not
+        // block or corrupt a fresh put.
+        std::fs::write(dir.join("region_0.page.tmp"), b"torn garbage").unwrap();
+        s.put(0, b"first").unwrap();
+        assert_eq!(s.get(0).unwrap(), b"first");
+        s.put(0, b"second").unwrap();
+        assert_eq!(s.get(0).unwrap(), b"second", "put replaces");
+        assert!(
+            !dir.join("region_0.page.tmp").exists(),
+            "temp file is consumed by the rename"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn staged_pages_invisible_until_commit() {
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_store_stage_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fs = FileStore::create(dir.clone()).unwrap();
+        let mut ms = MemStore::new();
+        for s in [&mut fs as &mut dyn RegionStore, &mut ms as &mut dyn RegionStore] {
+            s.put(0, b"barrier").unwrap();
+            s.stage(0, b"next").unwrap();
+            s.stage(1, b"fresh").unwrap();
+            s.stage(1, b"fresher").unwrap();
+            assert_eq!(s.get(0).unwrap(), b"barrier", "stage must not publish");
+            assert!(s.get(1).is_err(), "staged-only page is not visible");
+            s.commit().unwrap();
+            assert_eq!(s.get(0).unwrap(), b"next");
+            assert_eq!(s.get(1).unwrap(), b"fresher", "last stage wins");
+            s.commit().unwrap(); // idempotent when nothing is staged
+        }
+        // dropping a FileStore with staged pages leaves the store at the
+        // published state — a new instance sees only committed pages
+        fs.stage(0, b"doomed").unwrap();
+        drop(fs);
+        let mut fs = FileStore::create(dir.clone()).unwrap();
+        assert_eq!(fs.get(0).unwrap(), b"next", "uncommitted stage is discarded");
         std::fs::remove_dir_all(&dir).ok();
     }
 

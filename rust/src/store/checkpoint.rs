@@ -1,0 +1,264 @@
+//! Master-side solve checkpoints: the distributed master's boundary
+//! state, framed like a region page and stored through a
+//! [`RegionStore`].
+//!
+//! The distributed master owns only `O(|B|)` state — boundary labels,
+//! boundary excess, inter-region residual capacities, per-region
+//! flow/activity — and all of it is well-defined exactly at the sweep
+//! barrier. A [`MasterCheckpoint`] snapshots that state once per sweep;
+//! together with the workers' own region stores (which hold every
+//! region at the same barrier) it lets a crashed *master* restart the
+//! solve from the last completed sweep instead of from scratch
+//! (`--resume-from`).
+//!
+//! Layout (all integers little-endian), sibling of
+//! [`crate::store::page`]:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        b"ARMC"
+//!      4     2  version      CHECKPOINT_VERSION
+//!      6     1  codec        store::codec::Codec as u8
+//!      7     1  reserved     0
+//!      8     8  payload_len
+//!     16     4  crc32        IEEE CRC-32 of bytes [4..16) ++ payload
+//!     20     …  payload      checkpoint fields encoded per `codec`
+//! ```
+//!
+//! Truncated, bit-flipped, foreign or future-versioned checkpoints are
+//! rejected with a typed [`PageError`], never mis-decoded — a torn
+//! write can cost the last sweep, not correctness.
+
+use crate::core::graph::Cap;
+use crate::store::backend::RegionStore;
+use crate::store::codec::{Codec, Dec, Enc};
+use crate::store::page::{crc32, PageError};
+use crate::store::StoreError;
+
+/// First bytes of every checkpoint.
+pub const CHECKPOINT_MAGIC: [u8; 4] = *b"ARMC";
+/// Bumped on any layout change; readers reject other versions.
+pub const CHECKPOINT_VERSION: u16 = 1;
+/// Fixed header size preceding the payload.
+pub const CHECKPOINT_HEADER_LEN: usize = 20;
+/// Store slot the checkpoint lives in (checkpoints get their own store
+/// directory, so the slot space does not collide with region pages).
+pub const CHECKPOINT_SLOT: usize = 0;
+
+/// Everything the master knows at a sweep barrier: restoring these
+/// fields into a fresh [`Decomposition`][crate::region::decompose::Decomposition]
+/// of the same instance reproduces the master's state exactly.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MasterCheckpoint {
+    /// Sweeps completed when the snapshot was taken.
+    pub sweep: u64,
+    /// The instance's label ceiling — doubles as a shape check.
+    pub d_inf: u32,
+    /// Shared boundary labels (`SharedState::d`).
+    pub d: Vec<u32>,
+    /// Shared boundary excess (`SharedState::excess`).
+    pub excess: Vec<Cap>,
+    /// Forward/backward residual capacity per shared boundary arc.
+    pub arc_cap_fw: Vec<Cap>,
+    pub arc_cap_bw: Vec<Cap>,
+    /// Per-region flow accrued to the sink (the accrued-flow ledger).
+    pub region_flow: Vec<Cap>,
+    /// Per-region activity flags at the barrier.
+    pub region_active: Vec<bool>,
+    /// Per-region lazy pending-gap marks (`u32::MAX` = none).
+    pub region_pending_gap: Vec<u32>,
+}
+
+impl MasterCheckpoint {
+    fn encode_payload(&self, e: &mut Enc) {
+        e.u64(self.sweep);
+        e.u32(self.d_inf);
+        e.u32_slice(&self.d);
+        e.i64_slice(&self.excess);
+        e.i64_slice(&self.arc_cap_fw);
+        e.i64_slice(&self.arc_cap_bw);
+        e.i64_slice(&self.region_flow);
+        e.u64(self.region_active.len() as u64);
+        for &a in &self.region_active {
+            e.u8(a as u8);
+        }
+        e.u32_slice(&self.region_pending_gap);
+    }
+
+    fn decode_payload(d: &mut Dec) -> Option<MasterCheckpoint> {
+        let sweep = d.u64()?;
+        let d_inf = d.u32()?;
+        let labels = d.u32_slice()?;
+        let excess = d.i64_slice()?;
+        let arc_cap_fw = d.i64_slice()?;
+        let arc_cap_bw = d.i64_slice()?;
+        let region_flow = d.i64_slice()?;
+        let n = usize::try_from(d.u64()?).ok()?;
+        if n > d.remaining() {
+            return None;
+        }
+        let mut region_active = Vec::with_capacity(n);
+        for _ in 0..n {
+            region_active.push(d.u8()? != 0);
+        }
+        let region_pending_gap = d.u32_slice()?;
+        Some(MasterCheckpoint {
+            sweep,
+            d_inf,
+            d: labels,
+            excess,
+            arc_cap_fw,
+            arc_cap_bw,
+            region_flow,
+            region_active,
+            region_pending_gap,
+        })
+    }
+
+    /// Encode into a framed, CRC-checked checkpoint blob.
+    pub fn encode(&self, compress: bool) -> Vec<u8> {
+        let codec = if compress { Codec::Compact } else { Codec::Raw };
+        let mut e = Enc::new(codec);
+        self.encode_payload(&mut e);
+        let payload = e.into_bytes();
+        let mut blob = Vec::with_capacity(CHECKPOINT_HEADER_LEN + payload.len());
+        blob.extend_from_slice(&CHECKPOINT_MAGIC);
+        blob.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+        blob.push(codec as u8);
+        blob.push(0);
+        blob.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let crc = crc32(&[&blob[4..16], &payload]);
+        blob.extend_from_slice(&crc.to_le_bytes());
+        blob.extend_from_slice(&payload);
+        blob
+    }
+
+    /// Validate and decode a blob produced by [`MasterCheckpoint::encode`].
+    pub fn decode(data: &[u8]) -> Result<MasterCheckpoint, PageError> {
+        if data.len() < CHECKPOINT_HEADER_LEN {
+            return Err(PageError::Truncated);
+        }
+        if data[0..4] != CHECKPOINT_MAGIC {
+            return Err(PageError::BadMagic);
+        }
+        let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
+        if version != CHECKPOINT_VERSION {
+            return Err(PageError::BadVersion(version));
+        }
+        let codec = Codec::from_u8(data[6]).ok_or(PageError::BadCodec(data[6]))?;
+        let payload_len = u64::from_le_bytes(data[8..16].try_into().unwrap());
+        let stored_crc = u32::from_le_bytes(data[16..20].try_into().unwrap());
+        let payload = &data[CHECKPOINT_HEADER_LEN..];
+        if payload_len != payload.len() as u64 {
+            return Err(PageError::Truncated);
+        }
+        if crc32(&[&data[4..16], payload]) != stored_crc {
+            return Err(PageError::ChecksumMismatch);
+        }
+        let mut dec = Dec::new(codec, payload);
+        let ck = Self::decode_payload(&mut dec).ok_or(PageError::Malformed)?;
+        if !dec.finished() {
+            return Err(PageError::Malformed);
+        }
+        Ok(ck)
+    }
+
+    /// Write the checkpoint through `store` (one slot, replaced every
+    /// sweep; [`crate::store::FileStore`] replaces atomically). Returns
+    /// the stored size in bytes.
+    pub fn save(&self, store: &mut dyn RegionStore, compress: bool) -> Result<u64, StoreError> {
+        let blob = self.encode(compress);
+        store.put(CHECKPOINT_SLOT, &blob)?;
+        Ok(blob.len() as u64)
+    }
+
+    /// Load and validate the checkpoint from `store`.
+    pub fn load(store: &mut dyn RegionStore) -> Result<MasterCheckpoint, StoreError> {
+        let blob = store.get(CHECKPOINT_SLOT)?;
+        Self::decode(&blob)
+            .map_err(|e| StoreError::Page { region: CHECKPOINT_SLOT, source: e })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::backend::{FileStore, MemStore};
+
+    fn sample() -> MasterCheckpoint {
+        MasterCheckpoint {
+            sweep: 17,
+            d_inf: 9,
+            d: vec![0, 3, 9, 4, 1],
+            excess: vec![0, -2, 40, 0, 7],
+            arc_cap_fw: vec![5, 0, 12],
+            arc_cap_bw: vec![0, 3, 1],
+            region_flow: vec![11, 0, -1],
+            region_active: vec![true, false, true],
+            region_pending_gap: vec![u32::MAX, 4, u32::MAX],
+        }
+    }
+
+    #[test]
+    fn roundtrip_both_codecs() {
+        for compress in [false, true] {
+            let blob = sample().encode(compress);
+            let back = MasterCheckpoint::decode(&blob).expect("decode");
+            assert_eq!(back, sample(), "compress={compress}");
+        }
+    }
+
+    #[test]
+    fn rejects_truncation_and_bit_flips() {
+        let blob = sample().encode(true);
+        for cut in 0..blob.len() {
+            assert!(MasterCheckpoint::decode(&blob[..cut]).is_err(), "cut {cut} accepted");
+        }
+        for byte in 0..blob.len() {
+            let mut b = blob.clone();
+            b[byte] ^= 0x40;
+            assert!(MasterCheckpoint::decode(&b).is_err(), "flip at {byte} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_blobs() {
+        let mut region_page = sample().encode(false);
+        region_page[0..4].copy_from_slice(b"ARMP");
+        assert_eq!(MasterCheckpoint::decode(&region_page), Err(PageError::BadMagic));
+
+        let mut future = sample().encode(false);
+        future[4..6].copy_from_slice(&(CHECKPOINT_VERSION + 1).to_le_bytes());
+        let crc = crc32(&[&future[4..16], &future[CHECKPOINT_HEADER_LEN..]]);
+        future[16..20].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(
+            MasterCheckpoint::decode(&future),
+            Err(PageError::BadVersion(CHECKPOINT_VERSION + 1))
+        );
+    }
+
+    #[test]
+    fn save_load_through_mem_and_file_stores() {
+        let mut mem = MemStore::new();
+        let bytes = sample().save(&mut mem, true).unwrap();
+        assert!(bytes > CHECKPOINT_HEADER_LEN as u64);
+        assert_eq!(MasterCheckpoint::load(&mut mem).unwrap(), sample());
+
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_ckpt_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fs = FileStore::create(dir.clone()).unwrap();
+        sample().save(&mut fs, false).unwrap();
+        assert_eq!(MasterCheckpoint::load(&mut fs).unwrap(), sample());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_store_is_a_typed_error() {
+        let mut mem = MemStore::new();
+        assert!(matches!(
+            MasterCheckpoint::load(&mut mem),
+            Err(StoreError::Missing { .. })
+        ));
+    }
+}

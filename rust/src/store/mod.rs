@@ -12,6 +12,10 @@
 //!   foreign pages are rejected, never mis-decoded;
 //! * [`backend`] — the [`RegionStore`] trait with file and in-memory
 //!   backends;
+//! * [`checkpoint`] — the distributed master's per-sweep boundary
+//!   snapshot ([`MasterCheckpoint`]), framed and CRC-checked like a
+//!   page, stored through the same backends so a crashed master can
+//!   resume from the last sweep barrier;
 //! * [`pipeline`] — [`Residency`]: blocking paging, or a double-buffered
 //!   prefetch pipeline whose background I/O thread writes back region
 //!   `r−1` and reads ahead region `r+1` while region `r` discharges,
@@ -23,11 +27,13 @@
 //! `BENCH_<id>.json` (schema 3).
 
 pub mod backend;
+pub mod checkpoint;
 pub mod codec;
 pub mod page;
 pub mod pipeline;
 
 pub use backend::{FileStore, MemStore, RegionStore};
+pub use checkpoint::{MasterCheckpoint, CHECKPOINT_VERSION};
 pub use codec::{Codec, Dec, Enc};
 pub use page::{decode_page, encode_page, PageError, PageInfo, PAGE_VERSION};
 pub use pipeline::{IoStats, Residency};

@@ -371,6 +371,50 @@ impl Residency {
         }
     }
 
+    /// [`Residency::unload_part`], but the page is only *staged*: the
+    /// store keeps serving the previous page until [`Residency::commit`]
+    /// publishes every staged page at once. A distributed worker stages
+    /// the pages of a discharge batch and commits only after the master
+    /// has accepted the reply — so any failure in between (crash, stall,
+    /// rejected frame) leaves the store at the last sweep barrier and
+    /// the re-issued batch replays against unmodified pages. Blocking
+    /// mode only (the worker's store never prefetches).
+    pub fn unload_part_staged(
+        &mut self,
+        slot: usize,
+        part: &mut RegionPart,
+    ) -> Result<(), StoreError> {
+        let shell = RegionPart::shell(part.region_id, part.active, part.pending_gap);
+        let part = std::mem::replace(part, shell);
+        match &mut self.mode {
+            Mode::Blocking(store) => {
+                let t = Instant::now();
+                let (page, info) = encode_page(&part, self.compress);
+                store.stage(slot, &page)?;
+                let dt = t.elapsed();
+                self.stats.t_blocked += dt;
+                self.stats.t_io += dt;
+                self.stats.write_bytes += info.stored_len;
+                self.stats.page_raw_bytes +=
+                    info.raw_len + crate::store::page::PAGE_HEADER_LEN as u64;
+                self.stats.page_stored_bytes += info.stored_len;
+                Ok(())
+            }
+            Mode::Pipelined(_) => Err(StoreError::Pipeline(
+                "staged write-backs need the blocking store".into(),
+            )),
+        }
+    }
+
+    /// Publish every page staged by [`Residency::unload_part_staged`].
+    /// No-op when nothing is staged.
+    pub fn commit(&mut self) -> Result<(), StoreError> {
+        match &mut self.mode {
+            Mode::Blocking(store) => store.commit(),
+            Mode::Pipelined(_) => Ok(()),
+        }
+    }
+
     /// Hint that region `r` will be loaded soon. No-op in blocking mode
     /// and when the single read-ahead buffer is already in use. Must
     /// only be called for regions that are not resident.
@@ -406,6 +450,33 @@ impl Residency {
         };
         loaded.active = part.active;
         loaded.pending_gap = part.pending_gap;
+        *part = loaded;
+        Ok(())
+    }
+
+    /// [`Residency::load_part`], but trusting the *stored* page's
+    /// `active`/`pending_gap` instead of carrying over the shell's. A
+    /// restarted worker resuming from its region store has no live
+    /// shells — the stored page, written at the last sweep barrier, is
+    /// the authoritative state.
+    pub fn load_part_stored(
+        &mut self,
+        slot: usize,
+        part: &mut RegionPart,
+    ) -> Result<(), StoreError> {
+        let r = slot;
+        let loaded = match &mut self.mode {
+            Mode::Blocking(store) => {
+                let t = Instant::now();
+                let got = read_region(store.as_mut(), r)?;
+                let dt = t.elapsed();
+                self.stats.t_blocked += dt;
+                self.stats.t_io += dt;
+                self.stats.read_bytes += got.1.stored_len;
+                got.0
+            }
+            Mode::Pipelined(p) => *p.fetch(r, &mut self.stats)?.0,
+        };
         *part = loaded;
         Ok(())
     }
@@ -516,6 +587,29 @@ mod tests {
         let s = res.stats();
         assert_eq!(s.prefetch_misses, 1, "load of 2 was the only miss");
         assert_eq!(s.prefetch_hits, 1, "load of 3 was served by the parked read");
+    }
+
+    #[test]
+    fn staged_unload_publishes_only_on_commit() {
+        let mut dec = decomposition(24, 2);
+        let barrier = dec.parts[0].clone();
+        let mut res = Residency::new(&cfg(false, true)).unwrap();
+        // barrier state on disk, region resident again
+        res.unload(&mut dec, 0).unwrap();
+        res.load(&mut dec, 0).unwrap();
+        // mutate and stage: a reload must still see the barrier state
+        dec.parts[0].active = !barrier.active;
+        res.unload_part_staged(0, &mut dec.parts[0]).unwrap();
+        let mut shell = RegionPart::shell(barrier.region_id, barrier.active, u32::MAX);
+        res.load_part_stored(0, &mut shell).unwrap();
+        assert_eq!(shell.active, barrier.active, "stage must not publish");
+        res.commit().unwrap();
+        res.load_part_stored(0, &mut shell).unwrap();
+        assert_eq!(shell.active, !barrier.active, "commit publishes the staged page");
+        // staging is rejected on the pipelined store instead of tearing
+        let mut piped = Residency::new(&cfg(true, true)).unwrap();
+        assert!(piped.unload_part_staged(0, &mut dec.parts[1]).is_err());
+        piped.flush().unwrap();
     }
 
     #[test]

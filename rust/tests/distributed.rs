@@ -15,8 +15,13 @@
 //!   `BoundaryDelta`s into `FusionRound` in any permutation yields the
 //!   same post-fusion shared state.
 //!
-//! Plus: a worker killed mid-solve turns into a clean master error
-//! (exit 1) naming the dead worker, never a hang or a panic.
+//! Plus the fault-tolerance contract: with the default recovery budget
+//! a worker that crashes, stalls past the sweep deadline, or corrupts
+//! a reply frame is restarted and the solve completes with the same
+//! flow and cut as `solve_sequential` (`worker_restarts` counts it);
+//! with `--max-worker-restarts 0` a worker killed mid-solve turns into
+//! a clean master error (exit 1) naming the dead worker, never a hang
+//! or a panic.
 
 use armincut::coordinator::fuse::{fuse_deltas, take_boundary_delta, FusionRound};
 use armincut::coordinator::sequential::{solve_sequential, SeqOptions};
@@ -413,7 +418,8 @@ fn spawn_listening_worker(extra: &[&str]) -> (Child, String) {
 fn worker_killed_mid_solve_is_a_clean_exit_1() {
     let exe = env!("CARGO_BIN_EXE_armincut");
     // worker 0 crashes (exit 3) when its second discharge arrives;
-    // worker 1 is healthy
+    // worker 1 is healthy. --max-worker-restarts 0 disables recovery,
+    // restoring the original fail-fast contract under test here.
     let (mut w0, a0) = spawn_listening_worker(&["--fail-after", "1"]);
     let (mut w1, a1) = spawn_listening_worker(&[]);
     let mut master = Command::new(exe)
@@ -427,6 +433,8 @@ fn worker_killed_mid_solve_is_a_clean_exit_1() {
             "4",
             "--workers",
             &format!("{a0},{a1}"),
+            "--max-worker-restarts",
+            "0",
         ])
         .stdout(Stdio::piped())
         .stderr(Stdio::piped())
@@ -447,4 +455,246 @@ fn worker_killed_mid_solve_is_a_clean_exit_1() {
     let s0 = wait_with_deadline(&mut w0, 30, "crashed worker");
     assert_eq!(s0.code(), Some(3), "fault injection exit code");
     let _ = wait_with_deadline(&mut w1, 30, "healthy worker");
+}
+
+// ---- fault-tolerance tests through the CLI binary -----------------------
+
+const GEN: &str = "synth2d:24,24,8,150,1";
+
+fn flow_in(out: &str) -> String {
+    out.lines()
+        .find_map(|l| {
+            l.split_whitespace().find_map(|w| w.strip_prefix("flow=").map(String::from))
+        })
+        .unwrap_or_else(|| panic!("no flow= in output:\n{out}"))
+}
+
+/// The restart count from the metrics summary's recovery tail
+/// (`[recovery restarts N ckpt ...]`); 0 if the tail is absent.
+fn restarts_in(out: &str) -> u64 {
+    out.split("recovery restarts ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|n| n.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Run `armincut solve` with `args` under a 120 s deadline; panic on
+/// hang, return (status, stdout, stderr).
+fn run_solve(args: &[&str], what: &str) -> (std::process::ExitStatus, String, String) {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let mut child = Command::new(exe)
+        .arg("solve")
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap_or_else(|e| panic!("spawn {what}: {e}"));
+    let status = wait_with_deadline(&mut child, 120, what);
+    let out = child.wait_with_output().expect("collect output");
+    (
+        status,
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// Sequential oracle run writing its cut to `cut_path`; returns stdout.
+fn seq_oracle(cut_path: &std::path::Path) -> String {
+    let (st, out, err) = run_solve(
+        &[
+            "--gen",
+            GEN,
+            "--algo",
+            "s-ard",
+            "--regions",
+            "4",
+            "--cut",
+            cut_path.to_str().unwrap(),
+        ],
+        "sequential oracle",
+    );
+    assert!(st.success(), "sequential solve failed:\n{err}");
+    out
+}
+
+/// The tentpole contract: a worker that fails mid-solve is restarted
+/// and the solve still completes with the sequential oracle's exact
+/// flow and cut, reporting `worker_restarts >= 1`. Exercised for every
+/// injection kind (`crash` here, `corrupt`/`stall` below).
+fn assert_recovers(inject: &str, extra: &[&str], tag: &str) {
+    let tmp = std::env::temp_dir()
+        .join(format!("armincut_recover_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let seq_cut = tmp.join("seq.cut");
+    let dist_cut = tmp.join("dist.cut");
+    let seq_out = seq_oracle(&seq_cut);
+    let mut args = vec![
+        "--gen",
+        GEN,
+        "--algo",
+        "s-ard",
+        "--regions",
+        "4",
+        "--distributed",
+        "3",
+        "--dist-timeout",
+        "90",
+        "--inject-worker",
+        inject,
+    ];
+    args.extend_from_slice(extra);
+    let cut_arg = dist_cut.to_str().unwrap().to_string();
+    args.extend_from_slice(&["--cut", &cut_arg]);
+    let (st, out, err) = run_solve(&args, "recovering distributed solve");
+    assert!(st.success(), "{tag}: solve failed:\nstdout:\n{out}\nstderr:\n{err}");
+    assert_eq!(flow_in(&out), flow_in(&seq_out), "{tag}: flow after recovery:\n{out}");
+    assert_eq!(
+        std::fs::read(&dist_cut).unwrap(),
+        std::fs::read(&seq_cut).unwrap(),
+        "{tag}: cut after recovery"
+    );
+    assert!(restarts_in(&out) >= 1, "{tag}: no restart recorded:\n{out}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn injected_crash_recovers_to_sequential_flow_and_cut() {
+    // worker 0 owns two of the four regions, so its second discharge —
+    // and the injected exit(3) — lands in the very first sweep
+    assert_recovers("0:crash:1", &[], "crash");
+}
+
+#[test]
+fn injected_corrupt_reply_recovers_to_sequential_flow_and_cut() {
+    // the flipped payload bit fails the frame CRC; the master must
+    // discard the reply, restart the worker and re-issue the batch
+    assert_recovers("0:corrupt:1", &[], "corrupt");
+}
+
+#[test]
+fn stalled_sweep_hits_deadline_and_recovers() {
+    // the stalled worker trickles heartbeats, so only the per-sweep
+    // deadline (not the per-read io timeout) can declare it dead
+    assert_recovers("0:stall:1:20", &["--sweep-timeout", "2"], "stall");
+}
+
+#[test]
+fn checkpoint_then_resume_from_matches_sequential() {
+    let tmp = std::env::temp_dir()
+        .join(format!("armincut_dist_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let store = tmp.join("store");
+    let ck = tmp.join("ck");
+    let seq_cut = tmp.join("seq.cut");
+    let first_cut = tmp.join("first.cut");
+    let resumed_cut = tmp.join("resumed.cut");
+    let seq_out = seq_oracle(&seq_cut);
+
+    // first run: checkpoint the master state at every sweep barrier
+    let (st, out, err) = run_solve(
+        &[
+            "--gen",
+            GEN,
+            "--algo",
+            "s-ard",
+            "--regions",
+            "4",
+            "--distributed",
+            "2",
+            "--dist-timeout",
+            "90",
+            "--streaming",
+            store.to_str().unwrap(),
+            "--checkpoint",
+            ck.to_str().unwrap(),
+            "--cut",
+            first_cut.to_str().unwrap(),
+        ],
+        "checkpointed solve",
+    );
+    assert!(st.success(), "checkpointed solve failed:\nstdout:\n{out}\nstderr:\n{err}");
+    assert_eq!(flow_in(&out), flow_in(&seq_out), "checkpointed flow:\n{out}");
+    assert!(out.contains("ckpt"), "checkpoint bytes missing from summary:\n{out}");
+    assert!(
+        std::fs::read_dir(&ck).map(|d| d.count() > 0).unwrap_or(false),
+        "no checkpoint written under {}",
+        ck.display()
+    );
+
+    // second run: restart from the last barrier against the same
+    // worker stores — flow and cut must be unchanged
+    let (st, out, err) = run_solve(
+        &[
+            "--gen",
+            GEN,
+            "--algo",
+            "s-ard",
+            "--regions",
+            "4",
+            "--distributed",
+            "2",
+            "--dist-timeout",
+            "90",
+            "--streaming",
+            store.to_str().unwrap(),
+            "--resume-from",
+            ck.to_str().unwrap(),
+            "--cut",
+            resumed_cut.to_str().unwrap(),
+        ],
+        "resumed solve",
+    );
+    assert!(st.success(), "resumed solve failed:\nstdout:\n{out}\nstderr:\n{err}");
+    assert_eq!(flow_in(&out), flow_in(&seq_out), "resumed flow:\n{out}");
+    assert_eq!(
+        std::fs::read(&resumed_cut).unwrap(),
+        std::fs::read(&seq_cut).unwrap(),
+        "resumed cut"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn cli_rejects_bad_fault_flags() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    for (args, needle) in [
+        (&["--sweep-timeout", "0"][..], "sweep-timeout"),
+        (&["--max-worker-restarts", "many"][..], "max-worker-restarts"),
+        (&["--inject-worker", "0:explode:1"][..], "inject-worker"),
+        (&["--inject-worker", "zero:crash:1"][..], "inject-worker"),
+    ] {
+        let out = Command::new(exe)
+            .args([
+                "solve",
+                "--gen",
+                "synth2d:8,8,8,150,1",
+                "--algo",
+                "s-ard",
+                "--distributed",
+                "2",
+            ])
+            .args(args)
+            .output()
+            .expect("run CLI");
+        assert_eq!(out.status.code(), Some(2), "{args:?} is a usage error");
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains(needle),
+            "{args:?}: error must mention {needle}"
+        );
+    }
+    // a bad worker-side spec is a usage error too
+    let out = Command::new(exe)
+        .args([
+            "worker",
+            "--connect",
+            "127.0.0.1:1",
+            "--inject",
+            "explode:1",
+        ])
+        .output()
+        .expect("run worker CLI");
+    assert_eq!(out.status.code(), Some(2), "bad --inject is a usage error");
 }

@@ -11,11 +11,12 @@ For every (bench, case, solver) record present in both directories:
   makes the script exit 1;
 * ``wall_seconds``, the disk-byte fields (schema 3:
   ``page_stored_bytes``, ``page_raw_bytes``), the distributed wire
-  fields (schema 4: ``wire_bytes_sent``/``recv``) and the
-  parallel-sweep fields (schema 5: ``dist_batches``,
-  ``max_inflight_discharges``, ``par_sweep_seconds``; older schemas
-  fall back to zero) are reported as deltas or carried in the history —
-  advisory only, machines differ.
+  fields (schema 4: ``wire_bytes_sent``/``recv``), the parallel-sweep
+  fields (schema 5: ``dist_batches``, ``max_inflight_discharges``,
+  ``par_sweep_seconds``) and the fault-tolerance fields (schema 6:
+  ``worker_restarts``, ``checkpoint_bytes``, ``recovery_wall_seconds``;
+  older schemas fall back to zero) are reported as deltas or carried in
+  the history — advisory only, machines differ.
 
 With ``--history FILE`` the script additionally maintains a rolling
 multi-run history: one JSON line per run (condensed records: flow,
@@ -55,6 +56,9 @@ HISTORY_FIELDS = (
     "dist_batches",
     "max_inflight_discharges",
     "par_sweep_seconds",
+    "worker_restarts",
+    "checkpoint_bytes",
+    "recovery_wall_seconds",
 )
 
 
@@ -127,9 +131,14 @@ def compare(current: dict[str, dict], baseline: dict[str, dict],
             wire_b = int(b.get("wire_bytes_sent", 0)) + int(b.get("wire_bytes_recv", 0))
             if wire_c or wire_b:
                 wire = f", wire {fmt_delta(wire_c, wire_b, 'B')}"
+            rest = ""
+            rest_c = int(c.get("worker_restarts", 0))
+            rest_b = int(b.get("worker_restarts", 0))
+            if rest_c or rest_b:
+                rest = f", restarts {rest_b} -> {rest_c}"
             print(
                 f"{bench_id} {case} {solver}: "
-                f"wall {fmt_delta(cw, bw, 's')}{disk}{wire}{marker}"
+                f"wall {fmt_delta(cw, bw, 's')}{disk}{wire}{rest}{marker}"
             )
         for key in sorted(set(base) - set(cur)):
             print(f"{bench_id} {key}: record disappeared from current run")

@@ -1,7 +1,7 @@
 # Convenience targets. `make artifacts` needs JAX (python/compile/aot.py);
 # everything else is plain cargo/pytest.
 
-.PHONY: artifacts build test bench-quick table2 pytest
+.PHONY: artifacts build test bench-quick table2 pytest analyze
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts/model.hlo.txt
@@ -23,3 +23,8 @@ table2:
 
 pytest:
 	python3 -m pytest python/tests -q
+
+# Repo-invariant static analysis (schema drift, protocol
+# exhaustiveness, panic policy) — the same gate CI runs.
+analyze:
+	cd rust && cargo run --release -- analyze

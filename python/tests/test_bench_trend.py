@@ -17,18 +17,27 @@ spec = importlib.util.spec_from_file_location("bench_trend", SCRIPT)
 bench_trend = importlib.util.module_from_spec(spec)
 spec.loader.exec_module(bench_trend)
 
+#: The committed record schema (`armincut analyze --emit-schema`); the
+#: fixtures below are built from it so they always validate.
+SCHEMA = json.loads(
+    (Path(__file__).resolve().parents[2] / "scripts" /
+     "schema_fields.json").read_text())
 
-def write_bench(dirpath: Path, bench_id: str, records):
+
+def write_bench(dirpath: Path, bench_id: str, records, schema=None):
     dirpath.mkdir(parents=True, exist_ok=True)
-    doc = {"bench": bench_id, "schema": 3, "quick": True,
-           "experiment_wall_seconds": None, "records": records}
+    doc = {"bench": bench_id, "schema": schema or SCHEMA["schema"],
+           "quick": True, "experiment_wall_seconds": None,
+           "records": records}
     (dirpath / f"BENCH_{bench_id}.json").write_text(json.dumps(doc))
 
 
 def rec(case="g", solver="S-ARD", flow=42, wall=1.0, stored=0):
-    return {"case": case, "solver": solver, "flow": flow,
-            "sweeps": 3, "discharges": 9, "wall_seconds": wall,
-            "converged": True, "page_stored_bytes": stored}
+    r = {f: 0 for f in SCHEMA["fields"]}
+    r.update({"case": case, "solver": solver, "flow": flow,
+              "sweeps": 3, "discharges": 9, "wall_seconds": wall,
+              "converged": True, "page_stored_bytes": stored})
+    return r
 
 
 def test_matching_flows_exit_zero(tmp_path, capsys):
@@ -154,10 +163,16 @@ def test_schema6_fields_survive_into_history(tmp_path):
 
 
 def test_schema6_fields_default_to_zero_for_old_records(tmp_path):
+    # a genuinely old-style partial record: skip validation (it would
+    # rightly flag it) and check the history defaults the gaps to 0
     hist = tmp_path / "history.jsonl"
-    write_bench(tmp_path / "cur", "fig6", [rec()])
+    old = {"case": "g", "solver": "S-ARD", "flow": 42, "sweeps": 3,
+           "discharges": 9, "wall_seconds": 1.0, "converged": True,
+           "page_stored_bytes": 0}
+    write_bench(tmp_path / "cur", "fig6", [old], schema=3)
     bench_trend.main(
-        [str(tmp_path / "cur"), str(tmp_path / "nowhere"), "--history", str(hist)])
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"), "--history", str(hist),
+         "--schema", str(tmp_path / "no_schema.json")])
     r = json.loads(hist.read_text())["records"][0]
     assert r["worker_restarts"] == 0
     assert r["checkpoint_bytes"] == 0
@@ -209,3 +224,66 @@ def test_history_drops_corrupt_lines(tmp_path):
     lines = hist.read_text().splitlines()
     assert len(lines) == 2
     assert json.loads(lines[0])["run"] == "old"
+
+
+# --- record-schema validation against scripts/schema_fields.json ---
+
+
+def test_drifted_record_missing_field_exits_one(tmp_path, capsys):
+    # seed drift: the Rust writer (supposedly) stopped emitting
+    # wire_raw_bytes — the record no longer matches the emitted schema
+    drifted = rec()
+    del drifted["wire_raw_bytes"]
+    write_bench(tmp_path / "cur", "fig6", [drifted])
+    write_bench(tmp_path / "base", "fig6", [rec()])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 1
+    assert "schema drift" in out and "wire_raw_bytes" in out
+
+
+def test_record_with_unknown_field_exits_one(tmp_path, capsys):
+    drifted = rec()
+    drifted["brand_new_counter"] = 7
+    write_bench(tmp_path / "cur", "fig6", [drifted])
+    write_bench(tmp_path / "base", "fig6", [rec()])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 1
+    assert "unknown field" in out and "brand_new_counter" in out
+    assert "--emit-schema" in out  # the fix is named in the message
+
+
+def test_stale_schema_stamp_exits_one(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec()], schema=3)
+    write_bench(tmp_path / "base", "fig6", [rec()])
+    code = bench_trend.main([str(tmp_path / "cur"), str(tmp_path / "base")])
+    out = capsys.readouterr().out
+    assert code == 1
+    assert "schema 3 != expected" in out
+
+
+def test_baseline_records_are_exempt_from_validation(tmp_path):
+    # baselines may predate a schema bump; only the current run gates
+    old = {"case": "g", "solver": "S-ARD", "flow": 42,
+           "wall_seconds": 1.0}
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    write_bench(tmp_path / "base", "fig6", [old], schema=3)
+    assert bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "base")]) == 0
+
+
+def test_missing_schema_file_warns_but_does_not_gate(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    code = bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"),
+         "--schema", str(tmp_path / "no_schema.json")])
+    assert code == 0
+    assert "skipping validation" in capsys.readouterr().out
+
+
+def test_committed_schema_matches_the_tests_assumptions():
+    # HISTORY_FIELDS in the script must be exactly the emitted
+    # history_fields list, and every history field must be a record field
+    assert list(bench_trend.HISTORY_FIELDS) == SCHEMA["history_fields"]
+    assert set(SCHEMA["history_fields"]) <= set(SCHEMA["fields"])

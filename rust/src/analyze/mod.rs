@@ -1,0 +1,130 @@
+//! `armincut analyze` — a zero-dependency static analyzer over the
+//! repo's own sources, run as a hard CI gate. Three invariants:
+//!
+//! * **schema-drift** ([`schema`]): the BENCH record schema
+//!   (`RunMetrics` → `BenchRecord` → JSON writer → `HISTORY_FIELDS`
+//!   in `scripts/bench_trend.py`) stays consistent end to end.
+//! * **protocol** ([`protocol`]): every `Msg` kind has encode/decode
+//!   arms and roundtrip + corruption coverage, and `PROTO_VERSION`
+//!   matches the ARCHITECTURE.md frame table.
+//! * **panic-policy** ([`panics`]): no `unwrap()`/`expect(`/`panic!`/
+//!   `unreachable!` in non-test code under `dist/`, `store/`,
+//!   `coordinator/`, except annotated sites pinned by a
+//!   shrink-only ratchet.
+//!
+//! Parsing is the deliberately small scanner in [`source`]: a
+//! comment/string mask plus brace matching, which is all three checks
+//! need. See ARCHITECTURE.md § Correctness tooling.
+
+pub mod panics;
+pub mod protocol;
+pub mod schema;
+pub(crate) mod source;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One analyzer complaint, printed `file:line: [check] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Which check fired (`"schema-drift"`, `"protocol"`,
+    /// `"panic-policy"`).
+    pub check: &'static str,
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number (best effort; 1 when unknown).
+    pub line: usize,
+    /// Human-readable explanation, including how to fix the drift.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.check, self.message)
+    }
+}
+
+/// What `run` should do, mapped 1:1 from the CLI flags.
+#[derive(Debug, Clone)]
+pub struct AnalyzeOptions {
+    /// Repo root (the directory holding `rust/` and `scripts/`).
+    pub root: PathBuf,
+    /// Ratchet the panic allowlist pin *down* to the observed count.
+    pub fix_allow: bool,
+    /// Also write `scripts/schema_fields.json` from the live sources.
+    pub emit_schema: bool,
+}
+
+/// Run every check against the tree. `Err` is an I/O-level failure
+/// (can't read a source the checks need); findings are the analysis
+/// result proper.
+pub fn run(opts: &AnalyzeOptions) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    findings.extend(schema::check(&opts.root)?);
+    findings.extend(protocol::check(&opts.root)?);
+    findings.extend(panics::check(&opts.root, opts.fix_allow)?);
+    if opts.emit_schema {
+        let path = schema::emit(&opts.root)?;
+        eprintln!("analyze: wrote {}", path.display());
+    }
+    Ok(findings)
+}
+
+/// Find the repo root at or above `start`: the first ancestor holding
+/// both `rust/src` and `scripts/bench_trend.py`. Lets the binary run
+/// from the repo root, from `rust/`, or from anywhere inside.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start);
+    while let Some(d) = dir {
+        if d.join("rust/src").is_dir() && d.join("scripts/bench_trend.py").is_file() {
+            return Some(d.to_path_buf());
+        }
+        dir = d.parent();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_root() -> PathBuf {
+        // CARGO_MANIFEST_DIR is rust/; the repo root is its parent
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+    }
+
+    #[test]
+    fn find_root_walks_up_from_inside_the_tree() {
+        let root = repo_root();
+        assert_eq!(find_root(&root.join("rust/src/dist")), Some(root.clone()));
+        assert_eq!(find_root(&root), Some(root));
+        assert_eq!(find_root(Path::new("/")), None);
+    }
+
+    /// The gate itself: the checked-in tree must analyze clean. If this
+    /// fails, the tree has real drift — fix the drift, don't relax the
+    /// test.
+    #[test]
+    fn the_real_tree_is_clean() {
+        let opts = AnalyzeOptions { root: repo_root(), fix_allow: false, emit_schema: false };
+        let findings = run(&opts).expect("analyzer ran");
+        assert!(
+            findings.is_empty(),
+            "repo-invariant drift:\n{}",
+            findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+    }
+
+    /// The committed `scripts/schema_fields.json` must match what
+    /// `--emit-schema` would regenerate from the live sources.
+    #[test]
+    fn committed_schema_fields_json_is_current() {
+        let root = repo_root();
+        let bench = std::fs::read_to_string(root.join(schema::BENCH_RS)).unwrap();
+        let trend = std::fs::read_to_string(root.join(schema::TREND_PY)).unwrap();
+        let want = schema::emit_json(&bench, &trend).unwrap();
+        let got = std::fs::read_to_string(root.join("scripts/schema_fields.json"))
+            .expect("scripts/schema_fields.json is committed");
+        assert_eq!(got, want, "stale scripts/schema_fields.json; rerun --emit-schema");
+    }
+}

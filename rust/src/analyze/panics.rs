@@ -1,0 +1,294 @@
+//! Panic-policy lint: no `unwrap()` / `expect(` / `panic!` /
+//! `unreachable!` in non-test code under `rust/src/{dist,store,
+//! coordinator}/` — the paths a distributed fleet lives or dies on —
+//! except sites annotated `// analyze:allow(panic): <reason>`. The
+//! number of annotated sites is pinned in `panic_allow.pin` and the
+//! ratchet only goes down: a new allow site fails the analysis, and a
+//! removed one fails too until the pin is lowered (`--fix-allow`).
+
+use crate::analyze::source::{code_mask, line_of, test_spans};
+use crate::analyze::Finding;
+use std::path::Path;
+
+/// Directories (repo-relative) the lint guards.
+pub const GUARDED_DIRS: &[&str] =
+    &["rust/src/dist", "rust/src/store", "rust/src/coordinator"];
+
+/// Repo-relative path of the allowlist pin.
+pub const PIN_FILE: &str = "rust/src/analyze/panic_allow.pin";
+
+/// The annotation that exempts the next (or same) line, reason required.
+pub const ANNOTATION: &str = "analyze:allow(panic):";
+
+const TOKENS: &[&str] = &[".unwrap()", ".expect(", "panic!", "unreachable!"];
+
+/// Scan one source file. Returns the findings plus the number of
+/// properly annotated (allowed) panic sites.
+pub fn scan_source(rel: &str, src: &str) -> (Vec<Finding>, usize) {
+    let mask = code_mask(src);
+    let tests = test_spans(&mask);
+    let lines: Vec<&str> = src.lines().collect();
+    let mut findings = Vec::new();
+    let mut allowed = 0usize;
+    for token in TOKENS {
+        let mut from = 0usize;
+        while let Some(rel_at) = mask[from..].find(token) {
+            let at = from + rel_at;
+            from = at + token.len();
+            if token.starts_with(|c: char| c.is_ascii_alphabetic()) {
+                // word boundary: `repanic!` or `x.unreachable!` must
+                // not match (the dotted forms match their own tokens)
+                let b = mask.as_bytes();
+                if at > 0 && (b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_') {
+                    continue;
+                }
+            }
+            if tests.iter().any(|&(s, e)| s <= at && at < e) {
+                continue;
+            }
+            let line = line_of(src, at);
+            match annotation_reason(&lines, line) {
+                Some(reason) if !reason.is_empty() => allowed += 1,
+                Some(_) => findings.push(Finding {
+                    check: "panic-policy",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`{token}` has an `{ANNOTATION}` annotation with no reason"
+                    ),
+                }),
+                None => findings.push(Finding {
+                    check: "panic-policy",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`{token}` in non-test code; return a typed error, or annotate \
+                         the site with `// {ANNOTATION} <reason>`"
+                    ),
+                }),
+            }
+        }
+    }
+    (findings, allowed)
+}
+
+/// Look for the annotation on the site's own line or in the contiguous
+/// run of comment-only lines directly above it. Returns the reason
+/// text (possibly empty) when the annotation is present.
+fn annotation_reason(lines: &[&str], line: usize) -> Option<String> {
+    let reason_of = |l: &str| {
+        l.find(ANNOTATION)
+            .map(|at| l[at + ANNOTATION.len()..].trim().to_string())
+    };
+    let idx = line.checked_sub(1)?;
+    if let Some(r) = lines.get(idx).and_then(|l| reason_of(l)) {
+        return Some(r);
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let trimmed = lines[i].trim_start();
+        if !trimmed.starts_with("//") {
+            break;
+        }
+        if let Some(r) = reason_of(trimmed) {
+            return Some(r);
+        }
+    }
+    None
+}
+
+/// Parse the pin file: the first non-comment, non-empty line is the
+/// pinned allow count.
+pub fn parse_pin(text: &str) -> Option<usize> {
+    text.lines()
+        .map(str::trim)
+        .find(|l| !l.is_empty() && !l.starts_with('#'))
+        .and_then(|l| l.parse().ok())
+}
+
+fn render_pin(old: &str, count: usize) -> String {
+    let mut out = String::new();
+    for l in old.lines() {
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('#') {
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    out.push_str(&count.to_string());
+    out.push('\n');
+    out
+}
+
+/// Compare the observed allow count against the pin, producing
+/// findings per the ratchet. With `fix_allow`, a *shrunk* count
+/// rewrites the pin instead of failing; growth always fails.
+pub fn check_pin(
+    pin_text: &str,
+    allowed: usize,
+    fix_allow: bool,
+) -> (Vec<Finding>, Option<String>) {
+    let mut findings = Vec::new();
+    let Some(pin) = parse_pin(pin_text) else {
+        findings.push(Finding {
+            check: "panic-policy",
+            file: PIN_FILE.to_string(),
+            line: 1,
+            message: "pin file is missing its count line".into(),
+        });
+        return (findings, None);
+    };
+    if allowed > pin {
+        findings.push(Finding {
+            check: "panic-policy",
+            file: PIN_FILE.to_string(),
+            line: 1,
+            message: format!(
+                "{allowed} `{ANNOTATION}` sites exceed the pinned {pin} — the \
+                 allowlist only shrinks; convert the new site to a typed error"
+            ),
+        });
+        return (findings, None);
+    }
+    if allowed < pin {
+        if fix_allow {
+            return (findings, Some(render_pin(pin_text, allowed)));
+        }
+        findings.push(Finding {
+            check: "panic-policy",
+            file: PIN_FILE.to_string(),
+            line: 1,
+            message: format!(
+                "only {allowed} `{ANNOTATION}` sites remain but the pin says {pin}; \
+                 run `armincut analyze --fix-allow` to ratchet the pin down"
+            ),
+        });
+    }
+    (findings, None)
+}
+
+/// Run the lint over the guarded directories under `root`.
+pub fn check(root: &Path, fix_allow: bool) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    let mut allowed = 0usize;
+    for dir in GUARDED_DIRS {
+        let mut files = Vec::new();
+        collect_rs(&root.join(dir), &mut files)?;
+        files.sort();
+        for path in files {
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| format!("read {}: {e}", path.display()))?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let (f, a) = scan_source(&rel, &src);
+            findings.extend(f);
+            allowed += a;
+        }
+    }
+    let pin_path = root.join(PIN_FILE);
+    let pin_text = std::fs::read_to_string(&pin_path)
+        .map_err(|e| format!("read {}: {e}", pin_path.display()))?;
+    let (pin_findings, rewrite) = check_pin(&pin_text, allowed, fix_allow);
+    findings.extend(pin_findings);
+    if let Some(new_text) = rewrite {
+        std::fs::write(&pin_path, new_text)
+            .map_err(|e| format!("write {}: {e}", pin_path.display()))?;
+        eprintln!("analyze: pinned allow count lowered to {allowed}");
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unannotated_unwrap_in_dist_is_detected() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (findings, allowed) = scan_source("rust/src/dist/fake.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(allowed, 0);
+        assert_eq!(findings[0].line, 1);
+        assert!(findings[0].message.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn annotated_site_is_allowed_and_counted() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    \
+                   // analyze:allow(panic): shape invariant, checked above\n    \
+                   x.unwrap()\n}\n";
+        let (findings, allowed) = scan_source("rust/src/store/fake.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(allowed, 1);
+    }
+
+    #[test]
+    fn annotation_without_reason_is_rejected() {
+        let src = "fn f() {\n    // analyze:allow(panic):\n    panic!(\"boom\")\n}\n";
+        let (findings, allowed) = scan_source("rust/src/dist/fake.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(allowed, 0);
+        assert!(findings[0].message.contains("no reason"));
+    }
+
+    #[test]
+    fn test_code_and_comments_and_strings_are_exempt() {
+        let src = "fn f() { log(\"never panic! here\"); } // .unwrap() in prose\n\
+                   #[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); \
+                   y.expect(\"msg\"); panic!(); unreachable!(); }\n}\n";
+        let (findings, allowed) = scan_source("rust/src/dist/fake.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(allowed, 0);
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "fn f() { let g = m.lock().unwrap_or_else(|e| e.into_inner()); \
+                   let _ = g; }\n";
+        let (findings, _) = scan_source("rust/src/coordinator/fake.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn pin_ratchet_only_shrinks() {
+        let pin = "# comment\n2\n";
+        // equal: clean
+        let (f, w) = check_pin(pin, 2, false);
+        assert!(f.is_empty() && w.is_none());
+        // growth: always a finding, even with --fix-allow
+        let (f, w) = check_pin(pin, 3, true);
+        assert_eq!(f.len(), 1);
+        assert!(w.is_none());
+        assert!(f[0].message.contains("only shrinks"));
+        // shrink without --fix-allow: stale pin finding
+        let (f, w) = check_pin(pin, 1, false);
+        assert_eq!(f.len(), 1);
+        assert!(w.is_none());
+        assert!(f[0].message.contains("--fix-allow"));
+        // shrink with --fix-allow: rewrite, comments preserved
+        let (f, w) = check_pin(pin, 1, true);
+        assert!(f.is_empty());
+        let new = w.unwrap();
+        assert!(new.contains("# comment"));
+        assert_eq!(parse_pin(&new), Some(1));
+    }
+}

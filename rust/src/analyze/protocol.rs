@@ -1,0 +1,339 @@
+//! Protocol-exhaustiveness check: every [`Msg`](crate::dist::proto::Msg)
+//! kind must have a `KIND_*` constant, an encode arm, a decode arm, and
+//! be covered by the roundtrip *and* corruption tests (both iterate
+//! `all_msgs()`, so coverage means appearing in that fixture); and
+//! `PROTO_VERSION` must match the frame table in ARCHITECTURE.md. A
+//! variant added without wiring any one of those is a frame the fleet
+//! can emit but a peer cannot parse — exactly the drift class a
+//! versioned wire protocol exists to prevent.
+
+use crate::analyze::source::{code_mask, item_body, item_span, line_of};
+use crate::analyze::Finding;
+use std::path::Path;
+
+pub const PROTO_RS: &str = "rust/src/dist/proto.rs";
+pub const ARCH_MD: &str = "ARCHITECTURE.md";
+
+/// Methods of `Msg` that must have one arm per variant.
+const PER_VARIANT_FNS: &[&str] = &["kind", "name", "encode", "decode"];
+
+/// Test fns that must exist and iterate the `all_msgs()` fixture.
+const COVERAGE_TESTS: &[&str] =
+    &["every_message_roundtrips", "truncation_and_bit_flips_are_rejected_for_every_kind"];
+
+/// Depth-1 variant names of `enum name`, in declaration order.
+pub fn enum_variants(src: &str, name: &str) -> Option<Vec<String>> {
+    let mask = code_mask(src);
+    let (start, end) = item_body(&mask, "enum", name)?;
+    let body = &mask[start..end];
+    let mut variants = Vec::new();
+    let mut depth = 0i32;
+    for line in body.lines() {
+        let at_top = depth == 0;
+        for c in line.chars() {
+            match c {
+                '{' | '(' | '[' => depth += 1,
+                '}' | ')' | ']' => depth -= 1,
+                _ => {}
+            }
+        }
+        if !at_top {
+            continue;
+        }
+        let t = line.trim();
+        let ident: String =
+            t.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+        if !ident.is_empty() && ident.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+        {
+            variants.push(ident);
+        }
+    }
+    Some(variants)
+}
+
+/// `pub const PROTO_VERSION: u16 = N;` in proto.rs.
+pub fn proto_version(src: &str) -> Option<u32> {
+    let mask = code_mask(src);
+    let at = mask.find("const PROTO_VERSION")?;
+    let eq = at + mask[at..].find('=')?;
+    mask[eq + 1..]
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .ok()
+}
+
+/// The version in ARCHITECTURE.md's frame table: `PROTO_VERSION (N;`.
+pub fn documented_version(arch_md: &str) -> Option<u32> {
+    let at = arch_md.find("PROTO_VERSION (")?;
+    arch_md[at + "PROTO_VERSION (".len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .ok()
+}
+
+fn miss(findings: &mut Vec<Finding>, line: usize, message: String) {
+    findings.push(Finding { check: "protocol", file: PROTO_RS.to_string(), line, message });
+}
+
+/// The whole check, on in-memory sources (unit tests seed drift here).
+pub fn check_sources(proto_src: &str, arch_md: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    let mask = code_mask(proto_src);
+    let enum_line =
+        item_span(&mask, "enum", "Msg").map_or(1, |(s, _)| line_of(proto_src, s));
+    let Some(variants) = enum_variants(proto_src, "Msg") else {
+        miss(&mut findings, 1, "enum Msg not found".into());
+        return findings;
+    };
+    if variants.is_empty() {
+        miss(&mut findings, enum_line, "enum Msg has no parsed variants".into());
+        return findings;
+    }
+
+    // one KIND_* constant per variant
+    let kind_consts = mask.matches("const KIND_").count();
+    if kind_consts != variants.len() {
+        miss(
+            &mut findings,
+            enum_line,
+            format!(
+                "{} Msg variants but {} KIND_* constants",
+                variants.len(),
+                kind_consts
+            ),
+        );
+    }
+
+    // every per-variant method has an arm for every variant
+    for fn_name in PER_VARIANT_FNS {
+        let Some((start, end)) = item_body(&mask, "fn", fn_name) else {
+            miss(&mut findings, 1, format!("fn {fn_name} not found"));
+            continue;
+        };
+        let body = &mask[start..end];
+        let body_line = line_of(proto_src, start);
+        for v in &variants {
+            if !has_variant_ref(body, v) {
+                miss(
+                    &mut findings,
+                    body_line,
+                    format!("fn {fn_name} has no arm for Msg::{v}"),
+                );
+            }
+        }
+    }
+
+    // the shared test fixture covers every variant…
+    match item_body(&mask, "fn", "all_msgs") {
+        Some((start, end)) => {
+            let body = &mask[start..end];
+            let body_line = line_of(proto_src, start);
+            for v in &variants {
+                if !has_variant_ref(body, v) {
+                    miss(
+                        &mut findings,
+                        body_line,
+                        format!(
+                            "test fixture all_msgs() does not construct Msg::{v}, so the \
+                             roundtrip and corruption tests never cover it"
+                        ),
+                    );
+                }
+            }
+        }
+        None => miss(&mut findings, 1, "test fixture fn all_msgs not found".into()),
+    }
+
+    // …and both coverage tests exist and actually iterate it
+    for t in COVERAGE_TESTS {
+        match item_body(&mask, "fn", t) {
+            Some((start, end)) => {
+                if !mask[start..end].contains("all_msgs") {
+                    miss(
+                        &mut findings,
+                        line_of(proto_src, start),
+                        format!("test {t} does not iterate all_msgs()"),
+                    );
+                }
+            }
+            None => miss(&mut findings, 1, format!("test {t} not found")),
+        }
+    }
+
+    // PROTO_VERSION matches the documented frame table
+    match (proto_version(proto_src), documented_version(arch_md)) {
+        (Some(code), Some(doc)) if code != doc => miss(
+            &mut findings,
+            1,
+            format!(
+                "PROTO_VERSION is {code} but {ARCH_MD} documents {doc} in the frame table"
+            ),
+        ),
+        (None, _) => miss(&mut findings, 1, "const PROTO_VERSION not found".into()),
+        (_, None) => findings.push(Finding {
+            check: "protocol",
+            file: ARCH_MD.to_string(),
+            line: 1,
+            message: "frame table entry `PROTO_VERSION (N;` not found".into(),
+        }),
+        _ => {}
+    }
+    findings
+}
+
+/// `Msg::V` with a word boundary after the variant name (so `Discharge`
+/// does not match `DischargeBatch`).
+fn has_variant_ref(masked_body: &str, variant: &str) -> bool {
+    let needle = format!("Msg::{variant}");
+    let b = masked_body.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = masked_body[from..].find(&needle) {
+        let end = from + rel + needle.len();
+        if end >= b.len() || !(b[end].is_ascii_alphanumeric() || b[end] == b'_') {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("read {rel}: {e}"))
+}
+
+/// Run the check against the tree at `root`.
+pub fn check(root: &Path) -> Result<Vec<Finding>, String> {
+    Ok(check_sources(&read(root, PROTO_RS)?, &read(root, ARCH_MD)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PROTO: &str = r#"
+pub const PROTO_VERSION: u16 = 3;
+pub enum Msg {
+    Hello { proto: u32 },
+    Data(Vec<u8>),
+    Shutdown,
+}
+const KIND_HELLO: u8 = 1;
+const KIND_DATA: u8 = 2;
+const KIND_SHUTDOWN: u8 = 3;
+impl Msg {
+    fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => KIND_HELLO,
+            Msg::Data(_) => KIND_DATA,
+            Msg::Shutdown => KIND_SHUTDOWN,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Data(_) => "Data",
+            Msg::Shutdown => "Shutdown",
+        }
+    }
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            Msg::Hello { proto } => e.u32(*proto),
+            Msg::Data(d) => e.bytes(d),
+            Msg::Shutdown => {}
+        }
+    }
+    fn decode(kind: u8, d: &mut Dec) -> Option<Msg> {
+        Some(match kind {
+            KIND_HELLO => Msg::Hello { proto: d.u32()? },
+            KIND_DATA => Msg::Data(d.bytes()?),
+            KIND_SHUTDOWN => Msg::Shutdown,
+            _ => return None,
+        })
+    }
+}
+#[cfg(test)]
+mod tests {
+    fn all_msgs() -> Vec<Msg> {
+        vec![Msg::Hello { proto: 3 }, Msg::Data(vec![1]), Msg::Shutdown]
+    }
+    #[test]
+    fn every_message_roundtrips() {
+        for m in all_msgs() { roundtrip(m); }
+    }
+    #[test]
+    fn truncation_and_bit_flips_are_rejected_for_every_kind() {
+        for m in all_msgs() { corrupt(m); }
+    }
+}
+"#;
+    const ARCH: &str = "| 4 | 2 | version | PROTO_VERSION (3; peers reject others) |\n";
+
+    #[test]
+    fn consistent_fixture_is_clean() {
+        let findings = check_sources(PROTO, ARCH);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(
+            enum_variants(PROTO, "Msg").unwrap(),
+            ["Hello", "Data", "Shutdown"]
+        );
+    }
+
+    #[test]
+    fn variant_missing_from_all_msgs_is_detected() {
+        // seed drift: the corruption/roundtrip fixture loses Shutdown —
+        // "a Msg kind without a corruption test"
+        let drifted = PROTO.replace(
+            "vec![Msg::Hello { proto: 3 }, Msg::Data(vec![1]), Msg::Shutdown]",
+            "vec![Msg::Hello { proto: 3 }, Msg::Data(vec![1])]",
+        );
+        let findings = check_sources(&drifted, ARCH);
+        assert!(
+            findings.iter().any(|f| f.message.contains("all_msgs()")
+                && f.message.contains("Msg::Shutdown")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn missing_decode_arm_and_kind_const_are_detected() {
+        let drifted = PROTO
+            .replace("            KIND_SHUTDOWN => Msg::Shutdown,\n", "")
+            .replace("const KIND_SHUTDOWN: u8 = 3;\n", "");
+        let findings = check_sources(&drifted, ARCH);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("fn decode has no arm for Msg::Shutdown")),
+            "{findings:?}"
+        );
+        assert!(
+            findings.iter().any(|f| f.message.contains("KIND_* constants")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn version_mismatch_with_architecture_md_is_detected() {
+        let findings =
+            check_sources(PROTO, "| 4 | 2 | version | PROTO_VERSION (2; …) |\n");
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("PROTO_VERSION is 3") && f.message.contains("2")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn variant_prefixes_do_not_alias() {
+        assert!(has_variant_ref("x Msg::Discharge y", "Discharge"));
+        assert!(!has_variant_ref("x Msg::DischargeBatch y", "Discharge"));
+        assert!(has_variant_ref("Msg::DischargeBatch(v)", "DischargeBatch"));
+    }
+}

@@ -1,0 +1,502 @@
+//! Schema-drift check: the BENCH record schema lives in four places —
+//! [`RunMetrics`](crate::coordinator::metrics::RunMetrics),
+//! `CompetitorResult`, `BenchRecord` + its hand-rolled JSON writer, and
+//! `HISTORY_FIELDS` in `scripts/bench_trend.py` — and has been bumped
+//! six times. This check extracts all four field lists from source and
+//! fails on any consumer that fell behind. It is the contract for
+//! future schema bumps: add the field everywhere (or to an exemption
+//! list below, deliberately) or `armincut analyze` goes red.
+
+use crate::analyze::source::{code_mask, item_body, line_of};
+use crate::analyze::Finding;
+use std::path::Path;
+
+pub const METRICS_RS: &str = "rust/src/coordinator/metrics.rs";
+pub const BENCH_RS: &str = "rust/src/experiments/bench_support.rs";
+pub const TREND_PY: &str = "scripts/bench_trend.py";
+pub const HARNESS_RS: &str = "rust/src/experiments/harness.rs";
+
+/// Document-level keys the JSON writer emits around the records.
+const DOC_KEYS: &[&str] = &["bench", "schema", "quick", "experiment_wall_seconds", "records"];
+
+/// `BenchRecord` fields with no `CompetitorResult` counterpart.
+const BENCH_ONLY: &[&str] = &["case"];
+
+/// `BenchRecord` → `CompetitorResult` renames.
+const RENAMED: &[(&str, &str)] = &[("solver", "name"), ("wall_seconds", "seconds")];
+
+/// `RunMetrics` fields deliberately not exported into `BenchRecord`
+/// (internal phase timers and memory gauges). Removing a field from
+/// `RunMetrics` is fine; adding one forces a decision: export it or
+/// list it here.
+const METRICS_NOT_EXPORTED: &[&str] = &[
+    "extra_sweeps",
+    "msg_bytes",
+    "disk_read_bytes",
+    "disk_write_bytes",
+    "t_discharge",
+    "t_relabel",
+    "t_gap",
+    "t_msg",
+    "shared_mem_bytes",
+    "max_region_mem_bytes",
+    "workspace_mem_bytes",
+];
+
+/// The trend-history schema: dropping any of these from
+/// `HISTORY_FIELDS` silently truncates every future history line, so
+/// they are pinned here. Growing `HISTORY_FIELDS` is fine.
+const REQUIRED_HISTORY: &[&str] = &[
+    "flow",
+    "wall_seconds",
+    "page_raw_bytes",
+    "page_stored_bytes",
+    "wire_bytes_sent",
+    "wire_bytes_recv",
+    "wire_raw_bytes",
+    "sync_wall_seconds",
+    "dist_batches",
+    "max_inflight_discharges",
+    "par_sweep_seconds",
+    "worker_restarts",
+    "checkpoint_bytes",
+    "recovery_wall_seconds",
+];
+
+/// Field names of `struct name`, in declaration order.
+pub fn struct_fields(src: &str, name: &str) -> Option<Vec<String>> {
+    let mask = code_mask(src);
+    let (start, end) = item_body(&mask, "struct", name)?;
+    let body = &mask[start..end];
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    for line in body.lines() {
+        let at_top = depth == 0;
+        for c in line.chars() {
+            match c {
+                '{' | '(' | '[' => depth += 1,
+                '}' | ')' | ']' => depth -= 1,
+                _ => {}
+            }
+        }
+        if !at_top {
+            continue;
+        }
+        let t = line.trim();
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        if let Some(colon) = t.find(':') {
+            let ident = t[..colon].trim();
+            if !ident.is_empty()
+                && ident.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+            {
+                fields.push(ident.to_string());
+            }
+        }
+    }
+    Some(fields)
+}
+
+/// Raw (unmasked) text of `fn name`'s body, so string literals — the
+/// JSON writer's keys — stay visible.
+pub fn fn_body<'a>(src: &'a str, name: &str) -> Option<&'a str> {
+    let mask = code_mask(src);
+    let (start, end) = item_body(&mask, "fn", name)?;
+    Some(&src[start..end])
+}
+
+/// JSON keys the writer emits: `\"ident\":` escape sequences inside
+/// the `to_json` body, in order, deduplicated.
+pub fn writer_keys(to_json_body: &str) -> Vec<String> {
+    let mut keys: Vec<String> = Vec::new();
+    let b = to_json_body.as_bytes();
+    let mut i = 0usize;
+    while i + 1 < b.len() {
+        if b[i] == b'\\' && b[i + 1] == b'"' {
+            let mut j = i + 2;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            if j > i + 2
+                && j + 2 < b.len()
+                && b[j] == b'\\'
+                && b[j + 1] == b'"'
+                && b[j + 2] == b':'
+            {
+                let key = &to_json_body[i + 2..j];
+                if !keys.iter().any(|k| k == key) {
+                    keys.push(key.to_string());
+                }
+                i = j + 3;
+                continue; // past the closing `\":`
+            }
+        }
+        i += 1;
+    }
+    keys
+}
+
+/// The `\"schema\": N` version the writer stamps.
+pub fn writer_schema_version(to_json_body: &str) -> Option<u32> {
+    let at = to_json_body.find(r#"\"schema\": "#)?;
+    let digits: String = to_json_body[at + r#"\"schema\": "#.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
+}
+
+/// Entries of the `HISTORY_FIELDS = (…)` tuple in bench_trend.py.
+pub fn history_fields(py_src: &str) -> Option<Vec<String>> {
+    let start = py_src.find("HISTORY_FIELDS = (")?;
+    let open = start + "HISTORY_FIELDS = ".len();
+    let close = open + py_src[open..].find(')')?;
+    let mut out = Vec::new();
+    let tuple = &py_src[open..close];
+    let mut rest = tuple;
+    while let Some(q) = rest.find('"') {
+        let after = &rest[q + 1..];
+        let end = after.find('"')?;
+        out.push(after[..end].to_string());
+        rest = &after[end + 1..];
+    }
+    Some(out)
+}
+
+fn line_of_struct(src: &str, name: &str) -> usize {
+    let mask = code_mask(src);
+    crate::analyze::source::item_span(&mask, "struct", name)
+        .map_or(1, |(s, _)| line_of(src, s))
+}
+
+fn drift(findings: &mut Vec<Finding>, file: &str, line: usize, message: String) {
+    findings.push(Finding { check: "schema-drift", file: file.into(), line, message });
+}
+
+/// The whole check, on in-memory sources (unit tests seed drift here).
+pub fn check_sources(
+    metrics_src: &str,
+    bench_src: &str,
+    harness_src: &str,
+    trend_src: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    let Some(bench_fields) = struct_fields(bench_src, "BenchRecord") else {
+        drift(&mut findings, BENCH_RS, 1, "struct BenchRecord not found".into());
+        return findings;
+    };
+    let Some(metrics_fields) = struct_fields(metrics_src, "RunMetrics") else {
+        drift(&mut findings, METRICS_RS, 1, "struct RunMetrics not found".into());
+        return findings;
+    };
+    let Some(competitor_fields) = struct_fields(harness_src, "CompetitorResult") else {
+        drift(&mut findings, HARNESS_RS, 1, "struct CompetitorResult not found".into());
+        return findings;
+    };
+    let Some(to_json) = fn_body(bench_src, "to_json") else {
+        drift(&mut findings, BENCH_RS, 1, "fn to_json not found".into());
+        return findings;
+    };
+    let keys = writer_keys(to_json);
+    let record_keys: Vec<&String> =
+        keys.iter().filter(|k| !DOC_KEYS.contains(&k.as_str())).collect();
+    let bench_line = line_of_struct(bench_src, "BenchRecord");
+
+    // 1. writer keys <-> BenchRecord fields, both directions
+    for f in &bench_fields {
+        if !record_keys.iter().any(|k| *k == f) {
+            drift(
+                &mut findings,
+                BENCH_RS,
+                bench_line,
+                format!("BenchRecord field `{f}` is never written by to_json"),
+            );
+        }
+    }
+    for k in &record_keys {
+        if !bench_fields.iter().any(|f| f == *k) {
+            drift(
+                &mut findings,
+                BENCH_RS,
+                bench_line,
+                format!("to_json writes key `{k}` that is not a BenchRecord field"),
+            );
+        }
+    }
+
+    // 2. every BenchRecord field has a CompetitorResult counterpart
+    for f in &bench_fields {
+        if BENCH_ONLY.contains(&f.as_str()) {
+            continue;
+        }
+        let want = RENAMED
+            .iter()
+            .find(|r| r.0 == f.as_str())
+            .map(|r| r.1)
+            .unwrap_or(f.as_str());
+        if !competitor_fields.iter().any(|c| c == want) {
+            drift(
+                &mut findings,
+                HARNESS_RS,
+                line_of_struct(harness_src, "CompetitorResult"),
+                format!(
+                    "BenchRecord field `{f}` has no CompetitorResult counterpart `{want}`"
+                ),
+            );
+        }
+    }
+
+    // 3. every RunMetrics field is exported by from_solve or exempted
+    let from_solve = fn_body(bench_src, "from_solve").unwrap_or("");
+    for f in &metrics_fields {
+        if METRICS_NOT_EXPORTED.contains(&f.as_str()) {
+            continue;
+        }
+        if !from_solve.contains(&format!("res.metrics.{f}")) {
+            drift(
+                &mut findings,
+                METRICS_RS,
+                line_of_struct(metrics_src, "RunMetrics"),
+                format!(
+                    "RunMetrics field `{f}` is neither exported by \
+                     BenchRecord::from_solve nor listed in METRICS_NOT_EXPORTED"
+                ),
+            );
+        }
+    }
+    for f in METRICS_NOT_EXPORTED {
+        if !metrics_fields.iter().any(|m| m == f) {
+            drift(
+                &mut findings,
+                METRICS_RS,
+                1,
+                format!("METRICS_NOT_EXPORTED lists `{f}`, which RunMetrics no longer has"),
+            );
+        }
+    }
+
+    // 4. HISTORY_FIELDS: subset of the record keys, superset of the pin
+    let Some(history) = history_fields(trend_src) else {
+        drift(&mut findings, TREND_PY, 1, "HISTORY_FIELDS tuple not found".into());
+        return findings;
+    };
+    for h in &history {
+        if !record_keys.iter().any(|k| *k == h) {
+            drift(
+                &mut findings,
+                TREND_PY,
+                1,
+                format!("HISTORY_FIELDS entry `{h}` is not a BENCH record key"),
+            );
+        }
+    }
+    for r in REQUIRED_HISTORY {
+        if !history.iter().any(|h| h == r) {
+            drift(
+                &mut findings,
+                TREND_PY,
+                1,
+                format!(
+                    "HISTORY_FIELDS dropped `{r}`; the trend history schema only grows"
+                ),
+            );
+        }
+    }
+
+    if writer_schema_version(to_json).is_none() {
+        drift(
+            &mut findings,
+            BENCH_RS,
+            1,
+            "to_json has no literal \\\"schema\\\": N stamp".into(),
+        );
+    }
+    findings
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("read {rel}: {e}"))
+}
+
+/// Run the check against the tree at `root`.
+pub fn check(root: &Path) -> Result<Vec<Finding>, String> {
+    Ok(check_sources(
+        &read(root, METRICS_RS)?,
+        &read(root, BENCH_RS)?,
+        &read(root, HARNESS_RS)?,
+        &read(root, TREND_PY)?,
+    ))
+}
+
+/// Render `scripts/schema_fields.json`: the machine-readable record
+/// schema `bench_trend.py` validates incoming records against.
+pub fn emit_json(bench_src: &str, trend_src: &str) -> Result<String, String> {
+    let to_json = fn_body(bench_src, "to_json").ok_or("fn to_json not found")?;
+    let version = writer_schema_version(to_json).ok_or("no schema version stamp")?;
+    let keys = writer_keys(to_json);
+    let fields: Vec<&String> =
+        keys.iter().filter(|k| !DOC_KEYS.contains(&k.as_str())).collect();
+    let history = history_fields(trend_src).ok_or("HISTORY_FIELDS tuple not found")?;
+    let list = |items: &[&String]| {
+        items
+            .iter()
+            .map(|s| format!("    \"{s}\""))
+            .collect::<Vec<_>>()
+            .join(",\n")
+    };
+    let history_refs: Vec<&String> = history.iter().collect();
+    Ok(format!(
+        "{{\n  \"schema\": {version},\n  \"fields\": [\n{}\n  ],\n  \
+         \"history_fields\": [\n{}\n  ]\n}}\n",
+        list(&fields),
+        list(&history_refs),
+    ))
+}
+
+/// Write `scripts/schema_fields.json` under `root`. Returns the path.
+pub fn emit(root: &Path) -> Result<std::path::PathBuf, String> {
+    let json = emit_json(&read(root, BENCH_RS)?, &read(root, TREND_PY)?)?;
+    let path = root.join("scripts/schema_fields.json");
+    std::fs::write(&path, json).map_err(|e| format!("write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const METRICS: &str = "pub struct RunMetrics {\n    pub flow: i64,\n    \
+                           pub extra_sweeps: u64,\n}\n";
+    const HARNESS: &str = "pub struct CompetitorResult {\n    pub name: String,\n    \
+                           pub seconds: f64,\n    pub flow: i64,\n}\n";
+    const BENCH: &str = r#"
+pub struct BenchRecord {
+    pub case: String,
+    pub solver: String,
+    pub flow: i64,
+    pub wall_seconds: f64,
+}
+impl BenchRecord {
+    pub fn from_solve(res: &SolveResult) -> BenchRecord {
+        BenchRecord { flow: res.metrics.flow, wall_seconds: 0.0 }
+    }
+}
+pub fn to_json(records: &[BenchRecord]) -> String {
+    let mut s = String::new();
+    s.push_str("  \"schema\": 6,\n");
+    s.push_str("{\"case\": \"x\", \"solver\": \"y\", \"flow\": 1, \"wall_seconds\": 0.1}");
+    s
+}
+"#;
+    const TREND: &str = "HISTORY_FIELDS = (\n    \"flow\",\n    \"wall_seconds\",\n)\n";
+
+    // the test fixture pins a tiny schema; narrow the global pins to it
+    fn run(metrics: &str, bench: &str, harness: &str, trend: &str) -> Vec<Finding> {
+        check_sources(metrics, bench, harness, trend)
+    }
+
+    #[test]
+    fn consistent_fixture_only_flags_global_pins() {
+        // the fixture lacks the 11 exempted metrics fields and the 14
+        // required history entries, so only those pin checks fire —
+        // none of the cross-consumer drift checks
+        let findings = run(METRICS, BENCH, HARNESS, TREND);
+        assert!(
+            findings.iter().all(|f| {
+                f.message.contains("METRICS_NOT_EXPORTED")
+                    || f.message.contains("HISTORY_FIELDS dropped")
+            }),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn extraction_matches_the_fixture() {
+        assert_eq!(
+            struct_fields(BENCH, "BenchRecord").unwrap(),
+            ["case", "solver", "flow", "wall_seconds"]
+        );
+        let body = fn_body(BENCH, "to_json").unwrap();
+        assert_eq!(
+            writer_keys(body),
+            ["schema", "case", "solver", "flow", "wall_seconds"]
+        );
+        assert_eq!(writer_schema_version(body), Some(6));
+        assert_eq!(history_fields(TREND).unwrap(), ["flow", "wall_seconds"]);
+    }
+
+    #[test]
+    fn dropped_history_entry_is_detected() {
+        // seed drift: HISTORY_FIELDS loses "flow" (a REQUIRED_HISTORY
+        // entry) — the exact regression the pin exists for
+        let drifted = "HISTORY_FIELDS = (\n    \"wall_seconds\",\n)\n";
+        let findings = run(METRICS, BENCH, HARNESS, drifted);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("dropped `flow`") && f.file == TREND_PY),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn writer_key_drift_is_detected_both_ways() {
+        // field missing from the writer
+        let bench_no_flow = BENCH.replace(", \\\"flow\\\": 1", "");
+        let findings = run(METRICS, &bench_no_flow, HARNESS, TREND);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("`flow` is never written")),
+            "{findings:?}"
+        );
+        // stray key in the writer
+        let bench_extra = BENCH.replace(
+            "\\\"flow\\\": 1",
+            "\\\"flow\\\": 1, \\\"bogus\\\": 2",
+        );
+        let findings = run(METRICS, &bench_extra, HARNESS, TREND);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("key `bogus`")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn unexported_metrics_field_is_detected() {
+        let metrics = "pub struct RunMetrics {\n    pub flow: i64,\n    \
+                       pub brand_new_counter: u64,\n}\n";
+        let findings = run(metrics, BENCH, HARNESS, TREND);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("`brand_new_counter`")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn missing_competitor_counterpart_is_detected() {
+        let harness = "pub struct CompetitorResult {\n    pub name: String,\n    \
+                       pub flow: i64,\n}\n"; // no `seconds`
+        let findings = run(METRICS, BENCH, harness, TREND);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.message.contains("counterpart `seconds`")),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn emitted_schema_lists_fields_in_writer_order() {
+        let json = emit_json(BENCH, TREND).unwrap();
+        assert!(json.contains("\"schema\": 6"));
+        let case = json.find("\"case\"").unwrap();
+        let solver = json.find("\"solver\"").unwrap();
+        assert!(case < solver, "writer order preserved: {json}");
+        assert!(json.contains("\"history_fields\""));
+    }
+}

@@ -1,0 +1,276 @@
+//! Lightweight source scanning for the analyzer: a character-level
+//! state machine that blanks out comments and string/char literals
+//! while preserving byte offsets, plus span helpers built on the
+//! blanked view.
+//!
+//! This is deliberately *not* a Rust parser. The analyzer only needs
+//! to (a) know which bytes are code, (b) find the body of a named
+//! `fn`/`struct`/`enum`, and (c) skip `#[cfg(test)]` items — all of
+//! which fall out of brace matching once strings and comments cannot
+//! confuse it. Tokens the checks search for (`.unwrap()`, `Msg::X`,
+//! field idents) are then matched against the masked view, so a
+//! mention inside a comment or a log message never trips a check.
+
+/// A copy of `src` with every non-code byte replaced by a space:
+/// line comments, (nested) block comments, string literals (normal,
+/// byte, raw with any hash count) and char literals vanish, newlines
+/// are kept so line numbers survive. Lifetime ticks stay code.
+pub fn code_mask(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = vec![b' '; n];
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested per Rust rules
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        out[i] = b'\n';
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw (byte) string: r"…", r#"…"#, br#"…"# …
+        if (c == b'r' || c == b'b') && !ident_before(b, i) {
+            let mut j = i;
+            if b[j] == b'b' && j + 1 < n && b[j + 1] == b'r' {
+                j += 1;
+            }
+            if b[j] == b'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    k += 1;
+                    while k < n {
+                        if b[k] == b'"' && b[k + 1..].len() >= hashes
+                            && b[k + 1..k + 1 + hashes].iter().all(|&h| h == b'#')
+                        {
+                            k += 1 + hashes;
+                            break;
+                        }
+                        if b[k] == b'\n' {
+                            out[k] = b'\n';
+                        }
+                        k += 1;
+                    }
+                    i = k;
+                    continue;
+                }
+            }
+        }
+        // normal or byte string
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"' && !ident_before(b, i)) {
+            let mut k = if c == b'b' { i + 2 } else { i + 1 };
+            while k < n {
+                match b[k] {
+                    b'\\' => k += 2,
+                    b'"' => {
+                        k += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        out[k] = b'\n';
+                        k += 1;
+                    }
+                    _ => k += 1,
+                }
+            }
+            i = k;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char: skip the escape head, scan to the tick
+                let mut k = i + 3;
+                while k < n && b[k] != b'\'' {
+                    k += 1;
+                }
+                i = (k + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                i += 3; // plain 'x'
+                continue;
+            }
+            out[i] = b'\''; // lifetime tick is code
+            i += 1;
+            continue;
+        }
+        out[i] = c;
+        i += 1;
+    }
+    // only ASCII bytes were rewritten, so the result is valid UTF-8
+    String::from_utf8(out).unwrap_or_default()
+}
+
+fn ident_before(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// Index of the `}` matching the `{` at `open` in a masked view, or
+/// `None` if the braces never balance.
+pub fn matching_brace(mask: &str, open: usize) -> Option<usize> {
+    let b = mask.as_bytes();
+    debug_assert_eq!(b.get(open), Some(&b'{'));
+    let mut depth = 0usize;
+    for (off, &c) in b[open..].iter().enumerate() {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(open + off);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Byte span (start of the keyword .. past the closing `}`) of the
+/// first `kind Name {…}` item, matched on the masked view so a mention
+/// in a comment cannot hit. `kind` is `"fn"`, `"struct"`, `"enum"`,
+/// `"mod"`, ….
+pub fn item_span(mask: &str, kind: &str, name: &str) -> Option<(usize, usize)> {
+    let needle = format!("{kind} {name}");
+    let b = mask.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = mask[from..].find(&needle) {
+        let at = from + rel;
+        let end = at + needle.len();
+        let pre_ok = at == 0 || !(b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_');
+        let post_ok =
+            end >= b.len() || !(b[end].is_ascii_alphanumeric() || b[end] == b'_');
+        if pre_ok && post_ok {
+            let open = end + mask[end..].find('{')?;
+            // a `;` before the brace means this was a declaration
+            // (`struct X;`) or something unexpected — keep searching
+            if !mask[end..open].contains(';') {
+                let close = matching_brace(mask, open)?;
+                return Some((at, close + 1));
+            }
+        }
+        from = at + needle.len();
+    }
+    None
+}
+
+/// Interior of the item's `{…}` body (exclusive of both braces).
+pub fn item_body(mask: &str, kind: &str, name: &str) -> Option<(usize, usize)> {
+    let (start, end) = item_span(mask, kind, name)?;
+    let open = start + mask[start..end].find('{')?;
+    Some((open + 1, end - 1))
+}
+
+/// Byte spans of every `#[cfg(test)]` item (attribute through the
+/// closing brace of the following item). Test code is exempt from the
+/// panic lint.
+pub fn test_spans(mask: &str) -> Vec<(usize, usize)> {
+    const ATTR: &str = "#[cfg(test)]";
+    let mut spans = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = mask[from..].find(ATTR) {
+        let at = from + rel;
+        let after = at + ATTR.len();
+        match mask[after..].find('{') {
+            Some(rel_open) => {
+                let open = after + rel_open;
+                match matching_brace(mask, open) {
+                    Some(close) => {
+                        spans.push((at, close + 1));
+                        from = close + 1;
+                    }
+                    None => {
+                        spans.push((at, mask.len()));
+                        break;
+                    }
+                }
+            }
+            None => {
+                spans.push((at, mask.len()));
+                break;
+            }
+        }
+    }
+    spans
+}
+
+/// 1-based line number of byte `off` in `src`.
+pub fn line_of(src: &str, off: usize) -> usize {
+    1 + src.as_bytes()[..off.min(src.len())].iter().filter(|&&c| c == b'\n').count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = r##"
+let a = "str with .unwrap() inside"; // comment .expect(
+/* block panic! /* nested */ still */ let b = r#"raw .unwrap()"#;
+let c = 'x'; let d: &'static str = "s"; call(a.unwrap());
+"##;
+        let m = code_mask(src);
+        assert_eq!(m.len(), src.len());
+        assert_eq!(m.matches(".unwrap()").count(), 1, "{m}");
+        assert!(!m.contains(".expect("));
+        assert!(!m.contains("panic!"));
+        assert!(m.contains("let b"));
+        assert!(m.contains("&'static str"));
+        // line structure preserved
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn finds_item_bodies_and_test_spans() {
+        let src = "
+struct Foo { a: u32 }
+fn bar() { baz(\"}\"); }
+#[cfg(test)]
+mod tests { fn t() { x.unwrap(); } }
+";
+        let m = code_mask(src);
+        let (s, e) = item_body(&m, "struct", "Foo").unwrap();
+        assert_eq!(src[s..e].trim(), "a: u32");
+        let (s, e) = item_body(&m, "fn", "bar").unwrap();
+        assert!(src[s..e].contains("baz"));
+        let spans = test_spans(&m);
+        assert_eq!(spans.len(), 1);
+        let unwrap_at = src.find(".unwrap").unwrap();
+        assert!(spans[0].0 < unwrap_at && unwrap_at < spans[0].1);
+    }
+
+    #[test]
+    fn item_lookup_ignores_comment_mentions() {
+        let src = "// fn target documented here\nfn target() { work(); }\n";
+        let m = code_mask(src);
+        let (s, _) = item_span(&m, "fn", "target").unwrap();
+        assert_eq!(line_of(src, s), 2);
+    }
+}

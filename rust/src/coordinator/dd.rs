@@ -234,7 +234,11 @@ pub fn solve_dd(g: &Graph, partition: &Partition, opts: &DdOptions) -> SolveResu
                             if i >= queue.len() {
                                 break;
                             }
-                            let mut sub = queue[i].lock().unwrap();
+                            // recover a poisoned guard: subproblems are
+                            // independent, a sibling panic cannot leave
+                            // this one half-mutated
+                            let mut sub =
+                                queue[i].lock().unwrap_or_else(|e| e.into_inner());
                             dinic.run(&mut sub.graph, None, true, None);
                             sub.sides = sub.graph.sink_reachable();
                         }

@@ -92,12 +92,16 @@ fn run_discharges(
     std::thread::scope(|scope| {
         for _ in 0..threads.max(1) {
             scope.spawn(|| loop {
-                let job = { queue.lock().unwrap().pop() };
+                // a poisoned lock only means another worker panicked
+                // mid-discharge; the queue/counters themselves are
+                // always in a consistent state between lock holds, so
+                // recover the guard instead of cascading the panic
+                let job = { queue.lock().unwrap_or_else(|e| e.into_inner()).pop() };
                 let Some(job) = job else { break };
                 match algorithm {
                     Algorithm::Ard => {
                         let st = job.ard.discharge(job.part, d_inf, max_stage);
-                        let mut c = counters.lock().unwrap();
+                        let mut c = counters.lock().unwrap_or_else(|e| e.into_inner());
                         c.0 += st.grow;
                         c.1 += st.augment;
                         c.2 += st.adopt;
@@ -110,7 +114,7 @@ fn run_discharges(
             });
         }
     });
-    counters.into_inner().unwrap()
+    counters.into_inner().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Disjoint `&mut` selections of `items` at strictly increasing
@@ -121,6 +125,10 @@ fn select_muts<'a, T>(items: &'a mut [T], idxs: &[usize]) -> Vec<&'a mut T> {
     let mut offset = 0usize;
     for &i in idxs {
         let (_skip, tail) = rest.split_at_mut(i - offset);
+        // analyze:allow(panic): idxs comes from active_regions and is
+        // strictly increasing and in bounds, so `tail` is non-empty here;
+        // a violated precondition is a coordinator bug where aborting
+        // beats silently dropping a region from the sweep.
         let (item, tail) = tail.split_first_mut().unwrap();
         out.push(item);
         rest = tail;

@@ -60,6 +60,17 @@ pub fn read_dimacs<R: BufRead>(input: R, pair_arcs: bool) -> Result<DimacsProble
                     .next()
                     .and_then(|x| x.parse().ok())
                     .ok_or_else(|| err!("line {}: bad node id", lineno + 1))?;
+                if n_file == 0 {
+                    bail!("line {}: node designator before the 'p max' line", lineno + 1);
+                }
+                if id == 0 || id > n_file {
+                    bail!(
+                        "line {}: node id {} outside 1..={}",
+                        lineno + 1,
+                        id,
+                        n_file
+                    );
+                }
                 match it.next() {
                     Some("s") => s_id = Some(id),
                     Some("t") => t_id = Some(id),
@@ -79,8 +90,32 @@ pub fn read_dimacs<R: BufRead>(input: R, pair_arcs: bool) -> Result<DimacsProble
                     .next()
                     .and_then(|x| x.parse().ok())
                     .ok_or_else(|| err!("line {}: bad arc cap", lineno + 1))?;
-                let s = s_id.ok_or_else(|| err!("arc before 'n .. s' line"))?;
-                let t = t_id.ok_or_else(|| err!("arc before 'n .. t' line"))?;
+                if n_file == 0 {
+                    bail!("line {}: arc before the 'p max' line", lineno + 1);
+                }
+                if u == 0 || u > n_file {
+                    bail!(
+                        "line {}: arc tail {} outside 1..={}",
+                        lineno + 1,
+                        u,
+                        n_file
+                    );
+                }
+                if v == 0 || v > n_file {
+                    bail!(
+                        "line {}: arc head {} outside 1..={}",
+                        lineno + 1,
+                        v,
+                        n_file
+                    );
+                }
+                if c < 0 {
+                    bail!("line {}: negative arc capacity {}", lineno + 1, c);
+                }
+                let s = s_id
+                    .ok_or_else(|| err!("line {}: arc before 'n .. s' line", lineno + 1))?;
+                let t = t_id
+                    .ok_or_else(|| err!("line {}: arc before 'n .. t' line", lineno + 1))?;
                 if u == s {
                     terminals.push((v as u32, c, 0));
                 } else if v == t {
@@ -99,6 +134,9 @@ pub fn read_dimacs<R: BufRead>(input: R, pair_arcs: bool) -> Result<DimacsProble
     let t = t_id.ok_or_else(|| err!("missing sink designator"))?;
     if n_file < 2 {
         bail!("problem line missing or too small");
+    }
+    if s == t {
+        bail!("source and sink are the same node ({s})");
     }
 
     // Renumber: file ids 1..=n_file minus {s, t} → 0..n.
@@ -260,5 +298,40 @@ a 3 5 1
         assert!(read_dimacs(BufReader::new("p min 3 1\n".as_bytes()), false).is_err());
         assert!(read_dimacs(BufReader::new("x\n".as_bytes()), false).is_err());
         assert!(read_dimacs(BufReader::new("a 1 2 3\n".as_bytes()), false).is_err());
+    }
+
+    fn err_of(text: &str) -> String {
+        read_dimacs(BufReader::new(text.as_bytes()), false)
+            .err()
+            .expect("malformed input accepted")
+            .to_string()
+    }
+
+    #[test]
+    fn rejects_malformed_with_line_numbers_not_panics() {
+        // arc head beyond the declared node count (would index OOB)
+        let e = err_of("p max 4 2\nn 1 s\nn 4 t\na 1 2 5\na 2 99 7\n");
+        assert!(e.contains("line 5"), "{e}");
+        assert!(e.contains("99"), "{e}");
+
+        // zero is not a valid 1-based id
+        let e = err_of("p max 4 1\nn 1 s\nn 4 t\na 0 2 5\n");
+        assert!(e.contains("line 4"), "{e}");
+
+        // node designator out of range
+        let e = err_of("p max 4 1\nn 1 s\nn 9 t\na 1 2 5\n");
+        assert!(e.contains("line 3"), "{e}");
+
+        // arc before the problem line
+        let e = err_of("a 1 2 3\np max 4 1\nn 1 s\nn 4 t\n");
+        assert!(e.contains("line 1"), "{e}");
+
+        // negative capacity
+        let e = err_of("p max 4 1\nn 1 s\nn 4 t\na 1 2 -5\n");
+        assert!(e.contains("line 4") && e.contains("-5"), "{e}");
+
+        // source == sink
+        let e = err_of("p max 4 1\nn 2 s\nn 2 t\na 1 2 5\n");
+        assert!(e.contains("same node"), "{e}");
     }
 }

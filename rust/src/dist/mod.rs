@@ -58,6 +58,11 @@
 //! [`master`] and the "Failure model & recovery" section of
 //! ARCHITECTURE.md.
 
+// panic policy (see `crate::analyze::panics` and clippy.toml): this
+// module must not panic on hot paths — re-enable the repo-wide
+// Option unwrap/expect ban that lib.rs allows crate-wide.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::disallowed_methods)]
+
 pub mod master;
 pub mod proto;
 pub mod worker;

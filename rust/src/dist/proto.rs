@@ -46,7 +46,7 @@ use crate::coordinator::fuse::RegionBoundaryDelta;
 use crate::core::graph::Cap;
 use crate::region::decompose::RegionPart;
 use crate::store::codec::{Codec, Dec, Enc};
-use crate::store::page::crc32;
+use crate::store::page::{crc32, le_u16, le_u32};
 use std::fmt;
 use std::io::{Read, Write};
 
@@ -582,17 +582,17 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<(Msg, u64), ProtoError> {
     if hdr[0..4] != FRAME_MAGIC {
         return Err(ProtoError::BadMagic);
     }
-    let version = u16::from_le_bytes(hdr[4..6].try_into().unwrap());
+    let version = le_u16(&hdr, 4);
     if version != PROTO_VERSION {
         return Err(ProtoError::BadVersion(version));
     }
     let kind = hdr[6];
     let codec = Codec::from_u8(hdr[7]).ok_or(ProtoError::BadCodec(hdr[7]))?;
-    let len = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+    let len = le_u32(&hdr, 8);
     if len > MAX_PAYLOAD {
         return Err(ProtoError::TooLarge(len));
     }
-    let crc = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+    let crc = le_u32(&hdr, 12);
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)?;
     if crc32(&[&hdr[4..12], &payload]) != crc {

@@ -10,8 +10,13 @@
 //! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3)
 //! * `bench`       — run paper-figure benches, emit `BENCH_<id>.json`
 //! * `accel`       — the PJRT kernel demo on a grid instance
+//! * `analyze`     — repo-invariant static analysis (CI gate)
 //!
 //! Run `armincut help` for the option list.
+
+// see lib.rs: the repo-wide Option unwrap/expect ban is enforced per
+// guarded module, not on the CLI shell
+#![allow(clippy::disallowed_methods)]
 
 use armincut::coordinator::dd::{solve_dd, DdOptions};
 use armincut::coordinator::parallel::{solve_parallel, ParOptions};
@@ -39,6 +44,7 @@ USAGE:
   armincut experiment ID [--full]
   armincut bench   ID|all [--quick|--full] [--out DIR] [--probe-only]
   armincut accel   [--artifacts DIR]
+  armincut analyze [--fix-allow] [--emit-schema] [PATH]
   armincut help
 
 SOLVE OPTIONS:
@@ -122,6 +128,14 @@ BENCH OPTIONS:
   --quick / --full     scale tier (default quick unless ARMINCUT_FULL=1)
   --out DIR            BENCH_<id>.json output dir (default bench_results)
   --probe-only         skip the table/figure print path, emit JSON only
+
+ANALYZE OPTIONS:
+  PATH                 repo root (default: walk up from the cwd)
+  --fix-allow          ratchet the panic allowlist pin down to the
+                       observed count (growth still fails)
+  --emit-schema        regenerate scripts/schema_fields.json from the
+                       live sources
+  exit codes: 0 clean | 1 findings | 2 usage/IO
 "#;
 
 fn main() {
@@ -140,6 +154,7 @@ fn main() {
         "experiment" => cmd_experiment(&args[1..], &opts),
         "bench" => cmd_bench(&args[1..]),
         "accel" => cmd_accel(&opts),
+        "analyze" => cmd_analyze(&args[1..]),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             0
@@ -150,6 +165,74 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// `armincut analyze [--fix-allow] [--emit-schema] [PATH]` — run the
+/// repo-invariant static analysis (see `armincut::analyze`). Findings
+/// print one per line and exit 1; clean exits 0; usage/IO errors exit 2.
+fn cmd_analyze(args: &[String]) -> i32 {
+    let mut opts = armincut::analyze::AnalyzeOptions {
+        root: std::path::PathBuf::new(),
+        fix_allow: false,
+        emit_schema: false,
+    };
+    let mut path: Option<String> = None;
+    for a in args {
+        match a.as_str() {
+            "--fix-allow" => opts.fix_allow = true,
+            "--emit-schema" => opts.emit_schema = true,
+            flag if flag.starts_with('-') => {
+                eprintln!("analyze: unknown flag {flag}");
+                return 2;
+            }
+            p => {
+                if path.replace(p.to_string()).is_some() {
+                    eprintln!("analyze: more than one PATH argument");
+                    return 2;
+                }
+            }
+        }
+    }
+    opts.root = match path {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let cwd = match std::env::current_dir() {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("analyze: current dir: {e}");
+                    return 2;
+                }
+            };
+            match armincut::analyze::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "analyze: no repo root (rust/src + scripts/bench_trend.py) at \
+                         or above {}; pass PATH explicitly",
+                        cwd.display()
+                    );
+                    return 2;
+                }
+            }
+        }
+    };
+    match armincut::analyze::run(&opts) {
+        Ok(findings) if findings.is_empty() => {
+            println!("analyze: ok (schema-drift, protocol, panic-policy)");
+            0
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!("analyze: {} finding(s)", findings.len());
+            1
+        }
+        Err(e) => {
+            eprintln!("analyze: {e}");
+            2
+        }
+    }
 }
 
 type Flags = HashMap<String, String>;

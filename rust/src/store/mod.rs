@@ -26,6 +26,11 @@
 //! [`pipeline::IoStats`] and from there in `RunMetrics` /
 //! `BENCH_<id>.json` (schema 3).
 
+// panic policy (see `crate::analyze::panics` and clippy.toml): this
+// module must not panic on hot paths — re-enable the repo-wide
+// Option unwrap/expect ban that lib.rs allows crate-wide.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::disallowed_methods)]
+
 pub mod backend;
 pub mod checkpoint;
 pub mod codec;

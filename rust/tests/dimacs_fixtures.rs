@@ -141,3 +141,28 @@ fn cli_rejects_missing_input_with_exit_2() {
         .expect("run armincut");
     assert_eq!(out.status.code(), Some(2));
 }
+
+/// Malformed DIMACS through the CLI: a corrupt fixture (arc head beyond
+/// the declared node count, which used to index out of bounds) must
+/// exit 2 with a line-numbered parse error, never a panic.
+#[test]
+fn cli_rejects_corrupt_dimacs_with_exit_2_and_line_number() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let out = Command::new(exe)
+        .args([
+            "solve",
+            "--input",
+            &fixture_path("tests/data/corrupt_oob.max"),
+            "--algo",
+            "s-ard",
+        ])
+        .output()
+        .expect("run armincut");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(2), "stderr: {stderr}");
+    assert!(stderr.contains("line 6"), "line-numbered error expected: {stderr}");
+    assert!(
+        !stderr.contains("panicked"),
+        "must be a clean error, not a panic: {stderr}"
+    );
+}

@@ -25,12 +25,21 @@ wall, page bytes, wire bytes, sync time), trimmed to the last
 an artifact, so the perf trajectory survives across merges instead of
 only ever comparing two adjacent runs.
 
+Incoming records are validated against ``scripts/schema_fields.json``,
+the machine-readable record schema emitted by ``armincut analyze
+--emit-schema`` (schema version + field list + history fields). A
+current-run record with a missing or unknown field, or a document with
+the wrong schema stamp, is drift between the Rust writer and this
+consumer and makes the script exit 1. Baseline records are exempt —
+they may legitimately predate a schema bump.
+
 No baseline directory (first run) is not an error: the script reports
 it and exits 0. Stdlib only.
 
 Usage:
     bench_trend.py CURRENT_DIR BASELINE_DIR [--wall-warn-pct 25]
                    [--history FILE] [--history-max 50] [--run-label L]
+                   [--schema FILE]
 """
 
 from __future__ import annotations
@@ -60,6 +69,37 @@ HISTORY_FIELDS = (
     "checkpoint_bytes",
     "recovery_wall_seconds",
 )
+
+
+#: Default location of the emitted schema, next to this script.
+SCHEMA_FILE = Path(__file__).resolve().parent / "schema_fields.json"
+
+
+def validate_records(current: dict[str, dict], schema: dict) -> list[str]:
+    """Check every current-run record against the emitted schema.
+    Returns human-readable problem lines (empty = clean)."""
+    problems = []
+    want_version = schema.get("schema")
+    fields = set(schema.get("fields", []))
+    for bench_id in sorted(current):
+        doc = current[bench_id]
+        if doc.get("schema") != want_version:
+            problems.append(
+                f"{bench_id}: schema {doc.get('schema')} != expected "
+                f"{want_version} (stale armincut or stale schema_fields.json?)"
+            )
+        for rec in doc.get("records", []):
+            key = f"{bench_id} {rec.get('case', '?')} {rec.get('solver', '?')}"
+            missing = sorted(fields - set(rec))
+            unknown = sorted(set(rec) - fields)
+            if missing:
+                problems.append(f"{key}: record is missing {', '.join(missing)}")
+            if unknown:
+                problems.append(
+                    f"{key}: record has unknown field(s) {', '.join(unknown)} — "
+                    f"rerun `armincut analyze --emit-schema` and commit the result"
+                )
+    return problems
 
 
 def load_dir(path: Path) -> dict[str, dict]:
@@ -191,6 +231,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--run-label", default=None,
                     help="label of this run in the history "
                          "(default: $GITHUB_RUN_ID or 'local')")
+    ap.add_argument("--schema", type=Path, default=SCHEMA_FILE,
+                    help="schema_fields.json emitted by "
+                         "`armincut analyze --emit-schema`")
     args = ap.parse_args(argv)
 
     if not args.current.is_dir():
@@ -200,6 +243,20 @@ def main(argv: list[str] | None = None) -> int:
     if not current:
         print(f"error: no BENCH_*.json in {args.current}")
         return 2
+    if args.schema.is_file():
+        try:
+            schema = json.loads(args.schema.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: unreadable schema {args.schema}: {e}")
+            return 2
+        problems = validate_records(current, schema)
+        if problems:
+            for p in problems:
+                print(f"schema drift: {p}")
+            print(f"\n{len(problems)} schema problem(s) in the current run")
+            return 1
+    else:
+        print(f"warning: no record schema at {args.schema}, skipping validation")
     if args.history is not None:
         label = args.run_label or os.environ.get("GITHUB_RUN_ID", "local")
         runs = append_history(args.history, label, current, args.history_max)

@@ -226,6 +226,73 @@ def test_history_drops_corrupt_lines(tmp_path):
     assert json.loads(lines[0])["run"] == "old"
 
 
+def trace_rec(events=500, dropped=3, discharge=0.4, fuse=0.1):
+    r = wire_rec()
+    r.update({"trace_events": events, "trace_dropped": dropped,
+              "discharge_seconds": discharge, "fuse_seconds": fuse})
+    return r
+
+
+def test_schema7_fields_survive_into_history(tmp_path):
+    hist = tmp_path / "history.jsonl"
+    write_bench(tmp_path / "cur", "table2", [trace_rec()])
+    code = bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"), "--history", str(hist)])
+    assert code == 0
+    r = json.loads(hist.read_text())["records"][0]
+    assert r["trace_events"] == 500
+    assert r["trace_dropped"] == 3
+    assert r["discharge_seconds"] == 0.4
+    assert r["fuse_seconds"] == 0.1
+
+
+# --- --plot SVG trend curves ---
+
+
+def test_plot_without_history_is_a_usage_error(tmp_path, capsys):
+    write_bench(tmp_path / "cur", "fig6", [rec()])
+    code = bench_trend.main(
+        [str(tmp_path / "cur"), str(tmp_path / "nowhere"),
+         "--plot", str(tmp_path / "plots")])
+    assert code == 2
+    assert "--plot needs --history" in capsys.readouterr().out
+
+
+def test_plot_renders_svg_curves_from_history(tmp_path, capsys):
+    hist = tmp_path / "history.jsonl"
+    plots = tmp_path / "plots"
+    for wall in (1.0, 1.5):
+        write_bench(tmp_path / "cur", "table2",
+                    [wire_rec(), rec(wall=wall)])
+        code = bench_trend.main(
+            [str(tmp_path / "cur"), str(tmp_path / "nowhere"),
+             "--history", str(hist), "--plot", str(plots)])
+        assert code == 0
+    wall_svg = (plots / "trend_wall_seconds.svg").read_text()
+    assert wall_svg.startswith("<svg")
+    assert "polyline" in wall_svg
+    assert "S-ARD" in wall_svg and "D-ARD(2)" in wall_svg
+    wire_svg = (plots / "trend_wire_bytes.svg").read_text()
+    assert "D-ARD(2)" in wire_svg
+    assert "S-ARD" not in wire_svg, "all-zero series are dropped"
+    assert "polyline" in (plots / "trend_sync_wall_seconds.svg").read_text()
+    assert not (plots / "trend_worker_restarts.svg").exists(), \
+        "an identically-zero quantity renders no file"
+    assert "SVG curve(s)" in capsys.readouterr().out
+
+
+def test_plot_series_collects_gaps_and_derived_wire_sum():
+    runs = [
+        {"records": [{"bench": "b", "case": "c", "solver": "s",
+                      "wire_bytes_sent": 10, "wire_bytes_recv": 5}]},
+        {"records": []},  # the record skips a run
+        {"records": [{"bench": "b", "case": "c", "solver": "s",
+                      "wire_bytes_sent": 20, "wire_bytes_recv": 5}]},
+    ]
+    series = bench_trend.collect_series(runs, "wire_bytes")
+    assert series == {"b c s": [(0, 15.0), (2, 25.0)]}
+
+
 # --- record-schema validation against scripts/schema_fields.json ---
 
 

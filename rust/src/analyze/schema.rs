@@ -2,7 +2,7 @@
 //! [`RunMetrics`](crate::coordinator::metrics::RunMetrics),
 //! `CompetitorResult`, `BenchRecord` + its hand-rolled JSON writer, and
 //! `HISTORY_FIELDS` in `scripts/bench_trend.py` — and has been bumped
-//! six times. This check extracts all four field lists from source and
+//! seven times. This check extracts all four field lists from source and
 //! fails on any consumer that fell behind. It is the contract for
 //! future schema bumps: add the field everywhere (or to an exemption
 //! list below, deliberately) or `armincut analyze` goes red.
@@ -34,13 +34,15 @@ const METRICS_NOT_EXPORTED: &[&str] = &[
     "msg_bytes",
     "disk_read_bytes",
     "disk_write_bytes",
-    "t_discharge",
     "t_relabel",
     "t_gap",
     "t_msg",
     "shared_mem_bytes",
     "max_region_mem_bytes",
     "workspace_mem_bytes",
+    "sweep_wall_min",
+    "sweep_wall_mean",
+    "sweep_wall_max",
 ];
 
 /// The trend-history schema: dropping any of these from
@@ -397,7 +399,7 @@ pub fn to_json(records: &[BenchRecord]) -> String {
 
     #[test]
     fn consistent_fixture_only_flags_global_pins() {
-        // the fixture lacks the 11 exempted metrics fields and the 14
+        // the fixture lacks the 13 exempted metrics fields and the 14
         // required history entries, so only those pin checks fire —
         // none of the cross-consumer drift checks
         let findings = run(METRICS, BENCH, HARNESS, TREND);

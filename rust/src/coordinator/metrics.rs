@@ -53,6 +53,20 @@ pub struct RunMetrics {
     pub worker_restarts: u64,
     pub checkpoint_bytes: u64,
     pub t_recovery: Duration,
+    /// Observability (schema 7): events recorded by the [`crate::trace`]
+    /// subsystem this run (0 when tracing was off) and events the
+    /// bounded buffers had to drop.
+    pub trace_events: u64,
+    pub trace_dropped: u64,
+    /// Fusion wall time (schema 7): `FusionRound` fold + α-filter
+    /// barrier, the complement of `t_discharge` inside a sweep.
+    pub t_fuse: Duration,
+    /// Per-sweep wall-time distribution (schema 7), always measured —
+    /// the `2|B|²+1` bound is about sweeps, so their spread is
+    /// first-class: min/mean/max over all discharge sweeps.
+    pub sweep_wall_min: Duration,
+    pub sweep_wall_mean: Duration,
+    pub sweep_wall_max: Duration,
     /// ARD-core work totals (§6.3 forest-reuse visibility): vertices
     /// grown into the search structure (BK) / BFS phases (Dinic),
     /// augmenting paths, and orphan adoptions (BK only). Zero for PRD.
@@ -134,6 +148,16 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let sweep_wall = if self.sweep_wall_max > Duration::ZERO {
+            format!(
+                " [sweeps min/mean/max {:.3}/{:.3}/{:.3}s]",
+                self.sweep_wall_min.as_secs_f64(),
+                self.sweep_wall_mean.as_secs_f64(),
+                self.sweep_wall_max.as_secs_f64(),
+            )
+        } else {
+            String::new()
+        };
         let recovery = if self.worker_restarts + self.checkpoint_bytes > 0 {
             format!(
                 " [recovery restarts {} ckpt {} KB {:.3}s]",
@@ -147,7 +171,7 @@ impl RunMetrics {
         format!(
             "{name}: flow={} sweeps={}(+{}) discharges={} core g/a/a {}/{}/{} \
              cpu={:.3}s (discharge {:.3}s, relabel {:.3}s, gap {:.3}s, msg {:.3}s) \
-             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{par}{recovery}{}",
+             io r/w {}/{} MB mem {}+{}+{} MB{stream}{dist}{par}{sweep_wall}{recovery}{}",
             self.flow,
             self.sweeps,
             self.extra_sweeps,
@@ -258,6 +282,20 @@ mod tests {
             ..Default::default()
         };
         assert!(m.summary("r").contains("recovery restarts 2 ckpt 4 KB 0.250s"));
+    }
+
+    #[test]
+    fn summary_sweep_tail_only_when_measured() {
+        let m = RunMetrics { converged: true, ..Default::default() };
+        assert!(!m.summary("s").contains("sweeps min"));
+        let m = RunMetrics {
+            converged: true,
+            sweep_wall_min: Duration::from_millis(10),
+            sweep_wall_mean: Duration::from_millis(25),
+            sweep_wall_max: Duration::from_millis(40),
+            ..Default::default()
+        };
+        assert!(m.summary("s").contains("sweeps min/mean/max 0.010/0.025/0.040s"));
     }
 
     #[test]

@@ -24,7 +24,11 @@ use crate::region::boundary_relabel::boundary_relabel;
 use crate::region::decompose::{Decomposition, DistanceMode, RegionPart};
 use crate::region::prd::Prd;
 use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
+use crate::trace::chrome::{MergedTrace, MASTER_PID};
+use crate::trace::{EventName, SweepRollup, Tracer, DEFAULT_CAPACITY, NONE};
+use std::path::PathBuf;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Options of the parallel solve.
 #[derive(Debug, Clone)]
@@ -41,6 +45,10 @@ pub struct ParOptions {
     pub global_gap: bool,
     /// Sweep limit; `0` = theoretical bound plus slack.
     pub max_sweeps: u32,
+    /// Write a merged Chrome trace (plus `.jsonl`) of the solve here.
+    pub trace: Option<PathBuf>,
+    /// Print a one-line-per-sweep status to stderr (`--progress`).
+    pub progress: bool,
 }
 
 impl Default for ParOptions {
@@ -54,6 +62,8 @@ impl Default for ParOptions {
             boundary_relabel: true,
             global_gap: true,
             max_sweeps: 0,
+            trace: None,
+            progress: false,
         }
     }
 }
@@ -79,13 +89,17 @@ struct Job<'a> {
 }
 
 /// Run the discharge jobs on `threads` workers. Returns the summed ARD
-/// core counters `(grow, augment, adopt)` of this round.
+/// core counters `(grow, augment, adopt)` of this round. When `timings`
+/// is given, every job's `(region, start, duration)` is collected there
+/// so the main thread can record the discharge spans afterwards (the
+/// tracer itself is not shared across threads).
 fn run_discharges(
     jobs: Vec<Job<'_>>,
     algorithm: Algorithm,
     d_inf: u32,
     max_stage: u32,
     threads: usize,
+    timings: Option<&Mutex<Vec<(usize, Instant, Duration)>>>,
 ) -> (u64, u64, u64) {
     let queue = Mutex::new(jobs);
     let counters = Mutex::new((0u64, 0u64, 0u64));
@@ -98,6 +112,7 @@ fn run_discharges(
                 // recover the guard instead of cascading the panic
                 let job = { queue.lock().unwrap_or_else(|e| e.into_inner()).pop() };
                 let Some(job) = job else { break };
+                let t0 = Instant::now();
                 match algorithm {
                     Algorithm::Ard => {
                         let st = job.ard.discharge(job.part, d_inf, max_stage);
@@ -110,7 +125,11 @@ fn run_discharges(
                         job.prd.discharge(job.part, d_inf);
                     }
                 }
-                let _ = job.r;
+                if let Some(ts) = timings {
+                    ts.lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push((job.r, t0, t0.elapsed()));
+                }
             });
         }
     });
@@ -189,6 +208,10 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         .collect();
     let mut prds: Vec<Prd> = (0..dec.parts.len()).map(|_| Prd::new()).collect();
 
+    let mut tracer =
+        if opts.trace.is_some() { Tracer::new(DEFAULT_CAPACITY) } else { Tracer::disabled() };
+    let mut sweep_rollup = SweepRollup::default();
+
     let mut converged = true;
     let t_par = std::time::Instant::now();
     while dec.any_active() {
@@ -198,6 +221,7 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         }
         let sweep = metrics.sweeps;
         metrics.sweeps += 1;
+        let sweep_t0 = Instant::now();
         let max_stage = if opts.partial_discharge && opts.algorithm == Algorithm::Ard {
             sweep
         } else {
@@ -207,13 +231,16 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         let active = dec.active_regions();
         metrics.max_inflight_discharges =
             metrics.max_inflight_discharges.max(active.len() as u64);
-        let tm = Timer::start();
+        let t0 = Instant::now();
         for &r in &active {
             metrics.msg_bytes += dec.sync_in(r);
         }
-        tm.stop(&mut metrics.t_msg);
+        let sync_dur = t0.elapsed();
+        metrics.t_msg += sync_dur;
+        tracer.span_at(EventName::SyncWait, t0, sync_dur, sweep, NONE, active.len() as u64);
 
         // ---- concurrent discharges (line 3 of Alg. 2) -------------------
+        let timings = tracer.is_enabled().then(|| Mutex::new(Vec::new()));
         let td = Timer::start();
         {
             let parts = select_muts(&mut dec.parts, &active);
@@ -225,19 +252,35 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
                 .zip(job_ards.into_iter().zip(job_prds))
                 .map(|((&r, part), (ard, prd))| Job { r, part, ard, prd })
                 .collect();
-            let (cg, ca, cd) =
-                run_discharges(jobs, opts.algorithm, d_inf, max_stage, opts.threads);
+            let (cg, ca, cd) = run_discharges(
+                jobs,
+                opts.algorithm,
+                d_inf,
+                max_stage,
+                opts.threads,
+                timings.as_ref(),
+            );
             metrics.core_grow += cg;
             metrics.core_augment += ca;
             metrics.core_adopt += cd;
         }
         td.stop(&mut metrics.t_discharge);
         metrics.discharges += active.len() as u64;
+        if let Some(ts) = timings {
+            let mut ts = ts.into_inner().unwrap_or_else(|e| e.into_inner());
+            ts.sort_by_key(|&(r, ..)| r);
+            for (r, t0, dur) in ts {
+                tracer.span_at(EventName::Discharge, t0, dur, sweep, r as u32, 0);
+            }
+        }
 
-        // ---- fusion (lines 4–6) ------------------------------------------
-        let tm = Timer::start();
+        // ---- fusion (lines 4–6): the α-filter barrier --------------------
+        let t0 = Instant::now();
         metrics.msg_bytes += fuse(&mut dec, &active);
-        tm.stop(&mut metrics.t_msg);
+        let fuse_dur = t0.elapsed();
+        metrics.t_msg += fuse_dur;
+        metrics.t_fuse += fuse_dur;
+        tracer.span_at(EventName::FuseBarrier, t0, fuse_dur, sweep, NONE, active.len() as u64);
 
         // ---- master-thread heuristics -------------------------------------
         let tg = Timer::start();
@@ -254,6 +297,22 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
             gs.run(&mut dec);
         }
         tg.stop(&mut metrics.t_gap);
+
+        let sweep_dur = sweep_t0.elapsed();
+        sweep_rollup.add(sweep_dur);
+        tracer.span_at(EventName::Sweep, sweep_t0, sweep_dur, sweep, NONE, metrics.discharges);
+        if opts.progress {
+            let still_active = dec.active_regions().len();
+            let excess: i64 = dec.shared.excess.iter().filter(|&&x| x > 0).sum();
+            eprintln!(
+                "sweep {:>4}: active {}/{} regions, boundary excess {}, elapsed {:.3}s",
+                sweep + 1,
+                still_active,
+                dec.parts.len(),
+                excess,
+                t_total.elapsed().as_secs_f64(),
+            );
+        }
     }
 
     // ---- extra label-only sweeps (§5.3) --------------------------------
@@ -288,6 +347,20 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
     metrics.converged = converged;
     metrics.workspace_mem_bytes = ards.iter().map(|a| a.memory_bytes()).sum::<usize>()
         + prds.iter().map(|p| p.memory_bytes()).sum::<usize>();
+    metrics.sweep_wall_min = sweep_rollup.min;
+    metrics.sweep_wall_mean = sweep_rollup.mean();
+    metrics.sweep_wall_max = sweep_rollup.max;
+    if let Some(path) = &opts.trace {
+        let mut merged = MergedTrace::new();
+        merged.add_local(MASTER_PID, &mut tracer);
+        metrics.trace_events = merged.events.len() as u64;
+        metrics.trace_dropped = merged.dropped;
+        // the parallel solve is infallible; a trace-write failure is
+        // a warning, never a failed solve
+        if let Err(e) = merged.write(path) {
+            eprintln!("warning: could not write trace to {}: {e}", path.display());
+        }
+    }
     let cut = dec.cut_sides_by_label();
     metrics.t_total = t_total.elapsed();
     SolveResult { metrics, cut }
@@ -375,6 +448,32 @@ mod tests {
         let g = random_graph(77, 30, 60);
         check(&g, &ParOptions::ard(1), 4);
         check(&g, &ParOptions::prd(1), 4);
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_parallel_solve() {
+        let g = random_graph(31337, 50, 100);
+        let p = Partition::by_node_ranges(g.n(), 4);
+        let plain = solve_parallel(&g, &p, &ParOptions::ard(4));
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_trace_par_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("trace.json");
+        let mut o = ParOptions::ard(4);
+        o.trace = Some(trace_path.clone());
+        let traced = solve_parallel(&g, &p, &o);
+        assert_eq!(traced.metrics.flow, plain.metrics.flow);
+        assert_eq!(traced.cut, plain.cut);
+        assert!(traced.metrics.trace_events > 0);
+        // concurrent discharge spans from the worker threads landed on
+        // the master tracer's single timeline
+        let jsonl = std::fs::read_to_string(trace_path.with_extension("jsonl")).unwrap();
+        assert!(jsonl.contains("\"name\":\"discharge\""));
+        assert!(jsonl.contains("\"name\":\"fuse_barrier\""));
+        assert!(crate::trace::report::render(&jsonl).is_ok());
+        // min/mean/max measured with tracing off too
+        assert!(plain.metrics.sweep_wall_max >= plain.metrics.sweep_wall_mean);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -24,8 +24,11 @@ use crate::region::boundary_relabel::boundary_relabel;
 use crate::region::decompose::{Decomposition, DistanceMode, RegionPart};
 use crate::region::prd::Prd;
 use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
-use crate::store::{Residency, StoreConfig};
+use crate::store::{Residency, StoreConfig, StoreError};
+use crate::trace::chrome::{MergedTrace, MASTER_PID};
+use crate::trace::{EventName, SweepRollup, Tracer, DEFAULT_CAPACITY, NONE};
 use std::path::PathBuf;
+use std::time::Instant;
 
 /// Which region-discharge operation drives the sweep.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +83,11 @@ pub struct SeqOptions {
     pub overlap_pairs: bool,
     /// Check labeling/preflow invariants after every sweep (tests).
     pub check_invariants: bool,
+    /// Write a merged Chrome trace (plus the `.jsonl` event log) of
+    /// the solve to this path (`--trace`). `None` disables recording.
+    pub trace: Option<PathBuf>,
+    /// Print a one-line-per-sweep status to stderr (`--progress`).
+    pub progress: bool,
 }
 
 impl Default for SeqOptions {
@@ -100,6 +108,8 @@ impl Default for SeqOptions {
             streaming_compress: true,
             overlap_pairs: false,
             check_invariants: false,
+            trace: None,
+            progress: false,
         }
     }
 }
@@ -271,6 +281,54 @@ impl GapState {
     }
 }
 
+/// Page region `r` in, recording a `PageRead` span and the prefetch
+/// outcome (hit/miss instants from the store's counters) when tracing
+/// is armed.
+fn load_traced(
+    st: &mut Residency,
+    dec: &mut Decomposition,
+    tracer: &mut Tracer,
+    sweep: u32,
+    r: usize,
+) -> std::result::Result<(), StoreError> {
+    if !tracer.is_enabled() {
+        return st.load(dec, r);
+    }
+    let before = *st.stats();
+    let t0 = Instant::now();
+    st.load(dec, r)?;
+    let s = *st.stats();
+    let (read, _) = s.bytes_since(&before);
+    tracer.span_at(EventName::PageRead, t0, t0.elapsed(), sweep, r as u32, read);
+    if s.prefetch_hits > before.prefetch_hits {
+        tracer.instant(EventName::PrefetchHit, sweep, r as u32, read);
+    }
+    if s.prefetch_misses > before.prefetch_misses {
+        tracer.instant(EventName::PrefetchMiss, sweep, r as u32, read);
+    }
+    Ok(())
+}
+
+/// Page region `r` out, recording a `PageWrite` span when tracing is
+/// armed.
+fn unload_traced(
+    st: &mut Residency,
+    dec: &mut Decomposition,
+    tracer: &mut Tracer,
+    sweep: u32,
+    r: usize,
+) -> std::result::Result<(), StoreError> {
+    if !tracer.is_enabled() {
+        return st.unload(dec, r);
+    }
+    let before = *st.stats();
+    let t0 = Instant::now();
+    st.unload(dec, r)?;
+    let (_, written) = st.stats().bytes_since(&before);
+    tracer.span_at(EventName::PageWrite, t0, t0.elapsed(), sweep, r as u32, written);
+    Ok(())
+}
+
 /// The theoretical sweep bound plus slack, used when `max_sweeps == 0`.
 /// (`pub(crate)`: the distributed master mirrors this loop.)
 pub(crate) fn sweep_limit(opts: &SeqOptions, dec: &Decomposition) -> u64 {
@@ -290,6 +348,8 @@ pub(crate) fn sweep_limit(opts: &SeqOptions, dec: &Decomposition) -> u64 {
 fn discharge_region(
     dec: &mut Decomposition,
     metrics: &mut RunMetrics,
+    tracer: &mut Tracer,
+    sweep: u32,
     ard: &mut Ard,
     prd: &mut Prd,
     gap: &mut Option<GapState>,
@@ -315,31 +375,40 @@ fn discharge_region(
         .map(|&(lv, _)| dec.parts[r].label[lv as usize])
         .collect();
 
-    let td = Timer::start();
+    // one explicit measurement feeds both the metrics rollup and the
+    // trace span, so the two can never drift apart
+    let t0 = Instant::now();
+    let mut augments = 0u64;
     match opts.algorithm {
         Algorithm::Ard => {
             let st = ard.discharge(&mut dec.parts[r], d_inf, max_stage);
             metrics.core_grow += st.grow;
             metrics.core_augment += st.augment;
             metrics.core_adopt += st.adopt;
+            augments = st.augment;
         }
         Algorithm::Prd => {
             prd.discharge(&mut dec.parts[r], d_inf);
         }
     }
-    td.stop(&mut metrics.t_discharge);
+    let d_dur = t0.elapsed();
+    metrics.t_discharge += d_dur;
+    tracer.span_at(EventName::Discharge, t0, d_dur, sweep, r as u32, augments);
     metrics.discharges += 1;
 
     // Publish through the shared Algorithm-2 fusion (coordinator::fuse);
     // with a single discharged region the α-filter provably never
     // cancels, so this is `sync_out` exactly — and the same code path
     // the threaded and distributed coordinators run.
-    let tm = Timer::start();
+    let t0 = Instant::now();
     let delta = take_boundary_delta(&mut dec.parts[r], d_inf);
     let out = fuse_deltas(&mut dec.shared, std::slice::from_ref(&delta));
     debug_assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
     metrics.msg_bytes += out.bytes;
-    tm.stop(&mut metrics.t_msg);
+    let f_dur = t0.elapsed();
+    metrics.t_msg += f_dur;
+    metrics.t_fuse += f_dur;
+    tracer.span_at(EventName::FuseFold, t0, f_dur, sweep, r as u32, out.bytes);
 
     if let Some(gs) = gap.as_mut() {
         let tg = Timer::start();
@@ -377,6 +446,9 @@ pub fn solve_sequential(
         max_region_mem_bytes: dec.parts.iter().map(|p| p.memory_bytes()).max().unwrap_or(0),
         ..RunMetrics::default()
     };
+    let mut tracer =
+        if opts.trace.is_some() { Tracer::new(DEFAULT_CAPACITY) } else { Tracer::disabled() };
+    let mut sweep_rollup = SweepRollup::default();
 
     // Per-region persistent workspaces: solver allocations (masks, BK
     // forest arrays, Dinic levels) survive across discharges and sweeps
@@ -433,6 +505,7 @@ pub fn solve_sequential(
         }
         let sweep = metrics.sweeps;
         metrics.sweeps += 1;
+        let sweep_t0 = Instant::now();
         let max_stage = if opts.partial_discharge && opts.algorithm == Algorithm::Ard {
             sweep
         } else {
@@ -451,7 +524,8 @@ pub fn solve_sequential(
                 if !dec.region_needs(a) && !dec.region_needs(b) {
                     if carried == Some(a) {
                         if let Some(st) = store.as_mut() {
-                            st.unload(&mut dec, a).context("page out region")?;
+                            unload_traced(st, &mut dec, &mut tracer, sweep, a)
+                                .context("page out region")?;
                         }
                     }
                     carried = None;
@@ -459,9 +533,10 @@ pub fn solve_sequential(
                 }
                 if let Some(st) = store.as_mut() {
                     if carried != Some(a) {
-                        st.load(&mut dec, a).context("page in region")?;
+                        load_traced(st, &mut dec, &mut tracer, sweep, a)
+                            .context("page in region")?;
                     }
-                    st.load(&mut dec, b).context("page in region")?;
+                    load_traced(st, &mut dec, &mut tracer, sweep, b).context("page in region")?;
                     if b + 1 < k {
                         st.prefetch(b + 1);
                     }
@@ -476,6 +551,8 @@ pub fn solve_sequential(
                             discharge_region(
                                 &mut dec,
                                 &mut metrics,
+                                &mut tracer,
+                                sweep,
                                 &mut ards[wi(r)],
                                 &mut prds[wi(r)],
                                 &mut gap,
@@ -494,7 +571,8 @@ pub fn solve_sequential(
                     }
                 }
                 if let Some(st) = store.as_mut() {
-                    st.unload(&mut dec, a).context("page out region")?;
+                    unload_traced(st, &mut dec, &mut tracer, sweep, a)
+                        .context("page out region")?;
                     carried = Some(b);
                 } else {
                     carried = None;
@@ -502,14 +580,15 @@ pub fn solve_sequential(
             }
             if let Some(c) = carried {
                 if let Some(st) = store.as_mut() {
-                    st.unload(&mut dec, c).context("page out region")?;
+                    unload_traced(st, &mut dec, &mut tracer, sweep, c)
+                        .context("page out region")?;
                 }
             }
         } else {
             let order = dec.active_regions();
             for (i, &r) in order.iter().enumerate() {
                 if let Some(st) = store.as_mut() {
-                    st.load(&mut dec, r).context("page in region")?;
+                    load_traced(st, &mut dec, &mut tracer, sweep, r).context("page in region")?;
                     if let Some(&next) = order.get(i + 1) {
                         st.prefetch(next);
                     }
@@ -517,6 +596,8 @@ pub fn solve_sequential(
                 discharge_region(
                     &mut dec,
                     &mut metrics,
+                    &mut tracer,
+                    sweep,
                     &mut ards[wi(r)],
                     &mut prds[wi(r)],
                     &mut gap,
@@ -527,7 +608,8 @@ pub fn solve_sequential(
                     max_stage,
                 );
                 if let Some(st) = store.as_mut() {
-                    st.unload(&mut dec, r).context("page out region")?;
+                    unload_traced(st, &mut dec, &mut tracer, sweep, r)
+                        .context("page out region")?;
                 }
             }
         }
@@ -552,6 +634,21 @@ pub fn solve_sequential(
         if opts.check_invariants {
             let r = dec.reassemble();
             r.check_invariants();
+        }
+        let sweep_dur = sweep_t0.elapsed();
+        sweep_rollup.add(sweep_dur);
+        tracer.span_at(EventName::Sweep, sweep_t0, sweep_dur, sweep, NONE, metrics.discharges);
+        if opts.progress {
+            let active = dec.active_regions().len();
+            let excess: Cap = dec.shared.excess.iter().filter(|&&x| x > 0).sum();
+            eprintln!(
+                "sweep {:>4}: active {}/{} regions, boundary excess {}, elapsed {:.3}s",
+                sweep + 1,
+                active,
+                dec.parts.len(),
+                excess,
+                t_total.elapsed().as_secs_f64(),
+            );
         }
     }
 
@@ -625,6 +722,16 @@ pub fn solve_sequential(
     metrics.converged = converged;
     metrics.workspace_mem_bytes = ards.iter().map(|a| a.memory_bytes()).sum::<usize>()
         + prds.iter().map(|p| p.memory_bytes()).sum::<usize>();
+    metrics.sweep_wall_min = sweep_rollup.min;
+    metrics.sweep_wall_mean = sweep_rollup.mean();
+    metrics.sweep_wall_max = sweep_rollup.max;
+    if let Some(path) = &opts.trace {
+        let mut merged = MergedTrace::new();
+        merged.add_local(MASTER_PID, &mut tracer);
+        metrics.trace_events = merged.events.len() as u64;
+        metrics.trace_dropped = merged.dropped;
+        merged.write(path).context("write trace")?;
+    }
     let cut = dec.cut_sides_by_label();
     metrics.t_total = t_total.elapsed();
     Ok(SolveResult { metrics, cut })
@@ -952,6 +1059,39 @@ mod tests {
             let b = solve_sequential(&g, &p, &no_gap).unwrap();
             assert_eq!(a.metrics.flow, b.metrics.flow);
         }
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_solve() {
+        // tracing on vs off: identical flow, cut, sweeps, discharges —
+        // and the traced run leaves a loadable Chrome doc + JSONL log
+        let g = random_graph(9001, 50, 100);
+        let p = Partition::by_node_ranges(g.n(), 4);
+        let plain = solve_sequential(&g, &p, &SeqOptions::ard()).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("armincut_trace_seq_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("trace.json");
+        let mut o = SeqOptions::ard();
+        o.trace = Some(trace_path.clone());
+        let traced = solve_sequential(&g, &p, &o).unwrap();
+        assert_eq!(traced.metrics.flow, plain.metrics.flow);
+        assert_eq!(traced.cut, plain.cut);
+        assert_eq!(traced.metrics.sweeps, plain.metrics.sweeps);
+        assert_eq!(traced.metrics.discharges, plain.metrics.discharges);
+        assert!(traced.metrics.trace_events > 0, "events were recorded");
+        assert_eq!(plain.metrics.trace_events, 0, "off means off");
+        let json = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(json.contains("\"traceEvents\""));
+        let jsonl = std::fs::read_to_string(trace_path.with_extension("jsonl")).unwrap();
+        let table = crate::trace::report::render(&jsonl).unwrap();
+        assert!(table.contains("master"), "{table}");
+        // the sweep rollup is measured with or without tracing
+        for m in [&plain.metrics, &traced.metrics] {
+            assert!(m.sweep_wall_max >= m.sweep_wall_min);
+            assert!(m.sweep_wall_max >= m.sweep_wall_mean);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -80,6 +80,8 @@ use crate::err;
 use crate::region::boundary_relabel::boundary_relabel;
 use crate::region::decompose::{BoundaryArcRef, Decomposition, DistanceMode, RegionPart};
 use crate::store::{FileStore, MasterCheckpoint};
+use crate::trace::chrome::{worker_pid, MergedTrace, MASTER_PID};
+use crate::trace::{EventName, SweepRollup, TraceEvent, Tracer, DEFAULT_CAPACITY, NONE};
 use std::fmt;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
@@ -147,6 +149,15 @@ pub struct DistOptions {
     /// workers never inherit an injection — a recovered worker is
     /// healthy, so an injected crash cannot loop.
     pub worker_inject: Vec<(usize, String)>,
+    /// Write a merged Chrome trace-event JSON (plus a `.jsonl` event
+    /// log) of the whole run to this path (`--trace`). Arms the proto
+    /// v4 trace piggyback: workers ship their span buffers as
+    /// [`Msg::TraceBatch`] frames and the master re-bases them onto its
+    /// own clock via the `Hello` handshake offset.
+    pub trace: Option<PathBuf>,
+    /// Print a one-line status to stderr after every sweep
+    /// (`--progress`). Purely additive; off by default.
+    pub progress: bool,
 }
 
 impl DistOptions {
@@ -164,6 +175,8 @@ impl DistOptions {
             checkpoint: None,
             resume_from: None,
             worker_inject: Vec::new(),
+            trace: None,
+            progress: false,
         }
     }
 
@@ -501,6 +514,17 @@ struct Master {
     /// Scratch streaming directory this solve created (and owns):
     /// removed on shutdown.
     scratch: Option<PathBuf>,
+    /// The master's own span recorder (disabled unless `--trace`).
+    tracer: Tracer,
+    /// Merged multi-process timeline the shipped worker batches land
+    /// in, on the master's clock.
+    merged: MergedTrace,
+    /// Per-connection clock offset (master epoch µs − worker epoch µs),
+    /// estimated from the `now_us` stamp at each `Hello`; refreshed
+    /// when a recovered incarnation re-handshakes.
+    offsets: Vec<i64>,
+    /// Per-sweep wall times for the schema-7 min/mean/max rollup.
+    sweep_rollup: SweepRollup,
 }
 
 /// Solve `g` under `partition` on distributed workers. Runs the
@@ -634,19 +658,30 @@ impl Master {
             metrics.sweeps = u32::try_from(ck.sweep).unwrap_or(u32::MAX);
         }
         let gap = opts.seq.global_gap.then(|| GapState::new(&dec, false));
+        // the tracer's epoch is the reference clock every worker batch
+        // is re-based onto, so it must exist before the first Hello
+        let tracer = if opts.trace.is_some() {
+            Tracer::new(DEFAULT_CAPACITY)
+        } else {
+            Tracer::disabled()
+        };
 
         let (mut conns, backend) = connect_workers(&opts, k)?;
         let n = conns.len();
         ensure!(n >= 1, "no workers connected");
         let mut ids = Vec::with_capacity(n);
+        let mut offsets = Vec::with_capacity(n);
         for (i, conn) in conns.iter_mut().enumerate() {
             match conn.recv().with_context(|| format!("worker {i} handshake"))? {
-                Msg::Hello { proto, worker } => {
+                Msg::Hello { proto, worker, now_us } => {
                     ensure!(
                         proto == PROTO_VERSION as u32,
                         "worker {i} speaks protocol {proto}, master {PROTO_VERSION}"
                     );
                     ids.push(worker);
+                    // clock-offset estimate: the worker stamped `now_us`
+                    // just before sending, so receipt time ≈ same instant
+                    offsets.push(tracer.now_us() as i64 - now_us as i64);
                 }
                 other => {
                     return Err(err!("worker {i}: expected Hello, got {}", other.name()))
@@ -658,16 +693,19 @@ impl Master {
         // i, store directory worker_<i>) — recovery must know which
         // process and store a dead connection belongs to
         if ids.iter().all(|&w| w != u32::MAX) {
-            let mut slots: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
-            for (conn, &w) in conns.into_iter().zip(&ids) {
+            let mut slots: Vec<Option<(Conn, i64)>> = (0..n).map(|_| None).collect();
+            for ((conn, off), &w) in conns.into_iter().zip(offsets).zip(&ids) {
                 let w = w as usize;
                 ensure!(
                     w < n && slots[w].is_none(),
                     "worker ids are not a permutation of 0..{n}"
                 );
-                slots[w] = Some(conn);
+                slots[w] = Some((conn, off));
             }
-            conns = slots.into_iter().flatten().collect();
+            let (reordered, reordered_offs): (Vec<Conn>, Vec<i64>) =
+                slots.into_iter().flatten().unzip();
+            conns = reordered;
+            offsets = reordered_offs;
         }
 
         // contiguous balanced shards: region r → worker r·n/k
@@ -707,6 +745,10 @@ impl Master {
             restarts: vec![0; n],
             ck_store,
             scratch,
+            tracer,
+            merged: MergedTrace::new(),
+            offsets,
+            sweep_rollup: SweepRollup::default(),
         };
         for w in 0..n {
             // in both modes the master keeps only shells; on resume the
@@ -724,7 +766,7 @@ impl Master {
                     ));
                 }
             }
-            let t = Timer::start();
+            let t0 = Instant::now();
             if resuming {
                 drop(regions);
                 let msg = Msg::Resume(Box::new(master.compose_resume(w)));
@@ -744,11 +786,14 @@ impl Master {
                     algorithm: 0, // ARD (ensured by the caller)
                     core,
                     warm_start: master.opts.seq.warm_start,
+                    trace: master.opts.trace.is_some(),
                     regions,
                 }));
                 master.conns[w].send(&assign)?;
             }
-            t.stop(&mut master.metrics.t_sync);
+            let dur = t0.elapsed();
+            master.metrics.t_sync += dur;
+            master.tracer.span_at(EventName::SyncWait, t0, dur, NONE, NONE, w as u64);
         }
         Ok(master)
     }
@@ -765,6 +810,7 @@ impl Master {
                 CoreKind::Bk => 1,
             },
             warm_start: self.opts.seq.warm_start,
+            trace: self.opts.trace.is_some(),
             sweep: self.metrics.sweeps as u64,
             regions: (0..self.dec.parts.len())
                 .filter(|&r| self.conn_of_region[r] == w)
@@ -780,6 +826,53 @@ impl Master {
         self.opts
             .sweep_timeout
             .unwrap_or_else(|| self.opts.io_timeout.checked_mul(4).unwrap_or(Duration::MAX))
+    }
+
+    /// Whether the proto v4 trace piggyback is armed — every worker
+    /// reply is then followed by one [`Msg::TraceBatch`] frame.
+    fn trace_armed(&self) -> bool {
+        self.opts.trace.is_some()
+    }
+
+    /// Sweep-barrier bookkeeping shared by both modes: fold the sweep's
+    /// wall time into the schema-7 min/mean/max rollup, record the
+    /// framing span, and print the `--progress` status line.
+    fn end_of_sweep(&mut self, sweep: u32, sweep_t0: Instant, t_run: Instant) {
+        let dur = sweep_t0.elapsed();
+        self.sweep_rollup.add(dur);
+        self.tracer.span_at(
+            EventName::Sweep,
+            sweep_t0,
+            dur,
+            sweep,
+            NONE,
+            self.metrics.discharges,
+        );
+        if self.opts.progress {
+            let active = self.dec.active_regions().len();
+            let excess: Cap = self.dec.shared.excess.iter().filter(|&&x| x > 0).sum();
+            eprintln!(
+                "sweep {:>4}: active {}/{} regions, boundary excess {}, elapsed {:.3}s",
+                sweep + 1,
+                active,
+                self.dec.parts.len(),
+                excess,
+                t_run.elapsed().as_secs_f64(),
+            );
+        }
+    }
+
+    /// Fold one shipped worker span batch into the merged timeline
+    /// (re-based via the connection's clock offset) and credit its
+    /// discharge spans to `t_discharge` — remote discharge work never
+    /// passes through the master's own timers.
+    fn absorb_trace(&mut self, ci: usize, dropped: u64, events: &[TraceEvent]) {
+        for ev in events {
+            if ev.name == EventName::Discharge {
+                self.metrics.t_discharge += Duration::from_micros(ev.dur_us);
+            }
+        }
+        self.merged.add_remote(worker_pid(ci as u32), self.offsets[ci], events, dropped);
     }
 
     /// Snapshot the master's boundary state at the sweep barrier
@@ -801,8 +894,17 @@ impl Master {
             region_active: self.dec.parts.iter().map(|p| p.active).collect(),
             region_pending_gap: self.dec.parts.iter().map(|p| p.pending_gap).collect(),
         };
+        let t0 = Instant::now();
         let bytes = ck.save(store, true).context("write master checkpoint")?;
         self.metrics.checkpoint_bytes += bytes;
+        self.tracer.span_at(
+            EventName::Checkpoint,
+            t0,
+            t0.elapsed(),
+            self.metrics.sweeps.saturating_sub(1),
+            NONE,
+            bytes,
+        );
         Ok(())
     }
 
@@ -814,6 +916,8 @@ impl Master {
     /// whatever the dead worker still owed from its already-composed
     /// snapshots.
     fn recover(&mut self, ci: usize, kind: FailureKind) -> Result<()> {
+        let sweep = self.metrics.sweeps.saturating_sub(1);
+        self.tracer.instant(EventName::FailureDetected, sweep, ci as u32, 0);
         let failure =
             WorkerFailure { worker: ci, peer: self.conns[ci].peer.clone(), kind };
         let budget = self.opts.max_worker_restarts;
@@ -825,7 +929,7 @@ impl Master {
         }
         self.restarts[ci] += 1;
         self.metrics.worker_restarts += 1;
-        let t = Timer::start();
+        let t0 = Instant::now();
         let new_conn = match &mut self.backend {
             Backend::Spawned(pool) => pool
                 .respawn(ci, self.opts.io_timeout)
@@ -845,7 +949,7 @@ impl Master {
         self.metrics.wire_raw_bytes += old.raw_bytes;
         drop(old);
         match self.conns[ci].recv().with_context(|| format!("worker {ci} re-handshake"))? {
-            Msg::Hello { proto, worker } => {
+            Msg::Hello { proto, worker, now_us } => {
                 ensure!(
                     proto == PROTO_VERSION as u32,
                     "restarted worker {ci} speaks protocol {proto}, master {PROTO_VERSION}"
@@ -854,6 +958,8 @@ impl Master {
                     worker == u32::MAX || worker == ci as u32,
                     "restarted worker announced id {worker}, expected {ci}"
                 );
+                // a fresh incarnation means a fresh tracer epoch
+                self.offsets[ci] = self.tracer.now_us() as i64 - now_us as i64;
             }
             other => {
                 return Err(err!(
@@ -873,7 +979,16 @@ impl Master {
                 ))
             }
         }
-        t.stop(&mut self.metrics.t_recovery);
+        let dur = t0.elapsed();
+        self.metrics.t_recovery += dur;
+        self.tracer.span_at(
+            EventName::WorkerRestart,
+            t0,
+            dur,
+            sweep,
+            ci as u32,
+            self.restarts[ci] as u64,
+        );
         Ok(())
     }
 
@@ -886,13 +1001,25 @@ impl Master {
         } else {
             self.run_parallel()?
         };
-        self.collect_cut(converged)
+        let cut = self.collect_cut(converged)?;
+        self.metrics.sweep_wall_min = self.sweep_rollup.min;
+        self.metrics.sweep_wall_mean = self.sweep_rollup.mean();
+        self.metrics.sweep_wall_max = self.sweep_rollup.max;
+        if let Some(path) = self.opts.trace.clone() {
+            let mut merged = std::mem::take(&mut self.merged);
+            merged.add_local(MASTER_PID, &mut self.tracer);
+            self.metrics.trace_events = merged.events.len() as u64;
+            self.metrics.trace_dropped = merged.dropped;
+            merged.write(&path).context("write trace")?;
+        }
+        Ok(cut)
     }
 
     /// `solve_sequential` statement for statement, with the discharge
     /// executed remotely. Returns whether the run converged.
     fn run_deterministic(&mut self) -> Result<bool> {
         let limit = sweep_limit(&self.opts.seq, &self.dec);
+        let t_run = Instant::now();
         let mut converged = true;
         while self.dec.any_active() {
             if self.metrics.sweeps as u64 >= limit {
@@ -901,6 +1028,7 @@ impl Master {
             }
             let sweep = self.metrics.sweeps;
             self.metrics.sweeps += 1;
+            let sweep_t0 = Instant::now();
             let max_stage = if self.opts.seq.partial_discharge {
                 sweep
             } else {
@@ -921,6 +1049,7 @@ impl Master {
                 }
                 tg.stop(&mut self.metrics.t_gap);
             }
+            self.end_of_sweep(sweep, sweep_t0, t_run);
         }
 
         // ---- extra label-only sweeps to extract the cut (§5.3) ---------
@@ -962,6 +1091,7 @@ impl Master {
             }
             let sweep = self.metrics.sweeps;
             self.metrics.sweeps += 1;
+            let sweep_t0 = Instant::now();
             let max_stage = if self.opts.seq.partial_discharge {
                 sweep
             } else {
@@ -992,6 +1122,7 @@ impl Master {
             // the sweep barrier: master state is consistent with every
             // worker's stored pages — snapshot it for --resume-from
             self.write_checkpoint()?;
+            self.end_of_sweep(sweep, sweep_t0, t_par);
         }
 
         // ---- extra label-only sweeps to extract the cut (§5.3) ---------
@@ -1029,19 +1160,38 @@ impl Master {
             // labels, so after a failure it can simply be re-asked of
             // the recovered incarnation
             let src_side = loop {
-                let t = Timer::start();
+                let deadline = Instant::now() + sweep_len;
+                let t0 = Instant::now();
                 let res = self
                     .conns[ci]
                     .try_send(&Msg::FetchCut { region: r as u32 })
-                    .and_then(|()| {
-                        self.conns[ci].try_recv_deadline(Instant::now() + sweep_len, sweep_len, io)
+                    .and_then(|()| self.conns[ci].try_recv_deadline(deadline, sweep_len, io))
+                    .and_then(|msg| {
+                        if !self.trace_armed() {
+                            return Ok((msg, None));
+                        }
+                        // the worker follows every reply with its spans
+                        match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
+                            Msg::TraceBatch { dropped, events, .. } => {
+                                Ok((msg, Some((dropped, events))))
+                            }
+                            other => Err(FailureKind::Protocol(format!(
+                                "expected TraceBatch, got {}",
+                                other.name()
+                            ))),
+                        }
                     });
-                t.stop(&mut self.metrics.t_sync);
+                let dur = t0.elapsed();
+                self.metrics.t_sync += dur;
+                self.tracer.span_at(EventName::SyncWait, t0, dur, NONE, r as u32, ci as u64);
                 match res {
-                    Ok(Msg::CutResult { region, src_side }) if region == r as u32 => {
-                        break src_side
+                    Ok((Msg::CutResult { region, src_side }, trace)) if region == r as u32 => {
+                        if let Some((dropped, events)) = trace {
+                            self.absorb_trace(ci, dropped, &events);
+                        }
+                        break src_side;
                     }
-                    Ok(other) => self.recover(
+                    Ok((other, _)) => self.recover(
                         ci,
                         FailureKind::Protocol(format!(
                             "expected CutResult for region {r}, got {}",
@@ -1143,6 +1293,8 @@ impl Master {
         let sweep_len = self.sweep_timeout();
         let io = self.opts.io_timeout;
         let n = self.conns.len();
+        let sweep = self.metrics.sweeps.saturating_sub(1);
+        let armed = self.trace_armed();
         let mut sent = vec![false; n];
         let mut folded = vec![false; n];
         let mut round = FusionRound::new();
@@ -1163,16 +1315,26 @@ impl Master {
                 if sent[ci] {
                     continue;
                 }
-                let t = Timer::start();
+                let wire0 = self.conns[ci].wire_sent;
+                let t0 = Instant::now();
                 let res = self.conns[ci].try_send(batch);
-                t.stop(&mut self.metrics.t_sync);
+                let dur = t0.elapsed();
+                self.metrics.t_sync += dur;
+                self.tracer.span_at(EventName::SyncWait, t0, dur, sweep, NONE, ci as u64);
                 match res {
                     Ok(()) => {
                         sent[ci] = true;
                         self.metrics.dist_batches += 1;
+                        self.tracer.instant(
+                            EventName::WireSend,
+                            sweep,
+                            batch.kind() as u32,
+                            self.conns[ci].wire_sent - wire0,
+                        );
                     }
                     Err(kind) => {
                         self.recover(ci, kind)?;
+                        self.tracer.instant(EventName::BatchReissue, sweep, ci as u32, 0);
                         deadline = Instant::now() + sweep_len;
                         continue 'sweep;
                     }
@@ -1185,11 +1347,44 @@ impl Master {
                 if groups[ci].is_empty() || folded[ci] {
                     continue;
                 }
-                let t = Timer::start();
+                let wire0 = self.conns[ci].wire_recv;
+                let t0 = Instant::now();
+                // The reply, plus — when tracing is armed — the
+                // worker's piggybacked span batch. Both frames must
+                // land intact *before* anything is folded, so a failure
+                // between them still re-issues the whole batch and
+                // folding stays exactly-once.
                 let res = self.conns[ci].try_recv_deadline(deadline, sweep_len, io);
-                t.stop(&mut self.metrics.t_sync);
-                let outcome = res.and_then(|msg| {
-                    self.fold_reply(&groups[ci], msg, relabel_only, &mut round)
+                let res = res.and_then(|msg| {
+                    if !armed {
+                        return Ok((msg, None));
+                    }
+                    match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
+                        Msg::TraceBatch { dropped, events, .. } => {
+                            Ok((msg, Some((dropped, events))))
+                        }
+                        other => Err(FailureKind::Protocol(format!(
+                            "expected TraceBatch, got {}",
+                            other.name()
+                        ))),
+                    }
+                });
+                let dur = t0.elapsed();
+                self.metrics.t_sync += dur;
+                self.tracer.span_at(EventName::SyncWait, t0, dur, sweep, NONE, ci as u64);
+                let outcome = res.and_then(|(msg, trace)| {
+                    let kind = msg.kind();
+                    let inc = self.fold_reply(&groups[ci], msg, relabel_only, &mut round)?;
+                    self.tracer.instant(
+                        EventName::WireRecv,
+                        sweep,
+                        kind as u32,
+                        self.conns[ci].wire_recv - wire0,
+                    );
+                    if let Some((dropped, events)) = trace {
+                        self.absorb_trace(ci, dropped, &events);
+                    }
+                    Ok(inc)
                 });
                 match outcome {
                     Ok(inc) => {
@@ -1198,6 +1393,7 @@ impl Master {
                     }
                     Err(kind) => {
                         self.recover(ci, kind)?;
+                        self.tracer.instant(EventName::BatchReissue, sweep, ci as u32, 0);
                         sent[ci] = false;
                         deadline = Instant::now() + sweep_len;
                         continue 'sweep;
@@ -1207,10 +1403,13 @@ impl Master {
             break;
         }
         // the round's barrier: the α-filter needs every worker's labels
-        let tm = Timer::start();
+        let t0 = Instant::now();
         let out = round.finish(&mut self.dec.shared);
         self.metrics.msg_bytes += out.bytes;
-        tm.stop(&mut self.metrics.t_msg);
+        let dur = t0.elapsed();
+        self.metrics.t_msg += dur;
+        self.metrics.t_fuse += dur;
+        self.tracer.span_at(EventName::FuseBarrier, t0, dur, sweep, NONE, out.bytes);
         Ok(increase)
     }
 
@@ -1250,7 +1449,7 @@ impl Master {
                 )));
             }
         }
-        let tm = Timer::start();
+        let t0 = Instant::now();
         let mut increase = 0u64;
         for (&r, rsp) in group.iter().zip(&rsps) {
             if !relabel_only {
@@ -1264,7 +1463,17 @@ impl Master {
             self.region_flow[r] = rsp.delta.flow_to_sink;
             increase += rsp.relabel_increase;
         }
-        tm.stop(&mut self.metrics.t_msg);
+        let dur = t0.elapsed();
+        self.metrics.t_msg += dur;
+        self.metrics.t_fuse += dur;
+        self.tracer.span_at(
+            EventName::FuseFold,
+            t0,
+            dur,
+            self.metrics.sweeps.saturating_sub(1),
+            NONE,
+            rsps.len() as u64,
+        );
         Ok(increase)
     }
 
@@ -1276,7 +1485,8 @@ impl Master {
         let owned_d = req.owned_d.clone();
         let req = Msg::Discharge(Box::new(req));
         let ci = self.conn_of_region[r];
-        let t = Timer::start();
+        let sweep = self.metrics.sweeps.saturating_sub(1);
+        let t0 = Instant::now();
         self.conns[ci].send(&req)?;
         let rsp = match self.conns[ci].recv()? {
             Msg::BoundaryDelta(rsp) => rsp,
@@ -1287,7 +1497,23 @@ impl Master {
                 ))
             }
         };
-        t.stop(&mut self.metrics.t_sync);
+        if self.trace_armed() {
+            // the worker follows every reply with its span batch
+            match self.conns[ci].recv()? {
+                Msg::TraceBatch { dropped, events, .. } => {
+                    self.absorb_trace(ci, dropped, &events)
+                }
+                other => {
+                    return Err(err!(
+                        "worker {ci}: expected TraceBatch, got {}",
+                        other.name()
+                    ))
+                }
+            }
+        }
+        let dur = t0.elapsed();
+        self.metrics.t_sync += dur;
+        self.tracer.span_at(EventName::SyncWait, t0, dur, sweep, r as u32, ci as u64);
         ensure!(
             rsp.delta.region == r as u32,
             "worker {ci} answered for region {} instead of {r}",
@@ -1301,14 +1527,19 @@ impl Master {
         }
 
         // ---- fuse (the shared Algorithm-2 step; singleton never cancels)
-        let tm = Timer::start();
+        let t0 = Instant::now();
         let out = fuse_deltas(&mut self.dec.shared, std::slice::from_ref(&rsp.delta));
         debug_assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
         self.metrics.msg_bytes += out.bytes;
-        tm.stop(&mut self.metrics.t_msg);
-        let t = Timer::start();
+        let dur = t0.elapsed();
+        self.metrics.t_msg += dur;
+        self.metrics.t_fuse += dur;
+        self.tracer.span_at(EventName::FuseFold, t0, dur, sweep, r as u32, out.bytes);
+        let t0 = Instant::now();
         self.conns[ci].send(&Msg::FuseResult { region: r as u32, cancelled: out.cancelled })?;
-        t.stop(&mut self.metrics.t_sync);
+        let dur = t0.elapsed();
+        self.metrics.t_sync += dur;
+        self.tracer.span_at(EventName::SyncWait, t0, dur, sweep, r as u32, ci as u64);
 
         self.dec.parts[r].active = rsp.delta.active;
         self.region_flow[r] = rsp.delta.flow_to_sink;

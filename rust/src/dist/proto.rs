@@ -41,12 +41,21 @@
 //! long discharge runs. [`Msg::Hello`] now carries the worker id the
 //! master assigned at spawn time, so the master can map a connection
 //! back to the worker's store directory when it has to respawn it.
+//!
+//! Protocol version 4 adds the tracing plumbing: [`Msg::Hello`] stamps
+//! the worker's monotonic clock (`now_us`) so the master can estimate
+//! a per-connection clock offset at the handshake, the assignment
+//! frames ([`AssignShard`]/[`ResumeShard`]) carry a `trace` arm flag,
+//! and an armed worker follows every reply it sends with one
+//! [`Msg::TraceBatch`] draining its bounded span buffer — trace frames
+//! piggyback on the sweep barrier, they never add a round-trip.
 
 use crate::coordinator::fuse::RegionBoundaryDelta;
 use crate::core::graph::Cap;
 use crate::region::decompose::RegionPart;
 use crate::store::codec::{Codec, Dec, Enc};
 use crate::store::page::{crc32, le_u16, le_u32};
+use crate::trace::{EventName, TraceEvent};
 use std::fmt;
 use std::io::{Read, Write};
 
@@ -56,7 +65,9 @@ pub const FRAME_MAGIC: [u8; 4] = *b"ARMD";
 /// Version 2: batched sweep frames (`DischargeBatch`/`DeltaBatch`).
 /// Version 3: recovery frames (`Heartbeat`/`Resume`) and the worker id
 /// in `Hello`, so a restarted worker can rejoin mid-solve.
-pub const PROTO_VERSION: u16 = 3;
+/// Version 4: tracing — the clock stamp in `Hello`, the `trace` arm
+/// flag in `AssignShard`/`Resume`, and the `TraceBatch` span frame.
+pub const PROTO_VERSION: u16 = 4;
 /// Fixed header size preceding the payload.
 pub const FRAME_HEADER_LEN: usize = 16;
 /// Upper bound on a single payload (a shard assignment of a huge
@@ -125,6 +136,9 @@ pub struct AssignShard {
     /// 0 = Dinic, 1 = BK.
     pub core: u8,
     pub warm_start: bool,
+    /// Arm the worker's tracer: when set, every reply is followed by
+    /// one [`Msg::TraceBatch`] draining the worker's span buffer.
+    pub trace: bool,
     /// `(region id, region network)` — region ids are global.
     pub regions: Vec<(u32, RegionPart)>,
 }
@@ -176,6 +190,9 @@ pub struct ResumeShard {
     /// 0 = Dinic, 1 = BK.
     pub core: u8,
     pub warm_start: bool,
+    /// Re-arm the tracer on the restarted worker (same contract as
+    /// [`AssignShard::trace`]).
+    pub trace: bool,
     /// Sweep counter at the barrier the master is resuming from.
     pub sweep: u64,
     /// Global region ids in the original assignment (= store slot)
@@ -186,13 +203,16 @@ pub struct ResumeShard {
 /// The protocol messages. Master → worker: `AssignShard`, `Resume`,
 /// `Discharge`, `DischargeBatch`, `FuseResult`, `FetchCut`,
 /// `Shutdown`. Worker → master: `Hello`, `BoundaryDelta`, `DeltaBatch`,
-/// `CutResult`, `Abort`. Either direction: `Heartbeat`.
+/// `CutResult`, `Abort`, `TraceBatch`. Either direction: `Heartbeat`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Msg {
     /// Handshake, sent by the worker immediately after connecting.
     /// `worker` is the id the master assigned at spawn time
     /// (`--worker-id`), or `u32::MAX` for externally started workers.
-    Hello { proto: u32, worker: u32 },
+    /// `now_us` is the worker's monotonic clock at send time; the
+    /// master subtracts it from its own receipt time to estimate the
+    /// per-connection clock offset used when merging trace timelines.
+    Hello { proto: u32, worker: u32, now_us: u64 },
     AssignShard(Box<AssignShard>),
     Discharge(Box<DischargeReq>),
     BoundaryDelta(Box<DeltaRsp>),
@@ -223,6 +243,11 @@ pub enum Msg {
     /// Re-attach a restarted worker to its stored shard (proto v3).
     /// Acked by one [`Msg::Heartbeat`] once every page decoded.
     Resume(Box<ResumeShard>),
+    /// Drained worker span buffer (proto v4), sent right after every
+    /// worker reply while tracing is armed. Timestamps are on the
+    /// worker's own clock; the master re-bases them with the offset it
+    /// estimated at `Hello`.
+    TraceBatch { worker: u32, dropped: u64, events: Vec<TraceEvent> },
 }
 
 const KIND_HELLO: u8 = 1;
@@ -238,6 +263,7 @@ const KIND_DISCHARGE_BATCH: u8 = 10;
 const KIND_DELTA_BATCH: u8 = 11;
 const KIND_HEARTBEAT: u8 = 12;
 const KIND_RESUME: u8 = 13;
+const KIND_TRACE_BATCH: u8 = 14;
 
 fn enc_flows(e: &mut Enc, xs: &[(u32, bool, Cap)]) {
     e.u64(xs.len() as u64);
@@ -281,6 +307,38 @@ fn dec_pairs_u32(d: &mut Dec) -> Option<Vec<(u32, u32)>> {
         let a = d.u32()?;
         let b = d.u32()?;
         v.push((a, b));
+    }
+    Some(v)
+}
+
+fn enc_trace_events(e: &mut Enc, xs: &[TraceEvent]) {
+    e.u64(xs.len() as u64);
+    for ev in xs {
+        e.u8(ev.name.code());
+        e.u64(ev.ts_us);
+        e.u64(ev.dur_us);
+        e.u32(ev.sweep);
+        e.u32(ev.region);
+        e.u64(ev.detail);
+    }
+}
+
+fn dec_trace_events(d: &mut Dec) -> Option<Vec<TraceEvent>> {
+    let n = usize::try_from(d.u64()?).ok()?;
+    if n > d.remaining() {
+        return None;
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = EventName::from_code(d.u8()?)?;
+        v.push(TraceEvent {
+            name,
+            ts_us: d.u64()?,
+            dur_us: d.u64()?,
+            sweep: d.u32()?,
+            region: d.u32()?,
+            detail: d.u64()?,
+        });
     }
     Some(v)
 }
@@ -368,7 +426,9 @@ fn dec_delta_rsp(d: &mut Dec) -> Option<DeltaRsp> {
 }
 
 impl Msg {
-    fn kind(&self) -> u8 {
+    /// Wire kind discriminant (also stamped into `WireSend`/`WireRecv`
+    /// trace instants).
+    pub(crate) fn kind(&self) -> u8 {
         match self {
             Msg::Hello { .. } => KIND_HELLO,
             Msg::AssignShard(_) => KIND_ASSIGN,
@@ -383,6 +443,7 @@ impl Msg {
             Msg::Abort { .. } => KIND_ABORT,
             Msg::Heartbeat { .. } => KIND_HEARTBEAT,
             Msg::Resume(_) => KIND_RESUME,
+            Msg::TraceBatch { .. } => KIND_TRACE_BATCH,
         }
     }
 
@@ -402,20 +463,23 @@ impl Msg {
             Msg::Abort { .. } => "Abort",
             Msg::Heartbeat { .. } => "Heartbeat",
             Msg::Resume(_) => "Resume",
+            Msg::TraceBatch { .. } => "TraceBatch",
         }
     }
 
     fn encode(&self, e: &mut Enc) {
         match self {
-            Msg::Hello { proto, worker } => {
+            Msg::Hello { proto, worker, now_us } => {
                 e.u32(*proto);
                 e.u32(*worker);
+                e.u64(*now_us);
             }
             Msg::AssignShard(a) => {
                 e.u32(a.d_inf);
                 e.u8(a.algorithm);
                 e.u8(a.core);
                 e.u8(a.warm_start as u8);
+                e.u8(a.trace as u8);
                 e.u64(a.regions.len() as u64);
                 for (id, part) in &a.regions {
                     e.u32(*id);
@@ -457,20 +521,27 @@ impl Msg {
                 e.u8(rs.algorithm);
                 e.u8(rs.core);
                 e.u8(rs.warm_start as u8);
+                e.u8(rs.trace as u8);
                 e.u64(rs.sweep);
                 e.u32_slice(&rs.regions);
+            }
+            Msg::TraceBatch { worker, dropped, events } => {
+                e.u32(*worker);
+                e.u64(*dropped);
+                enc_trace_events(e, events);
             }
         }
     }
 
     fn decode(kind: u8, d: &mut Dec) -> Option<Msg> {
         Some(match kind {
-            KIND_HELLO => Msg::Hello { proto: d.u32()?, worker: d.u32()? },
+            KIND_HELLO => Msg::Hello { proto: d.u32()?, worker: d.u32()?, now_us: d.u64()? },
             KIND_ASSIGN => {
                 let d_inf = d.u32()?;
                 let algorithm = d.u8()?;
                 let core = d.u8()?;
                 let warm_start = d.u8()? != 0;
+                let trace = d.u8()? != 0;
                 let n = usize::try_from(d.u64()?).ok()?;
                 if n > d.remaining() {
                     return None;
@@ -486,6 +557,7 @@ impl Msg {
                     algorithm,
                     core,
                     warm_start,
+                    trace,
                     regions,
                 }))
             }
@@ -528,9 +600,15 @@ impl Msg {
                 algorithm: d.u8()?,
                 core: d.u8()?,
                 warm_start: d.u8()? != 0,
+                trace: d.u8()? != 0,
                 sweep: d.u64()?,
                 regions: d.u32_slice()?,
             })),
+            KIND_TRACE_BATCH => Msg::TraceBatch {
+                worker: d.u32()?,
+                dropped: d.u64()?,
+                events: dec_trace_events(d)?,
+            },
             _ => return None,
         })
     }
@@ -629,12 +707,13 @@ mod tests {
 
     fn all_msgs() -> Vec<Msg> {
         vec![
-            Msg::Hello { proto: PROTO_VERSION as u32, worker: 1 },
+            Msg::Hello { proto: PROTO_VERSION as u32, worker: 1, now_us: 123_456_789 },
             Msg::AssignShard(Box::new(AssignShard {
                 d_inf: 7,
                 algorithm: 0,
                 core: 1,
                 warm_start: true,
+                trace: true,
                 regions: vec![(0, sample_part()), (3, sample_part())],
             })),
             Msg::Discharge(Box::new(DischargeReq {
@@ -712,6 +791,7 @@ mod tests {
                 algorithm: 0,
                 core: 1,
                 warm_start: true,
+                trace: true,
                 sweep: 12,
                 regions: vec![2, 3, 5],
             })),
@@ -720,9 +800,33 @@ mod tests {
                 algorithm: 1,
                 core: 0,
                 warm_start: false,
+                trace: false,
                 sweep: 0,
                 regions: vec![],
             })),
+            Msg::TraceBatch {
+                worker: 0,
+                dropped: 3,
+                events: vec![
+                    TraceEvent {
+                        name: EventName::Discharge,
+                        ts_us: 1_000,
+                        dur_us: 750,
+                        sweep: 2,
+                        region: 5,
+                        detail: 17,
+                    },
+                    TraceEvent {
+                        name: EventName::PrefetchMiss,
+                        ts_us: 1_800,
+                        dur_us: 0,
+                        sweep: 2,
+                        region: 5,
+                        detail: 4096,
+                    },
+                ],
+            },
+            Msg::TraceBatch { worker: 1, dropped: 0, events: vec![] },
         ]
     }
 
@@ -746,6 +850,7 @@ mod tests {
             algorithm: 0,
             core: 0,
             warm_start: true,
+            trace: false,
             regions: vec![(0, sample_part())],
         }));
         let mut buf = Vec::new();
@@ -755,8 +860,9 @@ mod tests {
 
     #[test]
     fn truncation_and_bit_flips_are_rejected_for_every_kind() {
-        // every message kind (incl. the v2 batch and v3 recovery
-        // frames), every truncation boundary, every single-byte flip:
+        // every message kind (incl. the v2 batch, v3 recovery and v4
+        // trace frames), every truncation boundary, every single-byte
+        // flip:
         // always a typed error, never a panic or a mis-decode
         for msg in all_msgs() {
             let mut buf = Vec::new();
@@ -800,6 +906,11 @@ mod tests {
         e.u64(3); // sweep
         e.u64(1 << 40); // region-id count, way past the payload end
         hostile.push((KIND_RESUME, e.into_bytes()));
+        let mut e = Enc::new(Codec::Compact);
+        e.u32(0); // worker
+        e.u64(0); // dropped
+        e.u64(1 << 40); // event count with no events behind it
+        hostile.push((KIND_TRACE_BATCH, e.into_bytes()));
         for (kind, payload) in hostile {
             let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
             frame.extend_from_slice(&FRAME_MAGIC);

@@ -31,6 +31,12 @@
 //! those pages — and acks with [`Msg::Heartbeat`]. `--inject` gives
 //! tests a deterministic fault plan ([`Inject`]: crash / stall /
 //! corrupt).
+//!
+//! With tracing armed (the `trace` flag of [`Msg::AssignShard`] /
+//! [`Msg::Resume`], proto v4) the worker records discharge and page-I/O
+//! spans into a bounded [`Tracer`] and ships them as one
+//! [`Msg::TraceBatch`] right after every reply; the master re-bases
+//! them onto its own clock via the `now_us` stamp in [`Msg::Hello`].
 
 use crate::coordinator::fuse::take_boundary_delta;
 use crate::coordinator::sequential::Algorithm;
@@ -46,10 +52,11 @@ use crate::region::decompose::RegionPart;
 use crate::region::prd::Prd;
 use crate::region::relabel::{region_relabel_ard, region_relabel_prd};
 use crate::store::{Residency, StoreConfig};
+use crate::trace::{EventName, Tracer, DEFAULT_CAPACITY};
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Structured fault injection (`--inject SPEC`): deterministic failures
 /// at a chosen discharge, exercising the master's recovery paths.
@@ -254,10 +261,18 @@ impl Shard {
     /// barrier and a re-issued batch replays against unmodified pages
     /// (replaying a discharge on a *post*-discharge page would route
     /// the same excess twice).
-    fn discharge(&mut self, q: &DischargeReq, staged: bool) -> Result<DeltaRsp> {
+    fn discharge(
+        &mut self,
+        q: &DischargeReq,
+        staged: bool,
+        tracer: &mut Tracer,
+        sweep: u32,
+    ) -> Result<DeltaRsp> {
         let slot = self.slot(q.region)?;
         if let Some(st) = self.store.as_mut() {
+            let t0 = Instant::now();
             st.load_part(slot, &mut self.parts[slot]).context("page in shard region")?;
+            tracer.span_at(EventName::PageRead, t0, t0.elapsed(), sweep, q.region, 0);
         }
         let wi = if self.store.is_some() { 0 } else { slot };
         let d_inf = self.d_inf;
@@ -300,6 +315,7 @@ impl Shard {
 
         // ---- run the operation ------------------------------------------
         let mut rsp = DeltaRsp::default();
+        let t0 = Instant::now();
         if q.relabel_only {
             rsp.relabel_increase = match self.algorithm {
                 Algorithm::Ard => region_relabel_ard(part, d_inf),
@@ -318,8 +334,14 @@ impl Shard {
                 }
             }
         }
+        if !q.relabel_only {
+            // the master folds these spans into its `t_discharge`
+            // rollup, so only real discharge work may carry the name
+            tracer.span_at(EventName::Discharge, t0, t0.elapsed(), sweep, q.region, rsp.augment);
+        }
         rsp.delta = take_boundary_delta(part, d_inf);
         if let Some(st) = self.store.as_mut() {
+            let t0 = Instant::now();
             if staged {
                 st.unload_part_staged(slot, &mut self.parts[slot])
                     .context("stage shard region")?;
@@ -327,6 +349,7 @@ impl Shard {
                 st.unload_part(slot, &mut self.parts[slot])
                     .context("page out shard region")?;
             }
+            tracer.span_at(EventName::PageWrite, t0, t0.elapsed(), sweep, q.region, 0);
         }
         Ok(rsp)
     }
@@ -415,18 +438,45 @@ fn send_reply(stream: &mut TcpStream, msg: &Msg, corrupt: bool) -> Result<()> {
     Ok(())
 }
 
+/// Ship the tracer's buffered spans as one [`Msg::TraceBatch`] frame —
+/// the piggyback sent right after every reply while tracing is armed
+/// (proto v4). A disabled tracer ships nothing, keeping the v3 frame
+/// sequence byte for byte.
+fn ship_trace(stream: &mut TcpStream, tracer: &mut Tracer, worker: u32) -> Result<()> {
+    if !tracer.is_enabled() {
+        return Ok(());
+    }
+    let (events, dropped) = tracer.take_batch();
+    write_msg(stream, &Msg::TraceBatch { worker, dropped, events })
+        .context("send trace batch")?;
+    Ok(())
+}
+
 /// Serve one master session on an accepted connection. Returns when the
 /// master sends [`Msg::Shutdown`]; a dead master (EOF) or any protocol
 /// violation is an error.
 pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // The tracer exists (disabled) from the very first byte so its
+    // epoch predates the `Hello` clock sample the master uses to
+    // re-base this worker's timestamps; `AssignShard`/`Resume` arm it.
+    let mut tracer = Tracer::disabled();
     write_msg(
         &mut stream,
-        &Msg::Hello { proto: PROTO_VERSION as u32, worker: opts.worker_id },
+        &Msg::Hello {
+            proto: PROTO_VERSION as u32,
+            worker: opts.worker_id,
+            now_us: tracer.now_us(),
+        },
     )
     .context("send handshake")?;
     let mut shard: Option<Shard> = None;
     let mut handled = 0u64;
+    // Trace-only sweep attribution: batches count sweeps directly (one
+    // `DischargeBatch` per sweep); deterministic single discharges
+    // detect the wrap of the master's ascending region order.
+    let mut sweep = 0u32;
+    let mut last_region = u32::MAX;
     loop {
         let (msg, _) = read_msg(&mut stream).context("read command from master")?;
         // The master sending anything further is the proof it accepted
@@ -440,14 +490,21 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
         let outcome: Result<bool> = (|| {
             match msg {
                 Msg::AssignShard(a) => {
+                    if a.trace {
+                        tracer.enable(DEFAULT_CAPACITY);
+                    }
                     shard = Some(Shard::new(*a, opts)?);
                 }
                 Msg::Resume(rs) => {
-                    let sweep = rs.sweep;
+                    if rs.trace {
+                        tracer.enable(DEFAULT_CAPACITY);
+                    }
+                    sweep = u32::try_from(rs.sweep).unwrap_or(u32::MAX);
+                    let nonce = rs.sweep;
                     shard = Some(Shard::resume(*rs, opts)?);
                     // readiness ack: the master holds the sweep loop
                     // until the reloaded shard is confirmed
-                    write_msg(&mut stream, &Msg::Heartbeat { nonce: sweep })
+                    write_msg(&mut stream, &Msg::Heartbeat { nonce })
                         .context("ack resume")?;
                 }
                 Msg::Heartbeat { nonce } => {
@@ -457,11 +514,16 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                 }
                 Msg::Discharge(q) => {
                     handled += 1;
+                    if last_region != u32::MAX && q.region <= last_region {
+                        sweep = sweep.saturating_add(1);
+                    }
+                    last_region = q.region;
                     let corrupt = apply_inject(opts.inject, handled, &mut stream)?;
                     let shard =
                         shard.as_mut().ok_or_else(|| err!("Discharge before AssignShard"))?;
-                    let rsp = shard.discharge(&q, false)?;
+                    let rsp = shard.discharge(&q, false, &mut tracer, sweep)?;
                     send_reply(&mut stream, &Msg::BoundaryDelta(Box::new(rsp)), corrupt)?;
+                    ship_trace(&mut stream, &mut tracer, opts.worker_id)?;
                     let (ack, _) = read_msg(&mut stream).context("read fusion ack")?;
                     match ack {
                         Msg::FuseResult { region, .. } if region == q.region => {}
@@ -483,12 +545,14 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     for q in &reqs {
                         handled += 1;
                         corrupt |= apply_inject(opts.inject, handled, &mut stream)?;
-                        rsps.push(shard.discharge(q, true)?);
+                        rsps.push(shard.discharge(q, true, &mut tracer, sweep)?);
                     }
+                    sweep = sweep.saturating_add(1);
                     // no fusion ack in batch mode: the next batch is the
                     // sweep barrier, so the master's fusion overlaps
                     // with this worker being free
                     send_reply(&mut stream, &Msg::DeltaBatch(rsps), corrupt)?;
+                    ship_trace(&mut stream, &mut tracer, opts.worker_id)?;
                 }
                 Msg::FetchCut { region } => {
                     let shard =
@@ -496,6 +560,7 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     let src_side = shard.cut_of(region)?;
                     write_msg(&mut stream, &Msg::CutResult { region, src_side })
                         .context("send cut result")?;
+                    ship_trace(&mut stream, &mut tracer, opts.worker_id)?;
                 }
                 Msg::Shutdown => return Ok(true),
                 Msg::Abort { reason } => return Err(err!("master aborted: {reason}")),

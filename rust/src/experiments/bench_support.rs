@@ -111,6 +111,14 @@ pub struct BenchRecord {
     pub worker_restarts: u64,
     pub checkpoint_bytes: u64,
     pub recovery_wall_seconds: f64,
+    /// Observability accounting (schema 7): merged timeline events and
+    /// events dropped at the bounded trace buffer (both zero unless the
+    /// run traced), plus the discharge / fusion wall rollups the trace
+    /// spans reconcile against.
+    pub trace_events: u64,
+    pub trace_dropped: u64,
+    pub discharge_seconds: f64,
+    pub fuse_seconds: f64,
 }
 
 impl BenchRecord {
@@ -144,6 +152,10 @@ impl BenchRecord {
             worker_restarts: r.worker_restarts,
             checkpoint_bytes: r.checkpoint_bytes,
             recovery_wall_seconds: r.recovery_wall_seconds,
+            trace_events: r.trace_events,
+            trace_dropped: r.trace_dropped,
+            discharge_seconds: r.discharge_seconds,
+            fuse_seconds: r.fuse_seconds,
         }
     }
 
@@ -180,6 +192,10 @@ impl BenchRecord {
             worker_restarts: res.metrics.worker_restarts,
             checkpoint_bytes: res.metrics.checkpoint_bytes,
             recovery_wall_seconds: res.metrics.t_recovery.as_secs_f64(),
+            trace_events: res.metrics.trace_events,
+            trace_dropped: res.metrics.trace_dropped,
+            discharge_seconds: res.metrics.t_discharge.as_secs_f64(),
+            fuse_seconds: res.metrics.t_fuse.as_secs_f64(),
         }
     }
 }
@@ -317,6 +333,10 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 worker_restarts: 0,
                 checkpoint_bytes: 0,
                 recovery_wall_seconds: 0.0,
+                trace_events: 0,
+                trace_dropped: 0,
+                discharge_seconds: 0.0,
+                fuse_seconds: 0.0,
             });
         }
         "appendix_a" => {
@@ -380,6 +400,10 @@ pub fn probe_records(id: &str, quick: bool) -> Vec<BenchRecord> {
                 worker_restarts: 0,
                 checkpoint_bytes: 0,
                 recovery_wall_seconds: 0.0,
+                trace_events: 0,
+                trace_dropped: 0,
+                discharge_seconds: 0.0,
+                fuse_seconds: 0.0,
             });
         }
         other => panic!("no probe defined for experiment id: {other}"),
@@ -415,15 +439,16 @@ pub fn to_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"bench\": \"{}\",", json_escape(id));
-    // schema 6: adds the fault-tolerance fields (worker_restarts,
-    // checkpoint_bytes, recovery_wall_seconds) per record; schema 5
-    // added the parallel-sweep fields (dist_batches,
-    // max_inflight_discharges, par_sweep_seconds), schema 4 the
-    // distributed-runtime fields (dist_msgs_sent/recv,
-    // wire_bytes_sent/recv vs wire_raw_bytes, sync_wall_seconds),
-    // schema 3 the streaming-store fields, schema 2 the core work
-    // counters
-    s.push_str("  \"schema\": 6,\n");
+    // schema 7: adds the observability fields (trace_events,
+    // trace_dropped, discharge_seconds, fuse_seconds) per record;
+    // schema 6 added the fault-tolerance fields (worker_restarts,
+    // checkpoint_bytes, recovery_wall_seconds), schema 5 the
+    // parallel-sweep fields (dist_batches, max_inflight_discharges,
+    // par_sweep_seconds), schema 4 the distributed-runtime fields
+    // (dist_msgs_sent/recv, wire_bytes_sent/recv vs wire_raw_bytes,
+    // sync_wall_seconds), schema 3 the streaming-store fields, schema 2
+    // the core work counters
+    s.push_str("  \"schema\": 7,\n");
     let _ = writeln!(s, "  \"quick\": {quick},");
     match experiment_seconds {
         Some(t) => {
@@ -446,7 +471,9 @@ pub fn to_json(
              \"wire_raw_bytes\": {}, \"sync_wall_seconds\": {:.6}, \
              \"dist_batches\": {}, \"max_inflight_discharges\": {}, \
              \"par_sweep_seconds\": {:.6}, \"worker_restarts\": {}, \
-             \"checkpoint_bytes\": {}, \"recovery_wall_seconds\": {:.6}}}{}",
+             \"checkpoint_bytes\": {}, \"recovery_wall_seconds\": {:.6}, \
+             \"trace_events\": {}, \"trace_dropped\": {}, \
+             \"discharge_seconds\": {:.6}, \"fuse_seconds\": {:.6}}}{}",
             json_escape(&r.case),
             json_escape(&r.solver),
             r.flow,
@@ -475,6 +502,10 @@ pub fn to_json(
             r.worker_restarts,
             r.checkpoint_bytes,
             r.recovery_wall_seconds,
+            r.trace_events,
+            r.trace_dropped,
+            r.discharge_seconds,
+            r.fuse_seconds,
             if i + 1 < records.len() { "," } else { "" },
         );
     }
@@ -558,10 +589,14 @@ mod tests {
             worker_restarts: 1,
             checkpoint_bytes: 2048,
             recovery_wall_seconds: 0.2,
+            trace_events: 321,
+            trace_dropped: 4,
+            discharge_seconds: 0.15,
+            fuse_seconds: 0.03,
         }];
         let j = to_json("fig6", true, Some(1.5), &recs);
         assert!(j.contains("\"bench\": \"fig6\""));
-        assert!(j.contains("\"schema\": 6"));
+        assert!(j.contains("\"schema\": 7"));
         assert!(j.contains("\\\"1"));
         assert!(j.contains("\"flow\": 42"));
         assert!(j.contains("\"converged\": true"));
@@ -586,6 +621,10 @@ mod tests {
         assert!(j.contains("\"worker_restarts\": 1"));
         assert!(j.contains("\"checkpoint_bytes\": 2048"));
         assert!(j.contains("\"recovery_wall_seconds\": 0.200000"));
+        assert!(j.contains("\"trace_events\": 321"));
+        assert!(j.contains("\"trace_dropped\": 4"));
+        assert!(j.contains("\"discharge_seconds\": 0.150000"));
+        assert!(j.contains("\"fuse_seconds\": 0.030000"));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 

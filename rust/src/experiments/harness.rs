@@ -117,6 +117,14 @@ pub struct CompetitorResult {
     pub worker_restarts: u64,
     pub checkpoint_bytes: u64,
     pub recovery_wall_seconds: f64,
+    /// Observability accounting (schema 7): merged timeline events and
+    /// events dropped at the bounded trace buffer (zero unless the run
+    /// traced), plus the discharge / fusion wall rollups the trace
+    /// spans reconcile against.
+    pub trace_events: u64,
+    pub trace_dropped: u64,
+    pub discharge_seconds: f64,
+    pub fuse_seconds: f64,
 }
 
 impl CompetitorResult {
@@ -161,6 +169,10 @@ impl CompetitorResult {
             worker_restarts: m.worker_restarts,
             checkpoint_bytes: m.checkpoint_bytes,
             recovery_wall_seconds: m.t_recovery.as_secs_f64(),
+            trace_events: m.trace_events,
+            trace_dropped: m.trace_dropped,
+            discharge_seconds: m.t_discharge.as_secs_f64(),
+            fuse_seconds: m.t_fuse.as_secs_f64(),
         }
     }
 }

@@ -11,6 +11,7 @@
 //! * `bench`       — run paper-figure benches, emit `BENCH_<id>.json`
 //! * `accel`       — the PJRT kernel demo on a grid instance
 //! * `analyze`     — repo-invariant static analysis (CI gate)
+//! * `report`      — per-sweep phase breakdown from a `--trace` log
 //!
 //! Run `armincut help` for the option list.
 
@@ -45,6 +46,7 @@ USAGE:
   armincut bench   ID|all [--quick|--full] [--out DIR] [--probe-only]
   armincut accel   [--artifacts DIR]
   armincut analyze [--fix-allow] [--emit-schema] [PATH]
+  armincut report  TRACE.jsonl
   armincut help
 
 SOLVE OPTIONS:
@@ -94,6 +96,16 @@ SOLVE OPTIONS:
   --no-gap / --no-brelabel / --no-partial   disable heuristics
   --pair-arcs          pair reverse arcs when reading DIMACS
   --cut FILE           write the minimum cut (one side bit per line)
+  --trace PATH         region solvers (s-ard/s-prd/p-ard/p-prd and
+                       --distributed): write a Chrome trace-event
+                       timeline to PATH (open in chrome://tracing or
+                       Perfetto) plus the compact event log beside it
+                       (.jsonl extension; feed to `armincut report`); in
+                       distributed mode workers ship their spans to the
+                       master, which merges them on a common clock
+  --progress           region solvers: print one line per sweep to
+                       stderr (active regions, boundary excess,
+                       elapsed)
 
 WORKER OPTIONS:
   --listen ADDR        bind, print the bound address, serve one master
@@ -136,6 +148,12 @@ ANALYZE OPTIONS:
   --emit-schema        regenerate scripts/schema_fields.json from the
                        live sources
   exit codes: 0 clean | 1 findings | 2 usage/IO
+
+REPORT:
+  armincut report TRACE.jsonl
+                       print the per-sweep, per-process phase breakdown
+                       (discharge/fuse/sync/disk/idle) from the event
+                       log written next to every --trace output
 "#;
 
 fn main() {
@@ -155,6 +173,7 @@ fn main() {
         "bench" => cmd_bench(&args[1..]),
         "accel" => cmd_accel(&opts),
         "analyze" => cmd_analyze(&args[1..]),
+        "report" => cmd_report(&args[1..]),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             0
@@ -231,6 +250,33 @@ fn cmd_analyze(args: &[String]) -> i32 {
         Err(e) => {
             eprintln!("analyze: {e}");
             2
+        }
+    }
+}
+
+/// `armincut report TRACE.jsonl` — render the per-sweep phase table
+/// from the compact event log that every `solve --trace PATH` run
+/// writes next to its Chrome timeline (`PATH.jsonl`).
+fn cmd_report(args: &[String]) -> i32 {
+    let Some(path) = args.iter().find(|a| !a.starts_with("--")) else {
+        eprintln!("need a TRACE.jsonl path (written next to every --trace output)");
+        return 2;
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: read {path}: {e}");
+            return 2;
+        }
+    };
+    match armincut::trace::report::render(&src) {
+        Ok(table) => {
+            print!("{table}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {path}: {e}");
+            1
         }
     }
 }
@@ -407,6 +453,8 @@ fn cmd_solve(opts: &Flags) -> i32 {
             if let Some(dir) = opts.get("resume-from") {
                 d.resume_from = Some(dir.into());
             }
+            d.trace = opts.get("trace").map(|s| s.into());
+            d.progress = opts.contains_key("progress");
             if let Some(list) = opts.get("inject-worker") {
                 for item in list.split(',').filter(|s| !s.is_empty()) {
                     let parsed = item.split_once(':').and_then(|(idx, spec)| {
@@ -464,6 +512,8 @@ fn cmd_solve(opts: &Flags) -> i32 {
             if opts.contains_key("no-compress") {
                 o.streaming_compress = false;
             }
+            o.trace = opts.get("trace").map(|s| s.into());
+            o.progress = opts.contains_key("progress");
             // streaming store failures (unwritable dir, corrupt pages)
             // surface as exit code 1, not a panic
             let res = match solve_sequential(&g, &part, &o) {
@@ -496,6 +546,8 @@ fn cmd_solve(opts: &Flags) -> i32 {
             if opts.contains_key("cold-start") {
                 o.warm_start = false;
             }
+            o.trace = opts.get("trace").map(|s| s.into());
+            o.progress = opts.contains_key("progress");
             let res = solve_parallel(&g, &part, &o);
             (res.metrics.summary(algo), res.cut)
         }

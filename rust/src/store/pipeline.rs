@@ -49,6 +49,16 @@ impl IoStats {
     pub fn t_overlapped(&self) -> Duration {
         self.t_io.saturating_sub(self.t_blocked)
     }
+
+    /// `(read, write)` bytes moved since an earlier snapshot — what the
+    /// traced coordinators stamp into their `page_read` / `page_write`
+    /// span details ([`crate::trace`]).
+    pub fn bytes_since(&self, earlier: &IoStats) -> (u64, u64) {
+        (
+            self.read_bytes.saturating_sub(earlier.read_bytes),
+            self.write_bytes.saturating_sub(earlier.write_bytes),
+        )
+    }
 }
 
 fn write_region(
@@ -506,6 +516,14 @@ mod tests {
     use crate::core::graph::GraphBuilder;
     use crate::core::partition::Partition;
     use crate::region::decompose::DistanceMode;
+
+    #[test]
+    fn bytes_since_reports_the_delta_and_never_underflows() {
+        let a = IoStats { read_bytes: 100, write_bytes: 40, ..IoStats::default() };
+        let b = IoStats { read_bytes: 250, write_bytes: 90, ..a };
+        assert_eq!(b.bytes_since(&a), (150, 50));
+        assert_eq!(a.bytes_since(&b), (0, 0), "reversed snapshots saturate");
+    }
 
     fn decomposition(n: usize, k: usize) -> Decomposition {
         let mut b = GraphBuilder::new(n);

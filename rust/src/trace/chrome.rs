@@ -1,0 +1,298 @@
+//! Merging per-process event streams and rendering them: Chrome
+//! trace-event JSON (loadable in `chrome://tracing` or
+//! <https://ui.perfetto.dev>) plus the compact JSONL event log that
+//! `armincut report` consumes.
+//!
+//! Each contributing process is one Chrome *pid*: the master (or a
+//! local coordinator) is pid 0, worker `w` is pid `w + 1`. Worker
+//! timestamps are re-based onto the master's axis with the clock
+//! offset estimated at the `Hello` handshake (master receipt time
+//! minus the worker's stamped clock — loopback latency is inside the
+//! estimate, which is fine for timeline rendering), clamped so every
+//! shipped stream stays monotone per process.
+
+use super::{EventName, TraceEvent, Tracer, NONE};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Pid of the master / local coordinator in the merged timeline.
+pub const MASTER_PID: u32 = 0;
+
+/// Pid of distributed worker `w`.
+pub fn worker_pid(worker: u32) -> u32 {
+    worker.saturating_add(1)
+}
+
+/// One merged multi-process timeline, on the master's clock.
+#[derive(Debug, Default)]
+pub struct MergedTrace {
+    /// `(pid, event)` pairs; per-pid subsequences are monotone in
+    /// `ts_us`.
+    pub events: Vec<(u32, TraceEvent)>,
+    /// Total events dropped across all contributing buffers.
+    pub dropped: u64,
+}
+
+impl MergedTrace {
+    /// An empty timeline.
+    pub fn new() -> MergedTrace {
+        MergedTrace::default()
+    }
+
+    /// Drain a local tracer (already on the reference clock) into the
+    /// timeline as `pid`.
+    pub fn add_local(&mut self, pid: u32, tracer: &mut Tracer) {
+        let (events, dropped) = tracer.take_batch();
+        self.dropped += dropped;
+        self.events.extend(events.into_iter().map(|e| (pid, e)));
+    }
+
+    /// Merge one shipped worker batch: shift every timestamp by
+    /// `offset_us` (the handshake estimate), clamping so the batch
+    /// stays monotone even when the shift saturates at zero.
+    pub fn add_remote(
+        &mut self,
+        pid: u32,
+        offset_us: i64,
+        events: &[TraceEvent],
+        dropped: u64,
+    ) {
+        self.dropped += dropped;
+        let mut floor = self
+            .events
+            .iter()
+            .rev()
+            .find(|(p, _)| *p == pid)
+            .map_or(0, |(_, e)| e.ts_us);
+        for ev in events {
+            let shifted = shift_us(ev.ts_us, offset_us).max(floor);
+            floor = shifted;
+            self.events.push((pid, TraceEvent { ts_us: shifted, ..*ev }));
+        }
+    }
+
+    /// Pids present, ascending and deduplicated.
+    pub fn pids(&self) -> Vec<u32> {
+        let mut pids: Vec<u32> = self.events.iter().map(|(p, _)| *p).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        pids
+    }
+
+    /// Render the Chrome trace-event JSON document.
+    pub fn chrome_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"traceEvents\":[\n");
+        let mut first = true;
+        for pid in self.pids() {
+            let label = if pid == MASTER_PID {
+                "master".to_string()
+            } else {
+                format!("worker {}", pid - 1)
+            };
+            append_sep(&mut s, &mut first);
+            let _ = write!(
+                s,
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{label}\"}}}}"
+            );
+        }
+        for (pid, ev) in &self.events {
+            append_sep(&mut s, &mut first);
+            // spans get their own row per region so concurrent
+            // discharges render side by side; everything else rides
+            // the process's row 0
+            let tid = if ev.region == NONE { 0 } else { ev.region.saturating_add(1) };
+            let ph = if is_span(ev.name) { "X" } else { "i" };
+            let _ = write!(
+                s,
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{ph}\",\"pid\":{pid},\
+                 \"tid\":{tid},\"ts\":{}",
+                ev.name.as_str(),
+                ev.name.phase().as_str(),
+                ev.ts_us,
+            );
+            if ph == "X" {
+                let _ = write!(s, ",\"dur\":{}", ev.dur_us);
+            } else {
+                s.push_str(",\"s\":\"t\"");
+            }
+            let _ = write!(
+                s,
+                ",\"args\":{{\"sweep\":{},\"region\":{},\"detail\":{}}}}}",
+                arg_u32(ev.sweep),
+                arg_u32(ev.region),
+                ev.detail,
+            );
+        }
+        let _ = write!(
+            s,
+            "\n],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped_events\":{}}}}}\n",
+            self.dropped
+        );
+        s
+    }
+
+    /// Render the compact JSONL log: one meta line, then one flat
+    /// object per event (the format [`super::report`] parses).
+    pub fn jsonl(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{{\"meta\":\"armincut-trace\",\"version\":1,\"events\":{},\"dropped\":{}}}",
+            self.events.len(),
+            self.dropped
+        );
+        for (pid, ev) in &self.events {
+            let _ = writeln!(
+                s,
+                "{{\"pid\":{pid},\"name\":\"{}\",\"phase\":\"{}\",\"ts_us\":{},\
+                 \"dur_us\":{},\"sweep\":{},\"region\":{},\"detail\":{}}}",
+                ev.name.as_str(),
+                ev.name.phase().as_str(),
+                ev.ts_us,
+                ev.dur_us,
+                arg_u32(ev.sweep),
+                arg_u32(ev.region),
+                ev.detail,
+            );
+        }
+        s
+    }
+
+    /// Write both renderings: the Chrome JSON at `path` and the JSONL
+    /// log beside it (extension replaced with `.jsonl`). Returns the
+    /// JSONL path.
+    pub fn write(&self, path: &Path) -> std::io::Result<PathBuf> {
+        std::fs::write(path, self.chrome_json())?;
+        let jsonl_path = path.with_extension("jsonl");
+        std::fs::write(&jsonl_path, self.jsonl())?;
+        Ok(jsonl_path)
+    }
+}
+
+/// Whether the vocabulary entry is rendered as a Chrome `X` (complete
+/// span) event; everything else is an `i` instant.
+fn is_span(name: EventName) -> bool {
+    !matches!(
+        name,
+        EventName::PrefetchHit
+            | EventName::PrefetchMiss
+            | EventName::WireSend
+            | EventName::WireRecv
+            | EventName::FailureDetected
+            | EventName::BatchReissue
+    )
+}
+
+/// Apply a signed clock offset to an unsigned timestamp, saturating at
+/// the axis ends instead of wrapping.
+pub fn shift_us(ts: u64, offset_us: i64) -> u64 {
+    if offset_us >= 0 {
+        ts.saturating_add(offset_us as u64)
+    } else {
+        ts.saturating_sub(offset_us.unsigned_abs())
+    }
+}
+
+fn arg_u32(v: u32) -> i64 {
+    if v == NONE {
+        -1
+    } else {
+        v as i64
+    }
+}
+
+fn append_sep(s: &mut String, first: &mut bool) {
+    if *first {
+        *first = false;
+    } else {
+        s.push_str(",\n");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: EventName, ts: u64, dur: u64) -> TraceEvent {
+        TraceEvent { name, ts_us: ts, dur_us: dur, sweep: 0, region: 2, detail: 7 }
+    }
+
+    #[test]
+    fn remote_merge_is_monotone_per_pid_for_any_offset() {
+        // worker clocks ahead of AND behind the master, including an
+        // offset that saturates early timestamps at zero
+        for offset in [250i64, 0, -40, -1_000_000] {
+            let mut m = MergedTrace::new();
+            let batch = [
+                ev(EventName::Discharge, 10, 5),
+                ev(EventName::Discharge, 30, 5),
+                ev(EventName::FuseFold, 90, 1),
+            ];
+            m.add_remote(worker_pid(0), offset, &batch, 0);
+            // a second batch from the same worker starts behind the
+            // first one's clamped floor and must not step backwards
+            m.add_remote(worker_pid(0), offset, &[ev(EventName::SyncWait, 95, 2)], 0);
+            let ts: Vec<u64> = m.events.iter().map(|(_, e)| e.ts_us).collect();
+            let mut sorted = ts.clone();
+            sorted.sort_unstable();
+            assert_eq!(ts, sorted, "offset {offset}: merged stream is monotone");
+        }
+    }
+
+    #[test]
+    fn shift_saturates_instead_of_wrapping() {
+        assert_eq!(shift_us(10, -50), 0);
+        assert_eq!(shift_us(10, 50), 60);
+        assert_eq!(shift_us(u64::MAX - 1, 10), u64::MAX);
+    }
+
+    #[test]
+    fn chrome_json_names_every_process_and_balances_braces() {
+        let mut m = MergedTrace::new();
+        let mut t = Tracer::new(8);
+        t.instant(EventName::WireSend, 0, 1, 64);
+        m.add_local(MASTER_PID, &mut t);
+        m.add_remote(worker_pid(0), 5, &[ev(EventName::Discharge, 4, 9)], 3);
+        let json = m.chrome_json();
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"name\":\"master\""));
+        assert!(json.contains("\"name\":\"worker 0\""));
+        assert!(json.contains("\"ph\":\"X\""), "spans render as complete events");
+        assert!(json.contains("\"ph\":\"i\""), "instants render as instant events");
+        assert!(json.contains("\"dropped_events\":3"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn jsonl_has_one_meta_line_plus_one_line_per_event() {
+        let mut m = MergedTrace::new();
+        m.add_remote(worker_pid(1), 0, &[ev(EventName::PageRead, 1, 2)], 1);
+        let out = m.jsonl();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"meta\":\"armincut-trace\""));
+        assert!(lines[0].contains("\"dropped\":1"));
+        assert!(lines[1].contains("\"name\":\"page_read\""));
+        assert!(lines[1].contains("\"phase\":\"disk\""));
+        assert!(lines[1].contains("\"pid\":2"));
+    }
+
+    #[test]
+    fn none_sentinels_render_as_minus_one() {
+        let mut m = MergedTrace::new();
+        let e = TraceEvent {
+            name: EventName::Sweep,
+            ts_us: 0,
+            dur_us: 10,
+            sweep: 3,
+            region: NONE,
+            detail: 0,
+        };
+        m.add_remote(MASTER_PID, 0, &[e], 0);
+        assert!(m.jsonl().contains("\"region\":-1"));
+        assert!(m.chrome_json().contains("\"region\":-1"));
+    }
+}

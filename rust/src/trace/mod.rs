@@ -1,0 +1,500 @@
+//! Zero-dependency structured tracing: spans and instant events on a
+//! monotonic clock, recorded into a bounded in-memory buffer.
+//!
+//! The paper argues in *sweeps* — the `2|B|² + 1` bound, the "about 10
+//! sweeps in practice" claim — but end-of-run aggregates
+//! ([`RunMetrics`](crate::coordinator::metrics::RunMetrics)) cannot
+//! show where inside a sweep the time goes. This module gives all
+//! three runtimes (sequential, threaded parallel, distributed) one
+//! shared recorder:
+//!
+//! * [`Tracer`] — per-thread/per-process event recorder with
+//!   microsecond timestamps relative to its construction instant. The
+//!   buffer is **bounded**: capacity is allocated once and overflowing
+//!   events are counted in a drop counter instead of growing the
+//!   buffer, so tracing can never OOM a 10⁸-vertex run.
+//! * [`EventName`] — the closed event vocabulary (sweeps, region
+//!   discharges, fusion fold + α-filter barrier, store page I/O and
+//!   prefetch hits/misses, wire send/recv, recovery), each mapped to a
+//!   [`Phase`] rollup category.
+//! * [`chrome`] — merges per-process event streams (worker clocks
+//!   re-based via the Hello-handshake offset) and renders Chrome
+//!   trace-event JSON (`chrome://tracing` / Perfetto) plus a compact
+//!   JSONL event log.
+//! * [`report`] — the `armincut report TRACE.jsonl` per-sweep phase
+//!   breakdown table.
+//!
+//! Distributed flow: workers buffer spans locally and ship them as
+//! [`Msg::TraceBatch`](crate::dist::proto::Msg) frames piggybacked on
+//! every reply at the sweep barrier; the master re-bases them onto its
+//! own axis and writes the merged timeline (`solve --trace PATH`).
+//!
+//! Everything here is advisory instrumentation: a disabled tracer
+//! records nothing, and enabling one must not change any solve result
+//! (pinned by `tracing_does_not_perturb_the_solve` in the coordinator
+//! tests).
+
+use std::time::{Duration, Instant};
+
+pub mod chrome;
+pub mod report;
+
+/// Sentinel for events not tied to a sweep or region.
+pub const NONE: u32 = u32::MAX;
+
+/// Default bounded-buffer capacity in events (32 B each → ≤ 2 MiB
+/// resident per tracer, however long the run).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Rollup category of an event — the phase columns of
+/// `armincut report`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Whole-sweep framing spans.
+    Sweep,
+    /// Region discharge work (ARD/PRD cores).
+    Discharge,
+    /// Fusion fold + the α-filter barrier.
+    Fuse,
+    /// Wire wait / sync-in composition / send-recv accounting.
+    Sync,
+    /// Store page reads, writes and prefetch outcomes.
+    Disk,
+    /// Failure detection, restarts, resumes, batch re-issues.
+    Recovery,
+}
+
+impl Phase {
+    /// Stable lower-case label used in the JSONL log and the report.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Sweep => "sweep",
+            Phase::Discharge => "discharge",
+            Phase::Fuse => "fuse",
+            Phase::Sync => "sync",
+            Phase::Disk => "disk",
+            Phase::Recovery => "recovery",
+        }
+    }
+}
+
+/// The closed event vocabulary. Every event carries one of these, so
+/// wire encoding is a single byte ([`EventName::code`]) and the
+/// taxonomy documented in ARCHITECTURE.md § Observability is
+/// enforceable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventName {
+    /// Span: one whole sweep (master / local coordinator).
+    Sweep,
+    /// Span: one region discharge (`detail` = discharges so far).
+    Discharge,
+    /// Span: folding one boundary delta into the `FusionRound`.
+    FuseFold,
+    /// Span: the α-filter barrier (`FusionRound::finish`).
+    FuseBarrier,
+    /// Span: waiting on the wire / composing sync-in snapshots.
+    SyncWait,
+    /// Span: a store page read (`detail` = stored bytes if known).
+    PageRead,
+    /// Span: a store page write-back (`detail` = stored bytes).
+    PageWrite,
+    /// Instant: a prefetched page was ready when requested.
+    PrefetchHit,
+    /// Instant: a requested page missed the prefetch pipeline.
+    PrefetchMiss,
+    /// Instant: one wire frame sent (`detail` = bytes, `region` = the
+    /// `Msg` kind discriminant).
+    WireSend,
+    /// Instant: one wire frame received (same field use as
+    /// [`EventName::WireSend`]).
+    WireRecv,
+    /// Instant: a worker failure was detected (`region` = connection).
+    FailureDetected,
+    /// Span: respawn/redial + `Resume` handshake of one worker.
+    WorkerRestart,
+    /// Instant: a composed batch was re-issued after recovery.
+    BatchReissue,
+    /// Span: one master checkpoint write (`detail` = bytes).
+    Checkpoint,
+}
+
+/// All vocabulary entries, in wire-code order (used by the exhaustive
+/// encode/decode tests).
+pub const ALL_EVENT_NAMES: [EventName; 15] = [
+    EventName::Sweep,
+    EventName::Discharge,
+    EventName::FuseFold,
+    EventName::FuseBarrier,
+    EventName::SyncWait,
+    EventName::PageRead,
+    EventName::PageWrite,
+    EventName::PrefetchHit,
+    EventName::PrefetchMiss,
+    EventName::WireSend,
+    EventName::WireRecv,
+    EventName::FailureDetected,
+    EventName::WorkerRestart,
+    EventName::BatchReissue,
+    EventName::Checkpoint,
+];
+
+impl EventName {
+    /// The rollup phase this event accrues to.
+    pub fn phase(self) -> Phase {
+        match self {
+            EventName::Sweep => Phase::Sweep,
+            EventName::Discharge => Phase::Discharge,
+            EventName::FuseFold | EventName::FuseBarrier => Phase::Fuse,
+            EventName::SyncWait | EventName::WireSend | EventName::WireRecv => Phase::Sync,
+            EventName::PageRead
+            | EventName::PageWrite
+            | EventName::PrefetchHit
+            | EventName::PrefetchMiss => Phase::Disk,
+            EventName::FailureDetected
+            | EventName::WorkerRestart
+            | EventName::BatchReissue
+            | EventName::Checkpoint => Phase::Recovery,
+        }
+    }
+
+    /// Stable snake-case name used in both trace outputs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventName::Sweep => "sweep",
+            EventName::Discharge => "discharge",
+            EventName::FuseFold => "fuse_fold",
+            EventName::FuseBarrier => "fuse_barrier",
+            EventName::SyncWait => "sync_wait",
+            EventName::PageRead => "page_read",
+            EventName::PageWrite => "page_write",
+            EventName::PrefetchHit => "prefetch_hit",
+            EventName::PrefetchMiss => "prefetch_miss",
+            EventName::WireSend => "wire_send",
+            EventName::WireRecv => "wire_recv",
+            EventName::FailureDetected => "failure_detected",
+            EventName::WorkerRestart => "worker_restart",
+            EventName::BatchReissue => "batch_reissue",
+            EventName::Checkpoint => "checkpoint",
+        }
+    }
+
+    /// Single-byte wire discriminant (stable across releases; the
+    /// `TraceBatch` payload depends on it).
+    pub fn code(self) -> u8 {
+        match self {
+            EventName::Sweep => 0,
+            EventName::Discharge => 1,
+            EventName::FuseFold => 2,
+            EventName::FuseBarrier => 3,
+            EventName::SyncWait => 4,
+            EventName::PageRead => 5,
+            EventName::PageWrite => 6,
+            EventName::PrefetchHit => 7,
+            EventName::PrefetchMiss => 8,
+            EventName::WireSend => 9,
+            EventName::WireRecv => 10,
+            EventName::FailureDetected => 11,
+            EventName::WorkerRestart => 12,
+            EventName::BatchReissue => 13,
+            EventName::Checkpoint => 14,
+        }
+    }
+
+    /// Inverse of [`EventName::code`]; `None` for foreign bytes (a
+    /// corrupt or future frame must not mis-decode).
+    pub fn from_code(code: u8) -> Option<EventName> {
+        ALL_EVENT_NAMES.get(code as usize).copied()
+    }
+
+    /// Inverse of [`EventName::as_str`] (the report parses JSONL).
+    pub fn parse(name: &str) -> Option<EventName> {
+        ALL_EVENT_NAMES.iter().copied().find(|n| n.as_str() == name)
+    }
+}
+
+/// One recorded event: a span (`dur_us > 0` possible) or an instant
+/// (`dur_us == 0` by construction). Fixed-size and `Copy`, so the
+/// bounded buffer holds plain values and the wire encoding is flat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// What happened.
+    pub name: EventName,
+    /// Microseconds since the recording tracer's epoch.
+    pub ts_us: u64,
+    /// Span duration in microseconds; `0` for instant events.
+    pub dur_us: u64,
+    /// Sweep number, or [`NONE`].
+    pub sweep: u32,
+    /// Region id, connection index, or `Msg` kind — see the
+    /// per-variant docs on [`EventName`]; [`NONE`] when unused.
+    pub region: u32,
+    /// Free counter: bytes moved, discharge count, restart number.
+    pub detail: u64,
+}
+
+/// Per-process event recorder. See the module docs for the contract;
+/// the short version: construction fixes the capacity, recording never
+/// allocates past it, and a disabled tracer records nothing while its
+/// clock keeps working (workers stamp `Hello` before they know whether
+/// the master wants traces).
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    buf: Vec<TraceEvent>,
+    capacity: usize,
+    dropped: u64,
+    enabled: bool,
+}
+
+impl Tracer {
+    /// An enabled tracer holding at most `capacity` events.
+    pub fn new(capacity: usize) -> Tracer {
+        let capacity = capacity.max(1);
+        Tracer {
+            epoch: Instant::now(),
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            dropped: 0,
+            enabled: true,
+        }
+    }
+
+    /// A tracer that records nothing (the default for every solve).
+    pub fn disabled() -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            buf: Vec::new(),
+            capacity: 0,
+            dropped: 0,
+            enabled: false,
+        }
+    }
+
+    /// Arm a disabled tracer in place, keeping its epoch — the worker
+    /// path: the epoch must predate the `Hello` clock sample, but the
+    /// master only asks for traces in the later `AssignShard`.
+    pub fn enable(&mut self, capacity: usize) {
+        if self.enabled {
+            return;
+        }
+        self.capacity = capacity.max(1);
+        self.buf = Vec::with_capacity(self.capacity);
+        self.enabled = true;
+    }
+
+    /// Whether events are being recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since the tracer's epoch (works when disabled —
+    /// the clock-offset handshake needs it either way).
+    pub fn now_us(&self) -> u64 {
+        duration_us(self.epoch.elapsed())
+    }
+
+    /// Record a span measured externally: `start`/`dur` are the same
+    /// `Instant`/`Duration` pair the metrics timers accrue, so trace
+    /// span sums and `RunMetrics` rollups agree by construction.
+    pub fn span_at(
+        &mut self,
+        name: EventName,
+        start: Instant,
+        dur: Duration,
+        sweep: u32,
+        region: u32,
+        detail: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let ts_us = duration_us(start.saturating_duration_since(self.epoch));
+        self.push(TraceEvent { name, ts_us, dur_us: duration_us(dur), sweep, region, detail });
+    }
+
+    /// Record an instant event stamped now.
+    pub fn instant(&mut self, name: EventName, sweep: u32, region: u32, detail: u64) {
+        if !self.enabled {
+            return;
+        }
+        let ts_us = self.now_us();
+        self.push(TraceEvent { name, ts_us, dur_us: 0, sweep, region, detail });
+    }
+
+    /// Bounded insert: a full buffer counts the event as dropped
+    /// instead of reallocating.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() >= self.capacity {
+            self.dropped += 1;
+        } else {
+            self.buf.push(ev);
+        }
+    }
+
+    /// The recorded events, in recording order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.buf
+    }
+
+    /// Events dropped on overflow since the last [`Tracer::take_batch`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Number of currently buffered events.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drain the buffer for shipment (the worker's `TraceBatch`
+    /// piggyback): returns the buffered events plus the drop count
+    /// accrued since the previous batch, keeping the allocation.
+    pub fn take_batch(&mut self) -> (Vec<TraceEvent>, u64) {
+        let events: Vec<TraceEvent> = self.buf.drain(..).collect();
+        let dropped = self.dropped;
+        self.dropped = 0;
+        (events, dropped)
+    }
+}
+
+/// Accumulates per-sweep wall times into the min/mean/max rollup the
+/// `RunMetrics` summary tail prints. Fed from the same sweep spans the
+/// tracer records (every coordinator calls [`SweepRollup::add`] with
+/// the sweep's measured duration whether or not tracing is on).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepRollup {
+    /// Sweeps accumulated.
+    pub count: u32,
+    /// Shortest sweep wall time.
+    pub min: Duration,
+    /// Longest sweep wall time.
+    pub max: Duration,
+    /// Sum over all sweeps (mean = `sum / count`).
+    pub sum: Duration,
+}
+
+impl SweepRollup {
+    /// Fold one sweep's wall time in.
+    pub fn add(&mut self, dur: Duration) {
+        if self.count == 0 || dur < self.min {
+            self.min = dur;
+        }
+        if dur > self.max {
+            self.max = dur;
+        }
+        self.sum += dur;
+        self.count += 1;
+    }
+
+    /// Mean sweep wall time (zero before any sweep).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.sum / self.count
+        }
+    }
+}
+
+/// Whole microseconds of a `Duration`, saturating at `u64::MAX`.
+pub fn duration_us(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_codes_roundtrip_and_reject_foreign_bytes() {
+        for (i, name) in ALL_EVENT_NAMES.iter().enumerate() {
+            assert_eq!(name.code() as usize, i);
+            assert_eq!(EventName::from_code(name.code()), Some(*name));
+            assert_eq!(EventName::parse(name.as_str()), Some(*name));
+        }
+        assert_eq!(EventName::from_code(ALL_EVENT_NAMES.len() as u8), None);
+        assert_eq!(EventName::from_code(0xFF), None);
+        assert_eq!(EventName::parse("no_such_event"), None);
+    }
+
+    #[test]
+    fn nested_spans_share_the_timeline() {
+        // an outer sweep span recorded around two inner discharge
+        // spans must contain both on the tracer's single clock
+        let mut t = Tracer::new(16);
+        let outer = Instant::now();
+        let inner_a = Instant::now();
+        let da = Duration::from_micros(300);
+        t.span_at(EventName::Discharge, inner_a, da, 0, 0, 0);
+        let inner_b = Instant::now();
+        t.span_at(EventName::Discharge, inner_b, Duration::from_micros(200), 0, 1, 0);
+        t.span_at(EventName::Sweep, outer, outer.elapsed() + da, 0, NONE, 0);
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        let sweep = evs[2];
+        for inner in &evs[..2] {
+            assert!(sweep.ts_us <= inner.ts_us, "outer starts first");
+            assert!(
+                inner.ts_us + inner.dur_us <= sweep.ts_us + sweep.dur_us,
+                "inner span ends inside the outer span"
+            );
+        }
+    }
+
+    #[test]
+    fn overflow_increments_the_drop_counter_without_reallocating() {
+        let mut t = Tracer::new(4);
+        let cap_before = t.buf.capacity();
+        for i in 0..10 {
+            t.instant(EventName::PrefetchHit, 0, i, 0);
+        }
+        assert_eq!(t.len(), 4, "buffer is bounded");
+        assert_eq!(t.dropped(), 6, "overflow counted, not grown");
+        assert_eq!(t.buf.capacity(), cap_before, "never reallocates");
+        // draining hands the events over and resets the drop counter,
+        // still without touching the allocation
+        let (events, dropped) = t.take_batch();
+        assert_eq!((events.len(), dropped), (4, 6));
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.buf.capacity(), cap_before);
+        t.instant(EventName::PrefetchMiss, 0, 0, 0);
+        assert_eq!(t.len(), 1, "reusable after a drain");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing_but_keeps_a_clock() {
+        let mut t = Tracer::disabled();
+        t.instant(EventName::WireSend, 0, 0, 0);
+        t.span_at(EventName::Sweep, Instant::now(), Duration::from_secs(1), 0, NONE, 0);
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+        let a = t.now_us();
+        let b = t.now_us();
+        assert!(b >= a, "clock is monotonic even when disabled");
+        // late arming (the worker path) starts recording
+        t.enable(8);
+        t.instant(EventName::WireRecv, 0, 0, 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn sweep_rollup_tracks_min_mean_max() {
+        let mut r = SweepRollup::default();
+        assert_eq!(r.mean(), Duration::ZERO);
+        for ms in [30u64, 10, 20] {
+            r.add(Duration::from_millis(ms));
+        }
+        assert_eq!(r.count, 3);
+        assert_eq!(r.min, Duration::from_millis(10));
+        assert_eq!(r.max, Duration::from_millis(30));
+        assert_eq!(r.mean(), Duration::from_millis(20));
+    }
+}

@@ -1,0 +1,222 @@
+//! `armincut report TRACE.jsonl` — per-sweep phase breakdown.
+//!
+//! Parses the compact JSONL event log written next to every Chrome
+//! trace (`solve --trace PATH`) and prints, per sweep and per process,
+//! how the wall time split across discharge / fuse / sync / disk, plus
+//! the idle remainder against the sweep's framing span. The parser is
+//! deliberately tiny: the log is our own flat single-line format
+//! ([`super::chrome::MergedTrace::jsonl`]), so field extraction is
+//! plain string scanning, not a JSON engine.
+
+use super::{EventName, Phase};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Phase columns of the table, in print order.
+const COLUMNS: [Phase; 4] = [Phase::Discharge, Phase::Fuse, Phase::Sync, Phase::Disk];
+
+/// Extract the integer value of `"key":` from a flat JSONL line.
+/// Returns `None` when the key is absent or non-numeric.
+pub fn field_i64(line: &str, key: &str) -> Option<i64> {
+    let needle = format!("\"{key}\":");
+    let at = line.find(&needle)? + needle.len();
+    let rest = line[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '-'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract the string value of `"key":"…"` from a flat JSONL line.
+pub fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\":\"");
+    let at = line.find(&needle)? + needle.len();
+    let end = line[at..].find('"')?;
+    Some(&line[at..at + end])
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Row {
+    /// Busy microseconds per [`COLUMNS`] entry.
+    busy: [u64; 4],
+    /// The process's own sweep framing span, when it recorded one.
+    sweep_span: u64,
+}
+
+/// Render the per-sweep phase table from JSONL source. Errors on input
+/// that holds no parseable event lines.
+pub fn render(src: &str) -> Result<String, String> {
+    let mut rows: BTreeMap<(u32, u32), Row> = BTreeMap::new();
+    let mut dropped = 0u64;
+    let mut parsed = 0u64;
+    for line in src.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.contains("\"meta\":") {
+            dropped += field_i64(line, "dropped").unwrap_or(0).max(0) as u64;
+            continue;
+        }
+        let (Some(pid), Some(name)) = (field_i64(line, "pid"), field_str(line, "name")) else {
+            continue;
+        };
+        let Some(name) = EventName::parse(name) else {
+            continue;
+        };
+        parsed += 1;
+        let sweep = field_i64(line, "sweep").unwrap_or(-1);
+        if sweep < 0 {
+            continue; // not attributable to a sweep (setup, shutdown)
+        }
+        let dur = field_i64(line, "dur_us").unwrap_or(0).max(0) as u64;
+        let row = rows.entry((sweep as u32, pid.max(0) as u32)).or_default();
+        if name == EventName::Sweep {
+            row.sweep_span += dur;
+        } else if let Some(col) = COLUMNS.iter().position(|p| *p == name.phase()) {
+            row.busy[col] += dur;
+        }
+    }
+    if parsed == 0 {
+        return Err("no trace events found (is this the .jsonl event log?)".into());
+    }
+
+    // a process without its own framing span (workers) is framed by
+    // the longest sweep span any process recorded for that sweep
+    let mut frame: BTreeMap<u32, u64> = BTreeMap::new();
+    for ((sweep, _), row) in &rows {
+        let f = frame.entry(*sweep).or_default();
+        *f = (*f).max(row.sweep_span);
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "per-sweep phase breakdown (milliseconds)");
+    let _ = writeln!(
+        out,
+        "{:>6} {:>9} {:>11} {:>11} {:>11} {:>11} {:>11} {:>11}",
+        "sweep", "proc", "discharge", "fuse", "sync", "disk", "idle", "total"
+    );
+    let mut totals = [0u64; 4];
+    for ((sweep, pid), row) in &rows {
+        let total = if row.sweep_span > 0 {
+            row.sweep_span
+        } else {
+            frame.get(sweep).copied().unwrap_or(0)
+        };
+        let busy: u64 = row.busy.iter().sum();
+        let idle = total.saturating_sub(busy);
+        let proc = if *pid == 0 { "master".to_string() } else { format!("w{}", pid - 1) };
+        let _ = writeln!(
+            out,
+            "{:>6} {:>9} {:>11} {:>11} {:>11} {:>11} {:>11} {:>11}",
+            sweep,
+            proc,
+            ms(row.busy[0]),
+            ms(row.busy[1]),
+            ms(row.busy[2]),
+            ms(row.busy[3]),
+            ms(idle),
+            ms(total),
+        );
+        for (t, b) in totals.iter_mut().zip(row.busy.iter()) {
+            *t += b;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "{:>6} {:>9} {:>11} {:>11} {:>11} {:>11}",
+        "all",
+        "busy",
+        ms(totals[0]),
+        ms(totals[1]),
+        ms(totals[2]),
+        ms(totals[3]),
+    );
+    if dropped > 0 {
+        let _ = writeln!(out, "note: {dropped} event(s) dropped at the bounded trace buffer");
+    }
+    Ok(out)
+}
+
+fn ms(us: u64) -> String {
+    format!("{:.3}", us as f64 / 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::chrome::{worker_pid, MergedTrace, MASTER_PID};
+    use crate::trace::{TraceEvent, NONE};
+
+    fn ev(name: EventName, ts: u64, dur: u64, sweep: u32, region: u32) -> TraceEvent {
+        TraceEvent { name, ts_us: ts, dur_us: dur, sweep, region, detail: 0 }
+    }
+
+    fn sample() -> String {
+        let mut m = MergedTrace::new();
+        m.add_remote(
+            MASTER_PID,
+            0,
+            &[
+                ev(EventName::Sweep, 0, 10_000, 0, NONE),
+                ev(EventName::SyncWait, 100, 4_000, 0, NONE),
+                ev(EventName::FuseBarrier, 4_200, 1_000, 0, NONE),
+            ],
+            0,
+        );
+        m.add_remote(
+            worker_pid(0),
+            50,
+            &[
+                ev(EventName::Discharge, 200, 6_000, 0, 1),
+                ev(EventName::PageRead, 6_300, 500, 0, 1),
+            ],
+            2,
+        );
+        m.jsonl()
+    }
+
+    #[test]
+    fn field_extraction_handles_ints_strings_and_absence() {
+        let line = "{\"pid\":3,\"name\":\"sweep\",\"sweep\":-1,\"dur_us\":42}";
+        assert_eq!(field_i64(line, "pid"), Some(3));
+        assert_eq!(field_i64(line, "sweep"), Some(-1));
+        assert_eq!(field_i64(line, "dur_us"), Some(42));
+        assert_eq!(field_i64(line, "missing"), None);
+        assert_eq!(field_str(line, "name"), Some("sweep"));
+        assert_eq!(field_str(line, "pid"), None);
+    }
+
+    #[test]
+    fn table_rolls_phases_up_per_sweep_and_process() {
+        let table = render(&sample()).unwrap();
+        assert!(table.contains("per-sweep phase breakdown"));
+        // master row: 4 ms sync, 1 ms fuse, 5 ms idle of its 10 ms span
+        assert!(table.contains("master"), "{table}");
+        assert!(table.contains("4.000"), "sync column: {table}");
+        assert!(table.contains("1.000"), "fuse column: {table}");
+        // worker row: 6 ms discharge, 0.5 ms disk, framed by the
+        // master's 10 ms sweep span → 3.5 ms idle
+        assert!(table.contains("w0"), "{table}");
+        assert!(table.contains("6.000"), "discharge column: {table}");
+        assert!(table.contains("0.500"), "disk column: {table}");
+        assert!(table.contains("3.500"), "idle fills to the frame: {table}");
+        assert!(table.contains("2 event(s) dropped"), "{table}");
+    }
+
+    #[test]
+    fn events_outside_any_sweep_are_skipped_not_fatal() {
+        let mut m = MergedTrace::new();
+        m.add_remote(MASTER_PID, 0, &[ev(EventName::Checkpoint, 0, 100, NONE, NONE)], 0);
+        m.add_remote(MASTER_PID, 0, &[ev(EventName::Sweep, 0, 100, 0, NONE)], 0);
+        let table = render(&m.jsonl()).unwrap();
+        assert!(table.contains("master"));
+    }
+
+    #[test]
+    fn empty_or_foreign_input_is_a_typed_error() {
+        assert!(render("").is_err());
+        assert!(render("{\"meta\":\"armincut-trace\",\"dropped\":0}\n").is_err());
+        assert!(render("not json at all\n").is_err());
+    }
+}

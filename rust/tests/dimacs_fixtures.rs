@@ -142,6 +142,68 @@ fn cli_rejects_missing_input_with_exit_2() {
     assert_eq!(out.status.code(), Some(2));
 }
 
+/// The observability flags end to end through the real binary:
+/// `--progress` must narrate sweeps on stderr (and stay silent when
+/// absent), `--trace` must write both timeline files, and
+/// `armincut report` must render the phase table from the event log.
+#[test]
+fn cli_progress_and_trace_flags_work_end_to_end() {
+    let exe = env!("CARGO_BIN_EXE_armincut");
+    let dir = std::env::temp_dir()
+        .join(format!("armincut_cli_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("run.json");
+    let gen = "synth2d:24,24,8,150,7";
+    let out = Command::new(exe)
+        .args([
+            "solve",
+            "--gen",
+            gen,
+            "--algo",
+            "s-ard",
+            "--regions",
+            "3",
+            "--progress",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run armincut");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exit {:?}\nstderr:\n{stderr}", out.status.code());
+    assert!(stderr.contains("sweep"), "--progress narrates sweeps: {stderr}");
+    let json = std::fs::read_to_string(&trace).expect("chrome trace written");
+    assert!(json.contains("\"traceEvents\""), "chrome trace shape");
+    let jsonl = trace.with_extension("jsonl");
+    assert!(jsonl.is_file(), "event log written beside the timeline");
+
+    let report = Command::new(exe)
+        .args(["report", jsonl.to_str().unwrap()])
+        .output()
+        .expect("run armincut report");
+    assert!(
+        report.status.success(),
+        "report exit {:?}\nstderr:\n{}",
+        report.status.code(),
+        String::from_utf8_lossy(&report.stderr)
+    );
+    let table = String::from_utf8_lossy(&report.stdout);
+    assert!(table.contains("per-sweep phase breakdown"), "table: {table}");
+    assert!(table.contains("master"), "table: {table}");
+
+    // off by default: the same solve without the flags stays quiet
+    let quiet = Command::new(exe)
+        .args(["solve", "--gen", gen, "--algo", "s-ard", "--regions", "3"])
+        .output()
+        .expect("run armincut");
+    assert!(quiet.status.success());
+    assert!(
+        String::from_utf8_lossy(&quiet.stderr).is_empty(),
+        "no stderr chatter without --progress"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Malformed DIMACS through the CLI: a corrupt fixture (arc head beyond
 /// the declared node count, which used to index out of bounds) must
 /// exit 2 with a line-numbered parse error, never a panic.

@@ -189,6 +189,55 @@ fn streaming_backed_workers_stay_bit_identical() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The tentpole observability contract over the real wire protocol:
+/// `trace` arms the proto v4 piggyback, workers ship their span
+/// buffers, and the master writes one merged Chrome timeline — without
+/// perturbing the solve.
+#[test]
+fn distributed_trace_merges_worker_spans_and_stays_equivalent() {
+    let g = random_graph(6161, 60, 120);
+    let p = Partition::by_node_ranges(g.n(), 4);
+    let plain = solve_distributed(&g, &p, &DistOptions::threads(2)).unwrap();
+    let tmp =
+        std::env::temp_dir().join(format!("armincut_dist_trace_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let trace = tmp.join("run.json");
+    let mut o = DistOptions::threads(2);
+    o.trace = Some(trace.clone());
+    let traced = solve_distributed(&g, &p, &o).unwrap();
+    // tracing is advisory: identical flow and cut, identical counters
+    assert_eq!(traced.metrics.flow, plain.metrics.flow, "flow unchanged by tracing");
+    assert_eq!(traced.cut, plain.cut, "cut unchanged by tracing");
+    assert_eq!(traced.metrics.sweeps, plain.metrics.sweeps, "sweeps unchanged");
+    assert_eq!(traced.metrics.discharges, plain.metrics.discharges, "discharges");
+    assert_eq!(plain.metrics.trace_events, 0, "untraced run records nothing");
+    assert!(traced.metrics.trace_events > 0, "merged events counted");
+    // schema-7 rollups: sweep walls always, t_discharge from the
+    // workers' shipped discharge spans
+    assert!(plain.metrics.sweep_wall_max >= plain.metrics.sweep_wall_min);
+    assert!(plain.metrics.sweep_wall_max > Duration::ZERO, "sweep walls measured");
+    assert!(
+        traced.metrics.t_discharge > Duration::ZERO,
+        "worker discharge spans folded into t_discharge"
+    );
+    // the merged Chrome JSON names the master and both worker processes
+    let json = std::fs::read_to_string(&trace).unwrap();
+    assert!(json.contains("\"traceEvents\""), "chrome trace shape");
+    for pid in ["\"pid\":0", "\"pid\":1", "\"pid\":2"] {
+        assert!(json.contains(pid), "missing {pid} in the merged trace");
+    }
+    // the JSONL sibling carries worker spans and feeds `armincut report`
+    let jsonl_path = trace.with_extension("jsonl");
+    let jsonl = std::fs::read_to_string(&jsonl_path).unwrap();
+    assert!(jsonl.contains("\"name\":\"discharge\""), "worker spans shipped");
+    assert!(jsonl.contains("\"name\":\"fuse_barrier\""), "master fusion spans recorded");
+    let table = armincut::trace::report::render(&jsonl).expect("report renders");
+    assert!(table.contains("master"), "report lists the master process:\n{table}");
+    assert!(table.contains("w0"), "report lists worker 0:\n{table}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
 /// One concurrent round against a real decomposition: sync every
 /// region in against the same shared snapshot, discharge all of them,
 /// and collect the boundary deltas (exactly what the master's batched

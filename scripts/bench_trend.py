@@ -18,6 +18,12 @@ For every (bench, case, solver) record present in both directories:
   older schemas fall back to zero) are reported as deltas or carried in
   the history — advisory only, machines differ.
 
+With ``--plot DIR`` the script renders the ``--history`` file as SVG
+trend curves (wall time, page bytes, wire bytes, sync time, worker
+restarts — one file per tracked quantity, one colored line per (bench,
+case, solver) series). Pure stdlib; CI uploads the directory as an
+artifact next to the history.
+
 With ``--history FILE`` the script additionally maintains a rolling
 multi-run history: one JSON line per run (condensed records: flow,
 wall, page bytes, wire bytes, sync time), trimmed to the last
@@ -39,7 +45,7 @@ it and exits 0. Stdlib only.
 Usage:
     bench_trend.py CURRENT_DIR BASELINE_DIR [--wall-warn-pct 25]
                    [--history FILE] [--history-max 50] [--run-label L]
-                   [--schema FILE]
+                   [--schema FILE] [--plot DIR]
 """
 
 from __future__ import annotations
@@ -68,7 +74,25 @@ HISTORY_FIELDS = (
     "worker_restarts",
     "checkpoint_bytes",
     "recovery_wall_seconds",
+    "trace_events",
+    "trace_dropped",
+    "discharge_seconds",
+    "fuse_seconds",
 )
+
+#: Curves rendered by ``--plot DIR``: (record field, axis label). The
+#: pseudo-field ``wire_bytes`` is the sent+recv sum.
+PLOT_SERIES = (
+    ("wall_seconds", "wall time (s)"),
+    ("page_stored_bytes", "page bytes (stored)"),
+    ("wire_bytes", "wire bytes (sent+recv)"),
+    ("sync_wall_seconds", "sync time (s)"),
+    ("worker_restarts", "worker restarts"),
+)
+
+#: Line colors cycled across the per-(bench, case, solver) series.
+PALETTE = ("#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e",
+           "#8c564b", "#17becf", "#7f7f7f")
 
 
 #: Default location of the emitted schema, next to this script.
@@ -218,6 +242,113 @@ def append_history(path: Path, label: str, current: dict[str, dict],
     return len(lines)
 
 
+def history_runs(path: Path) -> list[dict]:
+    """Parse the rolling history written by ``append_history`` (JSON
+    lines, oldest first), skipping blank or corrupt lines."""
+    runs: list[dict] = []
+    if not path.is_file():
+        return runs
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            runs.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return runs
+
+
+def series_value(rec: dict, field: str) -> float:
+    """One plotted value of a condensed history record."""
+    if field == "wire_bytes":
+        return (float(rec.get("wire_bytes_sent", 0))
+                + float(rec.get("wire_bytes_recv", 0)))
+    return float(rec.get(field, 0))
+
+
+def collect_series(runs: list[dict], field: str) -> dict[str, list[tuple[int, float]]]:
+    """``"bench case solver" -> [(run_index, value), ...]`` across runs.
+    A record absent from some run simply leaves a gap in its series."""
+    out: dict[str, list[tuple[int, float]]] = {}
+    for i, run in enumerate(runs):
+        for rec in run.get("records", []):
+            key = (f"{rec.get('bench', '?')} {rec.get('case', '?')} "
+                   f"{rec.get('solver', '?')}")
+            out.setdefault(key, []).append((i, series_value(rec, field)))
+    return out
+
+
+def _xml_escape(s: str) -> str:
+    return s.replace("&", "&amp;").replace("<", "&lt;").replace(">", "&gt;")
+
+
+def svg_plot(title: str, n_runs: int,
+             series: dict[str, list[tuple[int, float]]],
+             width: int = 720, height: int = 360) -> str:
+    """Render one trend chart as a standalone SVG document: the runs on
+    the x axis (oldest left), values on the y axis scaled to the series
+    maximum, one polyline + point markers + legend row per series."""
+    ml, mr, mt, mb = 64, 12, 28, 28
+    pw, ph = width - ml - mr, height - mt - mb
+    vmax = max((v for pts in series.values() for _, v in pts), default=0.0)
+    if vmax <= 0:
+        vmax = 1.0
+
+    def x(i: int) -> float:
+        return ml + pw * i / max(n_runs - 1, 1)
+
+    def y(v: float) -> float:
+        return mt + ph - ph * v / vmax
+
+    parts = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+        f'height="{height}" font-family="monospace" font-size="11">',
+        f'<rect width="{width}" height="{height}" fill="white"/>',
+        f'<text x="{ml}" y="17" font-size="13">{_xml_escape(title)}</text>',
+        f'<line x1="{ml}" y1="{mt}" x2="{ml}" y2="{mt + ph}" stroke="black"/>',
+        f'<line x1="{ml}" y1="{mt + ph}" x2="{ml + pw}" y2="{mt + ph}" '
+        f'stroke="black"/>',
+        f'<text x="4" y="{mt + 9}">{vmax:g}</text>',
+        f'<text x="4" y="{mt + ph}">0</text>',
+        f'<text x="{ml}" y="{height - 8}">run 1</text>',
+        f'<text x="{ml + pw - 56}" y="{height - 8}">run {n_runs}</text>',
+    ]
+    for si, key in enumerate(sorted(series)):
+        color = PALETTE[si % len(PALETTE)]
+        pts = series[key]
+        coords = " ".join(f"{x(i):.1f},{y(v):.1f}" for i, v in pts)
+        parts.append(f'<polyline points="{coords}" fill="none" '
+                     f'stroke="{color}" stroke-width="1.5"/>')
+        for i, v in pts:
+            parts.append(f'<circle cx="{x(i):.1f}" cy="{y(v):.1f}" r="2.5" '
+                         f'fill="{color}"/>')
+        ly = mt + 14 + 13 * si
+        parts.append(f'<rect x="{ml + pw - 300}" y="{ly - 9}" width="10" '
+                     f'height="10" fill="{color}"/>')
+        parts.append(f'<text x="{ml + pw - 286}" y="{ly}">'
+                     f'{_xml_escape(key)}</text>')
+    parts.append("</svg>")
+    return "\n".join(parts) + "\n"
+
+
+def write_plots(runs: list[dict], out_dir: Path) -> list[Path]:
+    """Render one ``trend_<field>.svg`` per PLOT_SERIES entry whose data
+    is not identically zero. Returns the files written."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for field, label in PLOT_SERIES:
+        series = collect_series(runs, field)
+        series = {k: pts for k, pts in series.items()
+                  if any(v for _, v in pts)}
+        if not series:
+            continue
+        path = out_dir / f"trend_{field}.svg"
+        path.write_text(svg_plot(label, len(runs), series))
+        written.append(path)
+    return written
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("current", type=Path, help="fresh bench_results dir")
@@ -234,7 +365,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--schema", type=Path, default=SCHEMA_FILE,
                     help="schema_fields.json emitted by "
                          "`armincut analyze --emit-schema`")
+    ap.add_argument("--plot", type=Path, default=None, metavar="DIR",
+                    help="render the --history file as SVG trend curves "
+                         "into DIR (stdlib only)")
     args = ap.parse_args(argv)
+
+    if args.plot is not None and args.history is None:
+        print("error: --plot needs --history FILE (the curves render from it)")
+        return 2
 
     if not args.current.is_dir():
         print(f"error: current dir {args.current} does not exist")
@@ -261,6 +399,9 @@ def main(argv: list[str] | None = None) -> int:
         label = args.run_label or os.environ.get("GITHUB_RUN_ID", "local")
         runs = append_history(args.history, label, current, args.history_max)
         print(f"history: {runs} run(s) tracked in {args.history}")
+        if args.plot is not None:
+            written = write_plots(history_runs(args.history), args.plot)
+            print(f"plot: {len(written)} SVG curve(s) in {args.plot}")
     if not args.baseline.is_dir():
         print(f"no baseline at {args.baseline} (first run?) — nothing to diff")
         return 0

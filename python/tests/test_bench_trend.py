@@ -354,3 +354,36 @@ def test_committed_schema_matches_the_tests_assumptions():
     # history_fields list, and every history field must be a record field
     assert list(bench_trend.HISTORY_FIELDS) == SCHEMA["history_fields"]
     assert set(SCHEMA["history_fields"]) <= set(SCHEMA["fields"])
+
+
+# ---------------------------------------------------------------------------
+# scripts/metric_names.json — the live-metrics series pin
+# (`armincut analyze --emit-metrics`, checked by the metric-names gate)
+
+METRIC_NAMES_PATH = (Path(__file__).resolve().parents[2] / "scripts" /
+                     "metric_names.json")
+
+
+def test_metric_names_pin_is_a_valid_sorted_unique_list():
+    names = json.loads(METRIC_NAMES_PATH.read_text())
+    assert isinstance(names, list) and names, "non-empty JSON array"
+    assert all(isinstance(n, str) for n in names)
+    assert names == sorted(names), "the pin is sorted (emit order)"
+    assert len(names) == len(set(names)), "no duplicate series"
+
+
+def test_metric_names_pin_uses_the_armincut_prefix_and_conventions():
+    names = json.loads(METRIC_NAMES_PATH.read_text())
+    for n in names:
+        assert n.startswith("armincut_"), n
+        assert all(c.islower() or c.isdigit() or c == "_" for c in n), n
+
+
+def test_metric_names_pin_carries_the_series_ci_asserts_on():
+    # the dist-smoke metrics leg greps for exactly these; renaming them
+    # must show up here (and in the grow-only analyze gate) first
+    names = set(json.loads(METRIC_NAMES_PATH.read_text()))
+    assert {"armincut_sweeps_total",
+            "armincut_worker_discharges_total",
+            "armincut_flow_lower_bound",
+            "armincut_sweep_wall_us"} <= names

@@ -1,0 +1,239 @@
+//! Metric-name drift check: every Prometheus series name the live
+//! registry ([`crate::metrics`]) exports is a static string literal in
+//! `rust/src/metrics/mod.rs`, pinned in `scripts/metric_names.json`.
+//! The pin is a **grow-only ratchet**: a new series must be added to
+//! the pin (rerun `--emit-metrics`), and a pinned name may never
+//! disappear or be renamed silently — dashboards and scrape configs
+//! outlive any one release. The scan is textual (the names are
+//! `armincut_…` literals by the closed-vocabulary rule), backed by a
+//! live cross-check against `Registry::exported_names()` so a literal
+//! that never reaches the exposition is drift too.
+
+use crate::analyze::source::line_of;
+use crate::analyze::Finding;
+use std::path::Path;
+
+pub const METRICS_MOD_RS: &str = "rust/src/metrics/mod.rs";
+pub const PIN_JSON: &str = "scripts/metric_names.json";
+
+fn drift(findings: &mut Vec<Finding>, file: &str, line: usize, message: String) {
+    findings.push(Finding { check: "metric-names", file: file.into(), line, message });
+}
+
+/// `"armincut_…"` string literals in the non-test part of the metrics
+/// module source: `(name, byte offset of first occurrence)`, sorted by
+/// name, deduplicated. Hyphenated or otherwise non-series strings
+/// (like the `armincut-metrics` JSON meta tag) are excluded by the
+/// `[a-z0-9_]` alphabet.
+pub fn source_names(src: &str) -> Vec<(String, usize)> {
+    let live = src.split("#[cfg(test)]").next().unwrap_or(src);
+    let mut out: Vec<(String, usize)> = Vec::new();
+    let mut rest = live;
+    let mut base = 0usize;
+    while let Some(at) = rest.find("\"armincut_") {
+        let start = at + 1;
+        let Some(len) = rest[start..].find('"') else { break };
+        let name = &rest[start..start + len];
+        if name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+            && !out.iter().any(|(n, _)| n == name)
+        {
+            out.push((name.to_string(), base + start));
+        }
+        base += start + len + 1;
+        rest = &live[base..];
+    }
+    out.sort();
+    out
+}
+
+/// Entries of the pinned JSON array (a flat list of quoted strings).
+pub fn pinned_names(json: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = json;
+    while let Some(q) = rest.find('"') {
+        let after = &rest[q + 1..];
+        let Some(end) = after.find('"') else { break };
+        out.push(after[..end].to_string());
+        rest = &after[end + 1..];
+    }
+    out
+}
+
+/// The static half of the check, on in-memory sources (unit tests seed
+/// drift here): source literals and the pin must match both ways.
+pub fn check_sources(metrics_src: &str, pin_json: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let names = source_names(metrics_src);
+    let pinned = pinned_names(pin_json);
+    if names.is_empty() {
+        drift(
+            &mut findings,
+            METRICS_MOD_RS,
+            1,
+            "no armincut_ series literals found (scanner or module moved?)".into(),
+        );
+        return findings;
+    }
+    if pinned.is_empty() {
+        drift(
+            &mut findings,
+            PIN_JSON,
+            1,
+            format!("no pinned metric names; regenerate {PIN_JSON} with --emit-metrics"),
+        );
+        return findings;
+    }
+    for (n, at) in &names {
+        if !pinned.iter().any(|p| p == n) {
+            drift(
+                &mut findings,
+                METRICS_MOD_RS,
+                line_of(metrics_src, *at),
+                format!("metric `{n}` is exported but not pinned in {PIN_JSON}; \
+                         add it with --emit-metrics"),
+            );
+        }
+    }
+    for p in &pinned {
+        if !names.iter().any(|(n, _)| n == p) {
+            drift(
+                &mut findings,
+                PIN_JSON,
+                1,
+                format!("pinned metric `{p}` is no longer exported; the metric-name \
+                         pin only grows — restore the series or rename it deliberately"),
+            );
+        }
+    }
+    findings
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("read {rel}: {e}"))
+}
+
+/// Run the check against the tree at `root`, plus the live
+/// cross-check: the source scan must agree exactly with what the
+/// compiled registry actually exports.
+pub fn check(root: &Path) -> Result<Vec<Finding>, String> {
+    let src = read(root, METRICS_MOD_RS)?;
+    // a missing pin is drift (fixable with --emit-metrics), not an
+    // I/O failure — otherwise the pin could never be bootstrapped
+    let Ok(pin) = read(root, PIN_JSON) else {
+        let mut findings = Vec::new();
+        drift(
+            &mut findings,
+            PIN_JSON,
+            1,
+            format!("missing {PIN_JSON}; regenerate it with --emit-metrics"),
+        );
+        return Ok(findings);
+    };
+    let mut findings = check_sources(&src, &pin);
+    let names = source_names(&src);
+    let live = crate::metrics::Registry::exported_names();
+    for (n, at) in &names {
+        if !live.iter().any(|l| l == n) {
+            drift(
+                &mut findings,
+                METRICS_MOD_RS,
+                line_of(&src, *at),
+                format!("string `{n}` looks like a series name but the registry \
+                         does not export it"),
+            );
+        }
+    }
+    for l in &live {
+        if !names.iter().any(|(n, _)| n == l) {
+            drift(
+                &mut findings,
+                METRICS_MOD_RS,
+                1,
+                format!("registry exports `{l}` with no source literal (scanner drift)"),
+            );
+        }
+    }
+    Ok(findings)
+}
+
+/// Render `scripts/metric_names.json` from the live registry: a flat
+/// sorted JSON array of every exported base series name.
+pub fn emit_json() -> String {
+    let names = crate::metrics::Registry::exported_names();
+    let body =
+        names.iter().map(|n| format!("  \"{n}\"")).collect::<Vec<_>>().join(",\n");
+    format!("[\n{body}\n]\n")
+}
+
+/// Write `scripts/metric_names.json` under `root`. Returns the path.
+pub fn emit(root: &Path) -> Result<std::path::PathBuf, String> {
+    let path = root.join(PIN_JSON);
+    std::fs::write(&path, emit_json())
+        .map_err(|e| format!("write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+impl Counter {
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Sweeps => "armincut_sweeps_total",
+            Counter::Discharges => "armincut_discharges_total",
+        }
+    }
+}
+pub fn render_json() -> String {
+    String::from("{\"meta\":\"armincut-metrics\"")
+}
+#[cfg(test)]
+mod tests {
+    const ONLY_IN_TESTS: &str = "armincut_bogus_test_series";
+}
+"#;
+    const PIN: &str = "[\n  \"armincut_discharges_total\",\n  \"armincut_sweeps_total\"\n]\n";
+
+    #[test]
+    fn scan_extracts_series_literals_and_skips_tests_and_meta() {
+        let names: Vec<String> = source_names(SRC).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["armincut_discharges_total", "armincut_sweeps_total"]);
+    }
+
+    #[test]
+    fn consistent_fixture_is_clean() {
+        assert!(check_sources(SRC, PIN).is_empty());
+    }
+
+    #[test]
+    fn unpinned_series_is_detected_with_its_line() {
+        let pin_missing_one = "[\n  \"armincut_sweeps_total\"\n]\n";
+        let findings = check_sources(SRC, pin_missing_one);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("`armincut_discharges_total`"), "{findings:?}");
+        assert!(findings[0].file == METRICS_MOD_RS && findings[0].line > 1, "{findings:?}");
+    }
+
+    #[test]
+    fn removed_pinned_series_trips_the_ratchet() {
+        let src_missing_one = SRC.replace("\"armincut_discharges_total\"", "\"renamed\"");
+        let findings = check_sources(&src_missing_one, PIN);
+        assert!(
+            findings.iter().any(|f| f.message.contains("pin only grows") && f.file == PIN_JSON),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn emitted_pin_matches_the_live_registry() {
+        let json = emit_json();
+        let names = pinned_names(&json);
+        let live = crate::metrics::Registry::exported_names();
+        assert_eq!(names, live, "emit must pin exactly the exported surface");
+        for w in names.windows(2) {
+            assert!(w[0] < w[1], "sorted and unique: {w:?}");
+        }
+    }
+}

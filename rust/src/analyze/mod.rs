@@ -1,5 +1,5 @@
 //! `armincut analyze` — a zero-dependency static analyzer over the
-//! repo's own sources, run as a hard CI gate. Three invariants:
+//! repo's own sources, run as a hard CI gate. Four invariants:
 //!
 //! * **schema-drift** ([`schema`]): the BENCH record schema
 //!   (`RunMetrics` → `BenchRecord` → JSON writer → `HISTORY_FIELDS`
@@ -11,11 +11,16 @@
 //!   `unreachable!` in non-test code under `dist/`, `store/`,
 //!   `coordinator/`, except annotated sites pinned by a
 //!   shrink-only ratchet.
+//! * **metric-names** ([`metric_names`]): the live-metrics series
+//!   vocabulary (`crate::metrics`) matches the grow-only pin in
+//!   `scripts/metric_names.json` — the Prometheus surface cannot
+//!   drift or shrink silently.
 //!
 //! Parsing is the deliberately small scanner in [`source`]: a
-//! comment/string mask plus brace matching, which is all three checks
+//! comment/string mask plus brace matching, which is all the checks
 //! need. See ARCHITECTURE.md § Correctness tooling.
 
+pub mod metric_names;
 pub mod panics;
 pub mod protocol;
 pub mod schema;
@@ -28,7 +33,7 @@ use std::path::{Path, PathBuf};
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Finding {
     /// Which check fired (`"schema-drift"`, `"protocol"`,
-    /// `"panic-policy"`).
+    /// `"panic-policy"`, `"metric-names"`).
     pub check: &'static str,
     /// Repo-relative path with forward slashes.
     pub file: String,
@@ -53,6 +58,8 @@ pub struct AnalyzeOptions {
     pub fix_allow: bool,
     /// Also write `scripts/schema_fields.json` from the live sources.
     pub emit_schema: bool,
+    /// Also write `scripts/metric_names.json` from the live registry.
+    pub emit_metrics: bool,
 }
 
 /// Run every check against the tree. `Err` is an I/O-level failure
@@ -63,8 +70,13 @@ pub fn run(opts: &AnalyzeOptions) -> Result<Vec<Finding>, String> {
     findings.extend(schema::check(&opts.root)?);
     findings.extend(protocol::check(&opts.root)?);
     findings.extend(panics::check(&opts.root, opts.fix_allow)?);
+    findings.extend(metric_names::check(&opts.root)?);
     if opts.emit_schema {
         let path = schema::emit(&opts.root)?;
+        eprintln!("analyze: wrote {}", path.display());
+    }
+    if opts.emit_metrics {
+        let path = metric_names::emit(&opts.root)?;
         eprintln!("analyze: wrote {}", path.display());
     }
     Ok(findings)
@@ -106,7 +118,12 @@ mod tests {
     /// test.
     #[test]
     fn the_real_tree_is_clean() {
-        let opts = AnalyzeOptions { root: repo_root(), fix_allow: false, emit_schema: false };
+        let opts = AnalyzeOptions {
+            root: repo_root(),
+            fix_allow: false,
+            emit_schema: false,
+            emit_metrics: false,
+        };
         let findings = run(&opts).expect("analyzer ran");
         assert!(
             findings.is_empty(),
@@ -126,5 +143,15 @@ mod tests {
         let got = std::fs::read_to_string(root.join("scripts/schema_fields.json"))
             .expect("scripts/schema_fields.json is committed");
         assert_eq!(got, want, "stale scripts/schema_fields.json; rerun --emit-schema");
+    }
+
+    /// The committed `scripts/metric_names.json` must match what
+    /// `--emit-metrics` would regenerate from the live registry.
+    #[test]
+    fn committed_metric_names_json_is_current() {
+        let want = metric_names::emit_json();
+        let got = std::fs::read_to_string(repo_root().join(metric_names::PIN_JSON))
+            .expect("scripts/metric_names.json is committed");
+        assert_eq!(got, want, "stale scripts/metric_names.json; rerun --emit-metrics");
     }
 }

@@ -18,6 +18,7 @@ use crate::coordinator::fuse::{fuse_deltas, take_boundary_delta};
 use crate::coordinator::metrics::{RunMetrics, Timer};
 use crate::coordinator::sequential::{Algorithm, CoreKind, GapState, SolveResult};
 use crate::core::graph::Graph;
+use crate::metrics::{self as live, Counter, Gauge, Histo};
 use crate::core::partition::Partition;
 use crate::region::ard::{Ard, ArdCore};
 use crate::region::boundary_relabel::boundary_relabel;
@@ -263,9 +264,14 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
             metrics.core_grow += cg;
             metrics.core_augment += ca;
             metrics.core_adopt += cd;
+            let reg = live::global();
+            reg.add(Counter::CoreGrow, cg);
+            reg.add(Counter::CoreAugment, ca);
+            reg.add(Counter::CoreAdopt, cd);
         }
         td.stop(&mut metrics.t_discharge);
         metrics.discharges += active.len() as u64;
+        live::global().add(Counter::Discharges, active.len() as u64);
         if let Some(ts) = timings {
             let mut ts = ts.into_inner().unwrap_or_else(|e| e.into_inner());
             ts.sort_by_key(|&(r, ..)| r);
@@ -276,7 +282,10 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
 
         // ---- fusion (lines 4–6): the α-filter barrier --------------------
         let t0 = Instant::now();
-        metrics.msg_bytes += fuse(&mut dec, &active);
+        let fuse_bytes = fuse(&mut dec, &active);
+        metrics.msg_bytes += fuse_bytes;
+        live::global().add(Counter::MsgBytes, fuse_bytes);
+        live::global().add(Counter::FuseFolds, 1);
         let fuse_dur = t0.elapsed();
         metrics.t_msg += fuse_dur;
         metrics.t_fuse += fuse_dur;
@@ -301,15 +310,26 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
         let sweep_dur = sweep_t0.elapsed();
         sweep_rollup.add(sweep_dur);
         tracer.span_at(EventName::Sweep, sweep_t0, sweep_dur, sweep, NONE, metrics.discharges);
+        let reg = live::global();
+        if reg.is_enabled() {
+            reg.add(Counter::Sweeps, 1);
+            reg.observe(Histo::SweepWallUs, sweep_dur.as_micros() as u64);
+            reg.set_gauge(Gauge::Sweep, i64::from(sweep) + 1);
+            reg.set_gauge(Gauge::ActiveRegions, dec.active_regions().len() as i64);
+            reg.set_gauge(Gauge::Regions, dec.parts.len() as i64);
+            reg.set_gauge(Gauge::FlowLowerBound, dec.flow_value());
+        }
         if opts.progress {
             let still_active = dec.active_regions().len();
             let excess: i64 = dec.shared.excess.iter().filter(|&&x| x > 0).sum();
             eprintln!(
-                "sweep {:>4}: active {}/{} regions, boundary excess {}, elapsed {:.3}s",
+                "sweep {:>4}: active {}/{} regions, boundary excess {}, wall {:.3}s, \
+                 elapsed {:.3}s",
                 sweep + 1,
                 still_active,
                 dec.parts.len(),
                 excess,
+                sweep_dur.as_secs_f64(),
                 t_total.elapsed().as_secs_f64(),
             );
         }
@@ -332,6 +352,7 @@ pub fn solve_parallel(g: &Graph, partition: &Partition, opts: &ParOptions) -> So
             }
             tr.stop(&mut metrics.t_relabel);
             metrics.extra_sweeps += 1;
+            live::global().add(Counter::ExtraSweeps, 1);
             if increase == 0 {
                 break;
             }

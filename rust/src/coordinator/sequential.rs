@@ -16,6 +16,7 @@
 
 use crate::coordinator::fuse::{fuse_deltas, take_boundary_delta};
 use crate::coordinator::metrics::{RunMetrics, Timer};
+use crate::metrics::{self as live, Counter, Gauge, Histo};
 use crate::core::error::{Context, Result};
 use crate::core::graph::{Cap, Graph};
 use crate::core::partition::Partition;
@@ -291,7 +292,8 @@ fn load_traced(
     sweep: u32,
     r: usize,
 ) -> std::result::Result<(), StoreError> {
-    if !tracer.is_enabled() {
+    let reg = live::global();
+    if !tracer.is_enabled() && !reg.is_enabled() {
         return st.load(dec, r);
     }
     let before = *st.stats();
@@ -299,6 +301,9 @@ fn load_traced(
     st.load(dec, r)?;
     let s = *st.stats();
     let (read, _) = s.bytes_since(&before);
+    reg.add(Counter::PageReadBytes, read);
+    reg.add(Counter::PrefetchHits, s.prefetch_hits.saturating_sub(before.prefetch_hits));
+    reg.add(Counter::PrefetchMisses, s.prefetch_misses.saturating_sub(before.prefetch_misses));
     tracer.span_at(EventName::PageRead, t0, t0.elapsed(), sweep, r as u32, read);
     if s.prefetch_hits > before.prefetch_hits {
         tracer.instant(EventName::PrefetchHit, sweep, r as u32, read);
@@ -318,13 +323,15 @@ fn unload_traced(
     sweep: u32,
     r: usize,
 ) -> std::result::Result<(), StoreError> {
-    if !tracer.is_enabled() {
+    let reg = live::global();
+    if !tracer.is_enabled() && !reg.is_enabled() {
         return st.unload(dec, r);
     }
     let before = *st.stats();
     let t0 = Instant::now();
     st.unload(dec, r)?;
     let (_, written) = st.stats().bytes_since(&before);
+    reg.add(Counter::PageWriteBytes, written);
     tracer.span_at(EventName::PageWrite, t0, t0.elapsed(), sweep, r as u32, written);
     Ok(())
 }
@@ -386,6 +393,10 @@ fn discharge_region(
             metrics.core_augment += st.augment;
             metrics.core_adopt += st.adopt;
             augments = st.augment;
+            let reg = live::global();
+            reg.add(Counter::CoreGrow, st.grow);
+            reg.add(Counter::CoreAugment, st.augment);
+            reg.add(Counter::CoreAdopt, st.adopt);
         }
         Algorithm::Prd => {
             prd.discharge(&mut dec.parts[r], d_inf);
@@ -395,6 +406,8 @@ fn discharge_region(
     metrics.t_discharge += d_dur;
     tracer.span_at(EventName::Discharge, t0, d_dur, sweep, r as u32, augments);
     metrics.discharges += 1;
+    live::global().add(Counter::Discharges, 1);
+    live::global().observe(Histo::DischargeWallUs, d_dur.as_micros() as u64);
 
     // Publish through the shared Algorithm-2 fusion (coordinator::fuse);
     // with a single discharged region the α-filter provably never
@@ -405,6 +418,8 @@ fn discharge_region(
     let out = fuse_deltas(&mut dec.shared, std::slice::from_ref(&delta));
     debug_assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
     metrics.msg_bytes += out.bytes;
+    live::global().add(Counter::MsgBytes, out.bytes);
+    live::global().add(Counter::FuseFolds, 1);
     let f_dur = t0.elapsed();
     metrics.t_msg += f_dur;
     metrics.t_fuse += f_dur;
@@ -638,15 +653,26 @@ pub fn solve_sequential(
         let sweep_dur = sweep_t0.elapsed();
         sweep_rollup.add(sweep_dur);
         tracer.span_at(EventName::Sweep, sweep_t0, sweep_dur, sweep, NONE, metrics.discharges);
+        let reg = live::global();
+        if reg.is_enabled() {
+            reg.add(Counter::Sweeps, 1);
+            reg.observe(Histo::SweepWallUs, sweep_dur.as_micros() as u64);
+            reg.set_gauge(Gauge::Sweep, i64::from(sweep) + 1);
+            reg.set_gauge(Gauge::ActiveRegions, dec.active_regions().len() as i64);
+            reg.set_gauge(Gauge::Regions, dec.parts.len() as i64);
+            reg.set_gauge(Gauge::FlowLowerBound, dec.flow_value());
+        }
         if opts.progress {
             let active = dec.active_regions().len();
             let excess: Cap = dec.shared.excess.iter().filter(|&&x| x > 0).sum();
             eprintln!(
-                "sweep {:>4}: active {}/{} regions, boundary excess {}, elapsed {:.3}s",
+                "sweep {:>4}: active {}/{} regions, boundary excess {}, wall {:.3}s, \
+                 elapsed {:.3}s",
                 sweep + 1,
                 active,
                 dec.parts.len(),
                 excess,
+                sweep_dur.as_secs_f64(),
                 t_total.elapsed().as_secs_f64(),
             );
         }
@@ -685,6 +711,7 @@ pub fn solve_sequential(
                 }
             }
             metrics.extra_sweeps += 1;
+            live::global().add(Counter::ExtraSweeps, 1);
             if increase == 0 {
                 break;
             }

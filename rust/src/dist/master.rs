@@ -77,6 +77,7 @@ use crate::dist::proto::{
 use crate::dist::worker::{self, Inject, WorkerOptions};
 use crate::ensure;
 use crate::err;
+use crate::metrics::{self as live, Counter, Gauge, Histo, WorkerCounter, WorkerMetric};
 use crate::region::boundary_relabel::boundary_relabel;
 use crate::region::decompose::{BoundaryArcRef, Decomposition, DistanceMode, RegionPart};
 use crate::store::{FileStore, MasterCheckpoint};
@@ -158,6 +159,11 @@ pub struct DistOptions {
     /// Print a one-line status to stderr after every sweep
     /// (`--progress`). Purely additive; off by default.
     pub progress: bool,
+    /// Arm the proto v5 live-metrics piggyback (`--metrics-addr`):
+    /// workers accumulate per-discharge deltas and follow every reply
+    /// with one [`Msg::MetricsBatch`] frame, folded into the global
+    /// [`crate::metrics`] registry as per-worker and fleet series.
+    pub metrics: bool,
 }
 
 impl DistOptions {
@@ -177,6 +183,7 @@ impl DistOptions {
             worker_inject: Vec::new(),
             trace: None,
             progress: false,
+            metrics: false,
         }
     }
 
@@ -525,6 +532,10 @@ struct Master {
     offsets: Vec<i64>,
     /// Per-sweep wall times for the schema-7 min/mean/max rollup.
     sweep_rollup: SweepRollup,
+    /// Per-connection `(wire_sent, wire_recv)` at the previous sweep
+    /// barrier — the live registry exports per-sweep wire deltas
+    /// without double-counting across barriers.
+    wire_snap: Vec<(u64, u64)>,
 }
 
 /// Solve `g` under `partition` on distributed workers. Runs the
@@ -749,6 +760,7 @@ impl Master {
             merged: MergedTrace::new(),
             offsets,
             sweep_rollup: SweepRollup::default(),
+            wire_snap: vec![(0, 0); n],
         };
         for w in 0..n {
             // in both modes the master keeps only shells; on resume the
@@ -787,6 +799,7 @@ impl Master {
                     core,
                     warm_start: master.opts.seq.warm_start,
                     trace: master.opts.trace.is_some(),
+                    metrics: master.opts.metrics,
                     regions,
                 }));
                 master.conns[w].send(&assign)?;
@@ -811,6 +824,7 @@ impl Master {
             },
             warm_start: self.opts.seq.warm_start,
             trace: self.opts.trace.is_some(),
+            metrics: self.opts.metrics,
             sweep: self.metrics.sweeps as u64,
             regions: (0..self.dec.parts.len())
                 .filter(|&r| self.conn_of_region[r] == w)
@@ -834,9 +848,27 @@ impl Master {
         self.opts.trace.is_some()
     }
 
+    /// Whether the proto v5 metrics piggyback is armed — every worker
+    /// reply is then followed (after any trace batch) by one
+    /// [`Msg::MetricsBatch`] frame.
+    fn metrics_armed(&self) -> bool {
+        self.opts.metrics
+    }
+
+    /// Fold one shipped worker delta frame into the global live
+    /// registry: discharge work stays labeled with the frame's worker
+    /// id, core/page counters accrue fleet-wide.
+    fn absorb_metrics(&self, worker: u32, deltas: &[(WorkerMetric, u64)]) {
+        let reg = live::global();
+        for &(m, v) in deltas {
+            reg.fold_worker_delta(worker as usize, m, v);
+        }
+    }
+
     /// Sweep-barrier bookkeeping shared by both modes: fold the sweep's
     /// wall time into the schema-7 min/mean/max rollup, record the
-    /// framing span, and print the `--progress` status line.
+    /// framing span, refresh the live registry, and print the
+    /// `--progress` status line.
     fn end_of_sweep(&mut self, sweep: u32, sweep_t0: Instant, t_run: Instant) {
         let dur = sweep_t0.elapsed();
         self.sweep_rollup.add(dur);
@@ -848,15 +880,38 @@ impl Master {
             NONE,
             self.metrics.discharges,
         );
+        let reg = live::global();
+        if reg.is_enabled() {
+            reg.add(Counter::Sweeps, 1);
+            reg.observe(Histo::SweepWallUs, dur.as_micros() as u64);
+            reg.set_gauge(Gauge::Sweep, i64::from(sweep) + 1);
+            reg.set_gauge(Gauge::ActiveRegions, self.dec.active_regions().len() as i64);
+            reg.set_gauge(Gauge::Regions, self.dec.parts.len() as i64);
+            reg.set_gauge(Gauge::Workers, self.conns.len() as i64);
+            let flow = self.dec.base_flow + self.region_flow.iter().sum::<Cap>();
+            reg.set_gauge(Gauge::FlowLowerBound, flow);
+            for (ci, conn) in self.conns.iter().enumerate() {
+                let (s0, r0) = self.wire_snap[ci];
+                let (ds, dr) =
+                    (conn.wire_sent.saturating_sub(s0), conn.wire_recv.saturating_sub(r0));
+                self.wire_snap[ci] = (conn.wire_sent, conn.wire_recv);
+                reg.add(Counter::WireSentBytes, ds);
+                reg.add(Counter::WireRecvBytes, dr);
+                reg.add_worker(ci, WorkerCounter::WireSentBytes, ds);
+                reg.add_worker(ci, WorkerCounter::WireRecvBytes, dr);
+            }
+        }
         if self.opts.progress {
             let active = self.dec.active_regions().len();
             let excess: Cap = self.dec.shared.excess.iter().filter(|&&x| x > 0).sum();
             eprintln!(
-                "sweep {:>4}: active {}/{} regions, boundary excess {}, elapsed {:.3}s",
+                "sweep {:>4}: active {}/{} regions, boundary excess {}, wall {:.3}s, \
+                 elapsed {:.3}s",
                 sweep + 1,
                 active,
                 self.dec.parts.len(),
                 excess,
+                dur.as_secs_f64(),
                 t_run.elapsed().as_secs_f64(),
             );
         }
@@ -897,6 +952,7 @@ impl Master {
         let t0 = Instant::now();
         let bytes = ck.save(store, true).context("write master checkpoint")?;
         self.metrics.checkpoint_bytes += bytes;
+        live::global().add(Counter::CheckpointBytes, bytes);
         self.tracer.span_at(
             EventName::Checkpoint,
             t0,
@@ -929,6 +985,7 @@ impl Master {
         }
         self.restarts[ci] += 1;
         self.metrics.worker_restarts += 1;
+        live::global().add_worker(ci, WorkerCounter::Restarts, 1);
         let t0 = Instant::now();
         let new_conn = match &mut self.backend {
             Backend::Spawned(pool) => pool
@@ -1060,6 +1117,7 @@ impl Master {
                     increase += self.remote_round(r, true, u32::MAX)?;
                 }
                 self.metrics.extra_sweeps += 1;
+                live::global().add(Counter::ExtraSweeps, 1);
                 if increase == 0 {
                     break;
                 }
@@ -1133,6 +1191,7 @@ impl Master {
             loop {
                 let increase = self.batched_round(&all, true, u32::MAX)?;
                 self.metrics.extra_sweeps += 1;
+                live::global().add(Counter::ExtraSweeps, 1);
                 if increase == 0 {
                     break;
                 }
@@ -1167,31 +1226,54 @@ impl Master {
                     .try_send(&Msg::FetchCut { region: r as u32 })
                     .and_then(|()| self.conns[ci].try_recv_deadline(deadline, sweep_len, io))
                     .and_then(|msg| {
-                        if !self.trace_armed() {
-                            return Ok((msg, None));
-                        }
-                        // the worker follows every reply with its spans
-                        match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
-                            Msg::TraceBatch { dropped, events, .. } => {
-                                Ok((msg, Some((dropped, events))))
+                        // the worker follows every reply with its spans …
+                        let trace = if self.trace_armed() {
+                            match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
+                                Msg::TraceBatch { dropped, events, .. } => {
+                                    Some((dropped, events))
+                                }
+                                other => {
+                                    return Err(FailureKind::Protocol(format!(
+                                        "expected TraceBatch, got {}",
+                                        other.name()
+                                    )))
+                                }
                             }
-                            other => Err(FailureKind::Protocol(format!(
-                                "expected TraceBatch, got {}",
-                                other.name()
-                            ))),
-                        }
+                        } else {
+                            None
+                        };
+                        // … then, when armed, its metrics delta frame
+                        let mets = if self.metrics_armed() {
+                            match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
+                                Msg::MetricsBatch { worker, deltas } => Some((worker, deltas)),
+                                other => {
+                                    return Err(FailureKind::Protocol(format!(
+                                        "expected MetricsBatch, got {}",
+                                        other.name()
+                                    )))
+                                }
+                            }
+                        } else {
+                            None
+                        };
+                        Ok((msg, trace, mets))
                     });
                 let dur = t0.elapsed();
                 self.metrics.t_sync += dur;
                 self.tracer.span_at(EventName::SyncWait, t0, dur, NONE, r as u32, ci as u64);
                 match res {
-                    Ok((Msg::CutResult { region, src_side }, trace)) if region == r as u32 => {
+                    Ok((Msg::CutResult { region, src_side }, trace, mets))
+                        if region == r as u32 =>
+                    {
                         if let Some((dropped, events)) = trace {
                             self.absorb_trace(ci, dropped, &events);
                         }
+                        if let Some((worker, deltas)) = mets {
+                            self.absorb_metrics(worker, &deltas);
+                        }
                         break src_side;
                     }
-                    Ok((other, _)) => self.recover(
+                    Ok((other, _, _)) => self.recover(
                         ci,
                         FailureKind::Protocol(format!(
                             "expected CutResult for region {r}, got {}",
@@ -1349,30 +1431,47 @@ impl Master {
                 }
                 let wire0 = self.conns[ci].wire_recv;
                 let t0 = Instant::now();
-                // The reply, plus — when tracing is armed — the
-                // worker's piggybacked span batch. Both frames must
-                // land intact *before* anything is folded, so a failure
-                // between them still re-issues the whole batch and
-                // folding stays exactly-once.
+                // The reply, plus — when armed — the worker's
+                // piggybacked span and metrics-delta frames. Every
+                // frame must land intact *before* anything is folded,
+                // so a failure between them still re-issues the whole
+                // batch and folding stays exactly-once.
                 let res = self.conns[ci].try_recv_deadline(deadline, sweep_len, io);
                 let res = res.and_then(|msg| {
-                    if !armed {
-                        return Ok((msg, None));
-                    }
-                    match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
-                        Msg::TraceBatch { dropped, events, .. } => {
-                            Ok((msg, Some((dropped, events))))
+                    let trace = if armed {
+                        match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
+                            Msg::TraceBatch { dropped, events, .. } => {
+                                Some((dropped, events))
+                            }
+                            other => {
+                                return Err(FailureKind::Protocol(format!(
+                                    "expected TraceBatch, got {}",
+                                    other.name()
+                                )))
+                            }
                         }
-                        other => Err(FailureKind::Protocol(format!(
-                            "expected TraceBatch, got {}",
-                            other.name()
-                        ))),
-                    }
+                    } else {
+                        None
+                    };
+                    let mets = if self.metrics_armed() {
+                        match self.conns[ci].try_recv_deadline(deadline, sweep_len, io)? {
+                            Msg::MetricsBatch { worker, deltas } => Some((worker, deltas)),
+                            other => {
+                                return Err(FailureKind::Protocol(format!(
+                                    "expected MetricsBatch, got {}",
+                                    other.name()
+                                )))
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    Ok((msg, trace, mets))
                 });
                 let dur = t0.elapsed();
                 self.metrics.t_sync += dur;
                 self.tracer.span_at(EventName::SyncWait, t0, dur, sweep, NONE, ci as u64);
-                let outcome = res.and_then(|(msg, trace)| {
+                let outcome = res.and_then(|(msg, trace, mets)| {
                     let kind = msg.kind();
                     let inc = self.fold_reply(&groups[ci], msg, relabel_only, &mut round)?;
                     self.tracer.instant(
@@ -1383,6 +1482,9 @@ impl Master {
                     );
                     if let Some((dropped, events)) = trace {
                         self.absorb_trace(ci, dropped, &events);
+                    }
+                    if let Some((worker, deltas)) = mets {
+                        self.absorb_metrics(worker, &deltas);
                     }
                     Ok(inc)
                 });
@@ -1406,6 +1508,7 @@ impl Master {
         let t0 = Instant::now();
         let out = round.finish(&mut self.dec.shared);
         self.metrics.msg_bytes += out.bytes;
+        live::global().add(Counter::MsgBytes, out.bytes);
         let dur = t0.elapsed();
         self.metrics.t_msg += dur;
         self.metrics.t_fuse += dur;
@@ -1463,6 +1566,10 @@ impl Master {
             self.region_flow[r] = rsp.delta.flow_to_sink;
             increase += rsp.relabel_increase;
         }
+        if !relabel_only {
+            live::global().add(Counter::Discharges, rsps.len() as u64);
+        }
+        live::global().add(Counter::FuseFolds, 1);
         let dur = t0.elapsed();
         self.metrics.t_msg += dur;
         self.metrics.t_fuse += dur;
@@ -1511,6 +1618,18 @@ impl Master {
                 }
             }
         }
+        if self.metrics_armed() {
+            // … and, when metrics are armed, its delta frame
+            match self.conns[ci].recv()? {
+                Msg::MetricsBatch { worker, deltas } => self.absorb_metrics(worker, &deltas),
+                other => {
+                    return Err(err!(
+                        "worker {ci}: expected MetricsBatch, got {}",
+                        other.name()
+                    ))
+                }
+            }
+        }
         let dur = t0.elapsed();
         self.metrics.t_sync += dur;
         self.tracer.span_at(EventName::SyncWait, t0, dur, sweep, r as u32, ci as u64);
@@ -1524,6 +1643,7 @@ impl Master {
             self.metrics.core_grow += rsp.grow;
             self.metrics.core_augment += rsp.augment;
             self.metrics.core_adopt += rsp.adopt;
+            live::global().add(Counter::Discharges, 1);
         }
 
         // ---- fuse (the shared Algorithm-2 step; singleton never cancels)
@@ -1531,6 +1651,8 @@ impl Master {
         let out = fuse_deltas(&mut self.dec.shared, std::slice::from_ref(&rsp.delta));
         debug_assert!(out.cancelled.is_empty(), "singleton fusion cannot cancel");
         self.metrics.msg_bytes += out.bytes;
+        live::global().add(Counter::MsgBytes, out.bytes);
+        live::global().add(Counter::FuseFolds, 1);
         let dur = t0.elapsed();
         self.metrics.t_msg += dur;
         self.metrics.t_fuse += dur;

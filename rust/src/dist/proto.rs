@@ -49,11 +49,20 @@
 //! and an armed worker follows every reply it sends with one
 //! [`Msg::TraceBatch`] draining its bounded span buffer — trace frames
 //! piggyback on the sweep barrier, they never add a round-trip.
+//!
+//! Protocol version 5 adds the live-metrics plumbing: the assignment
+//! frames carry a `metrics` arm flag next to `trace`, and an armed
+//! worker follows every reply (after any `TraceBatch`) with one
+//! [`Msg::MetricsBatch`] draining its [`crate::metrics::MetricsAccum`]
+//! delta counters, which the master folds into the process-wide
+//! [`crate::metrics`] registry as per-worker and fleet-wide series.
+//! Like trace frames, metrics frames piggyback — never a round-trip.
 
 use crate::coordinator::fuse::RegionBoundaryDelta;
 use crate::core::graph::Cap;
 use crate::region::decompose::RegionPart;
 use crate::store::codec::{Codec, Dec, Enc};
+use crate::metrics::WorkerMetric;
 use crate::store::page::{crc32, le_u16, le_u32};
 use crate::trace::{EventName, TraceEvent};
 use std::fmt;
@@ -67,7 +76,10 @@ pub const FRAME_MAGIC: [u8; 4] = *b"ARMD";
 /// in `Hello`, so a restarted worker can rejoin mid-solve.
 /// Version 4: tracing — the clock stamp in `Hello`, the `trace` arm
 /// flag in `AssignShard`/`Resume`, and the `TraceBatch` span frame.
-pub const PROTO_VERSION: u16 = 4;
+/// Version 5: live metrics — the `metrics` arm flag in
+/// `AssignShard`/`Resume` and the piggybacked `MetricsBatch` delta
+/// frame.
+pub const PROTO_VERSION: u16 = 5;
 /// Fixed header size preceding the payload.
 pub const FRAME_HEADER_LEN: usize = 16;
 /// Upper bound on a single payload (a shard assignment of a huge
@@ -139,6 +151,10 @@ pub struct AssignShard {
     /// Arm the worker's tracer: when set, every reply is followed by
     /// one [`Msg::TraceBatch`] draining the worker's span buffer.
     pub trace: bool,
+    /// Arm the worker's metrics accumulator: when set, every reply is
+    /// followed (after any trace frame) by one [`Msg::MetricsBatch`]
+    /// draining the worker's delta counters.
+    pub metrics: bool,
     /// `(region id, region network)` — region ids are global.
     pub regions: Vec<(u32, RegionPart)>,
 }
@@ -193,6 +209,9 @@ pub struct ResumeShard {
     /// Re-arm the tracer on the restarted worker (same contract as
     /// [`AssignShard::trace`]).
     pub trace: bool,
+    /// Re-arm the metrics accumulator (same contract as
+    /// [`AssignShard::metrics`]).
+    pub metrics: bool,
     /// Sweep counter at the barrier the master is resuming from.
     pub sweep: u64,
     /// Global region ids in the original assignment (= store slot)
@@ -203,7 +222,8 @@ pub struct ResumeShard {
 /// The protocol messages. Master → worker: `AssignShard`, `Resume`,
 /// `Discharge`, `DischargeBatch`, `FuseResult`, `FetchCut`,
 /// `Shutdown`. Worker → master: `Hello`, `BoundaryDelta`, `DeltaBatch`,
-/// `CutResult`, `Abort`, `TraceBatch`. Either direction: `Heartbeat`.
+/// `CutResult`, `Abort`, `TraceBatch`, `MetricsBatch`. Either
+/// direction: `Heartbeat`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Msg {
     /// Handshake, sent by the worker immediately after connecting.
@@ -248,6 +268,11 @@ pub enum Msg {
     /// worker's own clock; the master re-bases them with the offset it
     /// estimated at `Hello`.
     TraceBatch { worker: u32, dropped: u64, events: Vec<TraceEvent> },
+    /// Drained worker metric deltas (proto v5), sent right after every
+    /// worker reply (and after any [`Msg::TraceBatch`]) while metrics
+    /// are armed. Each entry adds to a cumulative series; the master
+    /// folds them into per-worker and fleet-wide registry cells.
+    MetricsBatch { worker: u32, deltas: Vec<(WorkerMetric, u64)> },
 }
 
 const KIND_HELLO: u8 = 1;
@@ -264,6 +289,7 @@ const KIND_DELTA_BATCH: u8 = 11;
 const KIND_HEARTBEAT: u8 = 12;
 const KIND_RESUME: u8 = 13;
 const KIND_TRACE_BATCH: u8 = 14;
+const KIND_METRICS_BATCH: u8 = 15;
 
 fn enc_flows(e: &mut Enc, xs: &[(u32, bool, Cap)]) {
     e.u64(xs.len() as u64);
@@ -339,6 +365,27 @@ fn dec_trace_events(d: &mut Dec) -> Option<Vec<TraceEvent>> {
             region: d.u32()?,
             detail: d.u64()?,
         });
+    }
+    Some(v)
+}
+
+fn enc_metric_deltas(e: &mut Enc, xs: &[(WorkerMetric, u64)]) {
+    e.u64(xs.len() as u64);
+    for &(m, v) in xs {
+        e.u8(m.code());
+        e.u64(v);
+    }
+}
+
+fn dec_metric_deltas(d: &mut Dec) -> Option<Vec<(WorkerMetric, u64)>> {
+    let n = usize::try_from(d.u64()?).ok()?;
+    if n > d.remaining() {
+        return None;
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let m = WorkerMetric::from_code(d.u8()?)?;
+        v.push((m, d.u64()?));
     }
     Some(v)
 }
@@ -444,6 +491,7 @@ impl Msg {
             Msg::Heartbeat { .. } => KIND_HEARTBEAT,
             Msg::Resume(_) => KIND_RESUME,
             Msg::TraceBatch { .. } => KIND_TRACE_BATCH,
+            Msg::MetricsBatch { .. } => KIND_METRICS_BATCH,
         }
     }
 
@@ -464,6 +512,7 @@ impl Msg {
             Msg::Heartbeat { .. } => "Heartbeat",
             Msg::Resume(_) => "Resume",
             Msg::TraceBatch { .. } => "TraceBatch",
+            Msg::MetricsBatch { .. } => "MetricsBatch",
         }
     }
 
@@ -480,6 +529,7 @@ impl Msg {
                 e.u8(a.core);
                 e.u8(a.warm_start as u8);
                 e.u8(a.trace as u8);
+                e.u8(a.metrics as u8);
                 e.u64(a.regions.len() as u64);
                 for (id, part) in &a.regions {
                     e.u32(*id);
@@ -522,6 +572,7 @@ impl Msg {
                 e.u8(rs.core);
                 e.u8(rs.warm_start as u8);
                 e.u8(rs.trace as u8);
+                e.u8(rs.metrics as u8);
                 e.u64(rs.sweep);
                 e.u32_slice(&rs.regions);
             }
@@ -529,6 +580,10 @@ impl Msg {
                 e.u32(*worker);
                 e.u64(*dropped);
                 enc_trace_events(e, events);
+            }
+            Msg::MetricsBatch { worker, deltas } => {
+                e.u32(*worker);
+                enc_metric_deltas(e, deltas);
             }
         }
     }
@@ -542,6 +597,7 @@ impl Msg {
                 let core = d.u8()?;
                 let warm_start = d.u8()? != 0;
                 let trace = d.u8()? != 0;
+                let metrics = d.u8()? != 0;
                 let n = usize::try_from(d.u64()?).ok()?;
                 if n > d.remaining() {
                     return None;
@@ -558,6 +614,7 @@ impl Msg {
                     core,
                     warm_start,
                     trace,
+                    metrics,
                     regions,
                 }))
             }
@@ -601,6 +658,7 @@ impl Msg {
                 core: d.u8()?,
                 warm_start: d.u8()? != 0,
                 trace: d.u8()? != 0,
+                metrics: d.u8()? != 0,
                 sweep: d.u64()?,
                 regions: d.u32_slice()?,
             })),
@@ -609,6 +667,9 @@ impl Msg {
                 dropped: d.u64()?,
                 events: dec_trace_events(d)?,
             },
+            KIND_METRICS_BATCH => {
+                Msg::MetricsBatch { worker: d.u32()?, deltas: dec_metric_deltas(d)? }
+            }
             _ => return None,
         })
     }
@@ -714,6 +775,7 @@ mod tests {
                 core: 1,
                 warm_start: true,
                 trace: true,
+                metrics: true,
                 regions: vec![(0, sample_part()), (3, sample_part())],
             })),
             Msg::Discharge(Box::new(DischargeReq {
@@ -792,6 +854,7 @@ mod tests {
                 core: 1,
                 warm_start: true,
                 trace: true,
+                metrics: true,
                 sweep: 12,
                 regions: vec![2, 3, 5],
             })),
@@ -801,6 +864,7 @@ mod tests {
                 core: 0,
                 warm_start: false,
                 trace: false,
+                metrics: false,
                 sweep: 0,
                 regions: vec![],
             })),
@@ -827,6 +891,17 @@ mod tests {
                 ],
             },
             Msg::TraceBatch { worker: 1, dropped: 0, events: vec![] },
+            // every wire metric code once, plus the empty batch an
+            // armed-but-idle worker still owes after a reply
+            Msg::MetricsBatch {
+                worker: 2,
+                deltas: crate::metrics::ALL_WORKER_METRICS
+                    .iter()
+                    .enumerate()
+                    .map(|(i, m)| (*m, 1u64 << i))
+                    .collect(),
+            },
+            Msg::MetricsBatch { worker: 0, deltas: vec![] },
         ]
     }
 
@@ -851,6 +926,7 @@ mod tests {
             core: 0,
             warm_start: true,
             trace: false,
+            metrics: false,
             regions: vec![(0, sample_part())],
         }));
         let mut buf = Vec::new();
@@ -860,9 +936,9 @@ mod tests {
 
     #[test]
     fn truncation_and_bit_flips_are_rejected_for_every_kind() {
-        // every message kind (incl. the v2 batch, v3 recovery and v4
-        // trace frames), every truncation boundary, every single-byte
-        // flip:
+        // every message kind (incl. the v2 batch, v3 recovery, v4
+        // trace and v5 metrics frames), every truncation boundary,
+        // every single-byte flip:
         // always a typed error, never a panic or a mis-decode
         for msg in all_msgs() {
             let mut buf = Vec::new();
@@ -911,6 +987,10 @@ mod tests {
         e.u64(0); // dropped
         e.u64(1 << 40); // event count with no events behind it
         hostile.push((KIND_TRACE_BATCH, e.into_bytes()));
+        let mut e = Enc::new(Codec::Compact);
+        e.u32(1); // worker
+        e.u64(1 << 40); // delta count with no entries behind it
+        hostile.push((KIND_METRICS_BATCH, e.into_bytes()));
         for (kind, payload) in hostile {
             let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
             frame.extend_from_slice(&FRAME_MAGIC);

@@ -37,6 +37,12 @@
 //! spans into a bounded [`Tracer`] and ships them as one
 //! [`Msg::TraceBatch`] right after every reply; the master re-bases
 //! them onto its own clock via the `now_us` stamp in [`Msg::Hello`].
+//!
+//! With metrics armed (the `metrics` flag, proto v5) the worker
+//! additionally accrues discharge/core-work/page-I/O deltas into a
+//! plain [`MetricsAccum`] and ships them as one [`Msg::MetricsBatch`]
+//! after every reply (after any trace frame); the master folds the
+//! deltas into its live [`crate::metrics`] registry.
 
 use crate::coordinator::fuse::take_boundary_delta;
 use crate::coordinator::sequential::Algorithm;
@@ -47,6 +53,7 @@ use crate::dist::proto::{
 };
 use crate::ensure;
 use crate::err;
+use crate::metrics::{MetricsAccum, WorkerMetric};
 use crate::region::ard::{Ard, ArdCore};
 use crate::region::decompose::RegionPart;
 use crate::region::prd::Prd;
@@ -261,18 +268,32 @@ impl Shard {
     /// barrier and a re-issued batch replays against unmodified pages
     /// (replaying a discharge on a *post*-discharge page would route
     /// the same excess twice).
+    #[allow(clippy::too_many_arguments)]
     fn discharge(
         &mut self,
         q: &DischargeReq,
         staged: bool,
         tracer: &mut Tracer,
+        acc: &mut MetricsAccum,
         sweep: u32,
     ) -> Result<DeltaRsp> {
         let slot = self.slot(q.region)?;
         if let Some(st) = self.store.as_mut() {
             let t0 = Instant::now();
+            let before = *st.stats();
             st.load_part(slot, &mut self.parts[slot]).context("page in shard region")?;
             tracer.span_at(EventName::PageRead, t0, t0.elapsed(), sweep, q.region, 0);
+            let s = st.stats();
+            let (read, _) = s.bytes_since(&before);
+            acc.add(WorkerMetric::PageReadBytes, read);
+            acc.add(
+                WorkerMetric::PrefetchHits,
+                s.prefetch_hits.saturating_sub(before.prefetch_hits),
+            );
+            acc.add(
+                WorkerMetric::PrefetchMisses,
+                s.prefetch_misses.saturating_sub(before.prefetch_misses),
+            );
         }
         let wi = if self.store.is_some() { 0 } else { slot };
         let d_inf = self.d_inf;
@@ -338,10 +359,16 @@ impl Shard {
             // the master folds these spans into its `t_discharge`
             // rollup, so only real discharge work may carry the name
             tracer.span_at(EventName::Discharge, t0, t0.elapsed(), sweep, q.region, rsp.augment);
+            acc.add(WorkerMetric::Discharges, 1);
+            acc.add(WorkerMetric::DischargeWallUs, t0.elapsed().as_micros() as u64);
+            acc.add(WorkerMetric::CoreGrow, rsp.grow);
+            acc.add(WorkerMetric::CoreAugment, rsp.augment);
+            acc.add(WorkerMetric::CoreAdopt, rsp.adopt);
         }
         rsp.delta = take_boundary_delta(part, d_inf);
         if let Some(st) = self.store.as_mut() {
             let t0 = Instant::now();
+            let before = *st.stats();
             if staged {
                 st.unload_part_staged(slot, &mut self.parts[slot])
                     .context("stage shard region")?;
@@ -350,6 +377,8 @@ impl Shard {
                     .context("page out shard region")?;
             }
             tracer.span_at(EventName::PageWrite, t0, t0.elapsed(), sweep, q.region, 0);
+            let (_, wrote) = st.stats().bytes_since(&before);
+            acc.add(WorkerMetric::PageWriteBytes, wrote);
         }
         Ok(rsp)
     }
@@ -452,6 +481,21 @@ fn ship_trace(stream: &mut TcpStream, tracer: &mut Tracer, worker: u32) -> Resul
     Ok(())
 }
 
+/// Ship the accumulator's drained deltas as one [`Msg::MetricsBatch`]
+/// frame — the piggyback sent right after every reply (after any trace
+/// frame) while metrics are armed (proto v5). An armed-but-idle worker
+/// still sends the (empty) frame: the master reads exactly one per
+/// reply. Disabled, nothing is sent, keeping the v4 frame sequence
+/// byte for byte.
+fn ship_metrics(stream: &mut TcpStream, acc: &mut MetricsAccum, worker: u32) -> Result<()> {
+    if !acc.is_enabled() {
+        return Ok(());
+    }
+    let deltas = acc.take_delta();
+    write_msg(stream, &Msg::MetricsBatch { worker, deltas }).context("send metrics batch")?;
+    Ok(())
+}
+
 /// Serve one master session on an accepted connection. Returns when the
 /// master sends [`Msg::Shutdown`]; a dead master (EOF) or any protocol
 /// violation is an error.
@@ -461,6 +505,7 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
     // epoch predates the `Hello` clock sample the master uses to
     // re-base this worker's timestamps; `AssignShard`/`Resume` arm it.
     let mut tracer = Tracer::disabled();
+    let mut acc = MetricsAccum::default();
     write_msg(
         &mut stream,
         &Msg::Hello {
@@ -493,11 +538,17 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     if a.trace {
                         tracer.enable(DEFAULT_CAPACITY);
                     }
+                    if a.metrics {
+                        acc.enable();
+                    }
                     shard = Some(Shard::new(*a, opts)?);
                 }
                 Msg::Resume(rs) => {
                     if rs.trace {
                         tracer.enable(DEFAULT_CAPACITY);
+                    }
+                    if rs.metrics {
+                        acc.enable();
                     }
                     sweep = u32::try_from(rs.sweep).unwrap_or(u32::MAX);
                     let nonce = rs.sweep;
@@ -521,9 +572,10 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     let corrupt = apply_inject(opts.inject, handled, &mut stream)?;
                     let shard =
                         shard.as_mut().ok_or_else(|| err!("Discharge before AssignShard"))?;
-                    let rsp = shard.discharge(&q, false, &mut tracer, sweep)?;
+                    let rsp = shard.discharge(&q, false, &mut tracer, &mut acc, sweep)?;
                     send_reply(&mut stream, &Msg::BoundaryDelta(Box::new(rsp)), corrupt)?;
                     ship_trace(&mut stream, &mut tracer, opts.worker_id)?;
+                    ship_metrics(&mut stream, &mut acc, opts.worker_id)?;
                     let (ack, _) = read_msg(&mut stream).context("read fusion ack")?;
                     match ack {
                         Msg::FuseResult { region, .. } if region == q.region => {}
@@ -545,7 +597,7 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     for q in &reqs {
                         handled += 1;
                         corrupt |= apply_inject(opts.inject, handled, &mut stream)?;
-                        rsps.push(shard.discharge(q, true, &mut tracer, sweep)?);
+                        rsps.push(shard.discharge(q, true, &mut tracer, &mut acc, sweep)?);
                     }
                     sweep = sweep.saturating_add(1);
                     // no fusion ack in batch mode: the next batch is the
@@ -553,6 +605,7 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     // with this worker being free
                     send_reply(&mut stream, &Msg::DeltaBatch(rsps), corrupt)?;
                     ship_trace(&mut stream, &mut tracer, opts.worker_id)?;
+                    ship_metrics(&mut stream, &mut acc, opts.worker_id)?;
                 }
                 Msg::FetchCut { region } => {
                     let shard =
@@ -561,6 +614,7 @@ pub fn serve_stream(mut stream: TcpStream, opts: &WorkerOptions) -> Result<()> {
                     write_msg(&mut stream, &Msg::CutResult { region, src_side })
                         .context("send cut result")?;
                     ship_trace(&mut stream, &mut tracer, opts.worker_id)?;
+                    ship_metrics(&mut stream, &mut acc, opts.worker_id)?;
                 }
                 Msg::Shutdown => return Ok(true),
                 Msg::Abort { reason } => return Err(err!("master aborted: {reason}")),

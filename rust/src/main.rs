@@ -12,6 +12,7 @@
 //! * `accel`       — the PJRT kernel demo on a grid instance
 //! * `analyze`     — repo-invariant static analysis (CI gate)
 //! * `report`      — per-sweep phase breakdown from a `--trace` log
+//! * `top`         — live dashboard over a `--metrics-addr` endpoint
 //!
 //! Run `armincut help` for the option list.
 
@@ -45,8 +46,9 @@ USAGE:
   armincut experiment ID [--full]
   armincut bench   ID|all [--quick|--full] [--out DIR] [--probe-only]
   armincut accel   [--artifacts DIR]
-  armincut analyze [--fix-allow] [--emit-schema] [PATH]
-  armincut report  TRACE.jsonl
+  armincut analyze [--fix-allow] [--emit-schema] [--emit-metrics] [PATH]
+  armincut report  TRACE.jsonl [--slowest N]
+  armincut top     URL [--interval SECS] [--iterations N]
   armincut help
 
 SOLVE OPTIONS:
@@ -104,8 +106,15 @@ SOLVE OPTIONS:
                        distributed mode workers ship their spans to the
                        master, which merges them on a common clock
   --progress           region solvers: print one line per sweep to
-                       stderr (active regions, boundary excess,
-                       elapsed)
+                       stderr (active regions, boundary excess, sweep
+                       wall time, elapsed)
+  --metrics-addr HOST:PORT
+                       region solvers: serve live metrics over HTTP
+                       while the solve runs — Prometheus text at
+                       /metrics, JSON at /metrics.json (poll with
+                       `armincut top URL`); with --distributed the
+                       workers piggyback per-worker counters on every
+                       reply (proto v5)
 
 WORKER OPTIONS:
   --listen ADDR        bind, print the bound address, serve one master
@@ -147,6 +156,8 @@ ANALYZE OPTIONS:
                        observed count (growth still fails)
   --emit-schema        regenerate scripts/schema_fields.json from the
                        live sources
+  --emit-metrics       regenerate scripts/metric_names.json from the
+                       live metric registry sources
   exit codes: 0 clean | 1 findings | 2 usage/IO
 
 REPORT:
@@ -154,6 +165,17 @@ REPORT:
                        print the per-sweep, per-process phase breakdown
                        (discharge/fuse/sync/disk/idle) from the event
                        log written next to every --trace output
+  --slowest N          instead of the full table, rank the N slowest
+                       sweeps with their phase split and the worker
+                       that bounded each barrier
+
+TOP:
+  armincut top URL [--interval SECS] [--iterations N]
+                       poll URL/metrics.json (a solve started with
+                       --metrics-addr) and render an in-place terminal
+                       dashboard; --iterations 0 polls until the
+                       endpoint goes away (default: 1s interval,
+                       forever)
 "#;
 
 fn main() {
@@ -174,6 +196,7 @@ fn main() {
         "accel" => cmd_accel(&opts),
         "analyze" => cmd_analyze(&args[1..]),
         "report" => cmd_report(&args[1..]),
+        "top" => cmd_top(&args[1..], &opts),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             0
@@ -194,12 +217,14 @@ fn cmd_analyze(args: &[String]) -> i32 {
         root: std::path::PathBuf::new(),
         fix_allow: false,
         emit_schema: false,
+        emit_metrics: false,
     };
     let mut path: Option<String> = None;
     for a in args {
         match a.as_str() {
             "--fix-allow" => opts.fix_allow = true,
             "--emit-schema" => opts.emit_schema = true,
+            "--emit-metrics" => opts.emit_metrics = true,
             flag if flag.starts_with('-') => {
                 eprintln!("analyze: unknown flag {flag}");
                 return 2;
@@ -237,7 +262,7 @@ fn cmd_analyze(args: &[String]) -> i32 {
     };
     match armincut::analyze::run(&opts) {
         Ok(findings) if findings.is_empty() => {
-            println!("analyze: ok (schema-drift, protocol, panic-policy)");
+            println!("analyze: ok (schema-drift, protocol, panic-policy, metric-names)");
             0
         }
         Ok(findings) => {
@@ -254,11 +279,33 @@ fn cmd_analyze(args: &[String]) -> i32 {
     }
 }
 
-/// `armincut report TRACE.jsonl` — render the per-sweep phase table
-/// from the compact event log that every `solve --trace PATH` run
-/// writes next to its Chrome timeline (`PATH.jsonl`).
+/// `armincut report TRACE.jsonl [--slowest N]` — render the per-sweep
+/// phase table from the compact event log that every `solve --trace
+/// PATH` run writes next to its Chrome timeline (`PATH.jsonl`), or
+/// with `--slowest N` rank the N slowest sweeps with their phase
+/// split and the worker that bounded each barrier.
 fn cmd_report(args: &[String]) -> i32 {
-    let Some(path) = args.iter().find(|a| !a.starts_with("--")) else {
+    // the path is the first bare token, skipping the `--slowest N` pair
+    let mut path: Option<&String> = None;
+    let mut slowest: Option<usize> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--slowest" {
+            let parsed = args.get(i + 1).and_then(|s| s.parse::<usize>().ok());
+            let Some(n) = parsed.filter(|&n| n > 0) else {
+                eprintln!("error: --slowest needs a positive count");
+                return 2;
+            };
+            slowest = Some(n);
+            i += 2;
+            continue;
+        }
+        if !args[i].starts_with("--") && path.is_none() {
+            path = Some(&args[i]);
+        }
+        i += 1;
+    }
+    let Some(path) = path else {
         eprintln!("need a TRACE.jsonl path (written next to every --trace output)");
         return 2;
     };
@@ -269,13 +316,69 @@ fn cmd_report(args: &[String]) -> i32 {
             return 2;
         }
     };
-    match armincut::trace::report::render(&src) {
+    let rendered = match slowest {
+        Some(n) => armincut::trace::report::render_slowest(&src, n),
+        None => armincut::trace::report::render(&src),
+    };
+    match rendered {
         Ok(table) => {
             print!("{table}");
             0
         }
         Err(e) => {
             eprintln!("error: {path}: {e}");
+            1
+        }
+    }
+}
+
+/// `armincut top URL` — poll a `--metrics-addr` endpoint's
+/// `/metrics.json` and render an in-place terminal dashboard until the
+/// solve finishes (or for `--iterations N` polls).
+fn cmd_top(args: &[String], opts: &Flags) -> i32 {
+    use armincut::metrics::top::{run, TopOptions};
+    // the URL is the first bare token, skipping flag/value pairs
+    let mut url: Option<&String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--interval" || args[i] == "--iterations" {
+            i += 2;
+            continue;
+        }
+        if !args[i].starts_with("--") {
+            url = Some(&args[i]);
+            break;
+        }
+        i += 1;
+    }
+    let Some(url) = url else {
+        eprintln!("need a URL (the --metrics-addr of a running solve, e.g. 127.0.0.1:9187)");
+        return 2;
+    };
+    let interval = match opts.get("interval") {
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => std::time::Duration::from_secs_f64(v),
+            _ => {
+                eprintln!("error: --interval needs a positive number of seconds");
+                return 2;
+            }
+        },
+        None => std::time::Duration::from_secs(1),
+    };
+    let iterations = match opts.get("iterations") {
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("error: --iterations needs a whole number (0 = until gone)");
+                return 2;
+            }
+        },
+        None => 0,
+    };
+    match run(&TopOptions { url: url.clone(), iterations, interval }) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
             1
         }
     }
@@ -373,6 +476,18 @@ fn cmd_solve(opts: &Flags) -> i32 {
     let part = make_partition(opts, &g);
     let algo = opts.get("algo").map(String::as_str).unwrap_or("s-ard");
     let threads: usize = opts.get("threads").and_then(|s| s.parse().ok()).unwrap_or(4);
+    if let Some(addr) = opts.get("metrics-addr") {
+        // arm the process-wide registry, then serve it for the whole
+        // solve; the listener thread dies with the process
+        armincut::metrics::global().enable();
+        match armincut::metrics::http::serve(addr, armincut::metrics::global()) {
+            Ok(bound) => eprintln!("metrics: serving http://{bound}/metrics"),
+            Err(e) => {
+                eprintln!("error: bind metrics listener {addr}: {e}");
+                return 1;
+            }
+        }
+    }
     println!(
         "instance: n={} m={} | partition: {} regions, |B|={}",
         g.n(),
@@ -455,6 +570,7 @@ fn cmd_solve(opts: &Flags) -> i32 {
             }
             d.trace = opts.get("trace").map(|s| s.into());
             d.progress = opts.contains_key("progress");
+            d.metrics = opts.contains_key("metrics-addr");
             if let Some(list) = opts.get("inject-worker") {
                 for item in list.split(',').filter(|s| !s.is_empty()) {
                     let parsed = item.split_once(':').and_then(|(idx, spec)| {

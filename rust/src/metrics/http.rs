@@ -1,0 +1,120 @@
+//! Minimal std-only HTTP listener for the live-metrics registry.
+//!
+//! `--metrics-addr HOST:PORT` binds one of these next to the solve.
+//! The contract is deliberately tiny:
+//!
+//! * `GET /metrics` → Prometheus text format 0.0.4;
+//! * `GET /metrics.json` → the flat JSON snapshot `armincut top` polls;
+//! * anything else → `404`.
+//!
+//! Read-only, bounded, and **never blocks the sweep loop**: the
+//! listener runs on its own detached thread, renders from the atomic
+//! registry without locks, caps the request read at 1 KiB, and puts
+//! short timeouts on every socket so a stalled scraper cannot pin the
+//! thread.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use super::Registry;
+
+/// Most request bytes we will read before routing; enough for any
+/// well-formed `GET` line plus headers we ignore.
+const MAX_REQUEST_BYTES: usize = 1024;
+
+/// Per-connection socket timeout: a scraper that stalls longer is cut.
+const SOCKET_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Bind `addr` and serve `reg` from a detached background thread.
+/// Returns the bound address (useful with port 0). Serving outlives
+/// the solve: the thread ends when the process does.
+pub fn serve(addr: &str, reg: &'static Registry) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("armincut-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if let Ok(mut stream) = conn {
+                    let _ = handle(&mut stream, reg);
+                }
+            }
+        })?;
+    Ok(bound)
+}
+
+/// Serve one connection: parse the request line, route, respond, close.
+fn handle(stream: &mut TcpStream, reg: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(SOCKET_TIMEOUT))?;
+    stream.set_write_timeout(Some(SOCKET_TIMEOUT))?;
+    let mut buf = [0u8; MAX_REQUEST_BYTES];
+    let mut len = 0;
+    // read until the end of the request line (we ignore headers)
+    while len < buf.len() && !buf[..len].contains(&b'\n') {
+        match stream.read(&mut buf[len..]) {
+            Ok(0) => break,
+            Ok(n) => len += n,
+            Err(e) => return Err(e),
+        }
+    }
+    let line = String::from_utf8_lossy(&buf[..len]);
+    let path = line
+        .strip_prefix("GET ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or("");
+    let (status, ctype, body) = match path {
+        "/metrics" => {
+            ("200 OK", "text/plain; version=0.0.4; charset=utf-8", reg.render_prometheus())
+        }
+        "/metrics.json" => ("200 OK", "application/json", reg.render_json()),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Counter, Gauge, WorkerCounter};
+    use std::io::{Read as _, Write as _};
+
+    static TEST_REG: Registry = Registry::new();
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").expect("send");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read");
+        out
+    }
+
+    #[test]
+    fn endpoint_serves_prometheus_json_and_404() {
+        TEST_REG.enable();
+        TEST_REG.add(Counter::Sweeps, 2);
+        TEST_REG.set_gauge(Gauge::Workers, 1);
+        TEST_REG.add_worker(0, WorkerCounter::Discharges, 4);
+        let addr = serve("127.0.0.1:0", &TEST_REG).expect("bind");
+
+        let prom = get(addr, "/metrics");
+        assert!(prom.starts_with("HTTP/1.1 200 OK"), "{prom}");
+        assert!(prom.contains("text/plain; version=0.0.4"), "{prom}");
+        assert!(prom.contains("armincut_sweeps_total 2"), "{prom}");
+        assert!(prom.contains("armincut_worker_discharges_total{worker=\"0\"} 4"), "{prom}");
+
+        let json = get(addr, "/metrics.json");
+        assert!(json.starts_with("HTTP/1.1 200 OK"), "{json}");
+        assert!(json.contains("application/json"), "{json}");
+        assert!(json.contains("\"meta\":\"armincut-metrics\""), "{json}");
+
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+    }
+}

@@ -1,0 +1,782 @@
+//! Zero-dependency live metrics: a process-wide registry of atomic
+//! counters, gauges and log₂-bucketed histograms with **fixed static
+//! names**, readable while a solve is running.
+//!
+//! [`RunMetrics`](crate::coordinator::metrics::RunMetrics) and the
+//! `--trace` timelines explain a run *after* it finishes; this module
+//! is the third observability surface — the live one. The discipline
+//! mirrors [`trace::Tracer`](crate::trace::Tracer):
+//!
+//! * **one-branch no-op when disabled** — every hot-path update loads
+//!   one relaxed `AtomicBool` and returns; a solve without
+//!   `--metrics-addr` pays a branch, nothing else;
+//! * **lock-free on the hot path** — all cells are `AtomicU64`s
+//!   updated with relaxed `fetch_add`/`store`; no mutex, no
+//!   allocation, ever;
+//! * **closed vocabulary** — every exported series name is a static
+//!   string owned by one of the enums below, pinned in
+//!   `scripts/metric_names.json` and ratcheted by `armincut analyze`
+//!   (the Prometheus surface cannot drift silently);
+//! * **zero interference** — reading or recording metrics never
+//!   changes a solve result (pinned by the distributed equivalence
+//!   tests).
+//!
+//! Exposure: [`http::serve`] binds a minimal std-only listener serving
+//! the Prometheus text format at `/metrics` and a flat JSON snapshot
+//! at `/metrics.json`; `armincut top URL` ([`top`]) polls the latter
+//! and renders an in-place terminal dashboard.
+//!
+//! Distributed flow: workers accumulate deltas in a plain
+//! [`MetricsAccum`] and piggyback a
+//! [`Msg::MetricsBatch`](crate::dist::proto::Msg) frame (proto v5)
+//! after every reply while `AssignShard`/`Resume` armed the `metrics`
+//! flag; the master folds each delta into this registry's per-worker
+//! and fleet-wide series.
+
+pub mod http;
+pub mod top;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Per-worker series slots kept by the registry. Workers beyond this
+/// fold into the last slot rather than being dropped.
+pub const MAX_WORKERS: usize = 64;
+
+/// Histogram buckets: bucket `i < 64` holds values with at most `i`
+/// significant bits (upper bound `2^i − 1`); bucket 64 is `+Inf`.
+pub const HISTO_BUCKETS: usize = 65;
+
+/// Fleet-wide monotone counters (Prometheus `counter`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Completed sweeps (all runtimes; the master counts barriers).
+    Sweeps,
+    /// Label-only relabel sweeps of the cut-extraction epilogue.
+    ExtraSweeps,
+    /// Region discharges.
+    Discharges,
+    /// ARD core grow steps.
+    CoreGrow,
+    /// ARD core augmentations.
+    CoreAugment,
+    /// ARD core orphan adoptions.
+    CoreAdopt,
+    /// Boundary-delta folds through `coordinator::fuse`.
+    FuseFolds,
+    /// Logical boundary-sync message bytes (fusion accounting).
+    MsgBytes,
+    /// Store page bytes read (workers ship theirs over the wire).
+    PageReadBytes,
+    /// Store page bytes written back.
+    PageWriteBytes,
+    /// Prefetched pages that were ready when requested.
+    PrefetchHits,
+    /// Requested pages that missed the prefetch pipeline.
+    PrefetchMisses,
+    /// Master checkpoint bytes written at sweep barriers.
+    CheckpointBytes,
+    /// Wire bytes sent by the master (compact frames).
+    WireSentBytes,
+    /// Wire bytes received by the master.
+    WireRecvBytes,
+}
+
+/// All fleet counters, in slot order.
+pub const ALL_COUNTERS: [Counter; 15] = [
+    Counter::Sweeps,
+    Counter::ExtraSweeps,
+    Counter::Discharges,
+    Counter::CoreGrow,
+    Counter::CoreAugment,
+    Counter::CoreAdopt,
+    Counter::FuseFolds,
+    Counter::MsgBytes,
+    Counter::PageReadBytes,
+    Counter::PageWriteBytes,
+    Counter::PrefetchHits,
+    Counter::PrefetchMisses,
+    Counter::CheckpointBytes,
+    Counter::WireSentBytes,
+    Counter::WireRecvBytes,
+];
+
+impl Counter {
+    /// Stable exported series name (pinned in `metric_names.json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Sweeps => "armincut_sweeps_total",
+            Counter::ExtraSweeps => "armincut_extra_sweeps_total",
+            Counter::Discharges => "armincut_discharges_total",
+            Counter::CoreGrow => "armincut_core_grow_total",
+            Counter::CoreAugment => "armincut_core_augment_total",
+            Counter::CoreAdopt => "armincut_core_adopt_total",
+            Counter::FuseFolds => "armincut_fuse_folds_total",
+            Counter::MsgBytes => "armincut_msg_bytes_total",
+            Counter::PageReadBytes => "armincut_page_read_bytes_total",
+            Counter::PageWriteBytes => "armincut_page_write_bytes_total",
+            Counter::PrefetchHits => "armincut_prefetch_hits_total",
+            Counter::PrefetchMisses => "armincut_prefetch_misses_total",
+            Counter::CheckpointBytes => "armincut_checkpoint_bytes_total",
+            Counter::WireSentBytes => "armincut_wire_sent_bytes_total",
+            Counter::WireRecvBytes => "armincut_wire_recv_bytes_total",
+        }
+    }
+}
+
+/// Point-in-time gauges (Prometheus `gauge`; values may go down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Current sweep number (1-based once the first sweep completes).
+    Sweep,
+    /// Regions still active after the last barrier.
+    ActiveRegions,
+    /// Total regions of the decomposition.
+    Regions,
+    /// Connected workers (0 for the in-process runtimes).
+    Workers,
+    /// Flow routed to the sink so far — a lower bound on the maxflow.
+    FlowLowerBound,
+}
+
+/// All gauges, in slot order.
+pub const ALL_GAUGES: [Gauge; 5] = [
+    Gauge::Sweep,
+    Gauge::ActiveRegions,
+    Gauge::Regions,
+    Gauge::Workers,
+    Gauge::FlowLowerBound,
+];
+
+impl Gauge {
+    /// Stable exported series name (pinned in `metric_names.json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::Sweep => "armincut_sweep",
+            Gauge::ActiveRegions => "armincut_active_regions",
+            Gauge::Regions => "armincut_regions",
+            Gauge::Workers => "armincut_workers",
+            Gauge::FlowLowerBound => "armincut_flow_lower_bound",
+        }
+    }
+}
+
+/// Per-worker monotone counters, exported with a `{worker="i"}` label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerCounter {
+    /// Discharges executed by this worker.
+    Discharges,
+    /// Microseconds this worker spent inside discharges.
+    DischargeWallUs,
+    /// Wire bytes the master sent to this worker.
+    WireSentBytes,
+    /// Wire bytes the master received from this worker.
+    WireRecvBytes,
+    /// Recovery restarts of this worker.
+    Restarts,
+}
+
+/// All per-worker counters, in slot order.
+pub const ALL_WORKER_COUNTERS: [WorkerCounter; 5] = [
+    WorkerCounter::Discharges,
+    WorkerCounter::DischargeWallUs,
+    WorkerCounter::WireSentBytes,
+    WorkerCounter::WireRecvBytes,
+    WorkerCounter::Restarts,
+];
+
+impl WorkerCounter {
+    /// Stable exported series name (pinned in `metric_names.json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerCounter::Discharges => "armincut_worker_discharges_total",
+            WorkerCounter::DischargeWallUs => "armincut_worker_discharge_wall_us_total",
+            WorkerCounter::WireSentBytes => "armincut_worker_wire_sent_bytes_total",
+            WorkerCounter::WireRecvBytes => "armincut_worker_wire_recv_bytes_total",
+            WorkerCounter::Restarts => "armincut_worker_restarts_total",
+        }
+    }
+}
+
+/// Log₂ histograms (Prometheus `histogram`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Histo {
+    /// Wall time of one sweep, in microseconds.
+    SweepWallUs,
+    /// Wall time of one region discharge, in microseconds.
+    DischargeWallUs,
+}
+
+/// All histograms, in slot order.
+pub const ALL_HISTOS: [Histo; 2] = [Histo::SweepWallUs, Histo::DischargeWallUs];
+
+impl Histo {
+    /// Stable exported series name (pinned in `metric_names.json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Histo::SweepWallUs => "armincut_sweep_wall_us",
+            Histo::DischargeWallUs => "armincut_discharge_wall_us",
+        }
+    }
+}
+
+/// The bucket a value lands in: its significant-bit count, i.e. the
+/// smallest `i` with `v ≤ 2^i − 1`, capped at the `+Inf` bucket.
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros() as usize).min(HISTO_BUCKETS - 1)
+}
+
+/// The inclusive upper bound of bucket `i` (`None` for `+Inf`).
+pub fn bucket_bound(i: usize) -> Option<u64> {
+    if i >= HISTO_BUCKETS - 1 {
+        None
+    } else {
+        Some((1u64 << i) - 1)
+    }
+}
+
+/// The wire vocabulary of one [`Msg::MetricsBatch`] delta entry
+/// (`crate::dist::proto::Msg`): what a worker can report about itself.
+/// Single-byte codes, stable across releases — a corrupt or future
+/// frame must not mis-decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerMetric {
+    /// Discharges executed since the previous batch.
+    Discharges,
+    /// Microseconds spent inside those discharges.
+    DischargeWallUs,
+    /// ARD core grow steps.
+    CoreGrow,
+    /// ARD core augmentations.
+    CoreAugment,
+    /// ARD core orphan adoptions.
+    CoreAdopt,
+    /// Store page bytes read by the worker's shard store.
+    PageReadBytes,
+    /// Store page bytes written back.
+    PageWriteBytes,
+    /// Prefetch hits at the worker's store.
+    PrefetchHits,
+    /// Prefetch misses at the worker's store.
+    PrefetchMisses,
+}
+
+/// All wire entries, in wire-code order (exhaustive enc/dec tests).
+pub const ALL_WORKER_METRICS: [WorkerMetric; 9] = [
+    WorkerMetric::Discharges,
+    WorkerMetric::DischargeWallUs,
+    WorkerMetric::CoreGrow,
+    WorkerMetric::CoreAugment,
+    WorkerMetric::CoreAdopt,
+    WorkerMetric::PageReadBytes,
+    WorkerMetric::PageWriteBytes,
+    WorkerMetric::PrefetchHits,
+    WorkerMetric::PrefetchMisses,
+];
+
+impl WorkerMetric {
+    /// Single-byte wire discriminant.
+    pub fn code(self) -> u8 {
+        match self {
+            WorkerMetric::Discharges => 0,
+            WorkerMetric::DischargeWallUs => 1,
+            WorkerMetric::CoreGrow => 2,
+            WorkerMetric::CoreAugment => 3,
+            WorkerMetric::CoreAdopt => 4,
+            WorkerMetric::PageReadBytes => 5,
+            WorkerMetric::PageWriteBytes => 6,
+            WorkerMetric::PrefetchHits => 7,
+            WorkerMetric::PrefetchMisses => 8,
+        }
+    }
+
+    /// Inverse of [`WorkerMetric::code`]; `None` for foreign bytes.
+    pub fn from_code(code: u8) -> Option<WorkerMetric> {
+        ALL_WORKER_METRICS.get(code as usize).copied()
+    }
+}
+
+/// Worker-local delta accumulator: plain `u64`s (no atomics — a worker
+/// serves one master from one thread), drained into a `MetricsBatch`
+/// after every reply. Disabled it is a one-branch no-op, like the
+/// tracer.
+#[derive(Debug, Clone)]
+pub struct MetricsAccum {
+    enabled: bool,
+    vals: [u64; ALL_WORKER_METRICS.len()],
+}
+
+impl Default for MetricsAccum {
+    fn default() -> Self {
+        MetricsAccum { enabled: false, vals: [0; ALL_WORKER_METRICS.len()] }
+    }
+}
+
+impl MetricsAccum {
+    /// Arm the accumulator (the worker path: `AssignShard`/`Resume`
+    /// carry the `metrics` flag).
+    pub fn enable(&mut self) {
+        self.enabled = true;
+    }
+
+    /// Whether deltas are being recorded (and batches owed).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Accrue `v` to `m`; no-op while disabled.
+    pub fn add(&mut self, m: WorkerMetric, v: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.vals[m.code() as usize] = self.vals[m.code() as usize].saturating_add(v);
+    }
+
+    /// Drain the non-zero deltas for shipment, resetting them.
+    pub fn take_delta(&mut self) -> Vec<(WorkerMetric, u64)> {
+        let mut out = Vec::new();
+        for m in ALL_WORKER_METRICS {
+            let v = &mut self.vals[m.code() as usize];
+            if *v > 0 {
+                out.push((m, *v));
+                *v = 0;
+            }
+        }
+        out
+    }
+}
+
+/// One log₂ histogram's cells.
+#[derive(Debug)]
+pub struct HistoCells {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistoCells {
+    const fn new() -> HistoCells {
+        HistoCells {
+            buckets: [const { AtomicU64::new(0) }; HISTO_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The process-wide registry. All solves in a process share
+/// [`global()`]; tests construct their own.
+#[derive(Debug)]
+pub struct Registry {
+    enabled: AtomicBool,
+    counters: [AtomicU64; ALL_COUNTERS.len()],
+    gauges: [AtomicU64; ALL_GAUGES.len()],
+    workers: [[AtomicU64; ALL_WORKER_COUNTERS.len()]; MAX_WORKERS],
+    histos: [HistoCells; ALL_HISTOS.len()],
+}
+
+static GLOBAL: Registry = Registry::new();
+
+/// The process-wide registry instance (what `--metrics-addr` serves).
+pub fn global() -> &'static Registry {
+    &GLOBAL
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// A disabled registry with every cell at zero.
+    pub const fn new() -> Registry {
+        Registry {
+            enabled: AtomicBool::new(false),
+            counters: [const { AtomicU64::new(0) }; ALL_COUNTERS.len()],
+            gauges: [const { AtomicU64::new(0) }; ALL_GAUGES.len()],
+            workers: [const { [const { AtomicU64::new(0) }; ALL_WORKER_COUNTERS.len()] };
+                MAX_WORKERS],
+            histos: [const { HistoCells::new() }; ALL_HISTOS.len()],
+        }
+    }
+
+    /// Start recording. Updates before this call were dropped at the
+    /// one-branch guard.
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether updates are being recorded — use to skip *computing*
+    /// expensive gauge inputs, not just storing them.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Add `v` to a fleet counter.
+    pub fn add(&self, c: Counter, v: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.counters[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Current value of a fleet counter.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    /// Set a gauge (signed: the flow lower bound may be negative).
+    pub fn set_gauge(&self, g: Gauge, v: i64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.gauges[g as usize].store(v as u64, Ordering::Relaxed);
+    }
+
+    /// Current value of a gauge.
+    pub fn gauge(&self, g: Gauge) -> i64 {
+        self.gauges[g as usize].load(Ordering::Relaxed) as i64
+    }
+
+    /// Add `v` to a per-worker counter; workers past [`MAX_WORKERS`]
+    /// share the last slot.
+    pub fn add_worker(&self, worker: usize, c: WorkerCounter, v: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let w = worker.min(MAX_WORKERS - 1);
+        self.workers[w][c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Current value of a per-worker counter.
+    pub fn worker_counter(&self, worker: usize, c: WorkerCounter) -> u64 {
+        self.workers[worker.min(MAX_WORKERS - 1)][c as usize].load(Ordering::Relaxed)
+    }
+
+    /// Record one observation into a histogram.
+    pub fn observe(&self, h: Histo, v: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let cells = &self.histos[h as usize];
+        cells.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        cells.sum.fetch_add(v, Ordering::Relaxed);
+        cells.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one worker-shipped delta entry (the master's side of a
+    /// `MetricsBatch`): per-worker attribution for discharge work,
+    /// fleet-wide accrual for everything the master cannot see itself.
+    pub fn fold_worker_delta(&self, worker: usize, m: WorkerMetric, v: u64) {
+        match m {
+            WorkerMetric::Discharges => self.add_worker(worker, WorkerCounter::Discharges, v),
+            WorkerMetric::DischargeWallUs => {
+                self.add_worker(worker, WorkerCounter::DischargeWallUs, v)
+            }
+            WorkerMetric::CoreGrow => self.add(Counter::CoreGrow, v),
+            WorkerMetric::CoreAugment => self.add(Counter::CoreAugment, v),
+            WorkerMetric::CoreAdopt => self.add(Counter::CoreAdopt, v),
+            WorkerMetric::PageReadBytes => self.add(Counter::PageReadBytes, v),
+            WorkerMetric::PageWriteBytes => self.add(Counter::PageWriteBytes, v),
+            WorkerMetric::PrefetchHits => self.add(Counter::PrefetchHits, v),
+            WorkerMetric::PrefetchMisses => self.add(Counter::PrefetchMisses, v),
+        }
+    }
+
+    /// Worker rows worth exporting: `armincut_workers` slots, capped.
+    fn exported_workers(&self) -> usize {
+        (self.gauge(Gauge::Workers).max(0) as usize).min(MAX_WORKERS)
+    }
+
+    /// Render the Prometheus text exposition (format 0.0.4): every
+    /// fleet counter and gauge, one labeled row per connected worker,
+    /// and cumulative log₂ histogram buckets. Bounded: the output size
+    /// depends only on the (fixed) vocabulary and the worker count.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for c in ALL_COUNTERS {
+            let _ = writeln!(out, "# TYPE {} counter", c.name());
+            let _ = writeln!(out, "{} {}", c.name(), self.counter(c));
+        }
+        for g in ALL_GAUGES {
+            let _ = writeln!(out, "# TYPE {} gauge", g.name());
+            let _ = writeln!(out, "{} {}", g.name(), self.gauge(g));
+        }
+        let workers = self.exported_workers();
+        for c in ALL_WORKER_COUNTERS {
+            let _ = writeln!(out, "# TYPE {} counter", c.name());
+            for w in 0..workers {
+                let _ = writeln!(
+                    out,
+                    "{}{{worker=\"{w}\"}} {}",
+                    c.name(),
+                    self.worker_counter(w, c)
+                );
+            }
+        }
+        for h in ALL_HISTOS {
+            let cells = &self.histos[h as usize];
+            let _ = writeln!(out, "# TYPE {} histogram", h.name());
+            let mut cum = 0u64;
+            for i in 0..HISTO_BUCKETS {
+                cum += cells.buckets[i].load(Ordering::Relaxed);
+                match bucket_bound(i) {
+                    // empty leading buckets are elided; cumulative
+                    // counts stay monotone either way
+                    Some(le) if cum > 0 || i + 1 == HISTO_BUCKETS - 1 => {
+                        let _ = writeln!(out, "{}_bucket{{le=\"{le}\"}} {cum}", h.name());
+                    }
+                    Some(_) => {}
+                    None => {
+                        let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {cum}", h.name());
+                    }
+                }
+            }
+            let _ = writeln!(out, "{}_sum {}", h.name(), cells.sum.load(Ordering::Relaxed));
+            let _ =
+                writeln!(out, "{}_count {}", h.name(), cells.count.load(Ordering::Relaxed));
+        }
+        out
+    }
+
+    /// Render the flat JSON snapshot served at `/metrics.json` (what
+    /// `armincut top` polls). Flat keys, one object per worker row.
+    pub fn render_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{\"meta\":\"armincut-metrics\"");
+        for c in ALL_COUNTERS {
+            let _ = write!(out, ",\"{}\":{}", c.name(), self.counter(c));
+        }
+        for g in ALL_GAUGES {
+            let _ = write!(out, ",\"{}\":{}", g.name(), self.gauge(g));
+        }
+        out.push_str(",\"workers\":[");
+        for w in 0..self.exported_workers() {
+            if w > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"worker\":{w}");
+            for c in ALL_WORKER_COUNTERS {
+                let _ = write!(out, ",\"{}\":{}", c.name(), self.worker_counter(w, c));
+            }
+            out.push('}');
+        }
+        out.push_str("],\"histograms\":{");
+        for (i, h) in ALL_HISTOS.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let cells = &self.histos[*h as usize];
+            let _ = write!(
+                out,
+                "\"{}\":{{\"count\":{},\"sum\":{}}}",
+                h.name(),
+                cells.count.load(Ordering::Relaxed),
+                cells.sum.load(Ordering::Relaxed)
+            );
+        }
+        out.push_str("}}");
+        out
+    }
+
+    /// Every exported base series name, sorted — the surface the
+    /// `metric_names.json` pin ratchets.
+    pub fn exported_names() -> Vec<&'static str> {
+        let mut names: Vec<&'static str> = ALL_COUNTERS
+            .iter()
+            .map(|c| c.name())
+            .chain(ALL_GAUGES.iter().map(|g| g.name()))
+            .chain(ALL_WORKER_COUNTERS.iter().map(|c| c.name()))
+            .chain(ALL_HISTOS.iter().map(|h| h.name()))
+            .collect();
+        names.sort_unstable();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_metric_codes_roundtrip_and_reject_foreign_bytes() {
+        for (i, m) in ALL_WORKER_METRICS.iter().enumerate() {
+            assert_eq!(m.code() as usize, i);
+            assert_eq!(WorkerMetric::from_code(m.code()), Some(*m));
+        }
+        assert_eq!(WorkerMetric::from_code(ALL_WORKER_METRICS.len() as u8), None);
+        assert_eq!(WorkerMetric::from_code(0xFF), None);
+    }
+
+    /// The bucket-boundary property: every u64 lands in exactly one
+    /// bucket, bucket bounds are consistent with membership, and
+    /// cumulative counts over any observation set are monotone.
+    #[test]
+    fn histogram_buckets_partition_the_u64_range() {
+        let probes: Vec<u64> = (0..=64u32)
+            .flat_map(|i| {
+                let p = 1u64.checked_shl(i).unwrap_or(0);
+                [p.wrapping_sub(1), p, p.wrapping_add(1)]
+            })
+            .chain([0, 1, 2, 3, 7, 100, u64::MAX / 2, u64::MAX])
+            .collect();
+        for &v in &probes {
+            let b = bucket_of(v);
+            assert!(b < HISTO_BUCKETS, "v={v}");
+            // v is within its bucket's bound …
+            if let Some(le) = bucket_bound(b) {
+                assert!(v <= le, "v={v} exceeds bucket {b} bound {le}");
+            }
+            // … and above the previous bucket's bound: exactly one home
+            if b > 0 {
+                let prev = bucket_bound(b - 1).unwrap();
+                assert!(v > prev, "v={v} also fits bucket {}", b - 1);
+            }
+        }
+        // cumulative monotonicity over a recorded set
+        let reg = Registry::new();
+        reg.enable();
+        for &v in &probes {
+            reg.observe(Histo::SweepWallUs, v);
+        }
+        let cells = &reg.histos[Histo::SweepWallUs as usize];
+        let mut cum = 0u64;
+        let mut last = 0u64;
+        for b in &cells.buckets {
+            cum += b.load(Ordering::Relaxed);
+            assert!(cum >= last, "cumulative counts are monotone");
+            last = cum;
+        }
+        assert_eq!(cum, probes.len() as u64, "every value landed in exactly one bucket");
+        assert_eq!(cells.count.load(Ordering::Relaxed), probes.len() as u64);
+    }
+
+    /// N threads hammering the same counters must sum exactly — the
+    /// registry is lock-free but never lossy.
+    #[test]
+    fn concurrent_counter_updates_sum_exactly() {
+        let reg = Registry::new();
+        reg.enable();
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 10_000;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let reg = &reg;
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        reg.add(Counter::Discharges, 1);
+                        reg.add_worker((t % 4) as usize, WorkerCounter::Discharges, 1);
+                        reg.observe(Histo::DischargeWallUs, i);
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.counter(Counter::Discharges), THREADS * PER_THREAD);
+        reg.set_gauge(Gauge::Workers, 4);
+        let per_worker: u64 =
+            (0..4).map(|w| reg.worker_counter(w, WorkerCounter::Discharges)).sum();
+        assert_eq!(per_worker, THREADS * PER_THREAD);
+        let cells = &reg.histos[Histo::DischargeWallUs as usize];
+        assert_eq!(cells.count.load(Ordering::Relaxed), THREADS * PER_THREAD);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing_for_one_branch() {
+        let reg = Registry::new();
+        reg.add(Counter::Sweeps, 7);
+        reg.set_gauge(Gauge::Sweep, 7);
+        reg.add_worker(0, WorkerCounter::Discharges, 7);
+        reg.observe(Histo::SweepWallUs, 7);
+        assert_eq!(reg.counter(Counter::Sweeps), 0);
+        assert_eq!(reg.gauge(Gauge::Sweep), 0);
+        assert_eq!(reg.worker_counter(0, WorkerCounter::Discharges), 0);
+        assert_eq!(reg.render_json().matches("\"count\":0").count(), 2);
+    }
+
+    #[test]
+    fn accumulator_drains_nonzero_deltas_and_resets() {
+        let mut acc = MetricsAccum::default();
+        acc.add(WorkerMetric::Discharges, 3); // disabled: dropped
+        assert!(acc.take_delta().is_empty());
+        acc.enable();
+        acc.add(WorkerMetric::Discharges, 3);
+        acc.add(WorkerMetric::Discharges, 2);
+        acc.add(WorkerMetric::PageReadBytes, 100);
+        let d = acc.take_delta();
+        assert_eq!(
+            d,
+            vec![(WorkerMetric::Discharges, 5), (WorkerMetric::PageReadBytes, 100)]
+        );
+        assert!(acc.take_delta().is_empty(), "drained");
+    }
+
+    /// The `/metrics` exposition golden test: a registry with known
+    /// contents renders the exact Prometheus lines the scrape contract
+    /// promises (fleet series, labeled worker rows, histogram tail).
+    #[test]
+    fn prometheus_exposition_matches_golden_lines() {
+        let reg = Registry::new();
+        reg.enable();
+        reg.add(Counter::Sweeps, 3);
+        reg.add(Counter::Discharges, 12);
+        reg.set_gauge(Gauge::ActiveRegions, 2);
+        reg.set_gauge(Gauge::FlowLowerBound, -5);
+        reg.set_gauge(Gauge::Workers, 2);
+        reg.add_worker(0, WorkerCounter::Discharges, 7);
+        reg.add_worker(1, WorkerCounter::Discharges, 5);
+        reg.fold_worker_delta(1, WorkerMetric::CoreAugment, 9);
+        reg.observe(Histo::SweepWallUs, 0);
+        reg.observe(Histo::SweepWallUs, 1000); // bits(1000)=10 → le=1023
+        let text = reg.render_prometheus();
+        for golden in [
+            "# TYPE armincut_sweeps_total counter",
+            "armincut_sweeps_total 3",
+            "armincut_discharges_total 12",
+            "armincut_active_regions 2",
+            "armincut_flow_lower_bound -5",
+            "armincut_workers 2",
+            "armincut_worker_discharges_total{worker=\"0\"} 7",
+            "armincut_worker_discharges_total{worker=\"1\"} 5",
+            "armincut_core_augment_total 9",
+            "# TYPE armincut_sweep_wall_us histogram",
+            "armincut_sweep_wall_us_bucket{le=\"0\"} 1",
+            "armincut_sweep_wall_us_bucket{le=\"511\"} 1",
+            "armincut_sweep_wall_us_bucket{le=\"1023\"} 2",
+            "armincut_sweep_wall_us_bucket{le=\"+Inf\"} 2",
+            "armincut_sweep_wall_us_sum 1000",
+            "armincut_sweep_wall_us_count 2",
+        ] {
+            assert!(text.contains(golden), "missing {golden:?} in:\n{text}");
+        }
+        // no worker row beyond the connected count
+        assert!(!text.contains("{worker=\"2\"}"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_is_flat_and_carries_worker_rows() {
+        let reg = Registry::new();
+        reg.enable();
+        reg.add(Counter::Sweeps, 4);
+        reg.set_gauge(Gauge::Workers, 1);
+        reg.add_worker(0, WorkerCounter::Discharges, 6);
+        let json = reg.render_json();
+        assert!(json.contains("\"meta\":\"armincut-metrics\""), "{json}");
+        assert!(json.contains("\"armincut_sweeps_total\":4"), "{json}");
+        assert!(json.contains("\"worker\":0"), "{json}");
+        assert!(json.contains("\"armincut_worker_discharges_total\":6"), "{json}");
+        assert!(json.contains("\"armincut_sweep_wall_us\":{\"count\":0"), "{json}");
+    }
+
+    #[test]
+    fn exported_names_are_sorted_unique_and_prefixed() {
+        let names = Registry::exported_names();
+        assert!(!names.is_empty());
+        for w in names.windows(2) {
+            assert!(w[0] < w[1], "sorted and unique: {w:?}");
+        }
+        for n in &names {
+            assert!(n.starts_with("armincut_"), "{n}");
+        }
+    }
+}

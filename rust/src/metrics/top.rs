@@ -1,0 +1,198 @@
+//! `armincut top URL` — live terminal dashboard over `/metrics.json`.
+//!
+//! Polls the JSON snapshot served by `--metrics-addr` and redraws an
+//! in-place dashboard: sweep progress, flow lower bound, and one row
+//! per worker (discharges, discharge wall time, wire bytes both ways,
+//! restarts) so imbalance and stalls are visible *while* a large solve
+//! runs, not only in a post-mortem trace. Parsing reuses the flat-JSON
+//! field scanning of [`trace::report`](crate::trace::report) — the
+//! snapshot is our own single-line format, no JSON engine needed.
+
+use crate::trace::report::field_i64;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Options for [`run`].
+#[derive(Debug, Clone)]
+pub struct TopOptions {
+    /// The endpoint to poll: `HOST:PORT`, with or without an
+    /// `http://` scheme or `/metrics.json` path.
+    pub url: String,
+    /// Poll count; 0 polls until interrupted.
+    pub iterations: u64,
+    /// Delay between polls.
+    pub interval: Duration,
+}
+
+/// Split a user-supplied URL into (authority, path), tolerating the
+/// scheme and a missing path.
+fn split_url(url: &str) -> (&str, &str) {
+    let rest = url.strip_prefix("http://").unwrap_or(url);
+    match rest.find('/') {
+        Some(at) => (&rest[..at], &rest[at..]),
+        None => (rest, "/metrics.json"),
+    }
+}
+
+/// One HTTP GET over a raw `TcpStream`; returns the response body.
+fn fetch(authority: &str, path: &str) -> Result<String, String> {
+    let mut s = TcpStream::connect(authority)
+        .map_err(|e| format!("connect {authority}: {e}"))?;
+    s.set_read_timeout(Some(Duration::from_secs(5)))
+        .map_err(|e| format!("socket: {e}"))?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {authority}\r\nConnection: close\r\n\r\n")
+        .map_err(|e| format!("send {authority}: {e}"))?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).map_err(|e| format!("read {authority}: {e}"))?;
+    let Some(split) = raw.find("\r\n\r\n") else {
+        return Err(format!("malformed response from {authority}"));
+    };
+    if !raw.starts_with("HTTP/1.1 200") && !raw.starts_with("HTTP/1.0 200") {
+        let status = raw.lines().next().unwrap_or("").to_string();
+        return Err(format!("{authority}{path}: {status}"));
+    }
+    Ok(raw[split + 4..].to_string())
+}
+
+/// Format a byte count for the dashboard.
+fn human_bytes(b: i64) -> String {
+    let b = b.max(0) as f64;
+    if b >= 1e9 {
+        format!("{:.2}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1}KB", b / 1e3)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+/// Render one dashboard frame from a `/metrics.json` snapshot.
+/// Returns an error for bodies that are not an armincut snapshot.
+pub fn render(json: &str) -> Result<String, String> {
+    if !json.contains("\"meta\":\"armincut-metrics\"") {
+        return Err("not an armincut metrics snapshot (expected /metrics.json)".into());
+    }
+    use std::fmt::Write as _;
+    let g = |key: &str| field_i64(json, key).unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "sweep {:>4} | active {}/{} regions | flow >= {} | workers {}",
+        g("armincut_sweep"),
+        g("armincut_active_regions"),
+        g("armincut_regions"),
+        g("armincut_flow_lower_bound"),
+        g("armincut_workers"),
+    );
+    let _ = writeln!(
+        out,
+        "discharges {} | sweeps {} | fuse folds {} | page read {} | checkpoint {}",
+        g("armincut_discharges_total"),
+        g("armincut_sweeps_total"),
+        g("armincut_fuse_folds_total"),
+        human_bytes(g("armincut_page_read_bytes_total")),
+        human_bytes(g("armincut_checkpoint_bytes_total")),
+    );
+    let workers = json.split("\"workers\":[").nth(1).unwrap_or("");
+    let workers = workers.split(']').next().unwrap_or("");
+    let rows: Vec<&str> =
+        workers.split('}').map(str::trim).filter(|r| r.contains("\"worker\":")).collect();
+    if !rows.is_empty() {
+        let _ = writeln!(
+            out,
+            "{:>6} {:>12} {:>12} {:>11} {:>11} {:>9}",
+            "worker", "discharges", "disch-ms", "wire-sent", "wire-recv", "restarts"
+        );
+        for row in rows {
+            let w = |key: &str| field_i64(row, key).unwrap_or(0);
+            let _ = writeln!(
+                out,
+                "{:>6} {:>12} {:>12.3} {:>11} {:>11} {:>9}",
+                w("worker"),
+                w("armincut_worker_discharges_total"),
+                w("armincut_worker_discharge_wall_us_total") as f64 / 1000.0,
+                human_bytes(w("armincut_worker_wire_sent_bytes_total")),
+                human_bytes(w("armincut_worker_wire_recv_bytes_total")),
+                w("armincut_worker_restarts_total"),
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// Poll-and-redraw loop. Errors out on the first failed poll so a
+/// mistyped address fails fast instead of redrawing garbage.
+pub fn run(opts: &TopOptions) -> Result<(), String> {
+    let (authority, path) = split_url(&opts.url);
+    if authority.is_empty() {
+        return Err(format!("bad url {:?} (want HOST:PORT[/metrics.json])", opts.url));
+    }
+    let mut polled = 0u64;
+    loop {
+        let body = fetch(authority, path)?;
+        let frame = render(&body)?;
+        // in-place redraw: home the cursor, clear, repaint
+        print!("\x1b[H\x1b[2J");
+        println!("armincut top — http://{authority}{path} (poll {})", polled + 1);
+        print!("{frame}");
+        let _ = std::io::stdout().flush();
+        polled += 1;
+        if opts.iterations > 0 && polled >= opts.iterations {
+            return Ok(());
+        }
+        std::thread::sleep(opts.interval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Counter, Gauge, Registry, WorkerCounter};
+
+    #[test]
+    fn url_splitting_tolerates_scheme_and_missing_path() {
+        assert_eq!(split_url("127.0.0.1:9187"), ("127.0.0.1:9187", "/metrics.json"));
+        assert_eq!(split_url("http://127.0.0.1:9187"), ("127.0.0.1:9187", "/metrics.json"));
+        assert_eq!(
+            split_url("http://localhost:9187/metrics.json"),
+            ("localhost:9187", "/metrics.json")
+        );
+        assert_eq!(split_url("host:1/custom"), ("host:1", "/custom"));
+    }
+
+    #[test]
+    fn render_reads_a_real_registry_snapshot() {
+        let reg = Registry::new();
+        reg.enable();
+        reg.add(Counter::Sweeps, 6);
+        reg.add(Counter::Discharges, 40);
+        reg.set_gauge(Gauge::Sweep, 6);
+        reg.set_gauge(Gauge::ActiveRegions, 3);
+        reg.set_gauge(Gauge::Regions, 8);
+        reg.set_gauge(Gauge::FlowLowerBound, 1234);
+        reg.set_gauge(Gauge::Workers, 2);
+        reg.add_worker(0, WorkerCounter::Discharges, 25);
+        reg.add_worker(0, WorkerCounter::DischargeWallUs, 2500);
+        reg.add_worker(1, WorkerCounter::Discharges, 15);
+        reg.add_worker(1, WorkerCounter::Restarts, 1);
+        let frame = render(&reg.render_json()).unwrap();
+        assert!(
+            frame.contains("sweep    6 | active 3/8 regions | flow >= 1234 | workers 2"),
+            "{frame}"
+        );
+        assert!(frame.contains("discharges 40"), "{frame}");
+        let w0 = frame.lines().find(|l| l.trim_start().starts_with("0 ")).unwrap();
+        assert!(w0.contains("25"), "{w0}");
+        let w1 = frame.lines().find(|l| l.trim_start().starts_with("1 ")).unwrap();
+        assert!(w1.trim_end().ends_with('1'), "restart column: {w1}");
+    }
+
+    #[test]
+    fn render_rejects_foreign_bodies() {
+        assert!(render("{}").is_err());
+        assert!(render("<html>nope</html>").is_err());
+    }
+}

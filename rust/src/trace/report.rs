@@ -43,9 +43,9 @@ struct Row {
     sweep_span: u64,
 }
 
-/// Render the per-sweep phase table from JSONL source. Errors on input
-/// that holds no parseable event lines.
-pub fn render(src: &str) -> Result<String, String> {
+/// Parse JSONL source into per-(sweep, pid) rows plus the dropped
+/// count. Errors on input that holds no parseable event lines.
+fn parse(src: &str) -> Result<(BTreeMap<(u32, u32), Row>, u64), String> {
     let mut rows: BTreeMap<(u32, u32), Row> = BTreeMap::new();
     let mut dropped = 0u64;
     let mut parsed = 0u64;
@@ -80,14 +80,25 @@ pub fn render(src: &str) -> Result<String, String> {
     if parsed == 0 {
         return Err("no trace events found (is this the .jsonl event log?)".into());
     }
+    Ok((rows, dropped))
+}
 
-    // a process without its own framing span (workers) is framed by
-    // the longest sweep span any process recorded for that sweep
+/// The longest sweep framing span any process recorded, per sweep — a
+/// process without its own span (workers) is framed by this.
+fn frames(rows: &BTreeMap<(u32, u32), Row>) -> BTreeMap<u32, u64> {
     let mut frame: BTreeMap<u32, u64> = BTreeMap::new();
-    for ((sweep, _), row) in &rows {
+    for ((sweep, _), row) in rows {
         let f = frame.entry(*sweep).or_default();
         *f = (*f).max(row.sweep_span);
     }
+    frame
+}
+
+/// Render the per-sweep phase table from JSONL source. Errors on input
+/// that holds no parseable event lines.
+pub fn render(src: &str) -> Result<String, String> {
+    let (rows, dropped) = parse(src)?;
+    let frame = frames(&rows);
 
     let mut out = String::new();
     let _ = writeln!(out, "per-sweep phase breakdown (milliseconds)");
@@ -132,6 +143,68 @@ pub fn render(src: &str) -> Result<String, String> {
         ms(totals[2]),
         ms(totals[3]),
     );
+    if dropped > 0 {
+        let _ = writeln!(out, "note: {dropped} event(s) dropped at the bounded trace buffer");
+    }
+    Ok(out)
+}
+
+/// Render the top-`n` slowest sweeps (by framing span), each with its
+/// phase split summed across processes and the process whose busy time
+/// bounded the barrier — the straggler a load-balance fix should chase.
+pub fn render_slowest(src: &str, n: usize) -> Result<String, String> {
+    let (rows, dropped) = parse(src)?;
+    let frame = frames(&rows);
+
+    // per-sweep: phase totals and the busiest process (workers first:
+    // the master's busy time never extends a barrier it is waiting on)
+    let mut busy: BTreeMap<u32, [u64; 4]> = BTreeMap::new();
+    let mut bound: BTreeMap<u32, (u32, u64)> = BTreeMap::new();
+    for ((sweep, pid), row) in &rows {
+        let b = busy.entry(*sweep).or_default();
+        for (t, v) in b.iter_mut().zip(row.busy.iter()) {
+            *t += v;
+        }
+        let row_busy: u64 = row.busy.iter().sum();
+        let entry = bound.entry(*sweep).or_insert((*pid, row_busy));
+        let beats = match (entry.0, *pid) {
+            (0, p) if p > 0 => true, // any worker over the master
+            (e, p) if (e > 0) == (p > 0) => row_busy > entry.1,
+            _ => false,
+        };
+        if beats {
+            *entry = (*pid, row_busy);
+        }
+    }
+
+    let mut ranked: Vec<(u32, u64)> = frame.iter().map(|(s, f)| (*s, *f)).collect();
+    ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    ranked.truncate(n);
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{} slowest sweeps by wall span (milliseconds)", ranked.len());
+    let _ = writeln!(
+        out,
+        "{:>4} {:>6} {:>11} {:>11} {:>11} {:>11} {:>11} {:>16}",
+        "rank", "sweep", "total", "discharge", "fuse", "sync", "disk", "bounded-by"
+    );
+    for (rank, (sweep, total)) in ranked.iter().enumerate() {
+        let b = busy.get(sweep).copied().unwrap_or_default();
+        let (pid, pid_busy) = bound.get(sweep).copied().unwrap_or((0, 0));
+        let proc = if pid == 0 { "master".to_string() } else { format!("w{}", pid - 1) };
+        let _ = writeln!(
+            out,
+            "{:>4} {:>6} {:>11} {:>11} {:>11} {:>11} {:>11} {:>16}",
+            rank + 1,
+            sweep,
+            ms(*total),
+            ms(b[0]),
+            ms(b[1]),
+            ms(b[2]),
+            ms(b[3]),
+            format!("{proc} ({})", ms(pid_busy)),
+        );
+    }
     if dropped > 0 {
         let _ = writeln!(out, "note: {dropped} event(s) dropped at the bounded trace buffer");
     }
@@ -218,5 +291,64 @@ mod tests {
         assert!(render("").is_err());
         assert!(render("{\"meta\":\"armincut-trace\",\"dropped\":0}\n").is_err());
         assert!(render("not json at all\n").is_err());
+        assert!(render_slowest("", 3).is_err());
+    }
+
+    fn two_sweep_sample() -> String {
+        let mut m = MergedTrace::new();
+        m.add_remote(
+            MASTER_PID,
+            0,
+            &[
+                ev(EventName::Sweep, 0, 10_000, 0, NONE),
+                ev(EventName::SyncWait, 100, 9_000, 0, NONE),
+                ev(EventName::Sweep, 10_000, 30_000, 1, NONE),
+                ev(EventName::SyncWait, 10_100, 25_000, 1, NONE),
+            ],
+            0,
+        );
+        m.add_remote(
+            worker_pid(0),
+            50,
+            &[
+                ev(EventName::Discharge, 200, 8_000, 0, 1),
+                ev(EventName::Discharge, 10_200, 4_000, 1, 1),
+            ],
+            0,
+        );
+        m.add_remote(
+            worker_pid(1),
+            60,
+            &[
+                ev(EventName::Discharge, 300, 2_000, 0, 2),
+                ev(EventName::Discharge, 10_300, 27_000, 1, 2),
+            ],
+            0,
+        );
+        m.jsonl()
+    }
+
+    #[test]
+    fn slowest_ranks_sweeps_and_names_the_bounding_worker() {
+        let out = render_slowest(&two_sweep_sample(), 1).unwrap();
+        assert!(out.contains("1 slowest sweeps"), "{out}");
+        // sweep 1 (30 ms frame) outranks sweep 0 (10 ms); worker 1's
+        // 27 ms discharge bounded it, despite the master's 25 ms sync
+        let rank1 = out.lines().find(|l| l.contains("w1 (")).unwrap();
+        assert!(rank1.trim_start().starts_with("1 "), "rank column: {out}");
+        assert!(rank1.contains("30.000"), "total column: {out}");
+        assert!(rank1.contains("w1 (27.000)"), "bounding worker: {out}");
+        assert!(!out.contains("w0 ("), "rank cut at n=1: {out}");
+    }
+
+    #[test]
+    fn slowest_caps_at_available_sweeps_and_sums_phases() {
+        let out = render_slowest(&two_sweep_sample(), 10).unwrap();
+        assert!(out.contains("2 slowest sweeps"), "{out}");
+        // sweep 0 lands at rank 2; w0's 8 ms discharge bounds it
+        let rank2 = out.lines().find(|l| l.contains("w0 (")).unwrap();
+        assert!(rank2.trim_start().starts_with("2 "), "rank column: {out}");
+        assert!(rank2.contains("10.000"), "total column: {out}");
+        assert!(rank2.contains("w0 (8.000)"), "bounding worker: {out}");
     }
 }

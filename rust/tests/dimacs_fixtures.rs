@@ -172,6 +172,10 @@ fn cli_progress_and_trace_flags_work_end_to_end() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(out.status.success(), "exit {:?}\nstderr:\n{stderr}", out.status.code());
     assert!(stderr.contains("sweep"), "--progress narrates sweeps: {stderr}");
+    assert!(
+        stderr.contains("wall") && stderr.contains("elapsed"),
+        "--progress lines carry per-sweep wall time and total elapsed: {stderr}"
+    );
     let json = std::fs::read_to_string(&trace).expect("chrome trace written");
     assert!(json.contains("\"traceEvents\""), "chrome trace shape");
     let jsonl = trace.with_extension("jsonl");
@@ -190,6 +194,21 @@ fn cli_progress_and_trace_flags_work_end_to_end() {
     let table = String::from_utf8_lossy(&report.stdout);
     assert!(table.contains("per-sweep phase breakdown"), "table: {table}");
     assert!(table.contains("master"), "table: {table}");
+
+    // `--slowest N` ranks sweeps instead of printing the full table
+    let slowest = Command::new(exe)
+        .args(["report", jsonl.to_str().unwrap(), "--slowest", "2"])
+        .output()
+        .expect("run armincut report --slowest");
+    assert!(
+        slowest.status.success(),
+        "report --slowest exit {:?}\nstderr:\n{}",
+        slowest.status.code(),
+        String::from_utf8_lossy(&slowest.stderr)
+    );
+    let ranking = String::from_utf8_lossy(&slowest.stdout);
+    assert!(ranking.contains("slowest sweeps"), "ranking: {ranking}");
+    assert!(ranking.contains("bounded-by"), "ranking: {ranking}");
 
     // off by default: the same solve without the flags stays quiet
     let quiet = Command::new(exe)

@@ -238,6 +238,43 @@ fn distributed_trace_merges_worker_spans_and_stays_equivalent() {
     std::fs::remove_dir_all(&tmp).ok();
 }
 
+/// The live-metrics contract (`--metrics-addr`): arming the proto v5
+/// piggyback changes no solve result — same flow, same cut, same sweep
+/// count — while the process-wide registry gains fleet totals and
+/// per-worker labeled series. The registry is global and this binary's
+/// tests run concurrently, so every assertion is a delta against a
+/// snapshot taken before the metered run, never an exact value.
+#[test]
+fn distributed_metrics_piggyback_is_zero_interference() {
+    use armincut::metrics::{global, Counter, WorkerCounter};
+    let g = random_graph(7272, 60, 120);
+    let p = Partition::by_node_ranges(g.n(), 4);
+    let plain = solve_distributed(&g, &p, &DistOptions::threads(2)).unwrap();
+    let reg = global();
+    let sweeps_before = reg.counter(Counter::Sweeps);
+    let w0_before = reg.worker_counter(0, WorkerCounter::Discharges);
+    let fleet_before = reg.counter(Counter::Discharges);
+    reg.enable();
+    let mut o = DistOptions::threads(2);
+    o.metrics = true;
+    let metered = solve_distributed(&g, &p, &o).unwrap();
+    assert_eq!(metered.metrics.flow, plain.metrics.flow, "flow unchanged by metrics");
+    assert_eq!(metered.cut, plain.cut, "cut unchanged by metrics");
+    assert_eq!(metered.metrics.sweeps, plain.metrics.sweeps, "sweeps unchanged");
+    assert!(reg.counter(Counter::Sweeps) > sweeps_before, "sweep barriers counted");
+    assert!(reg.counter(Counter::Discharges) > fleet_before, "fleet discharges counted");
+    assert!(
+        reg.worker_counter(0, WorkerCounter::Discharges) > w0_before,
+        "worker 0 shipped MetricsBatch deltas that were folded per-worker"
+    );
+    let prom = reg.render_prometheus();
+    assert!(prom.contains("armincut_sweeps_total"), "{prom}");
+    assert!(
+        prom.contains("armincut_worker_discharges_total{worker=\"0\"}"),
+        "labeled worker rows exported:\n{prom}"
+    );
+}
+
 /// One concurrent round against a real decomposition: sync every
 /// region in against the same shared snapshot, discharge all of them,
 /// and collect the boundary deltas (exactly what the master's batched
